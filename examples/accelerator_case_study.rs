@@ -1,0 +1,146 @@
+//! Application case study: approximate multipliers inside an image kernel.
+//!
+//! The paper motivates AxOs with embedded ML/DSP workloads whose outputs
+//! tolerate arithmetic error. This example deploys Pareto-optimal 8×8
+//! approximate multipliers found by the DSE inside a Sobel edge-detection
+//! convolution over a synthetic image and reports application-level
+//! quality (PSNR vs. the exact pipeline) against the PPA savings — the
+//! classic cross-layer trade-off plot, one row per selected design.
+//!
+//! Run: `cargo run --release --example accelerator_case_study`
+
+use repro::charac::InputSet;
+use repro::dse::{Objectives, ParetoFront};
+use repro::operator::{multiplier, AxoConfig, Operator};
+use repro::prelude::*;
+use repro::util::rng::Rng;
+
+const W: usize = 96;
+const H: usize = 96;
+
+/// Deterministic synthetic test image: soft gradients + box features.
+fn synth_image() -> Vec<i64> {
+    let mut img = vec![0i64; W * H];
+    let mut rng = Rng::seed_from_u64(7);
+    for y in 0..H {
+        for x in 0..W {
+            let base = ((x * 96 / W) as i64 + (y * 64 / H) as i64) / 2;
+            let feature = if (20..44).contains(&x) && (30..60).contains(&y) { 40 } else { 0 };
+            let noise = (rng.gen_index(9) as i64) - 4;
+            img[y * W + x] = (base + feature + noise).clamp(0, 127);
+        }
+    }
+    img
+}
+
+/// Sobel gradient magnitude with a pluggable multiplier.
+fn sobel(img: &[i64], mul: &dyn Fn(i64, i64) -> i64) -> Vec<i64> {
+    const KX: [[i64; 3]; 3] = [[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]];
+    const KY: [[i64; 3]; 3] = [[-1, -2, -1], [0, 0, 0], [1, 2, 1]];
+    let mut out = vec![0i64; W * H];
+    for y in 1..H - 1 {
+        for x in 1..W - 1 {
+            let mut gx = 0i64;
+            let mut gy = 0i64;
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    let p = img[(y + ky - 1) * W + (x + kx - 1)];
+                    gx += mul(KX[ky][kx], p);
+                    gy += mul(KY[ky][kx], p);
+                }
+            }
+            out[y * W + x] = (gx.abs() + gy.abs()).min(255);
+        }
+    }
+    out
+}
+
+fn psnr(exact: &[i64], approx: &[i64]) -> f64 {
+    let mse: f64 = exact
+        .iter()
+        .zip(approx)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / exact.len() as f64;
+    if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * ((255.0f64 * 255.0) / mse).log10()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- Find Pareto-optimal 8×8 multipliers (scaled-down DSE). ---
+    let op = Operator::MUL8;
+    let inputs = InputSet::exhaustive(op);
+    let mut rng = Rng::seed_from_u64(2023);
+    let sample = AxoConfig::sample_unique(36, 1500, &mut rng);
+    let ds = characterize(op, &sample, &inputs, &Backend::Native)?;
+    // Augment the random sample with the structured EvoApprox-style
+    // library — truncation families supply the low-error region that pure
+    // random 36-bit sampling misses.
+    let lib = repro::baselines::evoapprox_library(op);
+    let lib_ds = characterize(op, &lib, &inputs, &Backend::Native)?;
+    let mut all = ds.clone();
+    all.merge(&lib_ds)?;
+    let objs: Vec<Objectives> = all.headline_points().iter().map(|p| [p[1], p[0]]).collect();
+    let front = ParetoFront::from_points(&objs);
+    println!(
+        "characterized {} designs ({} structured); global front size {}",
+        all.len(),
+        lib.len(),
+        front.len()
+    );
+
+    // One pick per error band: the cheapest design meeting each quality
+    // floor (this is exactly how a designer consumes the library).
+    let bands = [0.0005, 0.002, 0.01, 0.05, 0.2, 1.0];
+    let mut picks: Vec<AxoConfig> = Vec::new();
+    for band in bands {
+        let best = (0..objs.len())
+            .filter(|&i| objs[i][0] <= band && !all.configs[i].is_accurate())
+            .min_by(|&a, &b| objs[a][1].partial_cmp(&objs[b][1]).unwrap());
+        if let Some(i) = best {
+            if !picks.contains(&all.configs[i]) {
+                picks.push(all.configs[i]);
+            }
+        }
+    }
+    let ds = all;
+
+    // --- Deploy each in the Sobel pipeline. ---
+    let img = synth_image();
+    let exact_mul = |a: i64, b: i64| a * b;
+    let exact_out = sobel(&img, &exact_mul);
+    let acc_ppa = repro::synth::mult_ppa(8, &AxoConfig::accurate(36));
+
+    println!(
+        "\n{:<38} {:>9} {:>11} {:>9} {:>9}",
+        "config (36-bit)", "PSNR dB", "rel_err", "PDPLUT", "saving"
+    );
+    println!(
+        "{:<38} {:>9} {:>11} {:>9.3} {:>9}",
+        "accurate (all ones)", "inf", "0", acc_ppa.pdplut, "0.0%"
+    );
+    for cfg in &picks {
+        let approx_mul =
+            |a: i64, b: i64| multiplier::eval_one(8, cfg, a.clamp(-128, 127), b.clamp(-128, 127));
+        let out = sobel(&img, &approx_mul);
+        let q = psnr(&exact_out, &out);
+        let i = ds.configs.iter().position(|c| c == cfg).unwrap();
+        let ppa = &ds.ppa[i];
+        println!(
+            "{:<38} {:>9.2} {:>11.5} {:>9.3} {:>8.1}%",
+            cfg.to_string(),
+            q,
+            ds.behav[i].avg_abs_rel_err,
+            ppa.pdplut,
+            100.0 * (1.0 - ppa.pdplut / acc_ppa.pdplut)
+        );
+    }
+    println!(
+        "\ninterpretation: lower-PDPLUT designs trade PSNR for power/area —\n\
+         pick the row meeting the application's quality floor (paper §I)."
+    );
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! ConSS pipeline walkthrough: scale 4-bit adder knowledge to 8 bits.
+//!
+//! Reproduces the paper's §IV flow on the adder pair: characterize
+//! L = add4 (exhaustive) and H = add8 (exhaustive here — it is small
+//! enough), analyze the three distance measures (Fig. 11), match with the
+//! Euclidean measure (Fig. 12), train the random-forest supersampler with
+//! noise bits (Fig. 8/13), and compare the supersampled pool's hypervolume
+//! against the training data.
+//!
+//! Run: `cargo run --release --example conss_pipeline`
+
+use repro::charac::InputSet;
+use repro::conss::{ConssPipeline, SupersampleOptions};
+use repro::dse::{hypervolume2d, Constraints, Objectives};
+use repro::matching::Matcher;
+use repro::prelude::*;
+use repro::stats::Histogram;
+
+fn objectives(ds: &Dataset) -> Vec<Objectives> {
+    ds.headline_points().iter().map(|p| [p[1], p[0]]).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- Characterize L and H (Fig. 4 "Statistical Analysis"). ---
+    let l_in = InputSet::exhaustive(Operator::ADD4);
+    let h_in = InputSet::exhaustive(Operator::ADD8);
+    let l = characterize(
+        Operator::ADD4,
+        &AxoConfig::enumerate(4).collect::<Vec<_>>(),
+        &l_in,
+        &Backend::Native,
+    )?;
+    let h = characterize(
+        Operator::ADD8,
+        &AxoConfig::enumerate(8).collect::<Vec<_>>(),
+        &h_in,
+        &Backend::Native,
+    )?;
+    println!("L_CHAR: {} designs of add4; H_CHAR: {} designs of add8", l.len(), h.len());
+
+    // --- Distance measure analysis (Fig. 11). ---
+    println!("\ndistance distributions over all L×H pairs (scaled plane):");
+    for kind in DistanceKind::ALL {
+        let d = Matcher::new(kind).all_distances(&l, &h)?;
+        let hist = Histogram::from_values_range(&d, 30, 0.0, 1.5);
+        println!(
+            "  {:<10} mean {:.3}  bin occupancy {:.2}",
+            kind.name(),
+            d.iter().sum::<f64>() / d.len() as f64,
+            hist.occupancy()
+        );
+    }
+
+    // --- Euclidean matching (Fig. 12). ---
+    let matcher = Matcher::new(DistanceKind::Euclidean);
+    let m = matcher.match_datasets(&l, &h)?;
+    let counts = m.counts_per_l(l.len());
+    println!("\none-to-many matching (H designs per L seed):");
+    for (i, &c) in counts.iter().enumerate() {
+        if c > 0 {
+            println!("  {} ← {c} H designs", l.configs[i]);
+        }
+    }
+
+    // --- Train the supersampler and generate the pool. ---
+    let opts = SupersampleOptions::default(); // euclidean, 4 noise bits
+    let pipe = ConssPipeline::train(&l, &h, opts)?;
+    let pool = pipe.supersample(None, &[])?;
+    println!(
+        "\nConSS: {} L seeds × 2^{} noise values → {} unique 8-bit candidates",
+        pool.n_seeds, pipe.options.noise_bits, pool.configs.len()
+    );
+
+    // --- Validate the pool and compare hypervolume vs TRAIN. ---
+    let pool_ds = characterize(Operator::ADD8, &pool.configs, &h_in, &Backend::Native)?;
+    let h_obj = objectives(&h);
+    let pool_obj = objectives(&pool_ds);
+    for factor in [0.3, 0.5, 1.0] {
+        let c = Constraints::from_scaling_factor(factor, &h_obj)?;
+        let hv_train = hypervolume2d(&h_obj, c.reference());
+        let hv_pool = hypervolume2d(&pool_obj, c.reference());
+        println!(
+            "factor {factor:.1}: train hv {hv_train:.4}  conss-pool hv {hv_pool:.4}  \
+             (ratio {:.2})",
+            hv_pool / hv_train.max(1e-12)
+        );
+    }
+    println!("\nnext: examples/end_to_end_dse.rs runs the full 4×4→8×8 multiplier flow");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: the whole AxOCS loop on the smallest operator.
+//!
+//! Characterizes every approximate 4-bit adder (the operator model of
+//! paper Fig. 3), prints the Pareto designs, and runs a small NSGA-II
+//! search against the exact characterization table.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use repro::prelude::*;
+use repro::charac::InputSet;
+use repro::dse::{GaOptions, ParetoFront};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Characterize the full design space (15 usable configurations).
+    let op = Operator::ADD4;
+    let inputs = InputSet::exhaustive(op);
+    let ds = characterize(
+        op,
+        &AxoConfig::enumerate(op.config_len()).collect::<Vec<_>>(),
+        &inputs,
+        &Backend::Native,
+    )?;
+    println!("characterized {} designs of {op} over {} input pairs\n", ds.len(), inputs.len());
+
+    println!("{:<6} {:>14} {:>16} {:>8} {:>10}", "config", "avg_abs_err", "avg_abs_rel_err", "luts", "pdplut");
+    for i in 0..ds.len() {
+        println!(
+            "{:<6} {:>14.4} {:>16.5} {:>8} {:>10.4}",
+            ds.configs[i].to_string(),
+            ds.behav[i].avg_abs_err,
+            ds.behav[i].avg_abs_rel_err,
+            ds.ppa[i].luts,
+            ds.ppa[i].pdplut,
+        );
+    }
+
+    // 2. The (BEHAV, PPA) Pareto front of the space.
+    let objs: Vec<[f64; 2]> = ds.headline_points().iter().map(|p| [p[1], p[0]]).collect();
+    let front = ParetoFront::from_points(&objs);
+    println!("\nPareto-optimal designs ({}):", front.len());
+    for &i in &front.indices {
+        println!(
+            "  {}  err {:.5}  pdplut {:.4}",
+            ds.configs[i], ds.behav[i].avg_abs_rel_err, ds.ppa[i].pdplut
+        );
+    }
+
+    // 3. Constrained NSGA-II over the exact table (Eq. 3 with factor 0.75).
+    let constraints = Constraints::from_scaling_factor(0.75, &objs)?;
+    let table = repro::surrogate::TableSurrogate::from_dataset(&ds);
+    let fitness = |c: &[AxoConfig]| table.predict(c);
+    let runner = NsgaRunner::new(
+        GaOptions { pop_size: 8, generations: 12, seed: 1, ..Default::default() },
+        constraints,
+    );
+    let result = runner.run(op.config_len(), &fitness, &[])?;
+    println!(
+        "\nNSGA-II (factor 0.75): {} front designs, hypervolume {:.4} \
+         ({} fitness evaluations)",
+        result.front_points.len(),
+        result.final_hypervolume(),
+        result.evaluations
+    );
+    println!("\nnext: examples/conss_pipeline.rs scales 4-bit knowledge to 8 bits");
+    Ok(())
+}

@@ -1,0 +1,285 @@
+"""AOT export: lower every L2 graph to HLO text + weights + golden data.
+
+Run once via ``make artifacts`` (``python -m compile.aot --out-dir
+../artifacts``).  Python never runs again after this; the rust binary
+consumes only the files written here.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which the published ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Artifacts written:
+  axo_eval_{add4,add8,add12,mul4,mul8}.hlo.txt  characterization graphs
+  estimator_mul8.hlo.txt + estimator_mul8.weights.bin
+  conss_mul4to8.hlo.txt + conss_mul4to8.weights.bin
+  inputs_add12.bin       sampled 12-bit adder input pairs (u32 LE a then b)
+  golden_behav.json      BEHAV+PPA fixtures pinning rust <-> python models
+  manifest.json          shapes, dtypes, parameter order, target scaling
+
+Weights .bin format (rust/src/runtime/weights.rs):
+  magic "AXOW" | u32 version=1 | u32 n_tensors |
+  per tensor: u32 name_len | name | u32 ndim | u32 dims[] | f32 data[] (LE)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import struct
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as L2
+from . import operator_model as om
+from . import synth_model as sm
+from . import train
+
+GOLDEN_SEED = 99
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights_bin(path: Path, named_tensors: list[tuple[str, np.ndarray]]):
+    with open(path, "wb") as f:
+        f.write(b"AXOW")
+        f.write(struct.pack("<II", 1, len(named_tensors)))
+        for name, arr in named_tensors:
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def flat_named_params(params, prefix: str):
+    out = []
+    for i, (w, b) in enumerate(params):
+        out.append((f"{prefix}.layer{i}.w", np.asarray(w)))
+        out.append((f"{prefix}.layer{i}.b", np.asarray(b)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Characterization graph exports
+# ---------------------------------------------------------------------------
+
+ADDER_EXPORTS = {
+    # name: (n_bits, config_batch, n_inputs)
+    "add4": (4, 16, 256),
+    "add8": (8, 64, 65536),
+    "add12": (12, 64, 65536),
+}
+
+MULT_EXPORTS = {
+    # name: (m_bits, config_batch, n_inputs)
+    "mul4": (4, 64, 256),
+    "mul8": (8, 64, 65536),
+}
+
+
+def export_adder(name, n_bits, bsz, t, out_dir, manifest):
+    cfg = jax.ShapeDtypeStruct((bsz, n_bits), jnp.int32)
+    col = jax.ShapeDtypeStruct((t, 1), jnp.int32)
+    lowered = jax.jit(L2.adder_eval).lower(cfg, col, col)
+    path = out_dir / f"axo_eval_{name}.hlo.txt"
+    path.write_text(to_hlo_text(lowered))
+    manifest["executables"][f"axo_eval_{name}"] = {
+        "hlo": path.name,
+        "kind": "adder_eval",
+        "bits": n_bits,
+        "config_batch": bsz,
+        "n_inputs": t,
+        "inputs": [
+            {"shape": [bsz, n_bits], "dtype": "i32", "role": "configs"},
+            {"shape": [t, 1], "dtype": "i32", "role": "a"},
+            {"shape": [t, 1], "dtype": "i32", "role": "b"},
+        ],
+        "output": {"shape": [bsz, 4], "dtype": "f32"},
+    }
+
+
+def export_mult(name, m_bits, bsz, t, out_dir, manifest):
+    l = om.mult_config_len(m_bits)
+    cfg = jax.ShapeDtypeStruct((bsz, l), jnp.float32)
+    terms = jax.ShapeDtypeStruct((t, l), jnp.float32)
+    exact = jax.ShapeDtypeStruct((t, 1), jnp.float32)
+    lowered = jax.jit(L2.mult_eval).lower(cfg, terms, exact)
+    path = out_dir / f"axo_eval_{name}.hlo.txt"
+    path.write_text(to_hlo_text(lowered))
+    manifest["executables"][f"axo_eval_{name}"] = {
+        "hlo": path.name,
+        "kind": "mult_eval",
+        "bits": m_bits,
+        "config_len": l,
+        "config_batch": bsz,
+        "n_inputs": t,
+        "inputs": [
+            {"shape": [bsz, l], "dtype": "f32", "role": "configs"},
+            {"shape": [t, l], "dtype": "f32", "role": "terms"},
+            {"shape": [t, 1], "dtype": "f32", "role": "exact"},
+        ],
+        "output": {"shape": [bsz, 4], "dtype": "f32"},
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP exports (weights as runtime arguments)
+# ---------------------------------------------------------------------------
+
+
+def export_estimator(out_dir, manifest, epochs):
+    res = train.train_estimator(epochs=epochs)
+    bsz = 256
+    arg_specs = [jax.ShapeDtypeStruct((bsz, 36), jnp.float32)]
+    for w, b in res.params:
+        arg_specs.append(jax.ShapeDtypeStruct(tuple(w.shape), jnp.float32))
+        arg_specs.append(jax.ShapeDtypeStruct(tuple(b.shape), jnp.float32))
+    lowered = jax.jit(L2.estimator_fwd).lower(*arg_specs)
+    (out_dir / "estimator_mul8.hlo.txt").write_text(to_hlo_text(lowered))
+    named = flat_named_params(res.params, "estimator")
+    write_weights_bin(out_dir / "estimator_mul8.weights.bin", named)
+    manifest["executables"]["estimator_mul8"] = {
+        "hlo": "estimator_mul8.hlo.txt",
+        "weights": "estimator_mul8.weights.bin",
+        "kind": "estimator",
+        "config_batch": bsz,
+        "param_order": [n for n, _ in named],
+        "inputs": [{"shape": [bsz, 36], "dtype": "f32", "role": "configs"}],
+        "output": {"shape": [bsz, 2], "dtype": "f32"},
+        "targets": ["pdplut", "avg_abs_rel_err"],
+        "target_min": [float(v) for v in res.x_min],
+        "target_max": [float(v) for v in res.x_max],
+        "train_loss": res.history[-1] if res.history else None,
+    }
+
+
+def export_conss(out_dir, manifest, epochs):
+    res = train.train_conss(epochs=epochs)
+    bsz = 256
+    fin = 10 + L2.CONSS_NOISE_BITS
+    arg_specs = [jax.ShapeDtypeStruct((bsz, fin), jnp.float32)]
+    for w, b in res.params:
+        arg_specs.append(jax.ShapeDtypeStruct(tuple(w.shape), jnp.float32))
+        arg_specs.append(jax.ShapeDtypeStruct(tuple(b.shape), jnp.float32))
+    lowered = jax.jit(L2.conss_fwd).lower(*arg_specs)
+    (out_dir / "conss_mul4to8.hlo.txt").write_text(to_hlo_text(lowered))
+    named = flat_named_params(res.params, "conss")
+    write_weights_bin(out_dir / "conss_mul4to8.weights.bin", named)
+    manifest["executables"]["conss_mul4to8"] = {
+        "hlo": "conss_mul4to8.hlo.txt",
+        "weights": "conss_mul4to8.weights.bin",
+        "kind": "conss",
+        "config_batch": bsz,
+        "noise_bits": L2.CONSS_NOISE_BITS,
+        "param_order": [n for n, _ in named],
+        "inputs": [{"shape": [bsz, fin], "dtype": "f32", "role": "l_config+noise"}],
+        "output": {"shape": [bsz, 36], "dtype": "f32"},
+        "train_loss": res.history[-1] if res.history else None,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Golden fixtures + shared input sets
+# ---------------------------------------------------------------------------
+
+
+def golden_configs(length: int, n_random: int = 10) -> list[int]:
+    """Accurate + single-removal + seeded random UINT configurations."""
+    vals = [(1 << length) - 1]  # accurate
+    vals += [((1 << length) - 1) ^ (1 << k) for k in (0, length // 2, length - 1)]
+    rng = np.random.default_rng(GOLDEN_SEED)
+    vals += [int(v) for v in rng.integers(1, 1 << length, size=n_random, dtype=np.uint64)]
+    return sorted(set(vals))
+
+
+def build_golden(out_dir: Path):
+    golden = {"operators": {}}
+    # Adders
+    for name, (n_bits, _, _) in ADDER_EXPORTS.items():
+        a, b = om.adder_inputs(n_bits)
+        uints = golden_configs(n_bits if n_bits <= 8 else 12)
+        cfgs = np.stack([om.config_from_uint(v, n_bits) for v in uints])
+        behav = om.behav_metrics(om.adder_exact(a, b), om.adder_eval(cfgs, a, b))
+        ppa = sm.adder_ppa(cfgs)
+        golden["operators"][name] = _golden_entry(uints, behav, ppa)
+    # Multipliers
+    for name, (m_bits, _, _) in MULT_EXPORTS.items():
+        a, b = om.mult_inputs(m_bits)
+        terms = om.mult_term_matrix(m_bits, a, b)
+        length = om.mult_config_len(m_bits)
+        uints = golden_configs(length)
+        cfgs = np.stack([om.config_from_uint(v, length) for v in uints])
+        behav = om.behav_metrics(om.mult_exact(terms), om.mult_eval(cfgs, terms))
+        ppa = sm.mult_ppa(cfgs, m_bits)
+        golden["operators"][name] = _golden_entry(uints, behav, ppa)
+    (out_dir / "golden_behav.json").write_text(json.dumps(golden, indent=1))
+
+
+def _golden_entry(uints, behav, ppa):
+    return {
+        "configs_uint": [str(v) for v in uints],
+        "behav_metrics": list(om.BEHAV_METRICS),
+        "behav": [[float(x) for x in row] for row in behav],
+        "ppa_metrics": list(sm.PPA_METRICS),
+        "ppa": [[float(x) for x in row] for row in ppa],
+    }
+
+
+def write_add12_inputs(out_dir: Path):
+    a, b = om.adder_inputs(12)
+    with open(out_dir / "inputs_add12.bin", "wb") as f:
+        f.write(b"AXIN")
+        f.write(struct.pack("<II", 1, len(a)))
+        f.write(a.astype("<u4").tobytes())
+        f.write(b.astype("<u4").tobytes())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file marker path")
+    ap.add_argument("--estimator-epochs", type=int, default=40)
+    ap.add_argument("--conss-epochs", type=int, default=30)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="export characterization graphs + golden only")
+    args = ap.parse_args()
+    out_dir = Path(args.out).parent if args.out else Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict = {"version": 1, "executables": {}}
+    for name, (n_bits, bsz, t) in ADDER_EXPORTS.items():
+        export_adder(name, n_bits, bsz, t, out_dir, manifest)
+        print(f"exported axo_eval_{name}")
+    for name, (m_bits, bsz, t) in MULT_EXPORTS.items():
+        export_mult(name, m_bits, bsz, t, out_dir, manifest)
+        print(f"exported axo_eval_{name}")
+    if not args.skip_train:
+        export_estimator(out_dir, manifest, args.estimator_epochs)
+        print("exported estimator_mul8")
+        export_conss(out_dir, manifest, args.conss_epochs)
+        print("exported conss_mul4to8")
+    build_golden(out_dir)
+    write_add12_inputs(out_dir)
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if args.out:
+        # Makefile dependency marker (model.hlo.txt): alias of mul8 graph.
+        (Path(args.out)).write_text((out_dir / "axo_eval_mul8.hlo.txt").read_text())
+    print(f"artifacts written to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Pallas kernels for batched approximate-operator characterization (L1).
+
+The characterization sweep — evaluate B approximate configurations against T
+input pairs and reduce to error statistics — is the compute hot-spot of the
+AxOCS pipeline (paper §V characterizes up to 10,650 36-bit multiplier
+configurations over the full 2^16 signed input space).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): configurations tile into VMEM
+along the grid's first axis, the input space streams through as reduction
+tiles along the second, and the four error statistics accumulate in the
+revisited output block.  For the multiplier the inner product
+``configs @ terms.T`` is an MXU-shaped f32 matmul (every partial-product
+term and every exact product is < 2^15 in magnitude for M <= 8, so f32 is
+exact).  For the adder the carry recurrence is an N-step unrolled loop of
+VPU bit ops over the (config-block x input-tile) plane.
+
+All kernels run ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.  Correctness is pinned
+against ``ref.py`` (pure jnp) and the canonical numpy operator model.
+
+Metric columns (raw accumulators; divide by T outside the kernel):
+  0: sum |err|    1: sum |err|/max(|exact|,1)    2: max |err|    3: #(err!=0)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_METRICS = 4
+
+# Default tile sizes (§Perf L1-1).  Config blocks of 64 with 16384-deep
+# input tiles keep the (BB, TT) error plane at 64x16384 f32 = 4 MiB plus a
+# (TT, L) terms tile of 16384x36 f32 = 2.25 MiB — ~6.3 MiB live, inside a
+# 16 MiB VMEM budget with double-buffering headroom, while quartering the
+# grid-step count relative to the original 4096 tile (fewer, larger MXU
+# matmuls; measured 1.36x faster on the CPU PJRT backend too).
+DEFAULT_CONFIG_BLOCK = 64
+DEFAULT_INPUT_TILE = 16384
+
+
+def _metric_update(out_ref, err: jnp.ndarray, rel: jnp.ndarray, first: jnp.ndarray):
+    """Accumulate the four statistics into the revisited output block."""
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[:, 0] += err.sum(axis=1)
+    out_ref[:, 1] += rel.sum(axis=1)
+    out_ref[:, 2] = jnp.maximum(out_ref[:, 2], err.max(axis=1))
+    out_ref[:, 3] += (err > 0).sum(axis=1).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Signed multiplier: approx = configs @ terms.T (MXU path)
+# ---------------------------------------------------------------------------
+
+
+def _mult_kernel(cfg_ref, terms_ref, exact_ref, out_ref):
+    cfg = cfg_ref[...]  # (BB, L) f32
+    terms = terms_ref[...]  # (TT, L) f32
+    exact = exact_ref[...][:, 0]  # (TT,)
+    approx = jax.lax.dot_general(
+        cfg,
+        terms,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (BB, TT)
+    err = jnp.abs(exact[None, :] - approx)
+    rel = err / jnp.maximum(jnp.abs(exact), 1.0)[None, :]
+    _metric_update(out_ref, err, rel, pl.program_id(1) == 0)
+
+
+def mult_eval_kernel(
+    configs: jnp.ndarray,
+    terms: jnp.ndarray,
+    exact: jnp.ndarray,
+    *,
+    config_block: int = DEFAULT_CONFIG_BLOCK,
+    input_tile: int = DEFAULT_INPUT_TILE,
+) -> jnp.ndarray:
+    """Raw (B, 4) error statistics for signed-multiplier configurations.
+
+    Args:
+        configs: (B, L) f32 0/1 configuration matrix; B % config_block == 0.
+        terms:   (T, L) f32 per-LUT signed partial-product contributions.
+        exact:   (T, 1) f32 exact products (= terms.sum(1), precomputed so
+                 the reduction is not re-done per config block).
+    """
+    b, l = configs.shape
+    t = terms.shape[0]
+    bb = min(config_block, b)
+    tt = min(input_tile, t)
+    assert b % bb == 0 and t % tt == 0, (b, bb, t, tt)
+    grid = (b // bb, t // tt)
+    return pl.pallas_call(
+        _mult_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, l), lambda ib, it: (ib, 0)),
+            pl.BlockSpec((tt, l), lambda ib, it: (it, 0)),
+            pl.BlockSpec((tt, 1), lambda ib, it: (it, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, N_METRICS), lambda ib, it: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, N_METRICS), jnp.float32),
+        interpret=True,
+    )(configs, terms, exact)
+
+
+# ---------------------------------------------------------------------------
+# Unsigned adder: carry recurrence (VPU path)
+# ---------------------------------------------------------------------------
+
+
+def _adder_kernel(cfg_ref, a_ref, b_ref, out_ref, *, n_bits: int):
+    cfg = cfg_ref[...]  # (BB, N) i32
+    a = a_ref[...][:, 0][None, :]  # (1, TT) i32
+    b = b_ref[...][:, 0][None, :]
+    carry = jnp.zeros((cfg.shape[0], a.shape[1]), dtype=jnp.int32)
+    out = jnp.zeros_like(carry)
+    # N is static (<= 12): unrolled ripple over the (BB, TT) plane.
+    for i in range(n_bits):
+        ai = (a >> i) & 1
+        bi = (b >> i) & 1
+        p = (ai ^ bi) * cfg[:, i][:, None]
+        s = p ^ carry
+        out = out + (s << i)
+        carry = jnp.where(p == 1, carry, bi)
+    approx = (out + (carry << n_bits)).astype(jnp.float32)
+    exact = (a + b).astype(jnp.float32)  # (1, TT)
+    err = jnp.abs(exact - approx)
+    rel = err / jnp.maximum(jnp.abs(exact), 1.0)
+    _metric_update(out_ref, err, rel, pl.program_id(1) == 0)
+
+
+def adder_eval_kernel(
+    configs: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    config_block: int = DEFAULT_CONFIG_BLOCK,
+    input_tile: int = DEFAULT_INPUT_TILE,
+) -> jnp.ndarray:
+    """Raw (B, 4) error statistics for unsigned-adder configurations.
+
+    Args:
+        configs: (B, N) i32 0/1 configuration matrix.
+        a, b:    (T, 1) i32 operand columns.
+    """
+    bsz, n_bits = configs.shape
+    t = a.shape[0]
+    bb = min(config_block, bsz)
+    tt = min(input_tile, t)
+    assert bsz % bb == 0 and t % tt == 0, (bsz, bb, t, tt)
+    grid = (bsz // bb, t // tt)
+    return pl.pallas_call(
+        functools.partial(_adder_kernel, n_bits=n_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n_bits), lambda ib, it: (ib, 0)),
+            pl.BlockSpec((tt, 1), lambda ib, it: (it, 0)),
+            pl.BlockSpec((tt, 1), lambda ib, it: (it, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, N_METRICS), lambda ib, it: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, N_METRICS), jnp.float32),
+        interpret=True,
+    )(configs, a, b)

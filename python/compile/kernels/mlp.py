@@ -1,0 +1,91 @@
+"""Pallas tiled MLP forward (L1) — the GA-path surrogate hot loop.
+
+During GA-based DSE the rust coordinator batches fitness requests and
+executes the AOT-compiled surrogate MLP via PJRT; this module provides the
+kernel that lowers into that executable.  Each dense layer is a Pallas
+kernel tiled over the batch dimension: the weight matrix (<= 64x64 here)
+stays resident in VMEM across batch tiles while activations stream through
+— the canonical MXU schedule for skinny inference matmuls.
+
+Weights are *runtime arguments* (not baked constants): python trains and
+writes ``artifacts/*.weights.bin``; rust loads them once and passes them as
+PJRT literals, so retraining never requires re-lowering.
+
+``interpret=True`` as everywhere (CPU PJRT cannot execute Mosaic calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BATCH_TILE = 64
+
+ACT_LINEAR = 0
+ACT_RELU = 1
+ACT_SIGMOID = 2
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, out_ref, *, activation: int):
+    x = x_ref[...]  # (BB, F)
+    w = w_ref[...]  # (F, O)
+    b = b_ref[...]  # (1, O)
+    y = (
+        jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        + b
+    )
+    if activation == ACT_RELU:
+        y = jnp.maximum(y, 0.0)
+    elif activation == ACT_SIGMOID:
+        y = jax.nn.sigmoid(y)
+    out_ref[...] = y
+
+
+def linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    activation: int = ACT_LINEAR,
+    batch_tile: int = DEFAULT_BATCH_TILE,
+) -> jnp.ndarray:
+    """One dense layer ``act(x @ w + b)`` tiled over the batch dimension."""
+    bsz, f = x.shape
+    f2, o = w.shape
+    assert f == f2, (f, f2)
+    bb = min(batch_tile, bsz)
+    assert bsz % bb == 0, (bsz, bb)
+    b2 = b.reshape(1, o)
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, activation=activation),
+        grid=(bsz // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, f), lambda ib: (ib, 0)),
+            pl.BlockSpec((f, o), lambda ib: (0, 0)),
+            pl.BlockSpec((1, o), lambda ib: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, o), lambda ib: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, o), jnp.float32),
+        interpret=True,
+    )(x, w, b2)
+
+
+def mlp_forward(
+    x: jnp.ndarray,
+    params: list[tuple[jnp.ndarray, jnp.ndarray]],
+    *,
+    final_sigmoid: bool = False,
+    batch_tile: int = DEFAULT_BATCH_TILE,
+) -> jnp.ndarray:
+    """Full MLP forward: relu hidden layers, linear or sigmoid output."""
+    h = x
+    for w, b in params[:-1]:
+        h = linear(h, w, b, activation=ACT_RELU, batch_tile=batch_tile)
+    w, b = params[-1]
+    act = ACT_SIGMOID if final_sigmoid else ACT_LINEAR
+    return linear(h, w, b, activation=act, batch_tile=batch_tile)

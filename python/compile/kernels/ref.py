@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only.  pytest asserts
+``assert_allclose(kernel(...), ref(...))`` across shapes/dtypes (hypothesis
+sweeps in ``python/tests``), and these references are themselves checked
+against the canonical numpy operator model in
+``python/compile/operator_model.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Metric column order shared across kernel / ref / rust:
+#   0: sum |err|         (divide by T outside for avg_abs_err)
+#   1: sum |err|/max(|exact|,1)   (-> avg_abs_rel_err)
+#   2: max |err|
+#   3: count err != 0    (-> err_prob)
+N_METRICS = 4
+
+
+def adder_outputs_ref(configs: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(B, T) approximate sums. Mirrors operator_model.adder_eval in jnp."""
+    n_bits = configs.shape[1]
+    a = a.astype(jnp.int32)[None, :]
+    b = b.astype(jnp.int32)[None, :]
+    cfg = configs.astype(jnp.int32)
+    carry = jnp.zeros((configs.shape[0], a.shape[1]), dtype=jnp.int32)
+    out = jnp.zeros_like(carry)
+    for i in range(n_bits):
+        ai = (a >> i) & 1
+        bi = (b >> i) & 1
+        p = (ai ^ bi) * cfg[:, i][:, None]
+        s = p ^ carry
+        out = out + (s << i)
+        carry = jnp.where(p == 1, carry, bi)
+    return out + (carry << n_bits)
+
+
+def metrics_ref(exact: jnp.ndarray, approx: jnp.ndarray) -> jnp.ndarray:
+    """(B, 4) raw metric accumulators (sums / max / count), float32."""
+    err = jnp.abs(exact[None, :].astype(jnp.float32) - approx.astype(jnp.float32))
+    denom = jnp.maximum(jnp.abs(exact.astype(jnp.float32)), 1.0)[None, :]
+    return jnp.stack(
+        [
+            err.sum(axis=1),
+            (err / denom).sum(axis=1),
+            err.max(axis=1),
+            (err > 0).sum(axis=1).astype(jnp.float32),
+        ],
+        axis=1,
+    )
+
+
+def adder_eval_ref(configs: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference for kernels.axo_eval.adder_eval_kernel."""
+    exact = (a + b).astype(jnp.int32)
+    return metrics_ref(exact, adder_outputs_ref(configs, a, b))
+
+
+def mult_eval_ref(configs: jnp.ndarray, terms: jnp.ndarray) -> jnp.ndarray:
+    """Reference for kernels.axo_eval.mult_eval_kernel.
+
+    ``terms`` is (T, L) float32 (exactly representable: |term| < 2^15 and
+    row sums < 2^15 for M <= 8).  approx = configs @ terms.T.
+    """
+    cfg = configs.astype(jnp.float32)
+    approx = cfg @ terms.T
+    exact = terms.sum(axis=1)
+    err = jnp.abs(exact[None, :] - approx)
+    denom = jnp.maximum(jnp.abs(exact), 1.0)[None, :]
+    return jnp.stack(
+        [
+            err.sum(axis=1),
+            (err / denom).sum(axis=1),
+            err.max(axis=1),
+            (err > 0).sum(axis=1).astype(jnp.float32),
+        ],
+        axis=1,
+    )
+
+
+def mlp_ref(x: jnp.ndarray, params: list[tuple[jnp.ndarray, jnp.ndarray]],
+            final_sigmoid: bool = False) -> jnp.ndarray:
+    """Reference MLP forward: relu hidden layers, linear/sigmoid output."""
+    h = x
+    for w, b in params[:-1]:
+        h = jax.nn.relu(h @ w + b)
+    w, b = params[-1]
+    out = h @ w + b
+    return jax.nn.sigmoid(out) if final_sigmoid else out

@@ -1,0 +1,77 @@
+"""Build-time mirror of distance-based matching (paper §IV-B).
+
+Used only to assemble the training dataset for the ConSS generator MLP that
+``aot.py`` exports.  The full matching machinery (all three distance
+measures, signed variants, heat-maps) lives in ``rust/src/matching/``; this
+mirror implements exactly the Euclidean variant the paper selects for
+supersampling (§V-C) so the two implementations can be cross-checked via
+``golden_behav.json`` matched-pair fixtures.
+
+Pipeline: min-max scale the (PPA, BEHAV) metric pairs of the L_CHAR and
+H_CHAR datasets *independently* (the paper compares scaled metric spaces,
+Fig. 1b), then for every H configuration find the nearest L configuration;
+each (L_CONFIG -> H_CONFIG) pair becomes an INP_SEQ -> OUT_SEQ training
+sample, replicated 2^n times with n noise bits appended (Fig. 8).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def minmax_scale(x: np.ndarray) -> np.ndarray:
+    """Column-wise min-max scaling to [0, 1]; constant columns map to 0."""
+    lo = x.min(axis=0)
+    hi = x.max(axis=0)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    return (x - lo) / span
+
+
+def match_euclidean(l_metrics: np.ndarray, h_metrics: np.ndarray) -> np.ndarray:
+    """Index of the nearest L point (scaled Euclidean) for every H point.
+
+    Args:
+        l_metrics: (NL, 2) [PPA, BEHAV] of the low-bit-width dataset.
+        h_metrics: (NH, 2) of the high-bit-width dataset.
+    Returns:
+        (NH,) int indices into the L dataset.
+    """
+    ls = minmax_scale(l_metrics)
+    hs = minmax_scale(h_metrics)
+    # (NH, NL) pairwise distances — datasets are small (<= ~10k x ~1k).
+    d2 = ((hs[:, None, :] - ls[None, :, :]) ** 2).sum(axis=2)
+    return d2.argmin(axis=1)
+
+
+def conss_dataset(
+    l_configs: np.ndarray,
+    l_metrics: np.ndarray,
+    h_configs: np.ndarray,
+    h_metrics: np.ndarray,
+    noise_bits: int,
+    seed: int = 7,
+) -> tuple[np.ndarray, np.ndarray]:
+    """INP_SEQ -> OUT_SEQ training set with noise augmentation.
+
+    Every matched (l, h) pair is replicated 2^noise_bits times, once per
+    noise value, exactly as Fig. 8: the same OUT_SEQ is the target for every
+    noise suffix, which teaches the model a noise-conditioned *distribution*
+    of plausible H configurations once multiple h map to the same l.
+    Rows are shuffled with the given seed.
+    """
+    idx = match_euclidean(l_metrics, h_metrics)
+    reps = 1 << noise_bits
+    xs, ys = [], []
+    for h_row, l_row in enumerate(idx):
+        base = l_configs[l_row].astype(np.float32)
+        for noise in range(reps):
+            nb = np.array(
+                [(noise >> k) & 1 for k in range(noise_bits)], dtype=np.float32
+            )
+            xs.append(np.concatenate([base, nb]))
+            ys.append(h_configs[h_row].astype(np.float32))
+    x = np.stack(xs)
+    y = np.stack(ys)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(x))
+    return x[perm], y[perm]

@@ -1,0 +1,79 @@
+"""L2: JAX compute graphs composing the Pallas kernels.
+
+These are the functions that get AOT-lowered to HLO text by ``aot.py`` and
+executed from the rust runtime:
+
+  * ``adder_eval`` / ``mult_eval`` — batched characterization graphs that
+    wrap the L1 ``axo_eval`` kernels and finalize the metric accumulators
+    into (avg_abs_err, avg_abs_rel_err, max_abs_err, err_prob).
+  * ``estimator_fwd`` — PPA/BEHAV surrogate MLP forward (36 -> 64 -> 64 -> 2,
+    predicting min-max-scaled [PDPLUT, AVG_ABS_REL_ERR]).
+  * ``conss_fwd`` — ConSS generator MLP forward
+    (10 + NOISE_BITS -> 128 -> 36 sigmoid bit probabilities).
+
+Weights are runtime arguments (flat (w, b) list order, see ``aot.py``
+manifest), so the rust side can hot-swap retrained weights without
+re-lowering.  Training lives in ``train.py``; it uses the plain-jnp
+reference forward (`ref.mlp_ref`) which pytest pins against the Pallas
+forward used here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import axo_eval, mlp
+
+# Architecture constants (shared with train.py / aot.py / rust manifest).
+ESTIMATOR_LAYERS = ((36, 64), (64, 64), (64, 2))
+CONSS_NOISE_BITS = 4
+CONSS_LAYERS = ((10 + CONSS_NOISE_BITS, 128), (128, 36))
+
+
+def _finalize_metrics(raw: jnp.ndarray, n_inputs: int) -> jnp.ndarray:
+    """sums/counts -> means; column order matches operator_model.BEHAV_METRICS."""
+    t = jnp.float32(n_inputs)
+    return jnp.stack(
+        [raw[:, 0] / t, raw[:, 1] / t, raw[:, 2], raw[:, 3] / t], axis=1
+    )
+
+
+def adder_eval(configs: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(B, 4) BEHAV metrics for unsigned-adder configurations.
+
+    configs: (B, N) i32; a, b: (T, 1) i32 operand columns.
+    """
+    raw = axo_eval.adder_eval_kernel(configs, a, b)
+    return _finalize_metrics(raw, a.shape[0])
+
+
+def mult_eval(configs: jnp.ndarray, terms: jnp.ndarray, exact: jnp.ndarray) -> jnp.ndarray:
+    """(B, 4) BEHAV metrics for signed-multiplier configurations.
+
+    configs: (B, L) f32 0/1; terms: (T, L) f32; exact: (T, 1) f32.
+    """
+    raw = axo_eval.mult_eval_kernel(configs, terms, exact)
+    return _finalize_metrics(raw, terms.shape[0])
+
+
+def _params_from_flat(flat, layer_shapes):
+    """Reassemble [(w, b), ...] from the flat argument list used in HLO."""
+    params = []
+    it = iter(flat)
+    for _ in layer_shapes:
+        w = next(it)
+        b = next(it)
+        params.append((w, b))
+    return params
+
+
+def estimator_fwd(x: jnp.ndarray, *flat_params: jnp.ndarray) -> jnp.ndarray:
+    """Surrogate PPA/BEHAV estimator forward (scaled outputs)."""
+    params = _params_from_flat(flat_params, ESTIMATOR_LAYERS)
+    return mlp.mlp_forward(x, params, final_sigmoid=False)
+
+
+def conss_fwd(x: jnp.ndarray, *flat_params: jnp.ndarray) -> jnp.ndarray:
+    """ConSS generator forward: (B, 10+NOISE) -> (B, 36) bit probabilities."""
+    params = _params_from_flat(flat_params, CONSS_LAYERS)
+    return mlp.mlp_forward(x, params, final_sigmoid=True)

@@ -1,0 +1,222 @@
+"""Canonical LUT-level approximate-operator model (build-time mirror).
+
+This module is the *single source of truth* on the Python side for the
+AppAxO-style operator model used throughout AxOCS (paper Section III):
+
+  * An operator implementation is an ordered bit tuple
+    ``O_i(l_0, ..., l_{L-1})``, ``l = 1`` keeps the LUT, ``l = 0`` removes it.
+  * The all-ones configuration is the accurate operator; the all-zeros
+    configuration is excluded from every experiment (paper footnote 4).
+
+Two operator families are modelled bit-exactly:
+
+Unsigned N-bit adder (L = N)
+    LUT *i* computes the propagate signal ``p_i = a_i XOR b_i`` feeding a
+    carry chain.  The MUXCY selects ``c_{i+1} = c_i`` when ``p_i`` else the
+    DI input ``b_i``; the XORCY produces ``s_i = p_i XOR c_i``.  Removing
+    LUT *i* forces ``p_i = 0`` so that ``s_i = c_i`` and ``c_{i+1} = b_i``.
+    With all LUTs present this is exactly a ripple-carry adder.
+
+Signed M x M Baugh-Wooley multiplier (L = M(M+1)/2)
+    LUT ``(i, j)``, ``i <= j``, generates the partial-product pair
+    ``a_i b_j + a_j b_i`` (the single ``a_i b_i`` when ``i == j``) with the
+    signed weight ``w_i w_j`` where ``w_i = -2^(M-1)`` for the sign bit and
+    ``2^i`` otherwise.  Removing the LUT zeroes both partial products.  The
+    sum of all pairs is exactly ``A * B`` for two's-complement operands, so
+    the all-ones configuration is accurate by construction.
+    L = 10 for 4x4 and L = 36 for 8x8, matching Table II of the paper.
+
+The Rust crate re-implements the identical model in ``rust/src/operator/``;
+``aot.py`` emits ``golden_behav.json`` from this module and the Rust test
+suite checks both implementations against it.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Configuration helpers
+# ---------------------------------------------------------------------------
+
+
+def mult_pairs(m: int) -> list[tuple[int, int]]:
+    """Ordered (i, j), i <= j LUT index pairs for an MxM multiplier.
+
+    Lexicographic order (i ascending, then j) — the Rust side uses the same
+    order so configuration bit k means the same LUT in both languages.
+    """
+    return [(i, j) for i in range(m) for j in range(i, m)]
+
+
+def mult_config_len(m: int) -> int:
+    return m * (m + 1) // 2
+
+
+def config_from_uint(value: int, length: int) -> np.ndarray:
+    """Decode a UINT-encoded configuration (bit 0 == l_0) to a 0/1 vector."""
+    return np.array([(value >> k) & 1 for k in range(length)], dtype=np.int32)
+
+
+def config_to_uint(bits: np.ndarray) -> int:
+    return int(sum(int(b) << k for k, b in enumerate(bits)))
+
+
+def all_configs(length: int) -> np.ndarray:
+    """All 2^length - 1 usable configurations (all-zeros excluded)."""
+    vals = np.arange(1, 1 << length, dtype=np.int64)
+    out = ((vals[:, None] >> np.arange(length)[None, :]) & 1).astype(np.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Input sets
+# ---------------------------------------------------------------------------
+
+
+def adder_inputs(n_bits: int, max_samples: int = 65536, seed: int = 2023):
+    """Exhaustive (a, b) pairs when 2^(2n) <= max_samples, else seeded sample.
+
+    Returns two uint32 arrays.  The sampled variant is persisted by aot.py
+    (``inputs_add12.bin``) so the Rust pipeline consumes the identical set.
+    """
+    total = 1 << (2 * n_bits)
+    if total <= max_samples:
+        idx = np.arange(total, dtype=np.uint64)
+    else:
+        rng = np.random.default_rng(seed)
+        idx = rng.integers(0, total, size=max_samples, dtype=np.uint64)
+    a = (idx & ((1 << n_bits) - 1)).astype(np.uint32)
+    b = (idx >> n_bits).astype(np.uint32)
+    return a, b
+
+
+def mult_inputs(m_bits: int):
+    """Exhaustive signed (a, b) pairs for an MxM multiplier (M <= 8)."""
+    n = 1 << m_bits
+    vals = np.arange(n, dtype=np.int64)
+    signed = np.where(vals >= n // 2, vals - n, vals).astype(np.int64)
+    a = np.repeat(signed, n)
+    b = np.tile(signed, n)
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# Behavioral models
+# ---------------------------------------------------------------------------
+
+
+def adder_eval(configs: np.ndarray, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Approximate-sum outputs for a batch of adder configurations.
+
+    Args:
+        configs: (B, N) 0/1 int array.
+        a, b:    (T,) unsigned operand arrays.
+    Returns:
+        (B, T) int64 approximate sums.
+    """
+    configs = np.asarray(configs, dtype=np.int64)
+    n_bits = configs.shape[1]
+    a = np.asarray(a, dtype=np.int64)[None, :]
+    b = np.asarray(b, dtype=np.int64)[None, :]
+    cfg = configs[:, :, None]  # (B, N, 1)
+    carry = np.zeros((configs.shape[0], a.shape[1]), dtype=np.int64)
+    out = np.zeros_like(carry)
+    for i in range(n_bits):
+        ai = (a >> i) & 1
+        bi = (b >> i) & 1
+        p = (ai ^ bi) * cfg[:, i, :]
+        s = p ^ carry
+        out = out + (s << i)
+        carry = np.where(p == 1, carry, bi)
+    out = out + (carry << n_bits)
+    return out
+
+
+def adder_exact(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np.asarray(a, dtype=np.int64) + np.asarray(b, dtype=np.int64)
+
+
+def mult_term_matrix(m_bits: int, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Per-LUT signed partial-product contributions.
+
+    Returns (T, L) int64 where column k is LUT k's contribution to the exact
+    product for each input pair; summing all columns reproduces ``a * b``.
+    The batched approximate product is then the matmul ``configs @ terms.T``.
+    """
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    n = 1 << m_bits
+    au = np.where(a < 0, a + n, a)
+    bu = np.where(b < 0, b + n, b)
+    abits = ((au[:, None] >> np.arange(m_bits)[None, :]) & 1).astype(np.int64)
+    bbits = ((bu[:, None] >> np.arange(m_bits)[None, :]) & 1).astype(np.int64)
+    w = np.array(
+        [-(1 << (m_bits - 1)) if i == m_bits - 1 else (1 << i) for i in range(m_bits)],
+        dtype=np.int64,
+    )
+    pairs = mult_pairs(m_bits)
+    terms = np.zeros((a.shape[0], len(pairs)), dtype=np.int64)
+    for k, (i, j) in enumerate(pairs):
+        if i == j:
+            terms[:, k] = w[i] * w[j] * abits[:, i] * bbits[:, j]
+        else:
+            terms[:, k] = w[i] * w[j] * (
+                abits[:, i] * bbits[:, j] + abits[:, j] * bbits[:, i]
+            )
+    return terms
+
+
+def mult_eval(configs: np.ndarray, terms: np.ndarray) -> np.ndarray:
+    """(B, T) approximate signed products from the term matrix."""
+    configs = np.asarray(configs, dtype=np.int64)
+    return configs @ terms.T
+
+
+def mult_exact(terms: np.ndarray) -> np.ndarray:
+    return terms.sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# BEHAV metrics
+# ---------------------------------------------------------------------------
+
+BEHAV_METRICS = ("avg_abs_err", "avg_abs_rel_err", "max_abs_err", "err_prob")
+
+
+def behav_metrics(exact: np.ndarray, approx: np.ndarray) -> np.ndarray:
+    """Error metrics over the input set.
+
+    ``avg_abs_rel_err`` uses ``|err| / max(|exact|, 1)`` — the divisor floor
+    avoids division by zero at exact == 0 (same convention in Rust).
+
+    Args:
+        exact:  (T,) exact outputs.
+        approx: (B, T) approximate outputs.
+    Returns:
+        (B, 4) float64: avg_abs_err, avg_abs_rel_err, max_abs_err, err_prob.
+    """
+    err = np.abs(exact[None, :].astype(np.float64) - approx.astype(np.float64))
+    denom = np.maximum(np.abs(exact).astype(np.float64), 1.0)[None, :]
+    return np.stack(
+        [
+            err.mean(axis=1),
+            (err / denom).mean(axis=1),
+            err.max(axis=1),
+            (err > 0).mean(axis=1),
+        ],
+        axis=1,
+    )
+
+
+def characterize_adder(configs: np.ndarray, n_bits: int, a=None, b=None) -> np.ndarray:
+    if a is None:
+        a, b = adder_inputs(n_bits)
+    return behav_metrics(adder_exact(a, b), adder_eval(configs, a, b))
+
+
+def characterize_mult(configs: np.ndarray, m_bits: int, terms=None) -> np.ndarray:
+    if terms is None:
+        a, b = mult_inputs(m_bits)
+        terms = mult_term_matrix(m_bits, a, b)
+    return behav_metrics(mult_exact(terms), mult_eval(configs, terms))

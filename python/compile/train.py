@@ -1,0 +1,182 @@
+"""Build-time training of the surrogate estimator and ConSS generator MLPs.
+
+The paper uses AutoML (MLJAR -> CatBoost/LightGBM) for PPA/BEHAV estimation
+and a scikit RandomForest for ConSS; the rust crate implements both tree
+ensembles natively (``rust/src/ml/``).  This module trains the *MLP*
+variants whose AOT-compiled forwards run on the GA hot path via PJRT:
+
+  * Estimator: 36-bit multiplier configuration -> min-max-scaled
+    [PDPLUT, AVG_ABS_REL_ERR].  Trained on a seeded random sample of the
+    8x8 signed-multiplier space characterized with the canonical
+    operator + synthesis models (the same data-generating process the rust
+    pipeline uses).
+  * ConSS generator: 10-bit 4x4 configuration + noise bits -> 36 bit
+    probabilities, trained on the Euclidean distance-matched dataset
+    (``matching.py``).
+
+Pure-jnp forward/backward with Adam; the Pallas forward is numerically
+pinned to the jnp forward by pytest, so the trained weights transfer.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import matching
+from . import operator_model as om
+from . import synth_model as sm
+from .kernels import ref
+from .model import CONSS_LAYERS, CONSS_NOISE_BITS, ESTIMATOR_LAYERS
+
+TRAIN_SAMPLE_MUL8 = 10650  # paper §V-B: sampled points of the 68.7e9 space
+SEED = 2023
+
+
+# ---------------------------------------------------------------------------
+# Dataset generation (mirrors rust/src/charac but on the numpy model)
+# ---------------------------------------------------------------------------
+
+
+def sample_mul8_configs(n: int = TRAIN_SAMPLE_MUL8, seed: int = SEED) -> np.ndarray:
+    """Seeded unique random sample of non-zero 36-bit configurations."""
+    rng = np.random.default_rng(seed)
+    seen: set[int] = set()
+    out = []
+    while len(out) < n:
+        v = int(rng.integers(1, 1 << 36))
+        if v not in seen:
+            seen.add(v)
+            out.append(om.config_from_uint(v, 36))
+    return np.stack(out)
+
+
+def characterize_mul(configs: np.ndarray, m_bits: int, chunk: int = 256) -> np.ndarray:
+    """(B, 2) [PDPLUT, AVG_ABS_REL_ERR] — the paper's headline metric pair.
+
+    Chunked over configurations: the (chunk, T) error plane for the 8x8
+    multiplier's 65536-pair input space stays ~128 MB instead of gigabytes.
+    """
+    a, b = om.mult_inputs(m_bits)
+    terms = om.mult_term_matrix(m_bits, a, b)
+    exact = om.mult_exact(terms)
+    rows = []
+    for s in range(0, configs.shape[0], chunk):
+        c = configs[s : s + chunk]
+        rows.append(om.behav_metrics(exact, om.mult_eval(c, terms)))
+    behav = np.concatenate(rows)
+    ppa = sm.mult_ppa(configs, m_bits)
+    return np.stack([ppa[:, 4], behav[:, 1]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# MLP training (plain jnp, Adam)
+# ---------------------------------------------------------------------------
+
+
+def init_params(layer_shapes, key):
+    params = []
+    for fan_in, fan_out in layer_shapes:
+        key, wk = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / fan_in)
+        params.append(
+            (
+                jax.random.normal(wk, (fan_in, fan_out), jnp.float32) * scale,
+                jnp.zeros((fan_out,), jnp.float32),
+            )
+        )
+    return params
+
+
+def _adam_update(params, grads, state, lr, step, b1=0.9, b2=0.999, eps=1e-8):
+    m, v = state
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mh = jax.tree.map(lambda a: a / (1 - b1**step), m)
+    vh = jax.tree.map(lambda a: a / (1 - b2**step), v)
+    params = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps), params, mh, vh)
+    return params, (m, v)
+
+
+@dataclass
+class TrainResult:
+    params: list
+    history: list[float] = field(default_factory=list)
+    x_min: np.ndarray | None = None  # target scaling (estimator only)
+    x_max: np.ndarray | None = None
+
+
+def _train(x, y, layer_shapes, loss_kind, epochs, batch, lr, seed):
+    key = jax.random.PRNGKey(seed)
+    params = init_params(layer_shapes, key)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    state = (zeros, jax.tree.map(jnp.zeros_like, params))
+
+    def loss_fn(p, xb, yb):
+        out = ref.mlp_ref(xb, p, final_sigmoid=False)
+        if loss_kind == "mse":
+            return jnp.mean((out - yb) ** 2)
+        # BCE with logits (ConSS): stable formulation.
+        return jnp.mean(jnp.maximum(out, 0) - out * yb + jnp.log1p(jnp.exp(-jnp.abs(out))))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    result = TrainResult(params=params)
+    step = 0
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        epoch_loss = 0.0
+        nb = 0
+        for s in range(0, n - batch + 1, batch):
+            xb = jnp.asarray(x[perm[s : s + batch]])
+            yb = jnp.asarray(y[perm[s : s + batch]])
+            step += 1
+            lval, grads = grad_fn(params, xb, yb)
+            params, state = _adam_update(params, grads, state, lr, step)
+            epoch_loss += float(lval)
+            nb += 1
+        result.history.append(epoch_loss / max(nb, 1))
+    result.params = params
+    return result
+
+
+def train_estimator(
+    configs: np.ndarray | None = None,
+    targets: np.ndarray | None = None,
+    epochs: int = 60,
+    batch: int = 256,
+    lr: float = 1e-3,
+) -> TrainResult:
+    """Train the 8x8-multiplier PPA/BEHAV estimator on scaled targets."""
+    if configs is None:
+        configs = sample_mul8_configs()
+    if targets is None:
+        targets = characterize_mul(configs, 8)
+    lo = targets.min(axis=0)
+    hi = targets.max(axis=0)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    y = ((targets - lo) / span).astype(np.float32)
+    x = configs.astype(np.float32)
+    res = _train(x, y, ESTIMATOR_LAYERS, "mse", epochs, batch, lr, seed=SEED)
+    res.x_min, res.x_max = lo, hi
+    return res
+
+
+def train_conss(
+    epochs: int = 40, batch: int = 256, lr: float = 1e-3,
+    h_configs: np.ndarray | None = None, h_metrics: np.ndarray | None = None,
+) -> TrainResult:
+    """Train the 4x4 -> 8x8 ConSS generator on matched pairs + noise bits."""
+    l_configs = om.all_configs(10)
+    l_metrics = characterize_mul(l_configs, 4)
+    if h_configs is None:
+        h_configs = sample_mul8_configs(2048, seed=SEED + 1)
+        h_metrics = characterize_mul(h_configs, 8)
+    x, y = matching.conss_dataset(
+        l_configs, l_metrics, h_configs, h_metrics, CONSS_NOISE_BITS
+    )
+    return _train(x, y, CONSS_LAYERS, "bce", epochs, batch, lr, seed=SEED + 2)

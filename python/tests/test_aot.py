@@ -1,0 +1,133 @@
+"""AOT export machinery: weights container, golden fixtures, HLO lowering."""
+
+import json
+import struct
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as L2
+from compile import operator_model as om
+
+
+def read_weights_bin(path):
+    """Reference reader for the AXOW container (mirrors rust runtime)."""
+    data = path.read_bytes()
+    assert data[:4] == b"AXOW"
+    version, n = struct.unpack_from("<II", data, 4)
+    assert version == 1
+    pos = 12
+    out = {}
+    for _ in range(n):
+        (name_len,) = struct.unpack_from("<I", data, pos)
+        pos += 4
+        name = data[pos : pos + name_len].decode()
+        pos += name_len
+        (ndim,) = struct.unpack_from("<I", data, pos)
+        pos += 4
+        dims = struct.unpack_from(f"<{ndim}I", data, pos)
+        pos += 4 * ndim
+        count = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, dtype="<f4", count=count, offset=pos)
+        pos += 4 * count
+        out[name] = arr.reshape(dims)
+    assert pos == len(data)
+    return out
+
+
+def test_weights_bin_roundtrip(tmp_path):
+    w = np.arange(6, dtype=np.float32).reshape(2, 3)
+    b = np.array([0.5, -1.5], dtype=np.float32)
+    p = tmp_path / "w.bin"
+    aot.write_weights_bin(p, [("layer.w", w), ("layer.b", b)])
+    back = read_weights_bin(p)
+    np.testing.assert_array_equal(back["layer.w"], w)
+    np.testing.assert_array_equal(back["layer.b"], b)
+
+
+def test_golden_configs_include_accurate_and_are_unique():
+    for length in (4, 8, 10, 36):
+        vals = aot.golden_configs(length)
+        assert (1 << length) - 1 in vals  # accurate
+        assert len(set(vals)) == len(vals)
+        assert all(1 <= v < (1 << length) for v in vals)
+
+
+def test_hlo_text_lowering_smoke():
+    cfg = jax.ShapeDtypeStruct((4, 3), jnp.int32)
+    col = jax.ShapeDtypeStruct((16, 1), jnp.int32)
+    lowered = jax.jit(L2.adder_eval).lower(cfg, col, col)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "s32[4,3]" in text  # entry signature keeps our shapes
+
+
+def test_small_export_writes_consistent_manifest(tmp_path):
+    manifest = {"version": 1, "executables": {}}
+    aot.export_adder("add4", 4, 16, 256, tmp_path, manifest)
+    entry = manifest["executables"]["axo_eval_add4"]
+    assert (tmp_path / entry["hlo"]).exists()
+    assert entry["inputs"][0]["shape"] == [16, 4]
+    assert entry["output"]["shape"] == [16, 4]
+    aot.export_mult("mul4", 4, 8, 256, tmp_path, manifest)
+    entry = manifest["executables"]["axo_eval_mul4"]
+    assert entry["config_len"] == 10
+    assert entry["inputs"][1]["shape"] == [256, 10]
+
+
+@pytest.mark.skipif(
+    not (Path(__file__).resolve().parents[2] / "artifacts/manifest.json").exists(),
+    reason="artifacts not built",
+)
+def test_built_artifacts_are_complete_and_coherent():
+    root = Path(__file__).resolve().parents[2] / "artifacts"
+    manifest = json.loads((root / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    expected = {
+        "axo_eval_add4",
+        "axo_eval_add8",
+        "axo_eval_add12",
+        "axo_eval_mul4",
+        "axo_eval_mul8",
+        "estimator_mul8",
+        "conss_mul4to8",
+    }
+    assert expected <= set(manifest["executables"])
+    for name, entry in manifest["executables"].items():
+        assert (root / entry["hlo"]).exists(), name
+        if entry.get("weights"):
+            w = read_weights_bin(root / entry["weights"])
+            assert list(w) == entry["param_order"]
+    est = manifest["executables"]["estimator_mul8"]
+    assert est["targets"] == ["pdplut", "avg_abs_rel_err"]
+    assert len(est["target_min"]) == 2
+    # Golden fixture coherence: metrics recompute identically.
+    golden = json.loads((root / "golden_behav.json").read_text())
+    entry = golden["operators"]["mul4"]
+    uints = [int(v) for v in entry["configs_uint"]]
+    cfgs = np.stack([om.config_from_uint(v, 10) for v in uints])
+    a, b = om.mult_inputs(4)
+    terms = om.mult_term_matrix(4, a, b)
+    behav = om.behav_metrics(om.mult_exact(terms), om.mult_eval(cfgs, terms))
+    np.testing.assert_allclose(behav, np.array(entry["behav"]), rtol=1e-12)
+
+
+@pytest.mark.skipif(
+    not (Path(__file__).resolve().parents[2] / "artifacts/inputs_add12.bin").exists(),
+    reason="artifacts not built",
+)
+def test_add12_input_file_matches_generator():
+    root = Path(__file__).resolve().parents[2] / "artifacts"
+    data = (root / "inputs_add12.bin").read_bytes()
+    assert data[:4] == b"AXIN"
+    version, n = struct.unpack_from("<II", data, 4)
+    assert version == 1
+    a = np.frombuffer(data, dtype="<u4", count=n, offset=12)
+    b = np.frombuffer(data, dtype="<u4", count=n, offset=12 + 4 * n)
+    ga, gb = om.adder_inputs(12)
+    np.testing.assert_array_equal(a, ga.astype(np.uint32))
+    np.testing.assert_array_equal(b, gb.astype(np.uint32))

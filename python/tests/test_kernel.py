@@ -1,0 +1,150 @@
+"""Pallas kernels vs pure-jnp ref vs canonical numpy model.
+
+The CORE correctness signal for L1: every kernel must agree with ``ref.py``
+(allclose) and ``ref.py`` must agree with ``operator_model.py`` exactly.
+Hypothesis sweeps shapes and configuration contents.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import operator_model as om
+from compile.kernels import axo_eval, mlp, ref
+
+
+def finalize(raw, t):
+    r = np.asarray(raw)
+    return np.stack([r[:, 0] / t, r[:, 1] / t, r[:, 2], r[:, 3] / t], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Adder kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_bits,bsz,t", [(4, 16, 256), (8, 8, 1024), (6, 4, 4096)])
+def test_adder_kernel_matches_ref(n_bits, bsz, t):
+    rng = np.random.default_rng(1)
+    cfgs = rng.integers(0, 2, size=(bsz, n_bits)).astype(np.int32)
+    a = rng.integers(0, 1 << n_bits, size=(t, 1)).astype(np.int32)
+    b = rng.integers(0, 1 << n_bits, size=(t, 1)).astype(np.int32)
+    out = axo_eval.adder_eval_kernel(
+        jnp.asarray(cfgs), jnp.asarray(a), jnp.asarray(b), config_block=4, input_tile=256
+    )
+    want = ref.adder_eval_ref(jnp.asarray(cfgs), jnp.asarray(a[:, 0]), jnp.asarray(b[:, 0]))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
+@given(
+    n_bits=st.integers(2, 12),
+    bsz=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_adder_kernel_matches_numpy_model(n_bits, bsz, seed):
+    rng = np.random.default_rng(seed)
+    cfgs = rng.integers(0, 2, size=(bsz, n_bits)).astype(np.int32)
+    t = 256
+    a = rng.integers(0, 1 << n_bits, size=t).astype(np.int64)
+    b = rng.integers(0, 1 << n_bits, size=t).astype(np.int64)
+    out = axo_eval.adder_eval_kernel(
+        jnp.asarray(cfgs),
+        jnp.asarray(a[:, None].astype(np.int32)),
+        jnp.asarray(b[:, None].astype(np.int32)),
+        config_block=2,
+        input_tile=128,
+    )
+    want = om.behav_metrics(om.adder_exact(a, b), om.adder_eval(cfgs, a, b))
+    np.testing.assert_allclose(finalize(out, t), want, rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Multiplier kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m_bits,bsz", [(2, 4), (4, 16), (4, 64)])
+def test_mult_kernel_matches_numpy_model(m_bits, bsz):
+    rng = np.random.default_rng(2)
+    l = om.mult_config_len(m_bits)
+    cfgs = rng.integers(0, 2, size=(bsz, l)).astype(np.int64)
+    a, b = om.mult_inputs(m_bits)
+    terms = om.mult_term_matrix(m_bits, a, b)
+    t = terms.shape[0]
+    out = axo_eval.mult_eval_kernel(
+        jnp.asarray(cfgs.astype(np.float32)),
+        jnp.asarray(terms.astype(np.float32)),
+        jnp.asarray(terms.sum(axis=1).astype(np.float32)[:, None]),
+        config_block=4,
+        input_tile=64,
+    )
+    want = om.behav_metrics(om.mult_exact(terms), om.mult_eval(cfgs, terms))
+    np.testing.assert_allclose(finalize(out, t), want, rtol=1e-5, atol=1e-7)
+
+
+@given(seed=st.integers(0, 2**31 - 1), tile=st.sampled_from([64, 256, 1024]))
+@settings(max_examples=10, deadline=None)
+def test_mult8_kernel_matches_ref_sampled_inputs(seed, tile):
+    rng = np.random.default_rng(seed)
+    cfgs = rng.integers(0, 2, size=(8, 36)).astype(np.float32)
+    a = rng.integers(-128, 128, size=1024, dtype=np.int64)
+    b = rng.integers(-128, 128, size=1024, dtype=np.int64)
+    terms = om.mult_term_matrix(8, a, b).astype(np.float32)
+    exact = terms.sum(axis=1)[:, None]
+    out = axo_eval.mult_eval_kernel(
+        jnp.asarray(cfgs), jnp.asarray(terms), jnp.asarray(exact),
+        config_block=8, input_tile=tile,
+    )
+    want = ref.mult_eval_ref(jnp.asarray(cfgs), jnp.asarray(terms))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5)
+
+
+def test_mult_kernel_accurate_config_zero_error():
+    a, b = om.mult_inputs(4)
+    terms = om.mult_term_matrix(4, a, b).astype(np.float32)
+    cfgs = np.ones((4, 10), dtype=np.float32)
+    out = axo_eval.mult_eval_kernel(
+        jnp.asarray(cfgs), jnp.asarray(terms),
+        jnp.asarray(terms.sum(axis=1)[:, None]),
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((4, 4)))
+
+
+# ---------------------------------------------------------------------------
+# MLP kernel
+# ---------------------------------------------------------------------------
+
+
+@given(
+    bsz=st.sampled_from([32, 64, 128]),
+    fin=st.integers(2, 40),
+    hidden=st.sampled_from([16, 64]),
+    fout=st.integers(1, 36),
+    sigmoid=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_mlp_kernel_matches_ref(bsz, fin, hidden, fout, sigmoid, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(bsz, fin)).astype(np.float32)
+    params = [
+        (rng.normal(size=(fin, hidden)).astype(np.float32) * 0.3,
+         rng.normal(size=(hidden,)).astype(np.float32) * 0.1),
+        (rng.normal(size=(hidden, fout)).astype(np.float32) * 0.3,
+         rng.normal(size=(fout,)).astype(np.float32) * 0.1),
+    ]
+    jp = [(jnp.asarray(w), jnp.asarray(b)) for w, b in params]
+    out = mlp.mlp_forward(jnp.asarray(x), jp, final_sigmoid=sigmoid, batch_tile=32)
+    want = ref.mlp_ref(jnp.asarray(x), jp, final_sigmoid=sigmoid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_mlp_single_layer_linear_identity():
+    x = np.eye(8, dtype=np.float32)
+    w = np.eye(8, dtype=np.float32)
+    b = np.zeros(8, dtype=np.float32)
+    out = mlp.linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), batch_tile=8)
+    np.testing.assert_array_equal(np.asarray(out), x)

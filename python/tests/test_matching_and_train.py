@@ -1,0 +1,85 @@
+"""Distance matching (build-time mirror) and MLP training smoke tests."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import matching
+from compile import operator_model as om
+from compile import train
+
+
+def test_minmax_scale_range_and_constant_columns():
+    x = np.array([[0.0, 5.0], [10.0, 5.0], [5.0, 5.0]])
+    s = matching.minmax_scale(x)
+    np.testing.assert_allclose(s[:, 0], [0.0, 1.0, 0.5])
+    np.testing.assert_allclose(s[:, 1], 0.0)  # constant column maps to 0
+
+
+def test_match_euclidean_identity():
+    """When H == L (same scaled metric cloud), every point matches itself."""
+    rng = np.random.default_rng(0)
+    m = rng.uniform(size=(50, 2))
+    idx = matching.match_euclidean(m, m)
+    np.testing.assert_array_equal(idx, np.arange(50))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_match_euclidean_is_argmin(seed):
+    rng = np.random.default_rng(seed)
+    l = rng.uniform(size=(20, 2))
+    h = rng.uniform(size=(31, 2))
+    idx = matching.match_euclidean(l, h)
+    ls = matching.minmax_scale(l)
+    hs = matching.minmax_scale(h)
+    for i in range(len(h)):
+        d = ((hs[i] - ls) ** 2).sum(axis=1)
+        assert d[idx[i]] <= d.min() + 1e-12
+
+
+def test_conss_dataset_noise_replication():
+    l_cfg = om.all_configs(4)
+    h_cfg = om.all_configs(6)
+    rng = np.random.default_rng(1)
+    l_m = rng.uniform(size=(len(l_cfg), 2))
+    h_m = rng.uniform(size=(len(h_cfg), 2))
+    x, y = matching.conss_dataset(l_cfg, l_m, h_cfg, h_m, noise_bits=2)
+    assert x.shape == (len(h_cfg) * 4, 4 + 2)
+    assert y.shape == (len(h_cfg) * 4, 6)
+    # Noise suffixes: each matched pair appears with all 4 noise values.
+    base = x[:, :4]
+    assert set(map(tuple, x[:, 4:])) == {(0, 0), (1, 0), (0, 1), (1, 1)}
+    # Outputs are valid 0/1 configurations.
+    assert set(np.unique(y)) <= {0.0, 1.0}
+    assert set(np.unique(base)) <= {0.0, 1.0}
+
+
+def test_sample_mul8_configs_unique_nonzero_deterministic():
+    a = train.sample_mul8_configs(100, seed=5)
+    b = train.sample_mul8_configs(100, seed=5)
+    np.testing.assert_array_equal(a, b)
+    uints = {om.config_to_uint(c) for c in a}
+    assert len(uints) == 100 and 0 not in uints
+
+
+def test_characterize_mul_chunking_consistent():
+    cfgs = train.sample_mul8_configs(8, seed=3)
+    full = train.characterize_mul(cfgs, 8, chunk=8)
+    chunked = train.characterize_mul(cfgs, 8, chunk=3)
+    np.testing.assert_allclose(full, chunked)
+
+
+def test_train_estimator_loss_decreases_tiny():
+    cfgs = train.sample_mul8_configs(256, seed=11)
+    targets = train.characterize_mul(cfgs, 8)
+    res = train.train_estimator(cfgs, targets, epochs=8, batch=64)
+    assert res.history[-1] < res.history[0]
+    assert res.x_min is not None and len(res.x_min) == 2
+
+
+def test_train_conss_loss_decreases_tiny():
+    h_cfgs = train.sample_mul8_configs(64, seed=12)
+    h_m = train.characterize_mul(h_cfgs, 8)
+    res = train.train_conss(epochs=4, batch=64, h_configs=h_cfgs, h_metrics=h_m)
+    assert res.history[-1] < res.history[0]

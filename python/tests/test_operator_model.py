@@ -1,0 +1,152 @@
+"""Canonical operator model: bit-exactness and structural invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import operator_model as om
+
+
+# ---------------------------------------------------------------------------
+# Adder
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_bits", [3, 4, 8])
+def test_adder_accurate_is_exact_exhaustive(n_bits):
+    a, b = om.adder_inputs(n_bits, max_samples=1 << (2 * n_bits))
+    cfg = np.ones((1, n_bits), dtype=np.int32)
+    out = om.adder_eval(cfg, a, b)
+    np.testing.assert_array_equal(out[0], a.astype(np.int64) + b)
+
+
+@given(
+    n_bits=st.integers(4, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_adder_accurate_is_exact_sampled(n_bits, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 1 << n_bits, size=64, dtype=np.uint32)
+    b = rng.integers(0, 1 << n_bits, size=64, dtype=np.uint32)
+    cfg = np.ones((1, n_bits), dtype=np.int32)
+    np.testing.assert_array_equal(om.adder_eval(cfg, a, b)[0], a.astype(np.int64) + b)
+
+
+def test_adder_removal_rule_bit0():
+    """l_0 = 0 forces s_0 = c_0 = 0 and c_1 = b_0 (DESIGN.md model)."""
+    cfg = np.array([[0, 1, 1]], dtype=np.int32)
+    # a=1, b=1: exact 2. With l0 removed: s0=0, c1=b0=1, remaining bits add
+    # a'=0,b'=0 with carry-in 1 -> out = 2. Still exact here.
+    out = om.adder_eval(cfg, np.array([1]), np.array([1]))
+    assert out[0, 0] == 2
+    # a=1, b=0: exact 1. s0 = 0, c1 = b0 = 0 -> out 0.
+    out = om.adder_eval(cfg, np.array([1]), np.array([0]))
+    assert out[0, 0] == 0
+
+
+def test_adder_all_zero_config_output():
+    """All LUTs removed: s_i = c_i where c propagates b bits shifted."""
+    cfg = np.zeros((1, 4), dtype=np.int32)
+    a = np.array([5])
+    b = np.array([3])
+    # c_0=0, s_0=0, c_{i+1}=b_i: out bits s_i = b_{i-1} -> out = (b << 1) & mask + carry-out b_3.
+    out = om.adder_eval(cfg, a, b)
+    assert out[0, 0] == ((3 << 1) & 0xF) | (((3 >> 3) & 1) << 4)
+
+
+# ---------------------------------------------------------------------------
+# Multiplier
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m_bits", [2, 3, 4])
+def test_mult_terms_sum_to_exact_product_exhaustive(m_bits):
+    a, b = om.mult_inputs(m_bits)
+    terms = om.mult_term_matrix(m_bits, a, b)
+    np.testing.assert_array_equal(terms.sum(axis=1), a * b)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_mult8_terms_sum_to_exact_product_sampled(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, size=128, dtype=np.int64)
+    b = rng.integers(-128, 128, size=128, dtype=np.int64)
+    terms = om.mult_term_matrix(8, a, b)
+    np.testing.assert_array_equal(terms.sum(axis=1), a * b)
+
+
+def test_mult_accurate_config_is_exact():
+    a, b = om.mult_inputs(4)
+    terms = om.mult_term_matrix(4, a, b)
+    cfg = np.ones((1, om.mult_config_len(4)), dtype=np.int32)
+    np.testing.assert_array_equal(om.mult_eval(cfg, terms)[0], a * b)
+
+
+def test_mult_pairs_order_and_len():
+    assert om.mult_pairs(2) == [(0, 0), (0, 1), (1, 1)]
+    assert om.mult_config_len(4) == 10
+    assert om.mult_config_len(8) == 36  # Table II: 36-bit config string
+
+
+def test_mult_single_removal_effect():
+    """Removing pair (0,0) zeroes a0*b0: product loses exactly 1 when both odd."""
+    m = 4
+    a = np.array([3, 3, 2], dtype=np.int64)
+    b = np.array([5, 4, 6], dtype=np.int64)
+    terms = om.mult_term_matrix(m, a, b)
+    cfg = np.ones((1, om.mult_config_len(m)), dtype=np.int32)
+    cfg[0, 0] = 0  # pair (0,0)
+    out = om.mult_eval(cfg, terms)[0]
+    np.testing.assert_array_equal(out, a * b - (a & 1) * (b & 1))
+
+
+# ---------------------------------------------------------------------------
+# Configs / metrics
+# ---------------------------------------------------------------------------
+
+
+@given(length=st.integers(1, 36), value=st.integers(1, 2**36 - 1))
+@settings(max_examples=50, deadline=None)
+def test_config_uint_roundtrip(length, value):
+    value %= 1 << length
+    if value == 0:
+        value = 1
+    bits = om.config_from_uint(value, length)
+    assert om.config_to_uint(bits) == value
+
+
+def test_all_configs_excludes_zero():
+    cfgs = om.all_configs(4)
+    assert cfgs.shape == (15, 4)
+    assert (cfgs.sum(axis=1) > 0).all()
+    # Table II counts: 16 total designs - zero config = 15 usable; 8-bit: 255.
+    assert om.all_configs(8).shape[0] == 255
+
+
+def test_behav_metrics_zero_for_exact():
+    exact = np.array([1, 2, 3, -4])
+    approx = exact[None, :].copy()
+    m = om.behav_metrics(exact, approx)
+    np.testing.assert_array_equal(m, np.zeros((1, 4)))
+
+
+def test_behav_metrics_known_values():
+    exact = np.array([0, 2, -4])
+    approx = np.array([[1, 1, -2]])
+    m = om.behav_metrics(exact, approx)
+    # errs: 1,1,2 ; rel: 1/1, 1/2, 2/4 ; max 2 ; prob 1.0
+    np.testing.assert_allclose(m[0], [4 / 3, (1 + 0.5 + 0.5) / 3, 2.0, 1.0])
+
+
+def test_adder_error_grows_with_significance():
+    """Removing a more significant LUT yields larger avg abs error."""
+    a, b = om.adder_inputs(8, max_samples=1 << 16)
+    errs = []
+    for k in (0, 3, 7):
+        cfg = np.ones((1, 8), dtype=np.int32)
+        cfg[0, k] = 0
+        errs.append(om.characterize_adder(cfg, 8, a, b)[0, 0])
+    assert errs[0] < errs[1] < errs[2]

@@ -1,0 +1,99 @@
+"""Analytical synthesis estimator: pinned values + structural invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import operator_model as om
+from compile import synth_model as sm
+
+
+def test_adder_accurate_pinned_values():
+    cfg = np.ones((1, 8), dtype=np.int32)
+    luts, cpd, power, pdp, pdplut = sm.adder_ppa(cfg)[0]
+    assert luts == 8
+    np.testing.assert_allclose(cpd, sm.T_NET_NS + sm.T_LUT_NS + sm.T_CARRY_NS * 8)
+    # act_i = 0.5 + (i+1)/(4*8); sum = 4 + (1+...+8)/32 = 4 + 36/32
+    np.testing.assert_allclose(power, sm.P_BASE_MW + sm.P_LUT_MW * (4 + 36 / 32))
+    np.testing.assert_allclose(pdp, power * cpd)
+    np.testing.assert_allclose(pdplut, pdp * 8)
+
+
+def test_adder_removal_breaks_carry_chain():
+    full = sm.adder_ppa(np.ones((1, 8), dtype=np.int32))[0]
+    mid = np.ones((1, 8), dtype=np.int32)
+    mid[0, 4] = 0  # splits chain into runs of 4 and 3
+    cut = sm.adder_ppa(mid)[0]
+    assert cut[1] < full[1]  # CPD shrinks
+    assert cut[0] == 7  # one fewer LUT
+    assert cut[2] < full[2]  # less switching power
+
+
+@given(n_bits=st.sampled_from([4, 8, 12]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_adder_ppa_monotone_in_luts(n_bits, seed):
+    """Removing any LUT never increases LUTs, power, CPD or PDPLUT."""
+    rng = np.random.default_rng(seed)
+    cfg = rng.integers(0, 2, size=(1, n_bits)).astype(np.int64)
+    if cfg.sum() == 0:
+        cfg[0, 0] = 1
+    base = sm.adder_ppa(cfg)[0]
+    ones = np.flatnonzero(cfg[0])
+    k = ones[rng.integers(len(ones))]
+    cfg2 = cfg.copy()
+    cfg2[0, k] = 0
+    red = sm.adder_ppa(cfg2)[0]
+    assert red[0] <= base[0] and red[1] <= base[1] and red[2] <= base[2]
+    assert red[4] <= base[4]
+
+
+def test_longest_run():
+    bits = np.array([[1, 1, 0, 1, 1, 1], [0, 0, 0, 0, 0, 0], [1, 1, 1, 1, 1, 1]])
+    np.testing.assert_array_equal(sm._longest_run(bits), [3, 0, 6])
+
+
+def test_mult_accurate_pinned_values():
+    m = 4
+    cfg = np.ones((1, om.mult_config_len(m)), dtype=np.int32)
+    luts, cpd, power, pdp, pdplut = sm.mult_ppa(cfg, m)[0]
+    assert luts == 10 + 4
+    # col heights for 4x4 pairs: col c height = #bits: cols 0..6
+    # pairs (i,j): (0,0)c0 h1,(0,1)c1 h2,(0,2)c2 h2,(0,3)c3 h2,(1,1)c2 h1,
+    # (1,2)c3 h2,(1,3)c4 h2,(2,2)c4 h1,(2,3)c5 h2,(3,3)c6 h1
+    # heights: [1,2,3,4,3,2,1] -> hmax 4, depth=ceil(ln4/ln1.5)=ceil(3.42)=4
+    depth = np.ceil(np.log(4.0) / np.log(1.5))
+    np.testing.assert_allclose(cpd, sm.T_NET_NS + sm.T_LUT_NS * (1 + depth) + sm.T_CARRY_NS * 7)
+    assert power > sm.P_BASE_MW
+    np.testing.assert_allclose(pdplut, pdp * luts)
+
+
+@given(m_bits=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_mult_ppa_monotone_in_luts(m_bits, seed):
+    rng = np.random.default_rng(seed)
+    l = om.mult_config_len(m_bits)
+    cfg = rng.integers(0, 2, size=(1, l)).astype(np.int64)
+    if cfg.sum() == 0:
+        cfg[0, 0] = 1
+    base = sm.mult_ppa(cfg, m_bits)[0]
+    ones = np.flatnonzero(cfg[0])
+    k = ones[rng.integers(len(ones))]
+    cfg2 = cfg.copy()
+    cfg2[0, k] = 0
+    red = sm.mult_ppa(cfg2, m_bits)[0]
+    assert red[0] <= base[0] and red[1] <= base[1] and red[2] <= base[2]
+
+
+def test_mult_ppa_rejects_wrong_config_len():
+    with pytest.raises(AssertionError):
+        sm.mult_ppa(np.ones((1, 9), dtype=np.int64), 4)
+
+
+def test_ppa_dispatch():
+    cfg = np.ones((2, 8), dtype=np.int64)
+    np.testing.assert_array_equal(sm.ppa(cfg, "adder", 8), sm.adder_ppa(cfg))
+    cfgm = np.ones((2, 10), dtype=np.int64)
+    np.testing.assert_array_equal(sm.ppa(cfgm, "mult", 4), sm.mult_ppa(cfgm, 4))
+    with pytest.raises(ValueError):
+        sm.ppa(cfg, "divider", 8)

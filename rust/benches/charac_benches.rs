@@ -1,0 +1,73 @@
+//! Characterization throughput benches (feeds EXPERIMENTS.md §Perf L3 and
+//! the Table II reproduction cost numbers).
+//!
+//! Run: `cargo bench --bench charac_benches`
+
+use repro::charac::{behav, characterize, Backend, InputSet};
+use repro::operator::{adder, multiplier, AxoConfig, Operator};
+use repro::util::bench::Bench;
+use repro::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+
+    // Scalar operator model evaluation (the native substrate's inner loop).
+    let cfg8 = AxoConfig::new(0b1011_0111, 8).unwrap();
+    b.bench("adder8/eval_one", || adder::eval_one(&cfg8, 173, 92));
+    let cfgm = AxoConfig::new(0x5_BEEF_CAFE, 36).unwrap();
+    b.bench("mul8/eval_one", || multiplier::eval_one(8, &cfgm, -77, 103));
+
+    // Term-matrix construction (shared operand of the PJRT kernel).
+    let (a4, b4) = multiplier::exhaustive_inputs(4);
+    b.bench("mul4/term_matrix_256", || multiplier::term_matrix(4, &a4, &b4));
+
+    // Batched native BEHAV characterization.
+    let inputs8 = InputSet::exhaustive(Operator::ADD8);
+    let a8: Vec<u32> = inputs8.a.iter().map(|&v| v as u32).collect();
+    let b8: Vec<u32> = inputs8.b.iter().map(|&v| v as u32).collect();
+    let cfgs64: Vec<AxoConfig> = {
+        let mut rng = Rng::seed_from_u64(1);
+        AxoConfig::sample_unique(8, 64, &mut rng)
+    };
+    b.bench("adder8/behav_64cfg_x65536", || behav::adder_behav(&cfgs64, &a8, &b8));
+
+    let inputs_m8 = InputSet::exhaustive(Operator::MUL8);
+    let terms = multiplier::term_matrix(8, &inputs_m8.a, &inputs_m8.b);
+    let mcfgs: Vec<AxoConfig> = {
+        let mut rng = Rng::seed_from_u64(2);
+        AxoConfig::sample_unique(36, 64, &mut rng)
+    };
+    b.bench("mul8/behav_64cfg_x65536", || behav::mult_behav(&mcfgs, &terms, 36));
+
+    // Full pipeline (BEHAV + synthesis estimator) per Table II row.
+    let inputs4 = InputSet::exhaustive(Operator::ADD4);
+    b.bench("pipeline/add4_exhaustive(15)", || {
+        let cfgs: Vec<AxoConfig> = AxoConfig::enumerate(4).collect();
+        characterize(Operator::ADD4, &cfgs, &inputs4, &Backend::Native).unwrap()
+    });
+    let inputs_m4 = InputSet::exhaustive(Operator::MUL4);
+    b.bench("pipeline/mul4_exhaustive(1023)", || {
+        let cfgs: Vec<AxoConfig> = AxoConfig::enumerate(10).collect();
+        characterize(Operator::MUL4, &cfgs, &inputs_m4, &Backend::Native).unwrap()
+    });
+
+    // PJRT path, when artifacts are built: the AOT Pallas kernel.
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        use repro::runtime::{AxoEvalExec, Runtime};
+        let rt = Runtime::cpu(&artifacts).unwrap();
+        let exec = AxoEvalExec::new(&rt, Operator::MUL4, &inputs_m4).unwrap();
+        b.bench("pjrt/mul4_axo_eval_64cfg_x256", || {
+            exec.eval_configs(&mcfgs.iter().map(|_| AxoConfig::accurate(10)).take(64).collect::<Vec<_>>())
+                .unwrap()
+        });
+        let exec8 = AxoEvalExec::new(&rt, Operator::MUL8, &inputs_m8).unwrap();
+        b.bench("pjrt/mul8_axo_eval_64cfg_x65536", || {
+            exec8.eval_configs(&mcfgs[..64.min(mcfgs.len())]).unwrap()
+        });
+    } else {
+        println!("(artifacts not built — skipping PJRT benches; run `make artifacts`)");
+    }
+
+    b.finish();
+}

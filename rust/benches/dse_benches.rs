@@ -1,0 +1,67 @@
+//! DSE engine benches: hypervolume, non-dominated sort, GA generations
+//! (the paper's Fig. 15/16 machinery; feeds EXPERIMENTS.md §Perf L3).
+//!
+//! Run: `cargo bench --bench dse_benches`
+
+use repro::dse::{
+    hypervolume2d, nsga2, pareto_front_indices, Constraints, GaOptions, NsgaRunner,
+    Objectives,
+};
+use repro::operator::AxoConfig;
+use repro::util::bench::Bench;
+use repro::util::rng::Rng;
+use std::time::Duration;
+
+fn random_points(n: usize, seed: u64) -> Vec<Objectives> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n).map(|_| [rng.gen_f64(), rng.gen_f64()]).collect()
+}
+
+fn main() {
+    let mut b = Bench::new().with_budget(Duration::from_millis(150), Duration::from_secs(1));
+
+    for n in [100usize, 1000, 10_000] {
+        let pts = random_points(n, n as u64);
+        b.bench(&format!("pareto/front_indices_{n}"), || pareto_front_indices(&pts));
+        b.bench(&format!("hypervolume/2d_{n}"), || hypervolume2d(&pts, [1.0, 1.0]));
+    }
+
+    let pts = random_points(200, 9);
+    let constraints = Constraints::new(0.8, 0.8).unwrap();
+    b.bench("nsga2/fast_nondominated_sort_200", || {
+        nsga2::fast_non_dominated_sort(&pts, Some(&constraints))
+    });
+    b.bench("nsga2/select_200_to_100", || nsga2::select(&pts, Some(&constraints), 100));
+
+    // GA end-to-end with a cheap analytic fitness: isolates engine cost.
+    let fitness = |cfgs: &[AxoConfig]| -> repro::error::Result<Vec<Objectives>> {
+        Ok(cfgs
+            .iter()
+            .map(|c| {
+                let ones = c.count_kept() as f64 / c.len() as f64;
+                [1.0 - ones, ones * ones]
+            })
+            .collect())
+    };
+    for (pop, gens) in [(100usize, 10u32), (100, 50)] {
+        b.bench(&format!("ga/36bit_pop{pop}_gens{gens}"), || {
+            let runner = NsgaRunner::new(
+                GaOptions { pop_size: pop, generations: gens, seed: 7, ..Default::default() },
+                constraints,
+            );
+            runner.run(36, &fitness, &[]).unwrap()
+        });
+    }
+
+    // Paper-scale single run: pop 100 × 250 generations (Fig. 15 setting).
+    let mut paper = Bench::new().with_budget(Duration::from_millis(10), Duration::from_secs(2));
+    paper.bench("ga/paper_scale_pop100_gens250", || {
+        let runner = NsgaRunner::new(
+            GaOptions { pop_size: 100, generations: 250, seed: 7, ..Default::default() },
+            constraints,
+        );
+        runner.run(36, &fitness, &[]).unwrap()
+    });
+
+    b.finish();
+}

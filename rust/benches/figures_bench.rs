@@ -1,0 +1,45 @@
+//! End-to-end figure regeneration timings (quick-scale settings).
+//!
+//! One timed pass per cheap paper figure: this is the "how long does it
+//! take to reproduce the paper's analysis" number recorded in
+//! EXPERIMENTS.md. The GA-heavy figures (15–18) are exercised by
+//! `cargo run --example end_to_end_dse` instead — they take minutes, not
+//! bench-loop material.
+//!
+//! Run: `cargo bench --bench figures_bench`
+
+use repro::expcfg::ExperimentConfig;
+use repro::report::{figures, tables, Harness};
+use repro::util::bench::Bench;
+use repro::util::tempdir::TempDir;
+use std::time::Duration;
+
+fn main() {
+    let tmp = TempDir::new().unwrap();
+    let mut cfg = ExperimentConfig::default();
+    cfg.train_samples = 800; // quick-scale H_CHAR sample
+    cfg.conss.forest_trees = Some(10);
+    cfg.out_dir = tmp.path().to_path_buf();
+    let harness = Harness::new(cfg);
+
+    // Datasets are cached inside the harness after the first call, so the
+    // first bench includes characterization and the rest measure analysis.
+    let mut b = Bench::new().with_budget(Duration::from_millis(10), Duration::from_millis(500));
+    b.bench("figures/tab2_operators", || tables::tab2_operators(&harness).unwrap());
+    b.bench("figures/fig1_clustering(add8+add12)", || {
+        figures::fig1_clustering_adders(&harness).unwrap()
+    });
+    b.bench("figures/fig2_trends", || figures::fig2_trends_subsampled(&harness).unwrap());
+    b.bench("figures/fig5_trends", || figures::fig5_trends_all_adders(&harness).unwrap());
+    b.bench("figures/fig10_clustering(mul)", || {
+        figures::fig10_clustering_multipliers(&harness).unwrap()
+    });
+    b.bench("figures/fig11_distance_hists", || {
+        figures::fig11_distance_distributions(&harness).unwrap()
+    });
+    b.bench("figures/fig12_matching", || figures::fig12_matching(&harness).unwrap());
+    b.bench("figures/fig13_conss_accuracy", || {
+        figures::fig13_conss_accuracy(&harness).unwrap()
+    });
+    b.finish();
+}

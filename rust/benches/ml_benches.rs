@@ -1,0 +1,78 @@
+//! ML substrate benches: forest / GBT train+predict, estimator service.
+//!
+//! Run: `cargo bench --bench ml_benches`
+
+use repro::charac::{characterize, Backend, InputSet};
+use repro::coordinator::{BatchOptions, EstimatorService};
+use repro::ml::forest::{ForestParams, RandomForest};
+use repro::ml::gbt::{GbtParams, GradientBoostedTrees};
+use repro::operator::{AxoConfig, Operator};
+use repro::surrogate::{GbtSurrogate, Surrogate};
+use repro::util::bench::Bench;
+use repro::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bench::new().with_budget(Duration::from_millis(150), Duration::from_secs(1));
+
+    // Dataset: 1024 sampled mul8 designs (the GA's fitness substrate).
+    let op = Operator::MUL8;
+    let inputs = InputSet::exhaustive(op);
+    let mut rng = Rng::seed_from_u64(3);
+    let cfgs = AxoConfig::sample_unique(36, 1024, &mut rng);
+    let ds = characterize(op, &cfgs, &inputs, &Backend::Native).unwrap();
+    let x: Vec<f64> = ds
+        .configs
+        .iter()
+        .flat_map(|c| c.to_bits_f32().into_iter().map(|v| v as f64))
+        .collect();
+    let y_err: Vec<f64> = ds.behav.iter().map(|m| m.avg_abs_rel_err).collect();
+    let y_bits: Vec<f64> = ds
+        .configs
+        .iter()
+        .flat_map(|c| c.to_bits_f32().into_iter().map(|v| v as f64))
+        .collect();
+
+    // Training costs.
+    b.bench("gbt/train_1024x36_120stages", || {
+        GradientBoostedTrees::fit(&x, 36, &y_err, GbtParams::default()).unwrap()
+    });
+    let forest_params = ForestParams { n_trees: 25, ..Default::default() };
+    b.bench("forest/train_1024x36_to_36out_25trees", || {
+        RandomForest::fit(&x, 36, &y_bits, 36, forest_params.clone()).unwrap()
+    });
+
+    // Prediction costs (the GA hot loop).
+    let gbt = GradientBoostedTrees::fit(&x, 36, &y_err, GbtParams::default()).unwrap();
+    let row = &x[..36];
+    b.bench("gbt/predict_row", || gbt.predict_row(row));
+    let forest = RandomForest::fit(&x, 36, &y_bits, 36, forest_params).unwrap();
+    b.bench("forest/predict_bits_row", || forest.predict_bits_row(row));
+
+    let surrogate = GbtSurrogate::train(&ds, GbtParams::default()).unwrap();
+    let batch = &ds.configs[..256];
+    b.bench("surrogate/gbt_predict_256", || surrogate.predict(batch).unwrap());
+
+    // Batching service round-trip (single client; measures overhead).
+    let svc = EstimatorService::spawn(
+        Arc::new(GbtSurrogate::train(&ds, GbtParams::default()).unwrap()),
+        BatchOptions { max_batch: 256, max_wait: Duration::from_micros(200) },
+    );
+    let req: Vec<AxoConfig> = ds.configs[..100].to_vec();
+    b.bench("service/roundtrip_100cfg", || svc.predict(req.clone()).unwrap());
+
+    // PJRT MLP estimator, when artifacts are built.
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        use repro::runtime::{MlpExec, Runtime};
+        use repro::surrogate::PjrtSurrogate;
+        let rt = Runtime::cpu(&artifacts).unwrap();
+        let mlp = PjrtSurrogate::new(MlpExec::new(&rt, "estimator_mul8").unwrap()).unwrap();
+        b.bench("surrogate/pjrt_mlp_predict_256", || mlp.predict(batch).unwrap());
+    } else {
+        println!("(artifacts not built — skipping PJRT MLP bench)");
+    }
+
+    b.finish();
+}

@@ -1,0 +1,45 @@
+//! AppAxO baseline [12]: GA + ML fitness, random initialization.
+//!
+//! AxOCS's augmented GA differs from AppAxO only in the initial population
+//! (ConSS pool vs. random), so the baseline reuses [`NsgaRunner`] with no
+//! seeds — the "GA" bars of Figs. 15/16 and the AppAxO fronts of
+//! Figs. 17/18.
+
+use crate::dse::{Constraints, Fitness, GaOptions, GaResult, NsgaRunner};
+use crate::error::Result;
+
+/// Run the AppAxO-style search: random init, ML fitness.
+pub fn appaxo_search(
+    config_len: u32,
+    fitness: &dyn Fitness,
+    constraints: Constraints,
+    options: GaOptions,
+) -> Result<GaResult> {
+    NsgaRunner::new(options, constraints).run(config_len, fitness, &[])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::Objectives;
+    use crate::operator::AxoConfig;
+
+    fn fitness(configs: &[AxoConfig]) -> Result<Vec<Objectives>> {
+        Ok(configs
+            .iter()
+            .map(|c| {
+                let ones = c.count_kept() as f64 / c.len() as f64;
+                [1.0 - ones, ones]
+            })
+            .collect())
+    }
+
+    #[test]
+    fn runs_and_improves() {
+        let opts = GaOptions { pop_size: 16, generations: 10, ..Default::default() };
+        let r = appaxo_search(10, &fitness, Constraints::new(1.0, 1.0).unwrap(), opts)
+            .unwrap();
+        assert!(r.final_hypervolume() > 0.0);
+        assert!(r.hv_history.len() == 11);
+    }
+}

@@ -1,0 +1,121 @@
+//! EvoApprox-like fixed library baseline [6].
+//!
+//! The published EvoApprox designs are ASIC netlists outside our operator
+//! model; following DESIGN.md's substitution rule we synthesize the
+//! *structured* design families such libraries contain, expressed as
+//! configurations of the Baugh-Wooley multiplier model:
+//!
+//! * **Column truncation** — drop all partial products below significance
+//!   `k` (the classic truncated-multiplier family, e.g. [20]).
+//! * **Operand-bit elimination** — drop every pair touching operand bit
+//!   `i` (DRUM-style range reduction [5]).
+//! * **Diagonal-only / block patterns** — keep diagonal pairs plus the top
+//!   block (functional 2×2-style decompositions [22]).
+//!
+//! The library is characterized with the same substrate as everything else
+//! and the baseline "selects" its Pareto front — no iterative search,
+//! mirroring how designers pick from a published library.
+
+use crate::operator::{multiplier, AxoConfig, Operator, OperatorKind};
+
+/// Generate the structured library for a signed multiplier.
+pub fn evoapprox_library(op: Operator) -> Vec<AxoConfig> {
+    assert_eq!(op.kind, OperatorKind::SignedMultiplier);
+    let m = op.bits;
+    let pairs = multiplier::pairs(m);
+    let l = pairs.len() as u32;
+    let mut seen = std::collections::HashSet::new();
+    let mut lib = Vec::new();
+    let mut push = |bits: Vec<u8>, lib: &mut Vec<AxoConfig>| {
+        if let Ok(c) = AxoConfig::from_bits(&bits) {
+            if seen.insert(c.as_uint()) {
+                lib.push(c);
+            }
+        }
+    };
+
+    // Column truncation: keep pairs with i+j >= k.
+    for k in 0..(2 * m - 1) {
+        let bits: Vec<u8> = pairs.iter().map(|&(i, j)| (i + j >= k) as u8).collect();
+        push(bits, &mut lib);
+    }
+    // Operand-bit elimination: drop pairs touching bits < e (LSB side).
+    for e in 1..m {
+        let bits: Vec<u8> =
+            pairs.iter().map(|&(i, j)| (i >= e && j >= e) as u8).collect();
+        push(bits, &mut lib);
+    }
+    // Single-bit elimination: drop pairs touching exactly bit t.
+    for t in 0..m {
+        let bits: Vec<u8> =
+            pairs.iter().map(|&(i, j)| (i != t && j != t) as u8).collect();
+        push(bits, &mut lib);
+    }
+    // Diagonal + top-block hybrids: keep diagonals and any pair with both
+    // indices >= s.
+    for s in 0..m {
+        let bits: Vec<u8> = pairs
+            .iter()
+            .map(|&(i, j)| (i == j || (i >= s && j >= s)) as u8)
+            .collect();
+        push(bits, &mut lib);
+    }
+    // Truncation + exact-MSB combinations (two-parameter family).
+    for k in 1..(2 * m - 1) {
+        for keep_msb in 0..m {
+            let bits: Vec<u8> = pairs
+                .iter()
+                .map(|&(i, j)| {
+                    (i + j >= k || i >= m - 1 - keep_msb || j >= m - 1 - keep_msb) as u8
+                })
+                .collect();
+            push(bits, &mut lib);
+        }
+    }
+    debug_assert!(lib.iter().all(|c| c.len() == l));
+    lib
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::charac::{characterize, Backend, InputSet};
+
+    #[test]
+    fn library_is_nonempty_unique_valid() {
+        for op in [Operator::MUL4, Operator::MUL8] {
+            let lib = evoapprox_library(op);
+            let min = if op.bits >= 8 { 40 } else { 15 };
+            assert!(lib.len() >= min, "{op}: {}", lib.len());
+            let uniq: std::collections::HashSet<u64> =
+                lib.iter().map(|c| c.as_uint()).collect();
+            assert_eq!(uniq.len(), lib.len());
+            assert!(lib.iter().all(|c| c.len() == op.config_len()));
+        }
+    }
+
+    #[test]
+    fn library_contains_accurate_design() {
+        // k = 0 truncation keeps everything.
+        let lib = evoapprox_library(Operator::MUL4);
+        assert!(lib.iter().any(|c| c.is_accurate()));
+    }
+
+    #[test]
+    fn truncation_members_behave_monotonically() {
+        // Deeper truncation ⇒ error does not decrease.
+        let op = Operator::MUL4;
+        let pairs = multiplier::pairs(4);
+        let inputs = InputSet::exhaustive(op);
+        let mut cfgs = Vec::new();
+        for k in 0..4 {
+            let bits: Vec<u8> =
+                pairs.iter().map(|&(i, j)| (i + j >= k) as u8).collect();
+            cfgs.push(AxoConfig::from_bits(&bits).unwrap());
+        }
+        let ds = characterize(op, &cfgs, &inputs, &Backend::Native).unwrap();
+        for w in ds.behav.windows(2) {
+            assert!(w[1].avg_abs_err >= w[0].avg_abs_err);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! State-of-the-art baselines for Figs. 17/18.
+//!
+//! * [`appaxo`] — AppAxO [12]: the same LUT-removal operator model driven
+//!   by a problem-agnostic GA with ML-based fitness and *random* initial
+//!   population (no supersampling seeds) — exactly AxOCS minus ConSS.
+//! * [`evoapprox`] — EvoApprox-like [6]: a fixed library of *structured*
+//!   approximate designs (truncation / row-elimination / radix-block
+//!   patterns), standing in for the published ASIC-optimized library; the
+//!   baseline picks its Pareto front from the library, no search.
+
+pub mod appaxo;
+pub mod evoapprox;
+
+pub use appaxo::appaxo_search;
+pub use evoapprox::evoapprox_library;

@@ -1,0 +1,227 @@
+//! BEHAV error metrics (paper Eq. 1) — native computation.
+//!
+//! Metric definitions mirror `operator_model.behav_metrics`:
+//! `avg_abs_rel_err` divides by `max(|exact|, 1)` to avoid the zero-output
+//! singularity. Column order is shared with the Pallas kernel and the
+//! golden fixtures.
+
+use crate::operator::{adder, multiplier, AxoConfig, Operator, OperatorKind};
+use crate::util::par::parallel_map;
+
+/// Behavioral error metrics of one approximate design over an input set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BehavMetrics {
+    /// Mean absolute error.
+    pub avg_abs_err: f64,
+    /// Mean `|err| / max(|exact|, 1)` — the paper's headline BEHAV metric.
+    pub avg_abs_rel_err: f64,
+    /// Maximum absolute error.
+    pub max_abs_err: f64,
+    /// Error probability `P(err != 0)`.
+    pub err_prob: f64,
+}
+
+impl BehavMetrics {
+    pub const NAMES: [&'static str; 4] =
+        ["avg_abs_err", "avg_abs_rel_err", "max_abs_err", "err_prob"];
+
+    pub const ZERO: BehavMetrics = BehavMetrics {
+        avg_abs_err: 0.0,
+        avg_abs_rel_err: 0.0,
+        max_abs_err: 0.0,
+        err_prob: 0.0,
+    };
+
+    pub fn to_array(&self) -> [f64; 4] {
+        [self.avg_abs_err, self.avg_abs_rel_err, self.max_abs_err, self.err_prob]
+    }
+
+    pub fn from_array(a: [f64; 4]) -> Self {
+        BehavMetrics {
+            avg_abs_err: a[0],
+            avg_abs_rel_err: a[1],
+            max_abs_err: a[2],
+            err_prob: a[3],
+        }
+    }
+}
+
+/// Streaming accumulator — lets backends fold (exact, approx) pairs without
+/// materializing the (B, T) output plane.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MetricAccumulator {
+    sum_abs: f64,
+    sum_rel: f64,
+    max_abs: f64,
+    n_err: u64,
+    n: u64,
+}
+
+impl MetricAccumulator {
+    #[inline]
+    pub fn push(&mut self, exact: i64, approx: i64) {
+        let err = (exact - approx).abs() as f64;
+        self.sum_abs += err;
+        self.sum_rel += err / (exact.abs().max(1) as f64);
+        if err > self.max_abs {
+            self.max_abs = err;
+        }
+        self.n_err += (err > 0.0) as u64;
+        self.n += 1;
+    }
+
+    /// Hot-loop variant: caller supplies |err| and the precomputed
+    /// reciprocal of `max(|exact|, 1)` (§Perf L3-2).
+    #[inline]
+    pub fn push_with_recip(&mut self, err: f64, recip: f64) {
+        self.sum_abs += err;
+        self.sum_rel += err * recip;
+        if err > self.max_abs {
+            self.max_abs = err;
+        }
+        self.n_err += (err > 0.0) as u64;
+        self.n += 1;
+    }
+
+    pub fn finalize(&self) -> BehavMetrics {
+        let n = self.n.max(1) as f64;
+        BehavMetrics {
+            avg_abs_err: self.sum_abs / n,
+            avg_abs_rel_err: self.sum_rel / n,
+            max_abs_err: self.max_abs,
+            err_prob: self.n_err as f64 / n,
+        }
+    }
+}
+
+/// Native BEHAV metrics for a batch of adder configurations.
+///
+/// §Perf L3-3: exact sums and relative-error reciprocals depend only on
+/// the shared input set — computed once per batch instead of per config.
+pub fn adder_behav(configs: &[AxoConfig], a: &[u32], b: &[u32]) -> Vec<BehavMetrics> {
+    let exact: Vec<i64> = a.iter().zip(b).map(|(&x, &y)| (x as i64) + (y as i64)).collect();
+    let recip: Vec<f64> = exact.iter().map(|&e| 1.0 / (e.max(1) as f64)).collect();
+    parallel_map(configs, |_, cfg| {
+        let mut acc = MetricAccumulator::default();
+        for (((&ai, &bi), &ex), &r) in a.iter().zip(b).zip(&exact).zip(&recip) {
+            let approx = adder::eval_one(cfg, ai as u64, bi as u64) as i64;
+            acc.push_with_recip((ex - approx).abs() as f64, r);
+        }
+        acc.finalize()
+    })
+}
+
+/// Native BEHAV metrics for a batch of multiplier configurations, given the
+/// precomputed `(T, L)` term matrix (shared across the batch).
+///
+/// Perf (EXPERIMENTS.md §Perf L3-1): the straightforward i64 scan streams
+/// ~19 MB of term matrix per configuration. Narrowing to i32 (every term
+/// and retained-sum of an M ≤ 8 multiplier fits comfortably) halves the
+/// traffic, and the branch-free mask accumulation vectorizes.
+pub fn mult_behav(configs: &[AxoConfig], terms: &[i64], l: usize) -> Vec<BehavMetrics> {
+    assert_eq!(terms.len() % l, 0);
+    // Narrow once: |term| < 2^15 and |config-sum| < 2^20 for M <= 8.
+    let terms32: Vec<i32> = terms.iter().map(|&v| v as i32).collect();
+    let exact: Vec<i32> = terms
+        .chunks_exact(l)
+        .map(|c| c.iter().sum::<i64>() as i32)
+        .collect();
+    // §Perf L3-2: the relative-error divisor depends only on the input,
+    // not the configuration — precompute reciprocals once for the batch.
+    let recip: Vec<f64> = exact.iter().map(|&e| 1.0 / (e.abs().max(1) as f64)).collect();
+    let masks: Vec<Vec<i32>> = configs
+        .iter()
+        .map(|cfg| (0..l as u32).map(|k| -(cfg.keeps(k) as i32)).collect())
+        .collect();
+    let accs: Vec<MetricAccumulator> = parallel_map(&masks, |_, mask| {
+        let mut acc = MetricAccumulator::default();
+        for ((chunk, &ex), &r) in terms32.chunks_exact(l).zip(&exact).zip(&recip) {
+            let mut approx = 0i32;
+            for (v, m) in chunk.iter().zip(mask) {
+                // branch-free retained-term accumulation
+                approx += v & m;
+            }
+            acc.push_with_recip((ex - approx).abs() as f64, r);
+        }
+        acc
+    });
+    accs.iter().map(|a| a.finalize()).collect()
+}
+
+/// Dispatch over operator kind with the operator's default input set.
+pub fn native_behav(
+    op: Operator,
+    configs: &[AxoConfig],
+    inputs: &super::InputSet,
+) -> Vec<BehavMetrics> {
+    match op.kind {
+        OperatorKind::UnsignedAdder => {
+            let a: Vec<u32> = inputs.a.iter().map(|&v| v as u32).collect();
+            let b: Vec<u32> = inputs.b.iter().map(|&v| v as u32).collect();
+            adder_behav(configs, &a, &b)
+        }
+        OperatorKind::SignedMultiplier => {
+            let l = op.config_len() as usize;
+            let terms = multiplier::term_matrix(op.bits, &inputs.a, &inputs.b);
+            mult_behav(configs, &terms, l)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::charac::InputSet;
+
+    #[test]
+    fn accurate_configs_have_zero_error() {
+        let inputs = InputSet::exhaustive(Operator::ADD4);
+        let m = native_behav(Operator::ADD4, &[AxoConfig::accurate(4)], &inputs);
+        assert_eq!(m[0], BehavMetrics::ZERO);
+
+        let inputs = InputSet::exhaustive(Operator::MUL4);
+        let m = native_behav(Operator::MUL4, &[AxoConfig::accurate(10)], &inputs);
+        assert_eq!(m[0], BehavMetrics::ZERO);
+    }
+
+    #[test]
+    fn metrics_known_values() {
+        // exact [0, 2, -4], approx [1, 1, -2] -> errs 1,1,2.
+        let mut acc = MetricAccumulator::default();
+        acc.push(0, 1);
+        acc.push(2, 1);
+        acc.push(-4, -2);
+        let m = acc.finalize();
+        assert!((m.avg_abs_err - 4.0 / 3.0).abs() < 1e-12);
+        assert!((m.avg_abs_rel_err - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.max_abs_err, 2.0);
+        assert_eq!(m.err_prob, 1.0);
+    }
+
+    #[test]
+    fn adder_error_grows_with_significance() {
+        let inputs = InputSet::exhaustive(Operator::ADD8);
+        let a: Vec<u32> = inputs.a.iter().map(|&v| v as u32).collect();
+        let b: Vec<u32> = inputs.b.iter().map(|&v| v as u32).collect();
+        let cfgs: Vec<AxoConfig> = [0u32, 3, 7]
+            .iter()
+            .map(|&k| AxoConfig::accurate(8).flipped(k).unwrap())
+            .collect();
+        let m = adder_behav(&cfgs, &a, &b);
+        assert!(m[0].avg_abs_err < m[1].avg_abs_err);
+        assert!(m[1].avg_abs_err < m[2].avg_abs_err);
+    }
+
+    #[test]
+    fn mult_behav_matches_scalar_eval() {
+        let inputs = InputSet::exhaustive(Operator::MUL4);
+        let terms = multiplier::term_matrix(4, &inputs.a, &inputs.b);
+        let cfg = AxoConfig::new(0b1010101011, 10).unwrap();
+        let fast = mult_behav(&[cfg], &terms, 10)[0];
+        let mut acc = MetricAccumulator::default();
+        for (&a, &b) in inputs.a.iter().zip(&inputs.b) {
+            acc.push(a * b, multiplier::eval_one(4, &cfg, a, b));
+        }
+        assert_eq!(fast, acc.finalize());
+    }
+}

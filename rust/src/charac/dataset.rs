@@ -1,0 +1,281 @@
+//! Characterization datasets (the paper's `L_CHAR` / `H_CHAR`).
+//!
+//! A [`Dataset`] couples configurations with their BEHAV and PPA metric
+//! rows. Persistence is JSON (lossless, schema-versioned) with a CSV export
+//! for the figure harness / external plotting.
+
+use super::BehavMetrics;
+use crate::error::{Error, Result};
+use crate::operator::{AxoConfig, Operator};
+use crate::synth::PpaMetrics;
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+
+/// A characterized set of approximate designs of one operator.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub operator: Operator,
+    pub configs: Vec<AxoConfig>,
+    pub behav: Vec<BehavMetrics>,
+    pub ppa: Vec<PpaMetrics>,
+}
+
+impl Dataset {
+    pub fn new(
+        operator: Operator,
+        configs: Vec<AxoConfig>,
+        behav: Vec<BehavMetrics>,
+        ppa: Vec<PpaMetrics>,
+    ) -> Result<Self> {
+        if configs.len() != behav.len() || configs.len() != ppa.len() {
+            return Err(Error::Dataset(format!(
+                "length mismatch: {} configs, {} behav, {} ppa",
+                configs.len(),
+                behav.len(),
+                ppa.len()
+            )));
+        }
+        Ok(Dataset { operator, configs, behav, ppa })
+    }
+
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+
+    /// Headline (PPA, BEHAV) = (PDPLUT, AVG_ABS_REL_ERR) pairs — the metric
+    /// plane of every figure in the paper's evaluation.
+    pub fn headline_points(&self) -> Vec<[f64; 2]> {
+        self.ppa
+            .iter()
+            .zip(&self.behav)
+            .map(|(p, b)| [p.pdplut, b.avg_abs_rel_err])
+            .collect()
+    }
+
+    /// Arbitrary metric column by name (behav or ppa namespace).
+    pub fn column(&self, name: &str) -> Result<Vec<f64>> {
+        if let Some(k) = BehavMetrics::NAMES.iter().position(|&n| n == name) {
+            return Ok(self.behav.iter().map(|m| m.to_array()[k]).collect());
+        }
+        if let Some(k) = PpaMetrics::NAMES.iter().position(|&n| n == name) {
+            return Ok(self.ppa.iter().map(|m| m.to_array()[k]).collect());
+        }
+        Err(Error::Dataset(format!("unknown metric column `{name}`")))
+    }
+
+    /// Subset by index list (used by Pareto filtering and matching).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            operator: self.operator,
+            configs: idx.iter().map(|&i| self.configs[i]).collect(),
+            behav: idx.iter().map(|&i| self.behav[i]).collect(),
+            ppa: idx.iter().map(|&i| self.ppa[i]).collect(),
+        }
+    }
+
+    /// Append another dataset of the same operator (deduplicating configs).
+    pub fn merge(&mut self, other: &Dataset) -> Result<()> {
+        if other.operator != self.operator {
+            return Err(Error::Dataset("operator mismatch in merge".into()));
+        }
+        let mut seen: std::collections::HashSet<u64> =
+            self.configs.iter().map(|c| c.as_uint()).collect();
+        for i in 0..other.len() {
+            if seen.insert(other.configs[i].as_uint()) {
+                self.configs.push(other.configs[i]);
+                self.behav.push(other.behav[i]);
+                self.ppa.push(other.ppa[i]);
+            }
+        }
+        Ok(())
+    }
+
+    /// JSON schema: `{"operator": "<name>", "configs": [uint...],
+    /// "behav": [[4 floats]...], "ppa": [[5 floats]...]}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("operator", Json::Str(self.operator.name())),
+            (
+                "configs",
+                Json::Arr(
+                    self.configs
+                        .iter()
+                        .map(|c| Json::Num(c.as_uint() as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "behav",
+                Json::Arr(
+                    self.behav.iter().map(|b| Json::arr_f64(&b.to_array())).collect(),
+                ),
+            ),
+            (
+                "ppa",
+                Json::Arr(self.ppa.iter().map(|p| Json::arr_f64(&p.to_array())).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Dataset> {
+        let bad = |m: &str| Error::Dataset(format!("dataset json: {m}"));
+        let operator = Operator::from_name(
+            v.get("operator").and_then(Json::as_str).ok_or_else(|| bad("operator"))?,
+        )?;
+        let l = operator.config_len();
+        let configs = v
+            .get("configs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("configs"))?
+            .iter()
+            .map(|c| {
+                c.as_u64()
+                    .ok_or_else(|| bad("config uint"))
+                    .and_then(|u| AxoConfig::new(u, l))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let rows = |key: &str, n: usize| -> Result<Vec<Vec<f64>>> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| bad(key))?
+                .iter()
+                .map(|row| {
+                    let r: Option<Vec<f64>> =
+                        row.as_arr().map(|a| a.iter().filter_map(Json::as_f64).collect());
+                    match r {
+                        Some(vals) if vals.len() == n => Ok(vals),
+                        _ => Err(bad(&format!("{key} row"))),
+                    }
+                })
+                .collect()
+        };
+        let behav = rows("behav", 4)?
+            .into_iter()
+            .map(|r| BehavMetrics::from_array([r[0], r[1], r[2], r[3]]))
+            .collect();
+        let ppa = rows("ppa", 5)?
+            .into_iter()
+            .map(|r| PpaMetrics::from_array([r[0], r[1], r[2], r[3], r[4]]))
+            .collect();
+        Dataset::new(operator, configs, behav, ppa)
+    }
+
+    pub fn save_json(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load_json(path: &Path) -> Result<Dataset> {
+        let text = std::fs::read_to_string(path).map_err(|_| Error::ArtifactMissing {
+            path: path.to_path_buf(),
+        })?;
+        let v = Json::parse(&text).map_err(|e| Error::ArtifactCorrupt {
+            path: path.to_path_buf(),
+            reason: e.to_string(),
+        })?;
+        Self::from_json(&v).map_err(|e| Error::ArtifactCorrupt {
+            path: path.to_path_buf(),
+            reason: e.to_string(),
+        })
+    }
+
+    /// CSV export: `config_uint, config_bits, behav..., ppa...`.
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        write!(w, "config_uint,config_bits")?;
+        for n in BehavMetrics::NAMES {
+            write!(w, ",{n}")?;
+        }
+        for n in PpaMetrics::NAMES {
+            write!(w, ",{n}")?;
+        }
+        writeln!(w)?;
+        for i in 0..self.len() {
+            write!(w, "{},{}", self.configs[i].as_uint(), self.configs[i])?;
+            for v in self.behav[i].to_array() {
+                write!(w, ",{v}")?;
+            }
+            for v in self.ppa[i].to_array() {
+                write!(w, ",{v}")?;
+            }
+            writeln!(w)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let cfgs = vec![AxoConfig::accurate(4), AxoConfig::new(0b0111, 4).unwrap()];
+        let behav = vec![
+            BehavMetrics::ZERO,
+            BehavMetrics { avg_abs_err: 1.0, avg_abs_rel_err: 0.1, max_abs_err: 8.0, err_prob: 0.5 },
+        ];
+        let ppa = vec![
+            PpaMetrics { luts: 4.0, cpd_ns: 0.75, power_mw: 0.8, pdp: 0.6, pdplut: 2.4 },
+            PpaMetrics { luts: 3.0, cpd_ns: 0.70, power_mw: 0.7, pdp: 0.49, pdplut: 1.47 },
+        ];
+        Dataset::new(Operator::ADD4, cfgs, behav, ppa).unwrap()
+    }
+
+    #[test]
+    fn rejects_mismatched_lengths() {
+        let d = tiny();
+        assert!(Dataset::new(d.operator, d.configs.clone(), vec![], d.ppa.clone()).is_err());
+    }
+
+    #[test]
+    fn headline_points() {
+        let d = tiny();
+        assert_eq!(d.headline_points(), vec![[2.4, 0.0], [1.47, 0.1]]);
+    }
+
+    #[test]
+    fn column_lookup() {
+        let d = tiny();
+        assert_eq!(d.column("err_prob").unwrap(), vec![0.0, 0.5]);
+        assert_eq!(d.column("luts").unwrap(), vec![4.0, 3.0]);
+        assert!(d.column("nope").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_and_csv() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let d = tiny();
+        let jp = dir.path().join("d.json");
+        d.save_json(&jp).unwrap();
+        let d2 = Dataset::load_json(&jp).unwrap();
+        assert_eq!(d2.len(), 2);
+        assert_eq!(d2.configs, d.configs);
+        let cp = dir.path().join("d.csv");
+        d.save_csv(&cp).unwrap();
+        let text = std::fs::read_to_string(cp).unwrap();
+        assert!(text.starts_with("config_uint,config_bits,avg_abs_err"));
+        assert_eq!(text.lines().count(), 3);
+    }
+
+    #[test]
+    fn merge_dedups() {
+        let mut d = tiny();
+        let other = tiny();
+        d.merge(&other).unwrap();
+        assert_eq!(d.len(), 2);
+        let sub = other.subset(&[1]);
+        assert_eq!(sub.len(), 1);
+        assert_eq!(sub.configs[0].as_uint(), 0b0111);
+    }
+}

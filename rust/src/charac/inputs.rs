@@ -1,0 +1,138 @@
+//! Characterization input sets.
+//!
+//! Exhaustive input spaces for every operator except the 12-bit adder,
+//! whose 2^24-pair space is sampled: the sample is generated *once* by
+//! `aot.py` (seeded) and persisted as `artifacts/inputs_add12.bin` so the
+//! python golden fixtures and the rust pipeline characterize against the
+//! identical input set.
+//!
+//! `inputs_add12.bin` layout (little-endian):
+//! `"AXIN"` magic · u32 version=1 · u32 n · u32 a[n] · u32 b[n].
+
+use crate::error::{Error, Result};
+use crate::operator::{adder, multiplier, Operator, OperatorKind};
+use std::io::Read;
+use std::path::Path;
+
+/// A shared (a, b) operand set. Adders store unsigned values in `i64`.
+#[derive(Debug, Clone)]
+pub struct InputSet {
+    pub a: Vec<i64>,
+    pub b: Vec<i64>,
+}
+
+impl InputSet {
+    pub fn len(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.a.is_empty()
+    }
+
+    /// Exhaustive input space (panics for operators that require sampling —
+    /// use [`InputSet::load_add12`] or [`InputSet::for_operator`]).
+    pub fn exhaustive(op: Operator) -> InputSet {
+        match op.kind {
+            OperatorKind::UnsignedAdder => {
+                assert!(op.bits <= 8, "{op} input space needs the sampled set");
+                let (a, b) = adder::exhaustive_inputs(op.bits);
+                InputSet {
+                    a: a.into_iter().map(|v| v as i64).collect(),
+                    b: b.into_iter().map(|v| v as i64).collect(),
+                }
+            }
+            OperatorKind::SignedMultiplier => {
+                let (a, b) = multiplier::exhaustive_inputs(op.bits);
+                InputSet { a, b }
+            }
+        }
+    }
+
+    /// Load the persisted 12-bit adder sample.
+    pub fn load_add12(path: &Path) -> Result<InputSet> {
+        let mut f = std::fs::File::open(path).map_err(|_| Error::ArtifactMissing {
+            path: path.to_path_buf(),
+        })?;
+        let mut hdr = [0u8; 12];
+        f.read_exact(&mut hdr).map_err(|e| corrupt(path, &e.to_string()))?;
+        if &hdr[0..4] != b"AXIN" {
+            return Err(corrupt(path, "bad magic"));
+        }
+        let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        if version != 1 {
+            return Err(corrupt(path, &format!("unsupported version {version}")));
+        }
+        let n = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+        let mut buf = vec![0u8; n * 8];
+        f.read_exact(&mut buf).map_err(|e| corrupt(path, &e.to_string()))?;
+        let word = |k: usize| {
+            u32::from_le_bytes(buf[4 * k..4 * k + 4].try_into().unwrap()) as i64
+        };
+        let a = (0..n).map(word).collect();
+        let b = (n..2 * n).map(word).collect();
+        Ok(InputSet { a, b })
+    }
+
+    /// The input set the paper's Table II experiments use for `op`,
+    /// resolving the sampled 12-bit set from `artifacts_dir`.
+    pub fn for_operator(op: Operator, artifacts_dir: &Path) -> Result<InputSet> {
+        if op.kind == OperatorKind::UnsignedAdder && op.bits > 8 {
+            Self::load_add12(&artifacts_dir.join("inputs_add12.bin"))
+        } else {
+            Ok(Self::exhaustive(op))
+        }
+    }
+}
+
+fn corrupt(path: &Path, reason: &str) -> Error {
+    Error::ArtifactCorrupt { path: path.to_path_buf(), reason: reason.into() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn exhaustive_sizes() {
+        assert_eq!(InputSet::exhaustive(Operator::ADD4).len(), 256);
+        assert_eq!(InputSet::exhaustive(Operator::ADD8).len(), 65536);
+        assert_eq!(InputSet::exhaustive(Operator::MUL4).len(), 256);
+    }
+
+    #[test]
+    fn load_add12_roundtrip() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let path = dir.path().join("inputs_add12.bin");
+        let a: Vec<u32> = vec![1, 2, 3];
+        let b: Vec<u32> = vec![4000, 5, 4095];
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(b"AXIN").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        for v in a.iter().chain(&b) {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        drop(f);
+        let s = InputSet::load_add12(&path).unwrap();
+        assert_eq!(s.a, vec![1, 2, 3]);
+        assert_eq!(s.b, vec![4000, 5, 4095]);
+    }
+
+    #[test]
+    fn load_add12_failures() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let missing = dir.path().join("nope.bin");
+        assert!(matches!(
+            InputSet::load_add12(&missing),
+            Err(Error::ArtifactMissing { .. })
+        ));
+        let bad = dir.path().join("bad.bin");
+        std::fs::write(&bad, b"NOPE00000000").unwrap();
+        assert!(matches!(
+            InputSet::load_add12(&bad),
+            Err(Error::ArtifactCorrupt { .. })
+        ));
+    }
+}

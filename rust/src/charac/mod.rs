@@ -1,0 +1,18 @@
+//! Characterization pipeline: configuration → (BEHAV, PPA) datasets.
+//!
+//! The paper characterizes every configuration by RTL simulation (BEHAV)
+//! plus Vivado synthesis (PPA). Here BEHAV comes from bit-exact behavioral
+//! simulation — either the AOT-compiled Pallas `axo_eval` executable via
+//! PJRT ([`Backend::Pjrt`]) or the rayon-parallel native fallback
+//! ([`Backend::Native`]), cross-checked against each other in integration
+//! tests — and PPA from the analytical synthesis estimator ([`crate::synth`]).
+
+pub mod behav;
+pub mod dataset;
+pub mod inputs;
+pub mod pipeline;
+
+pub use behav::BehavMetrics;
+pub use dataset::Dataset;
+pub use inputs::InputSet;
+pub use pipeline::{characterize, characterize_all, Backend};

@@ -1,0 +1,126 @@
+//! The characterization pipeline: configs → [`Dataset`].
+//!
+//! BEHAV metrics come from a pluggable [`Backend`]; PPA always comes from
+//! the analytical synthesis estimator (it is cheap and deterministic).
+//! The PJRT backend is injected as a [`BehavEvaluator`] trait object so the
+//! pipeline does not depend on the runtime module (and tests can inject
+//! failing/fake evaluators).
+
+use super::{behav, BehavMetrics, Dataset, InputSet};
+use crate::error::Result;
+use crate::operator::{AxoConfig, Operator};
+use crate::synth;
+
+/// Behavioral evaluation backend interface (implemented by
+/// `runtime::AxoEvalExec` for the AOT/PJRT path). Deliberately not
+/// `Send`/`Sync`-bounded: the PJRT wrapper holds raw FFI handles and is
+/// driven synchronously from the pipeline.
+pub trait BehavEvaluator {
+    fn eval(
+        &self,
+        op: Operator,
+        configs: &[AxoConfig],
+        inputs: &InputSet,
+    ) -> Result<Vec<BehavMetrics>>;
+}
+
+/// Which engine computes BEHAV metrics.
+pub enum Backend<'a> {
+    /// Rayon-parallel bit-exact native simulation.
+    Native,
+    /// An injected evaluator — in production the AOT-compiled Pallas
+    /// `axo_eval` executable running on the PJRT CPU client.
+    Evaluator(&'a dyn BehavEvaluator),
+}
+
+/// Characterize `configs` of `op` over `inputs`.
+pub fn characterize(
+    op: Operator,
+    configs: &[AxoConfig],
+    inputs: &InputSet,
+    backend: &Backend<'_>,
+) -> Result<Dataset> {
+    let behav = match backend {
+        Backend::Native => behav::native_behav(op, configs, inputs),
+        Backend::Evaluator(e) => e.eval(op, configs, inputs)?,
+    };
+    let ppa = synth::ppa_batch(op, configs);
+    Dataset::new(op, configs.to_vec(), behav, ppa)
+}
+
+/// Characterize the operator's *entire* design space (exhaustive operators
+/// only — panics for the 8×8 multiplier, which must be sampled).
+pub fn characterize_all(
+    op: Operator,
+    inputs: &InputSet,
+    backend: &Backend<'_>,
+) -> Result<Dataset> {
+    assert!(op.exhaustive(), "{op} design space must be sampled, not enumerated");
+    let configs: Vec<AxoConfig> = AxoConfig::enumerate(op.config_len()).collect();
+    characterize(op, &configs, inputs, backend)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    #[test]
+    fn native_characterize_add4_exhaustive() {
+        let inputs = InputSet::exhaustive(Operator::ADD4);
+        let ds = characterize_all(Operator::ADD4, &inputs, &Backend::Native).unwrap();
+        assert_eq!(ds.len(), 15);
+        // Accurate config (uint 15) has zero error and max PDPLUT of its
+        // carry-chain class.
+        let acc_idx = ds.configs.iter().position(|c| c.is_accurate()).unwrap();
+        assert_eq!(ds.behav[acc_idx], BehavMetrics::ZERO);
+        assert!(ds.ppa[acc_idx].luts == 4.0);
+    }
+
+    struct FailingEval;
+    impl BehavEvaluator for FailingEval {
+        fn eval(
+            &self,
+            _op: Operator,
+            _configs: &[AxoConfig],
+            _inputs: &InputSet,
+        ) -> Result<Vec<BehavMetrics>> {
+            Err(Error::Xla("injected failure".into()))
+        }
+    }
+
+    #[test]
+    fn evaluator_failure_propagates() {
+        let inputs = InputSet::exhaustive(Operator::ADD4);
+        let cfgs = vec![AxoConfig::accurate(4)];
+        let r = characterize(
+            Operator::ADD4,
+            &cfgs,
+            &inputs,
+            &Backend::Evaluator(&FailingEval),
+        );
+        assert!(matches!(r, Err(Error::Xla(_))));
+    }
+
+    struct ZeroEval;
+    impl BehavEvaluator for ZeroEval {
+        fn eval(
+            &self,
+            _op: Operator,
+            configs: &[AxoConfig],
+            _inputs: &InputSet,
+        ) -> Result<Vec<BehavMetrics>> {
+            Ok(vec![BehavMetrics::ZERO; configs.len()])
+        }
+    }
+
+    #[test]
+    fn injected_evaluator_is_used() {
+        let inputs = InputSet::exhaustive(Operator::ADD4);
+        let cfgs = vec![AxoConfig::new(1, 4).unwrap()];
+        let ds =
+            characterize(Operator::ADD4, &cfgs, &inputs, &Backend::Evaluator(&ZeroEval))
+                .unwrap();
+        assert_eq!(ds.behav[0], BehavMetrics::ZERO); // native would be nonzero
+    }
+}

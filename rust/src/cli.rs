@@ -1,0 +1,134 @@
+//! Hand-rolled argument parser for the `repro` binary.
+//!
+//! No external CLI crate is linked (offline build); this covers exactly the
+//! surface the binary needs: one subcommand, positional arguments,
+//! `--flag value` / `--flag=value` options, boolean switches, `--help`.
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, positionals, options, switches.
+#[derive(Debug, Clone, Default)]
+pub struct ParsedArgs {
+    pub command: String,
+    pub positionals: Vec<String>,
+    options: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// Parse error (unknown option, missing value).
+#[derive(Debug, thiserror::Error)]
+#[error("argument error: {0}")]
+pub struct ArgError(pub String);
+
+impl ParsedArgs {
+    /// Parse `args` (without argv[0]). `switch_names` lists the boolean
+    /// flags; everything else starting with `--` expects a value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        args: I,
+        switch_names: &[&str],
+    ) -> Result<ParsedArgs, ArgError> {
+        let mut out = ParsedArgs::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| ArgError(format!("--{name} needs a value")))?;
+                    out.options.insert(name.to_string(), v);
+                }
+            } else if out.command.is_empty() {
+                out.command = arg;
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, ArgError> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| ArgError(format!("--{name}: cannot parse `{v}`"))),
+        }
+    }
+
+    pub fn positional(&self, idx: usize, what: &str) -> Result<&str, ArgError> {
+        self.positionals
+            .get(idx)
+            .map(|s| s.as_str())
+            .ok_or_else(|| ArgError(format!("missing {what}")))
+    }
+
+    /// Reject options that no subcommand consumed (typo protection).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<(), ArgError> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(ArgError(format!("unknown option --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> ParsedArgs {
+        ParsedArgs::parse(v.iter().map(|s| s.to_string()), &["quick", "pjrt"]).unwrap()
+    }
+
+    #[test]
+    fn subcommand_positionals_options() {
+        let a = parse(&["match", "add4", "add8", "--distance", "manhattan"]);
+        assert_eq!(a.command, "match");
+        assert_eq!(a.positionals, vec!["add4", "add8"]);
+        assert_eq!(a.opt("distance"), Some("manhattan"));
+    }
+
+    #[test]
+    fn equals_form_and_switches() {
+        let a = parse(&["dse", "--factor=0.5", "--quick"]);
+        assert_eq!(a.opt_parse::<f64>("factor").unwrap(), Some(0.5));
+        assert!(a.flag("quick"));
+        assert!(!a.flag("pjrt"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = ParsedArgs::parse(
+            ["x".to_string(), "--config".to_string()].into_iter(),
+            &[],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse(&["dse", "--factor", "abc"]);
+        assert!(a.opt_parse::<f64>("factor").is_err());
+    }
+
+    #[test]
+    fn unknown_option_detection() {
+        let a = parse(&["dse", "--fctor", "0.5"]);
+        assert!(a.ensure_known(&["factor", "config"]).is_err());
+        assert!(a.ensure_known(&["fctor"]).is_ok());
+    }
+}

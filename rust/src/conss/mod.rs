@@ -1,0 +1,169 @@
+//! Configuration Supersampling — ConSS (paper §IV-C-1, Figs. 13/14).
+//!
+//! The heart of AxOCS: a multi-output classifier trained on distance-
+//! matched (L_CONFIG → H_CONFIG) pairs generates candidate high-bit-width
+//! configurations from low-bit-width seeds. Noise bits appended to the
+//! input let one seed fan out into up to `2^n` distinct candidates; seeds
+//! can be all L designs or only the L Pareto front (Fig. 14 compares
+//! both). The generated pool is used directly (standalone ConSS) or as the
+//! initial population of the augmented GA (Fig. 9).
+
+pub mod pipeline;
+
+pub use pipeline::{ConssPipeline, ConssPool, SupersampleOptions};
+
+use crate::error::{Error, Result};
+use crate::matching::noise::noise_row;
+use crate::ml::forest::{ForestParams, RandomForest};
+use crate::operator::AxoConfig;
+
+/// A trained supersampling model: L-bits (+ noise) → H-bit probabilities.
+pub struct ConssModel {
+    forest: RandomForest,
+    pub l_len: u32,
+    pub h_len: u32,
+    pub noise_bits: u32,
+}
+
+impl ConssModel {
+    /// Train the random forest on row-major (x, y) from
+    /// [`crate::matching::conss_training_set`].
+    pub fn train(
+        x: &[f64],
+        x_features: usize,
+        y: &[f64],
+        y_features: usize,
+        l_len: u32,
+        noise_bits: u32,
+        params: ForestParams,
+    ) -> Result<ConssModel> {
+        if x_features != (l_len + noise_bits) as usize {
+            return Err(Error::Ml(format!(
+                "x features {x_features} != l_len {l_len} + noise {noise_bits}"
+            )));
+        }
+        let forest = RandomForest::fit(x, x_features, y, y_features, params)?;
+        Ok(ConssModel { forest, l_len, h_len: y_features as u32, noise_bits })
+    }
+
+    /// Generate candidate H configurations for one L seed across all
+    /// `2^noise_bits` noise values. All-zero predictions are dropped
+    /// (invalid configurations by the operator model).
+    pub fn supersample_one(&self, l_config: &AxoConfig) -> Result<Vec<AxoConfig>> {
+        if l_config.len() != self.l_len {
+            return Err(Error::Shape(format!(
+                "seed length {} != model l_len {}",
+                l_config.len(),
+                self.l_len
+            )));
+        }
+        let base: Vec<f64> =
+            l_config.to_bits_f32().iter().map(|&v| v as f64).collect();
+        let mut out = Vec::new();
+        for noise in 0..(1usize << self.noise_bits) {
+            let mut row = base.clone();
+            row.extend(noise_row(noise, self.noise_bits));
+            let bits = self.forest.predict_bits_row(&row);
+            if let Ok(cfg) = AxoConfig::from_bits(&bits) {
+                out.push(cfg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Supersample a set of seeds, deduplicating the resulting pool.
+    pub fn supersample(&self, seeds: &[AxoConfig]) -> Result<Vec<AxoConfig>> {
+        let mut seen = std::collections::HashSet::new();
+        let mut pool = Vec::new();
+        for s in seeds {
+            for c in self.supersample_one(s)? {
+                if seen.insert(c.as_uint()) {
+                    pool.push(c);
+                }
+            }
+        }
+        Ok(pool)
+    }
+
+    /// Per-bit probabilities for diagnostics (Fig. 13 accuracy analysis).
+    pub fn predict_proba(&self, l_config: &AxoConfig, noise: usize) -> Result<Vec<f64>> {
+        let mut row: Vec<f64> =
+            l_config.to_bits_f32().iter().map(|&v| v as f64).collect();
+        row.extend(noise_row(noise, self.noise_bits));
+        Ok(self.forest.predict_proba_row(&row))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Train on a synthetic identity-ish mapping: h bits = l bits repeated.
+    fn trained_model(noise_bits: u32) -> ConssModel {
+        let mut pairs: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+        for v in 1u64..16 {
+            let l: Vec<f64> = (0..4).map(|k| ((v >> k) & 1) as f64).collect();
+            let h: Vec<f64> = l.iter().chain(l.iter()).copied().collect();
+            pairs.push((l, h));
+        }
+        let (x, y) = crate::matching::augment_with_noise(&pairs, noise_bits);
+        // All features per split + a deeper ensemble: the tiny identity
+        // dataset must be learned exactly despite bootstrap omissions.
+        let params = ForestParams {
+            n_trees: 60,
+            tree: crate::ml::tree::TreeParams {
+                max_depth: 12,
+                min_samples_leaf: 1,
+                max_features: Some((4 + noise_bits) as usize),
+            },
+            ..Default::default()
+        };
+        ConssModel::train(
+            &x,
+            (4 + noise_bits) as usize,
+            &y,
+            8,
+            4,
+            noise_bits,
+            params,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn learns_identity_mapping() {
+        let m = trained_model(0);
+        for v in 1u64..16 {
+            let l = AxoConfig::new(v, 4).unwrap();
+            let out = m.supersample_one(&l).unwrap();
+            assert_eq!(out.len(), 1);
+            assert_eq!(out[0].as_uint(), v | (v << 4), "seed {v}");
+        }
+    }
+
+    #[test]
+    fn noise_fans_out_and_dedups() {
+        let m = trained_model(2);
+        let l = AxoConfig::new(0b1010, 4).unwrap();
+        let out = m.supersample_one(&l).unwrap();
+        assert!(!out.is_empty() && out.len() <= 4);
+        let pool = m.supersample(&[l, AxoConfig::new(0b0101, 4).unwrap()]).unwrap();
+        let uniq: std::collections::HashSet<u64> =
+            pool.iter().map(|c| c.as_uint()).collect();
+        assert_eq!(uniq.len(), pool.len());
+    }
+
+    #[test]
+    fn rejects_wrong_seed_length() {
+        let m = trained_model(1);
+        assert!(m.supersample_one(&AxoConfig::accurate(8)).is_err());
+    }
+
+    #[test]
+    fn proba_bounded() {
+        let m = trained_model(1);
+        let p = m.predict_proba(&AxoConfig::accurate(4), 1).unwrap();
+        assert_eq!(p.len(), 8);
+        assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

@@ -1,0 +1,228 @@
+//! End-to-end ConSS pipeline: L_CHAR + H_CHAR → trained model → pool.
+//!
+//! Mirrors the left-to-right flow of paper Fig. 4: distance-based matching
+//! of the characterized datasets, noise augmentation, random-forest
+//! training, and supersampling from L seeds (all designs or Pareto-front
+//! designs only — the two variants of Fig. 14).
+
+use super::ConssModel;
+use crate::charac::Dataset;
+use crate::dse::{pareto_front_indices, Constraints, Objectives};
+use crate::error::{Error, Result};
+use crate::matching::{conss_training_set, DistanceKind, Matcher};
+use crate::ml::forest::ForestParams;
+use crate::operator::AxoConfig;
+
+/// Which L designs seed the supersampler (Fig. 14 compares both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeedSelection {
+    /// Every design in the L dataset.
+    All,
+    /// Only the L Pareto front in the (BEHAV, PPA) plane.
+    ParetoOnly,
+    /// Only L designs satisfying the scaled constraints (standalone
+    /// constrained search of §IV-C-1).
+    ConstraintFiltered,
+}
+
+/// Supersampling options.
+#[derive(Debug, Clone)]
+pub struct SupersampleOptions {
+    pub distance: DistanceKind,
+    pub noise_bits: u32,
+    pub seeds: SeedSelection,
+    pub forest: ForestParams,
+}
+
+impl Default for SupersampleOptions {
+    fn default() -> Self {
+        SupersampleOptions {
+            distance: DistanceKind::Euclidean, // §V-C selection
+            noise_bits: 4,
+            seeds: SeedSelection::All,
+            forest: ForestParams::default(),
+        }
+    }
+}
+
+/// The generated candidate pool.
+#[derive(Debug, Clone)]
+pub struct ConssPool {
+    pub configs: Vec<AxoConfig>,
+    /// Seeds actually used (after selection).
+    pub n_seeds: usize,
+}
+
+/// The trained pipeline.
+pub struct ConssPipeline {
+    pub model: ConssModel,
+    pub options: SupersampleOptions,
+    l_objectives: Vec<Objectives>,
+    l_configs: Vec<AxoConfig>,
+}
+
+impl ConssPipeline {
+    /// Match, augment, and train from characterized L/H datasets.
+    pub fn train(
+        l: &Dataset,
+        h: &Dataset,
+        options: SupersampleOptions,
+    ) -> Result<ConssPipeline> {
+        let matcher = Matcher::new(options.distance);
+        let m = matcher.match_datasets(l, h)?;
+        let (x, xf, y, yf) = conss_training_set(l, h, &m, options.noise_bits)?;
+        let model = ConssModel::train(
+            &x,
+            xf,
+            &y,
+            yf,
+            l.operator.config_len(),
+            options.noise_bits,
+            options.forest.clone(),
+        )?;
+        let l_objectives: Vec<Objectives> = l
+            .headline_points()
+            .iter()
+            .map(|p| [p[1], p[0]]) // [behav, ppa]
+            .collect();
+        Ok(ConssPipeline {
+            model,
+            options,
+            l_objectives,
+            l_configs: l.configs.clone(),
+        })
+    }
+
+    /// Seed subset per the configured selection strategy.
+    ///
+    /// For `ConstraintFiltered` the H constraints are transferred to the L
+    /// space by *scaled position*: an L design qualifies when its min-max
+    /// scaled metrics fall inside the scaled constraint box (the paper's
+    /// "L_CONFIGs satisfying the scaled constraints").
+    pub fn select_seeds(&self, constraints: Option<&Constraints>, h_train: &[Objectives])
+        -> Result<Vec<AxoConfig>>
+    {
+        match self.options.seeds {
+            SeedSelection::All => Ok(self.l_configs.clone()),
+            SeedSelection::ParetoOnly => {
+                let idx = pareto_front_indices(&self.l_objectives);
+                Ok(idx.iter().map(|&i| self.l_configs[i]).collect())
+            }
+            SeedSelection::ConstraintFiltered => {
+                let c = constraints.ok_or_else(|| {
+                    Error::Dse("ConstraintFiltered seeds need constraints".into())
+                })?;
+                if h_train.is_empty() {
+                    return Err(Error::Dse("empty H training set".into()));
+                }
+                // Scaled constraint box position in H space.
+                let hb = h_train.iter().map(|o| o[0]).fold(f64::NEG_INFINITY, f64::max);
+                let hp = h_train.iter().map(|o| o[1]).fold(f64::NEG_INFINITY, f64::max);
+                let fb = (c.b_max / hb).min(1.0);
+                let fp = (c.p_max / hp).min(1.0);
+                // L metrics scaled to [0,1].
+                let lb_max = self
+                    .l_objectives
+                    .iter()
+                    .map(|o| o[0])
+                    .fold(f64::NEG_INFINITY, f64::max)
+                    .max(1e-30);
+                let lp_max = self
+                    .l_objectives
+                    .iter()
+                    .map(|o| o[1])
+                    .fold(f64::NEG_INFINITY, f64::max)
+                    .max(1e-30);
+                Ok(self
+                    .l_configs
+                    .iter()
+                    .zip(&self.l_objectives)
+                    .filter(|(_, o)| o[0] / lb_max <= fb && o[1] / lp_max <= fp)
+                    .map(|(c, _)| *c)
+                    .collect())
+            }
+        }
+    }
+
+    /// Run supersampling and return the deduplicated candidate pool.
+    pub fn supersample(
+        &self,
+        constraints: Option<&Constraints>,
+        h_train: &[Objectives],
+    ) -> Result<ConssPool> {
+        let seeds = self.select_seeds(constraints, h_train)?;
+        if seeds.is_empty() {
+            return Err(Error::Dse("seed selection produced no seeds".into()));
+        }
+        let configs = self.model.supersample(&seeds)?;
+        Ok(ConssPool { configs, n_seeds: seeds.len() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::charac::{characterize, characterize_all, Backend, InputSet};
+    use crate::operator::Operator;
+    use crate::util::rng::Rng;
+
+    fn datasets() -> (Dataset, Dataset) {
+        let li = InputSet::exhaustive(Operator::ADD4);
+        let hi = InputSet::exhaustive(Operator::ADD8);
+        let l = characterize_all(Operator::ADD4, &li, &Backend::Native).unwrap();
+        // Sampled H to keep the test fast.
+        let mut rng = Rng::seed_from_u64(1);
+        let cfgs = AxoConfig::sample_unique(8, 120, &mut rng);
+        let h = characterize(Operator::ADD8, &cfgs, &hi, &Backend::Native).unwrap();
+        (l, h)
+    }
+
+    #[test]
+    fn pipeline_generates_valid_pool() {
+        let (l, h) = datasets();
+        let p = ConssPipeline::train(&l, &h, SupersampleOptions::default()).unwrap();
+        let pool = p.supersample(None, &[]).unwrap();
+        assert!(!pool.configs.is_empty());
+        assert_eq!(pool.n_seeds, 15);
+        for c in &pool.configs {
+            assert_eq!(c.len(), 8);
+            assert_ne!(c.as_uint(), 0);
+        }
+        // Dedup holds.
+        let uniq: std::collections::HashSet<u64> =
+            pool.configs.iter().map(|c| c.as_uint()).collect();
+        assert_eq!(uniq.len(), pool.configs.len());
+    }
+
+    #[test]
+    fn pareto_seeds_are_fewer() {
+        let (l, h) = datasets();
+        let mut opts = SupersampleOptions::default();
+        opts.seeds = SeedSelection::ParetoOnly;
+        let p = ConssPipeline::train(&l, &h, opts).unwrap();
+        let seeds = p.select_seeds(None, &[]).unwrap();
+        assert!(!seeds.is_empty());
+        assert!(seeds.len() < 15);
+    }
+
+    #[test]
+    fn constraint_filter_tightens_seed_set() {
+        let (l, h) = datasets();
+        let mut opts = SupersampleOptions::default();
+        opts.seeds = SeedSelection::ConstraintFiltered;
+        let p = ConssPipeline::train(&l, &h, opts).unwrap();
+        let h_train: Vec<Objectives> = h
+            .headline_points()
+            .iter()
+            .map(|p| [p[1], p[0]])
+            .collect();
+        let tight = Constraints::from_scaling_factor(0.3, &h_train).unwrap();
+        let loose = Constraints::from_scaling_factor(1.0, &h_train).unwrap();
+        let st = p.select_seeds(Some(&tight), &h_train).unwrap();
+        let sl = p.select_seeds(Some(&loose), &h_train).unwrap();
+        assert!(st.len() <= sl.len());
+        assert_eq!(sl.len(), 15);
+        // Missing constraints is an error for this mode.
+        assert!(p.select_seeds(None, &h_train).is_err());
+    }
+}

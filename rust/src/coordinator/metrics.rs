@@ -1,0 +1,87 @@
+//! Service metrics: request/batch counters, batch fill, latency.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Lock-free counters shared between the batcher loop and its clients.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    requests: AtomicU64,
+    configs: AtomicU64,
+    batches: AtomicU64,
+    errors: AtomicU64,
+    busy_micros: AtomicU64,
+    max_batch_fill: AtomicU64,
+}
+
+impl ServiceMetrics {
+    pub fn record_request(&self, n_configs: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.configs.fetch_add(n_configs as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, fill: usize, busy: Duration, ok: bool) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        self.busy_micros
+            .fetch_add(busy.as_micros() as u64, Ordering::Relaxed);
+        self.max_batch_fill.fetch_max(fill as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            configs: self.configs.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            busy_micros: self.busy_micros.load(Ordering::Relaxed),
+            max_batch_fill: self.max_batch_fill.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of the counters.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub configs: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub busy_micros: u64,
+    pub max_batch_fill: u64,
+}
+
+impl MetricsSnapshot {
+    /// Mean configurations per backend batch — the batching win.
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.configs as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = ServiceMetrics::default();
+        m.record_request(10);
+        m.record_request(5);
+        m.record_batch(15, Duration::from_micros(100), true);
+        m.record_batch(3, Duration::from_micros(50), false);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.configs, 15);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.busy_micros, 150);
+        assert_eq!(s.max_batch_fill, 15);
+        assert!((s.mean_batch_fill() - 7.5).abs() < 1e-12);
+    }
+}

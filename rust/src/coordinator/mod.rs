@@ -1,0 +1,24 @@
+//! The coordinator — L3's request-path machinery.
+//!
+//! The GA's fitness queries are *requests*; this module provides the
+//! vLLM-router-style service that batches them onto the compiled PJRT
+//! executables (whose batch shapes are static):
+//!
+//! * [`service`] — [`EstimatorService`]: an mpsc request queue drained by a
+//!   batching thread (size- and deadline-triggered), fronting any
+//!   [`Surrogate`] backend; implements [`Fitness`] so the GA can use it
+//!   directly. Multiple concurrent searches (e.g. the four constraint
+//!   scaling factors of Fig. 15) share one backend through it.
+//! * [`metrics`] — request/batch counters and latency accounting.
+//! * [`worker`] — panic-isolated chunked validation (PPF → VPF).
+//!
+//! [`Surrogate`]: crate::surrogate::Surrogate
+//! [`Fitness`]: crate::dse::Fitness
+
+pub mod metrics;
+pub mod service;
+pub mod worker;
+
+pub use metrics::ServiceMetrics;
+pub use service::{BatchOptions, EstimatorService};
+pub use worker::validate_in_chunks;

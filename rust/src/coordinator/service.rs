@@ -1,0 +1,316 @@
+//! Batching estimator service.
+//!
+//! Compiled PJRT executables have *static* batch shapes; individual GA
+//! fitness queries are small and bursty. The service decouples the two
+//! with the classic dynamic-batching loop (cf. vLLM's router): requests
+//! queue on an mpsc channel; the drainer thread packs them until either
+//! `max_batch` configurations are pending or `max_wait` has elapsed since
+//! the first queued request, then issues ONE backend call and scatters the
+//! answers back through per-request channels. Requests are never dropped,
+//! reordered within a request, or duplicated — the property-test suite in
+//! `rust/tests/` pins this.
+//!
+//! Built on `std::thread` + `std::sync::mpsc` (this repo links no async
+//! runtime); the blocking [`Fitness`] impl makes the service a drop-in GA
+//! backend, and several concurrent searches (e.g. the four scaling factors
+//! of Fig. 15) share one compiled executable through it.
+
+use super::ServiceMetrics;
+use crate::dse::{Fitness, Objectives};
+use crate::error::{Error, Result};
+use crate::operator::AxoConfig;
+use crate::surrogate::Surrogate;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Batching knobs.
+#[derive(Debug, Clone)]
+pub struct BatchOptions {
+    /// Flush when this many configurations are pending (align with the
+    /// compiled executable's batch size).
+    pub max_batch: usize,
+    /// Flush this long after the first pending request.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions { max_batch: 256, max_wait: Duration::from_millis(2) }
+    }
+}
+
+struct Request {
+    configs: Vec<AxoConfig>,
+    resp: mpsc::Sender<Result<Vec<Objectives>>>,
+}
+
+/// Handle to a running estimator service (cheap to clone; the batcher
+/// thread exits when the last handle is dropped).
+#[derive(Clone)]
+pub struct EstimatorService {
+    tx: mpsc::Sender<Request>,
+    metrics: Arc<ServiceMetrics>,
+}
+
+impl EstimatorService {
+    /// Spawn the batcher thread.
+    pub fn spawn(backend: Arc<dyn Surrogate>, options: BatchOptions) -> EstimatorService {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let metrics = Arc::new(ServiceMetrics::default());
+        let m = metrics.clone();
+        std::thread::Builder::new()
+            .name("axocs-estimator-batcher".into())
+            .spawn(move || batcher_loop(rx, backend, options, m))
+            .expect("failed to spawn batcher thread");
+        EstimatorService { tx, metrics }
+    }
+
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
+    }
+
+    /// Submit one prediction request and wait for the batch result.
+    pub fn predict(&self, configs: Vec<AxoConfig>) -> Result<Vec<Objectives>> {
+        if configs.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.metrics.record_request(configs.len());
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request { configs, resp })
+            .map_err(|_| Error::Coordinator("estimator service is down".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("estimator service dropped request".into()))?
+    }
+}
+
+impl Fitness for EstimatorService {
+    fn evaluate(&self, configs: &[AxoConfig]) -> Result<Vec<Objectives>> {
+        self.predict(configs.to_vec())
+    }
+}
+
+fn batcher_loop(
+    rx: mpsc::Receiver<Request>,
+    backend: Arc<dyn Surrogate>,
+    options: BatchOptions,
+    metrics: Arc<ServiceMetrics>,
+) {
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all handles dropped
+        };
+        let mut pending = vec![first];
+        let mut pending_configs = pending[0].configs.len();
+
+        // Accumulate until size or deadline.
+        let deadline = Instant::now() + options.max_wait;
+        while pending_configs < options.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => {
+                    pending_configs += r.configs.len();
+                    pending.push(r);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // One backend call for the whole batch, panic-isolated.
+        let all: Vec<AxoConfig> =
+            pending.iter().flat_map(|r| r.configs.iter().copied()).collect();
+        let fill = all.len();
+        let started = Instant::now();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            backend.predict(&all)
+        }))
+        .unwrap_or_else(|_| Err(Error::Coordinator("backend panicked".into())));
+        let result = result.and_then(|objs| {
+            if objs.len() == fill {
+                Ok(objs)
+            } else {
+                Err(Error::Coordinator(format!(
+                    "backend returned {} objectives for {fill} configs",
+                    objs.len()
+                )))
+            }
+        });
+        metrics.record_batch(fill, started.elapsed(), result.is_ok());
+
+        match result {
+            Ok(objs) => {
+                let mut off = 0;
+                for req in pending {
+                    let n = req.configs.len();
+                    let slice = objs[off..off + n].to_vec();
+                    off += n;
+                    let _ = req.resp.send(Ok(slice));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for req in pending {
+                    let _ = req
+                        .resp
+                        .send(Err(Error::Coordinator(format!("batch failed: {msg}"))));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Counts backend invocations; objective = (uint % 7, uint % 5).
+    struct CountingBackend {
+        calls: std::sync::atomic::AtomicUsize,
+        delay: Duration,
+    }
+
+    impl Surrogate for CountingBackend {
+        fn predict(&self, configs: &[AxoConfig]) -> Result<Vec<Objectives>> {
+            self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            Ok(configs
+                .iter()
+                .map(|c| [(c.as_uint() % 7) as f64, (c.as_uint() % 5) as f64])
+                .collect())
+        }
+    }
+
+    fn counting(delay: Duration) -> Arc<CountingBackend> {
+        Arc::new(CountingBackend { calls: Default::default(), delay })
+    }
+
+    fn cfgs(range: std::ops::Range<u64>) -> Vec<AxoConfig> {
+        range.map(|v| AxoConfig::new(v, 16).unwrap()).collect()
+    }
+
+    #[test]
+    fn responses_match_requests_across_threads() {
+        let be = counting(Duration::ZERO);
+        let svc = EstimatorService::spawn(be.clone(), BatchOptions::default());
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for start in 1..20u64 {
+                let svc = svc.clone();
+                handles.push(s.spawn(move || {
+                    let c = cfgs(start..start + 5);
+                    let r = svc.predict(c.clone()).unwrap();
+                    (c, r)
+                }));
+            }
+            for h in handles {
+                let (c, r) = h.join().unwrap();
+                assert_eq!(r.len(), c.len());
+                for (cfg, obj) in c.iter().zip(&r) {
+                    assert_eq!(obj[0], (cfg.as_uint() % 7) as f64);
+                    assert_eq!(obj[1], (cfg.as_uint() % 5) as f64);
+                }
+            }
+        });
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.configs, 19 * 5);
+        assert!(snap.batches as usize <= 19);
+        assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn batching_coalesces_concurrent_requests() {
+        // Slow backend so requests pile up behind the first batch.
+        let be = counting(Duration::from_millis(10));
+        let svc = EstimatorService::spawn(
+            be.clone(),
+            BatchOptions { max_batch: 512, max_wait: Duration::from_millis(30) },
+        );
+        std::thread::scope(|s| {
+            for start in 1..=10u64 {
+                let svc = svc.clone();
+                s.spawn(move || svc.predict(cfgs(start * 100..start * 100 + 10)).unwrap());
+            }
+        });
+        let calls = be.calls.load(std::sync::atomic::Ordering::SeqCst);
+        assert!(calls < 10, "expected coalescing, saw {calls} backend calls");
+        assert!(svc.metrics().snapshot().mean_batch_fill() > 10.0);
+    }
+
+    struct FailingBackend;
+    impl Surrogate for FailingBackend {
+        fn predict(&self, _c: &[AxoConfig]) -> Result<Vec<Objectives>> {
+            Err(Error::Xla("backend exploded".into()))
+        }
+    }
+
+    #[test]
+    fn backend_failure_propagates_to_all_waiters() {
+        let svc = EstimatorService::spawn(Arc::new(FailingBackend), BatchOptions::default());
+        std::thread::scope(|s| {
+            let s1 = svc.clone();
+            let a = s.spawn(move || s1.predict(cfgs(1..4)));
+            let s2 = svc.clone();
+            let b = s.spawn(move || s2.predict(cfgs(4..8)));
+            assert!(matches!(a.join().unwrap(), Err(Error::Coordinator(_))));
+            assert!(matches!(b.join().unwrap(), Err(Error::Coordinator(_))));
+        });
+        assert!(svc.metrics().snapshot().errors >= 1);
+    }
+
+    struct PanickingBackend;
+    impl Surrogate for PanickingBackend {
+        fn predict(&self, _c: &[AxoConfig]) -> Result<Vec<Objectives>> {
+            panic!("kaboom");
+        }
+    }
+
+    #[test]
+    fn backend_panic_is_isolated_and_service_survives() {
+        let svc = EstimatorService::spawn(Arc::new(PanickingBackend), BatchOptions::default());
+        let r1 = svc.predict(cfgs(1..3));
+        assert!(matches!(r1, Err(Error::Coordinator(_))));
+        // Service still alive for subsequent requests.
+        let r2 = svc.predict(cfgs(3..5));
+        assert!(matches!(r2, Err(Error::Coordinator(_))));
+    }
+
+    struct ShortBackend;
+    impl Surrogate for ShortBackend {
+        fn predict(&self, configs: &[AxoConfig]) -> Result<Vec<Objectives>> {
+            Ok(vec![[0.0, 0.0]; configs.len().saturating_sub(1)])
+        }
+    }
+
+    #[test]
+    fn wrong_length_backend_detected() {
+        let svc = EstimatorService::spawn(Arc::new(ShortBackend), BatchOptions::default());
+        assert!(matches!(svc.predict(cfgs(1..5)), Err(Error::Coordinator(_))));
+    }
+
+    #[test]
+    fn empty_request_is_noop() {
+        let be = counting(Duration::ZERO);
+        let svc = EstimatorService::spawn(be.clone(), BatchOptions::default());
+        let r = svc.predict(Vec::new()).unwrap();
+        assert!(r.is_empty());
+        assert_eq!(be.calls.load(std::sync::atomic::Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn fitness_impl_works() {
+        let be = counting(Duration::ZERO);
+        let svc = EstimatorService::spawn(be, BatchOptions::default());
+        let c = cfgs(1..9);
+        let out = svc.evaluate(&c).unwrap();
+        assert_eq!(out.len(), 8);
+    }
+}

@@ -1,0 +1,105 @@
+//! Panic-isolated parallel validation (PPF → VPF).
+//!
+//! After the GA finishes, the pseudo Pareto-front's configurations are
+//! re-characterized with the real substrate ("The PPF solutions ... are
+//! then characterized to generate the Validated Pareto-front (VPF)
+//! designs", Fig. 4). Validation is chunked so a poisoned configuration
+//! cannot take down the run: each chunk is evaluated behind
+//! `catch_unwind`, failures surface as [`Error::Coordinator`] for that
+//! chunk only.
+
+use crate::charac::{characterize, Backend, Dataset, InputSet};
+use crate::error::Error;
+#[cfg(test)]
+use crate::error::Result;
+use crate::operator::{AxoConfig, Operator};
+
+/// Validate configurations in chunks; returns the merged dataset and the
+/// list of (chunk start, error) failures.
+pub fn validate_in_chunks(
+    op: Operator,
+    configs: &[AxoConfig],
+    inputs: &InputSet,
+    backend: &Backend<'_>,
+    chunk_size: usize,
+) -> (Option<Dataset>, Vec<(usize, Error)>) {
+    let chunk_size = chunk_size.max(1);
+    let mut merged: Option<Dataset> = None;
+    let mut failures = Vec::new();
+    for (ci, chunk) in configs.chunks(chunk_size).enumerate() {
+        let start = ci * chunk_size;
+        let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            characterize(op, chunk, inputs, backend)
+        }));
+        match attempt {
+            Ok(Ok(ds)) => match &mut merged {
+                None => merged = Some(ds),
+                Some(m) => {
+                    if let Err(e) = m.merge(&ds) {
+                        failures.push((start, e));
+                    }
+                }
+            },
+            Ok(Err(e)) => failures.push((start, e)),
+            Err(_) => failures.push((
+                start,
+                Error::Coordinator(format!("validation chunk at {start} panicked")),
+            )),
+        }
+    }
+    (merged, failures)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::charac::pipeline::BehavEvaluator;
+    use crate::charac::BehavMetrics;
+
+    #[test]
+    fn validates_all_chunks_natively() {
+        let op = Operator::ADD4;
+        let inputs = InputSet::exhaustive(op);
+        let cfgs: Vec<AxoConfig> = AxoConfig::enumerate(4).collect();
+        let (ds, fails) =
+            validate_in_chunks(op, &cfgs, &inputs, &Backend::Native, 4);
+        assert!(fails.is_empty());
+        assert_eq!(ds.unwrap().len(), 15);
+    }
+
+    /// Evaluator that panics on chunks containing the accurate config.
+    struct PanickyEval;
+    impl BehavEvaluator for PanickyEval {
+        fn eval(
+            &self,
+            _op: Operator,
+            configs: &[AxoConfig],
+            _inputs: &InputSet,
+        ) -> Result<Vec<BehavMetrics>> {
+            if configs.iter().any(|c| c.is_accurate()) {
+                panic!("poisoned config");
+            }
+            Ok(vec![BehavMetrics::ZERO; configs.len()])
+        }
+    }
+
+    #[test]
+    fn panicking_chunk_is_isolated() {
+        let op = Operator::ADD4;
+        let inputs = InputSet::exhaustive(op);
+        let cfgs: Vec<AxoConfig> = AxoConfig::enumerate(4).collect(); // last is accurate
+        let (ds, fails) = validate_in_chunks(
+            op,
+            &cfgs,
+            &inputs,
+            &Backend::Evaluator(&PanickyEval),
+            4,
+        );
+        // 15 configs → chunks [0..4),[4..8),[8..12),[12..15); accurate
+        // (uint 15) is in the last chunk.
+        assert_eq!(fails.len(), 1);
+        assert_eq!(fails[0].0, 12);
+        assert!(matches!(fails[0].1, Error::Coordinator(_)));
+        assert_eq!(ds.unwrap().len(), 12);
+    }
+}

@@ -1,0 +1,359 @@
+//! The (augmented) NSGA-II runner — paper Fig. 9.
+//!
+//! The problem-agnostic GA seeds its initial population randomly; the
+//! *augmented* AxOCS variant injects the ConSS solution pool as initial
+//! individuals in addition to random ones, which "directs the search
+//! toward Pareto-optimal solutions faster" (§IV-C-2). Operators follow the
+//! paper: tournament selection, single-point crossover, per-bit mutation,
+//! up to 250 generations.
+//!
+//! Fitness is a trait so the same runner drives every backend: the exact
+//! characterization table (small operators), the native GBT surrogate, or
+//! the batched PJRT MLP behind the coordinator service.
+
+use super::nsga2;
+use super::{hypervolume2d, Constraints, Objectives, ParetoFront};
+use crate::error::{Error, Result};
+use crate::operator::AxoConfig;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Batched objective evaluation (`[behav, ppa]`, minimization).
+pub trait Fitness: Send + Sync {
+    fn evaluate(&self, configs: &[AxoConfig]) -> Result<Vec<Objectives>>;
+}
+
+impl<F> Fitness for F
+where
+    F: Fn(&[AxoConfig]) -> Result<Vec<Objectives>> + Send + Sync,
+{
+    fn evaluate(&self, configs: &[AxoConfig]) -> Result<Vec<Objectives>> {
+        self(configs)
+    }
+}
+
+/// GA hyper-parameters (defaults follow the paper's DEAP setup).
+#[derive(Debug, Clone)]
+pub struct GaOptions {
+    pub pop_size: usize,
+    pub generations: u32,
+    pub crossover_prob: f64,
+    /// Per-bit flip probability; `None` = `1 / config_len`.
+    pub mutation_prob: Option<f64>,
+    pub tournament_size: usize,
+    pub seed: u64,
+}
+
+impl Default for GaOptions {
+    fn default() -> Self {
+        GaOptions {
+            pop_size: 100,
+            generations: 250, // paper: "maximum of 250 generations"
+            crossover_prob: 0.9,
+            mutation_prob: None,
+            tournament_size: 2,
+            seed: 2023,
+        }
+    }
+}
+
+/// Outcome of one GA run.
+#[derive(Debug, Clone)]
+pub struct GaResult {
+    pub population: Vec<AxoConfig>,
+    pub objectives: Vec<Objectives>,
+    /// Final pseudo Pareto-front (PPF) over every evaluated design.
+    pub front_configs: Vec<AxoConfig>,
+    pub front_points: Vec<Objectives>,
+    /// Hypervolume after each generation (Fig. 16 trace), index 0 = the
+    /// initial population.
+    pub hv_history: Vec<f64>,
+    /// Unique fitness evaluations spent.
+    pub evaluations: usize,
+}
+
+impl GaResult {
+    pub fn final_hypervolume(&self) -> f64 {
+        *self.hv_history.last().unwrap_or(&0.0)
+    }
+}
+
+/// NSGA-II search driver.
+pub struct NsgaRunner {
+    pub options: GaOptions,
+    pub constraints: Constraints,
+}
+
+impl NsgaRunner {
+    pub fn new(options: GaOptions, constraints: Constraints) -> NsgaRunner {
+        NsgaRunner { options, constraints }
+    }
+
+    /// Run the search. `initial_seeds` is empty for the problem-agnostic GA
+    /// and the ConSS pool for the augmented variant.
+    pub fn run(
+        &self,
+        config_len: u32,
+        fitness: &dyn Fitness,
+        initial_seeds: &[AxoConfig],
+    ) -> Result<GaResult> {
+        let o = &self.options;
+        if o.pop_size < 2 {
+            return Err(Error::Dse("population size must be >= 2".into()));
+        }
+        let mut rng = Rng::seed_from_u64(o.seed);
+        let pmut = o.mutation_prob.unwrap_or(1.0 / config_len as f64);
+
+        // Archive of every evaluated design (the PPF source) + cache.
+        let mut cache: HashMap<u64, Objectives> = HashMap::new();
+        let mut archive: Vec<(AxoConfig, Objectives)> = Vec::new();
+
+        // --- Initial population: seeds first, random fill (Fig. 9). ---
+        let mut pop: Vec<AxoConfig> = Vec::with_capacity(o.pop_size);
+        let mut seen = std::collections::HashSet::new();
+        for s in initial_seeds.iter().take(o.pop_size) {
+            debug_assert_eq!(s.len(), config_len);
+            if seen.insert(s.as_uint()) {
+                pop.push(*s);
+            }
+        }
+        while pop.len() < o.pop_size {
+            let c = AxoConfig::sample_unique(config_len, 1, &mut rng)[0];
+            if seen.insert(c.as_uint()) {
+                pop.push(c);
+            }
+        }
+
+        let mut objs =
+            self.evaluate_cached(&pop, fitness, &mut cache, &mut archive)?;
+        let mut hv_history =
+            vec![self.front_hypervolume(&archive)];
+
+        for _gen in 0..o.generations {
+            // --- Variation: tournament → crossover → mutation. ---
+            let (rank, fronts) = nsga2::fast_non_dominated_sort(&objs, Some(&self.constraints));
+            let mut crowd = vec![0.0f64; pop.len()];
+            for front in &fronts {
+                let cd = nsga2::crowding_distance(&objs, front);
+                for (w, &i) in front.iter().enumerate() {
+                    crowd[i] = cd[w];
+                }
+            }
+            let mut offspring: Vec<AxoConfig> = Vec::with_capacity(o.pop_size);
+            while offspring.len() < o.pop_size {
+                let p1 = self.tournament(&rank, &crowd, &mut rng);
+                let p2 = self.tournament(&rank, &crowd, &mut rng);
+                let (mut c1, mut c2) = (pop[p1], pop[p2]);
+                if config_len > 1 && rng.gen_f64() < o.crossover_prob {
+                    let point = 1 + rng.gen_below((config_len - 1) as u64) as u32;
+                    let (a, b) = c1.crossover(&c2, point);
+                    c1 = a.unwrap_or(c1);
+                    c2 = b.unwrap_or(c2);
+                }
+                offspring.push(self.mutate(c1, pmut, &mut rng));
+                if offspring.len() < o.pop_size {
+                    offspring.push(self.mutate(c2, pmut, &mut rng));
+                }
+            }
+            let off_objs =
+                self.evaluate_cached(&offspring, fitness, &mut cache, &mut archive)?;
+
+            // --- Environmental selection over parents + offspring. ---
+            let mut all_cfg = pop.clone();
+            all_cfg.extend_from_slice(&offspring);
+            let mut all_obj = objs.clone();
+            all_obj.extend_from_slice(&off_objs);
+            let sel = nsga2::select(&all_obj, Some(&self.constraints), o.pop_size);
+            pop = sel.iter().map(|&i| all_cfg[i]).collect();
+            objs = sel.iter().map(|&i| all_obj[i]).collect();
+
+            hv_history.push(self.front_hypervolume(&archive));
+        }
+
+        // PPF = feasible non-dominated subset of the archive.
+        let feasible: Vec<&(AxoConfig, Objectives)> = archive
+            .iter()
+            .filter(|(_, o)| self.constraints.feasible(*o))
+            .collect();
+        let pts: Vec<Objectives> = feasible.iter().map(|(_, o)| *o).collect();
+        let front = ParetoFront::from_points(&pts);
+        let front_configs = front.indices.iter().map(|&i| feasible[i].0).collect();
+        let front_points = front.points.clone();
+
+        Ok(GaResult {
+            population: pop,
+            objectives: objs,
+            front_configs,
+            front_points,
+            hv_history,
+            evaluations: cache.len(),
+        })
+    }
+
+    fn evaluate_cached(
+        &self,
+        configs: &[AxoConfig],
+        fitness: &dyn Fitness,
+        cache: &mut HashMap<u64, Objectives>,
+        archive: &mut Vec<(AxoConfig, Objectives)>,
+    ) -> Result<Vec<Objectives>> {
+        let fresh: Vec<AxoConfig> = {
+            let mut seen = std::collections::HashSet::new();
+            configs
+                .iter()
+                .filter(|c| !cache.contains_key(&c.as_uint()) && seen.insert(c.as_uint()))
+                .copied()
+                .collect()
+        };
+        if !fresh.is_empty() {
+            let objs = fitness.evaluate(&fresh)?;
+            if objs.len() != fresh.len() {
+                return Err(Error::Dse(format!(
+                    "fitness returned {} objectives for {} configs",
+                    objs.len(),
+                    fresh.len()
+                )));
+            }
+            for (c, o) in fresh.iter().zip(&objs) {
+                cache.insert(c.as_uint(), *o);
+                archive.push((*c, *o));
+            }
+        }
+        Ok(configs.iter().map(|c| cache[&c.as_uint()]).collect())
+    }
+
+    fn front_hypervolume(&self, archive: &[(AxoConfig, Objectives)]) -> f64 {
+        let pts: Vec<Objectives> = archive
+            .iter()
+            .map(|(_, o)| *o)
+            .filter(|o| self.constraints.feasible(*o))
+            .collect();
+        hypervolume2d(&pts, self.constraints.reference())
+    }
+
+    fn tournament(&self, rank: &[usize], crowd: &[f64], rng: &mut Rng) -> usize {
+        let n = rank.len();
+        let mut best = rng.gen_index(n);
+        for _ in 1..self.options.tournament_size.max(2) {
+            let cand = rng.gen_index(n);
+            let better = rank[cand] < rank[best]
+                || (rank[cand] == rank[best] && crowd[cand] > crowd[best]);
+            if better {
+                best = cand;
+            }
+        }
+        best
+    }
+
+    fn mutate(&self, cfg: AxoConfig, pmut: f64, rng: &mut Rng) -> AxoConfig {
+        let mut cur = cfg;
+        for k in 0..cfg.len() {
+            if rng.gen_f64() < pmut {
+                if let Some(next) = cur.flipped(k) {
+                    cur = next;
+                }
+            }
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic separable fitness: behav = fraction of zeros in low half,
+    /// ppa = fraction of ones overall — a clean trade-off.
+    fn toy_fitness(configs: &[AxoConfig]) -> Result<Vec<Objectives>> {
+        Ok(configs
+            .iter()
+            .map(|c| {
+                let l = c.len();
+                let ones = c.count_kept() as f64;
+                let low_zeros = (0..l / 2).filter(|&k| !c.keeps(k)).count() as f64;
+                [low_zeros / (l / 2) as f64, ones / l as f64]
+            })
+            .collect())
+    }
+
+    fn runner(gens: u32, seed: u64) -> NsgaRunner {
+        NsgaRunner::new(
+            GaOptions {
+                pop_size: 24,
+                generations: gens,
+                seed,
+                ..GaOptions::default()
+            },
+            Constraints::new(1.0, 1.0).unwrap(),
+        )
+    }
+
+    #[test]
+    fn hv_history_is_monotone_nondecreasing() {
+        let r = runner(20, 1).run(12, &toy_fitness, &[]).unwrap();
+        for w in r.hv_history.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12);
+        }
+        assert_eq!(r.hv_history.len(), 21);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = runner(10, 7).run(10, &toy_fitness, &[]).unwrap();
+        let b = runner(10, 7).run(10, &toy_fitness, &[]).unwrap();
+        assert_eq!(a.hv_history, b.hv_history);
+        assert_eq!(a.front_points, b.front_points);
+    }
+
+    #[test]
+    fn seeded_run_starts_at_least_as_good() {
+        // Give the augmented run the all-ones + low-half-ones seeds, which
+        // score well on behav.
+        let seeds = vec![
+            AxoConfig::accurate(12),
+            AxoConfig::new(0b111111, 12).unwrap(),
+        ];
+        let plain = runner(0, 3).run(12, &toy_fitness, &[]).unwrap();
+        let mut aug_runner = runner(0, 3);
+        aug_runner.options.seed = 3;
+        let aug = aug_runner.run(12, &toy_fitness, &seeds).unwrap();
+        assert!(aug.hv_history[0] >= plain.hv_history[0] - 1e-12);
+    }
+
+    #[test]
+    fn population_never_contains_zero_config() {
+        let r = runner(15, 9).run(8, &toy_fitness, &[]).unwrap();
+        assert!(r.population.iter().all(|c| c.as_uint() != 0));
+        assert_eq!(r.population.len(), 24);
+    }
+
+    #[test]
+    fn front_is_nondominated_and_feasible() {
+        let r = runner(15, 11).run(10, &toy_fitness, &[]).unwrap();
+        for (i, a) in r.front_points.iter().enumerate() {
+            assert!(a[0] <= 1.0 && a[1] <= 1.0);
+            for (j, b) in r.front_points.iter().enumerate() {
+                if i != j {
+                    assert!(!super::super::pareto::dominates(*b, *a));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fitness_error_propagates() {
+        let failing = |_: &[AxoConfig]| -> Result<Vec<Objectives>> {
+            Err(Error::Xla("boom".into()))
+        };
+        assert!(runner(1, 0).run(8, &failing, &[]).is_err());
+    }
+
+    #[test]
+    fn fitness_length_mismatch_detected() {
+        let bad = |c: &[AxoConfig]| -> Result<Vec<Objectives>> {
+            Ok(vec![[0.0, 0.0]; c.len().saturating_sub(1)])
+        };
+        let e = runner(1, 0).run(8, &bad, &[]);
+        assert!(matches!(e, Err(Error::Dse(_))));
+    }
+}

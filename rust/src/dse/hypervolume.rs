@@ -1,0 +1,100 @@
+//! 2-D hypervolume (minimization) — the paper's quality metric.
+//!
+//! "Hypervolume ... is estimated as the area (for two objectives) swept by
+//! a point or Pareto-front w.r.t. a reference point, usually defined by
+//! the problem's constraints" (§V-D). Points not dominating the reference
+//! contribute nothing.
+
+use super::{pareto::pareto_front_indices, Objectives};
+
+/// Exact 2-objective hypervolume of `points` w.r.t. `reference`
+/// (minimization: only points with both coordinates `< reference` count).
+pub fn hypervolume2d(points: &[Objectives], reference: Objectives) -> f64 {
+    let mut inside: Vec<Objectives> = points
+        .iter()
+        .copied()
+        .filter(|p| p[0] < reference[0] && p[1] < reference[1])
+        .collect();
+    if inside.is_empty() {
+        return 0.0;
+    }
+    // Reduce to the non-dominated set, then sweep in ascending x.
+    let front = pareto_front_indices(&inside);
+    let mut pts: Vec<Objectives> = front.iter().map(|&i| inside[i]).collect();
+    pts.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+    inside.clear();
+
+    let mut hv = 0.0;
+    let mut prev_y = reference[1];
+    for p in &pts {
+        // On a sorted non-dominated front y strictly decreases.
+        hv += (reference[0] - p[0]) * (prev_y - p[1]);
+        prev_y = p[1];
+    }
+    hv
+}
+
+/// Hypervolume normalized by the reference box area — comparable across
+/// scaling factors (Fig. 18's "relative hypervolume").
+pub fn relative_hypervolume2d(points: &[Objectives], reference: Objectives) -> f64 {
+    let area = reference[0] * reference[1];
+    if area <= 0.0 {
+        return 0.0;
+    }
+    hypervolume2d(points, reference) / area
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_point_rectangle() {
+        let hv = hypervolume2d(&[[1.0, 1.0]], [3.0, 4.0]);
+        assert!((hv - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn union_of_two_points() {
+        // Points (1,2) and (2,1) wrt (3,3): 2x1 + 1x2 - overlap handled by sweep = 3.
+        let hv = hypervolume2d(&[[1.0, 2.0], [2.0, 1.0]], [3.0, 3.0]);
+        assert!((hv - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dominated_points_do_not_change_hv() {
+        let base = hypervolume2d(&[[1.0, 1.0]], [4.0, 4.0]);
+        let more = hypervolume2d(&[[1.0, 1.0], [2.0, 2.0], [3.0, 1.5]], [4.0, 4.0]);
+        assert!((base - more).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outside_reference_contributes_zero() {
+        assert_eq!(hypervolume2d(&[[5.0, 5.0]], [4.0, 4.0]), 0.0);
+        assert_eq!(hypervolume2d(&[[4.0, 1.0]], [4.0, 4.0]), 0.0);
+        assert_eq!(hypervolume2d(&[], [4.0, 4.0]), 0.0);
+    }
+
+    #[test]
+    fn adding_nondominated_point_increases_hv() {
+        let a = hypervolume2d(&[[2.0, 1.0]], [4.0, 4.0]);
+        let b = hypervolume2d(&[[2.0, 1.0], [1.0, 3.0]], [4.0, 4.0]);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn relative_bounded_by_one() {
+        let r = relative_hypervolume2d(&[[0.0, 0.0]], [2.0, 5.0]);
+        assert!((r - 1.0).abs() < 1e-12);
+        let r = relative_hypervolume2d(&[[1.0, 2.5]], [2.0, 5.0]);
+        assert!((r - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_under_improvement() {
+        // Moving a point toward the origin never decreases HV.
+        let hv1 = hypervolume2d(&[[2.0, 2.0], [1.0, 3.0]], [4.0, 4.0]);
+        let hv2 = hypervolume2d(&[[1.5, 2.0], [1.0, 3.0]], [4.0, 4.0]);
+        assert!(hv2 >= hv1);
+    }
+}

@@ -1,0 +1,105 @@
+//! Multi-objective DSE (paper §IV-C-2, Eq. 3).
+//!
+//! The search minimizes the headline objective pair
+//! `(BEHAV, PPA) = (AVG_ABS_REL_ERR, PDPLUT)` subject to the constraints
+//! `BEHAV <= B_MAX` and `PPA <= P_MAX` of Eq. 3. The engine is an NSGA-II
+//! genetic algorithm with the paper's operators — tournament selection,
+//! single-point crossover, bit-flip mutation, up to 250 generations — and
+//! constrained domination for feasibility handling. Quality is assessed by
+//! the 2-D hypervolume w.r.t. the constraint point (Figs. 15/16/18).
+
+pub mod ga;
+pub mod hypervolume;
+pub mod nsga2;
+pub mod pareto;
+
+pub use ga::{Fitness, GaOptions, GaResult, NsgaRunner};
+pub use hypervolume::hypervolume2d;
+pub use pareto::{dominates, pareto_front_indices, ParetoFront};
+
+use crate::error::{Error, Result};
+
+/// An objective vector in minimization form: `[behav, ppa]`.
+pub type Objectives = [f64; 2];
+
+/// The Eq. 3 constraint box. A design is feasible when
+/// `behav <= b_max && ppa <= p_max`; the same point is the hypervolume
+/// reference.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Constraints {
+    pub b_max: f64,
+    pub p_max: f64,
+}
+
+impl Constraints {
+    pub fn new(b_max: f64, p_max: f64) -> Result<Constraints> {
+        if !(b_max > 0.0 && p_max > 0.0) {
+            return Err(Error::Dse(format!(
+                "constraints must be positive (b_max {b_max}, p_max {p_max})"
+            )));
+        }
+        Ok(Constraints { b_max, p_max })
+    }
+
+    /// Paper §V-D: the constraint scaling factor multiplies the *maximum*
+    /// PPA and BEHAV of the training dataset to obtain `P_MAX` / `B_MAX`.
+    /// Smaller factor = tighter problem.
+    pub fn from_scaling_factor(
+        factor: f64,
+        train_points: &[Objectives],
+    ) -> Result<Constraints> {
+        if train_points.is_empty() {
+            return Err(Error::Dse("empty training set for constraints".into()));
+        }
+        let b = train_points.iter().map(|p| p[0]).fold(f64::NEG_INFINITY, f64::max);
+        let p = train_points.iter().map(|p| p[1]).fold(f64::NEG_INFINITY, f64::max);
+        Constraints::new(factor * b, factor * p)
+    }
+
+    #[inline]
+    pub fn feasible(&self, obj: Objectives) -> bool {
+        obj[0] <= self.b_max && obj[1] <= self.p_max
+    }
+
+    /// Total constraint violation (0 when feasible) for constrained
+    /// domination.
+    #[inline]
+    pub fn violation(&self, obj: Objectives) -> f64 {
+        (obj[0] - self.b_max).max(0.0) / self.b_max
+            + (obj[1] - self.p_max).max(0.0) / self.p_max
+    }
+
+    /// Hypervolume reference point (the constraint corner).
+    pub fn reference(&self) -> Objectives {
+        [self.b_max, self.p_max]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_factor_uses_train_max() {
+        let pts = vec![[0.2, 10.0], [0.5, 40.0], [0.1, 25.0]];
+        let c = Constraints::from_scaling_factor(0.5, &pts).unwrap();
+        assert_eq!(c.b_max, 0.25);
+        assert_eq!(c.p_max, 20.0);
+    }
+
+    #[test]
+    fn feasibility_and_violation() {
+        let c = Constraints::new(1.0, 10.0).unwrap();
+        assert!(c.feasible([1.0, 10.0]));
+        assert!(!c.feasible([1.1, 5.0]));
+        assert_eq!(c.violation([0.5, 5.0]), 0.0);
+        assert!((c.violation([2.0, 10.0]) - 1.0).abs() < 1e-12);
+        assert!(c.violation([2.0, 20.0]) > c.violation([2.0, 10.0]));
+    }
+
+    #[test]
+    fn rejects_nonpositive() {
+        assert!(Constraints::new(0.0, 1.0).is_err());
+        assert!(Constraints::from_scaling_factor(0.5, &[]).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! NSGA-II machinery: constrained fast non-dominated sort + crowding.
+//!
+//! Constrained domination (Deb): a feasible solution dominates any
+//! infeasible one; between two infeasible solutions the smaller total
+//! violation wins; between feasible solutions ordinary Pareto dominance
+//! applies. This matches DEAP's `selNSGA2` behaviour with a feasibility
+//! decorator — the setup the paper's GA uses.
+
+use super::{pareto::dominates, Constraints, Objectives};
+
+/// Constrained-domination predicate.
+#[inline]
+pub fn constrained_dominates(
+    a: Objectives,
+    va: f64,
+    b: Objectives,
+    vb: f64,
+) -> bool {
+    match (va <= 0.0, vb <= 0.0) {
+        (true, false) => true,
+        (false, true) => false,
+        (false, false) => va < vb,
+        (true, true) => dominates(a, b),
+    }
+}
+
+/// Fast non-dominated sort. Returns front index per individual
+/// (0 = best front) and the list of fronts.
+pub fn fast_non_dominated_sort(
+    objs: &[Objectives],
+    constraints: Option<&Constraints>,
+) -> (Vec<usize>, Vec<Vec<usize>>) {
+    let n = objs.len();
+    let viol: Vec<f64> = match constraints {
+        Some(c) => objs.iter().map(|&o| c.violation(o)).collect(),
+        None => vec![0.0; n],
+    };
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut dom_count = vec![0usize; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if constrained_dominates(objs[i], viol[i], objs[j], viol[j]) {
+                dominated_by[i].push(j);
+                dom_count[j] += 1;
+            } else if constrained_dominates(objs[j], viol[j], objs[i], viol[i]) {
+                dominated_by[j].push(i);
+                dom_count[i] += 1;
+            }
+        }
+    }
+    let mut rank = vec![usize::MAX; n];
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> =
+        (0..n).filter(|&i| dom_count[i] == 0).collect();
+    let mut level = 0;
+    while !current.is_empty() {
+        for &i in &current {
+            rank[i] = level;
+        }
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                dom_count[j] -= 1;
+                if dom_count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+        level += 1;
+    }
+    (rank, fronts)
+}
+
+/// Crowding distance within one front (boundary points get +inf).
+pub fn crowding_distance(objs: &[Objectives], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    let mut dist = vec![0.0f64; m];
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    for obj_k in 0..2 {
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            objs[front[a]][obj_k].partial_cmp(&objs[front[b]][obj_k]).unwrap()
+        });
+        let lo = objs[front[order[0]]][obj_k];
+        let hi = objs[front[order[m - 1]]][obj_k];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let span = hi - lo;
+        if span <= 0.0 {
+            continue;
+        }
+        for w in 1..m - 1 {
+            let prev = objs[front[order[w - 1]]][obj_k];
+            let next = objs[front[order[w + 1]]][obj_k];
+            dist[order[w]] += (next - prev) / span;
+        }
+    }
+    dist
+}
+
+/// NSGA-II environmental selection: best `k` individuals by (rank,
+/// crowding). Returns selected indices into `objs`.
+pub fn select(
+    objs: &[Objectives],
+    constraints: Option<&Constraints>,
+    k: usize,
+) -> Vec<usize> {
+    let (_, fronts) = fast_non_dominated_sort(objs, constraints);
+    let mut out = Vec::with_capacity(k);
+    for front in &fronts {
+        if out.len() + front.len() <= k {
+            out.extend_from_slice(front);
+        } else {
+            let cd = crowding_distance(objs, front);
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            order.sort_by(|&a, &b| cd[b].partial_cmp(&cd[a]).unwrap());
+            for &w in order.iter().take(k - out.len()) {
+                out.push(front[w]);
+            }
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sort_ranks_simple_fronts() {
+        let objs = vec![
+            [1.0, 1.0], // front 0
+            [2.0, 2.0], // front 1
+            [0.5, 3.0], // front 0
+            [3.0, 3.0], // front 2
+        ];
+        let (rank, fronts) = fast_non_dominated_sort(&objs, None);
+        assert_eq!(rank, vec![0, 1, 0, 2]);
+        assert_eq!(fronts.len(), 3);
+        assert_eq!(fronts[0].len(), 2);
+    }
+
+    #[test]
+    fn feasible_always_beats_infeasible() {
+        let c = Constraints::new(1.0, 1.0).unwrap();
+        // a is feasible but objectively worse than infeasible b.
+        let a = [0.9, 0.9];
+        let b = [0.1, 2.0];
+        assert!(constrained_dominates(a, c.violation(a), b, c.violation(b)));
+        assert!(!constrained_dominates(b, c.violation(b), a, c.violation(a)));
+    }
+
+    #[test]
+    fn infeasible_ordered_by_violation() {
+        let c = Constraints::new(1.0, 1.0).unwrap();
+        let a = [1.5, 0.5];
+        let b = [3.0, 0.5];
+        assert!(constrained_dominates(a, c.violation(a), b, c.violation(b)));
+    }
+
+    #[test]
+    fn crowding_boundary_infinite() {
+        let objs = vec![[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]];
+        let front: Vec<usize> = vec![0, 1, 2, 3];
+        let cd = crowding_distance(&objs, &front);
+        assert!(cd[0].is_infinite() && cd[3].is_infinite());
+        assert!(cd[1].is_finite() && cd[1] > 0.0);
+    }
+
+    #[test]
+    fn select_prefers_lower_fronts_then_spread() {
+        let objs = vec![
+            [0.0, 2.0],
+            [1.0, 1.0],
+            [2.0, 0.0],
+            [1.01, 1.01], // front 1
+            [5.0, 5.0],   // front 2
+        ];
+        let sel = select(&objs, None, 3);
+        assert_eq!(sel.len(), 3);
+        assert!(sel.contains(&0) && sel.contains(&1) && sel.contains(&2));
+        let sel4 = select(&objs, None, 4);
+        assert!(sel4.contains(&3));
+    }
+
+    #[test]
+    fn select_k_larger_than_population() {
+        let objs = vec![[0.0, 0.0], [1.0, 1.0]];
+        let sel = select(&objs, None, 10);
+        assert_eq!(sel.len(), 2);
+    }
+}

@@ -1,0 +1,130 @@
+//! Pareto dominance and front extraction (minimization).
+
+use super::Objectives;
+
+/// `a` dominates `b`: no-worse in both objectives, strictly better in one.
+#[inline]
+pub fn dominates(a: Objectives, b: Objectives) -> bool {
+    (a[0] <= b[0] && a[1] <= b[1]) && (a[0] < b[0] || a[1] < b[1])
+}
+
+/// Indices of the non-dominated points (stable order).
+///
+/// O(n log n): sort by first objective then sweep the second. Duplicated
+/// points are all kept (none dominates its copy).
+pub fn pareto_front_indices(points: &[Objectives]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        points[a][0]
+            .partial_cmp(&points[b][0])
+            .unwrap()
+            .then(points[a][1].partial_cmp(&points[b][1]).unwrap())
+    });
+    let mut out = Vec::new();
+    let mut best_second = f64::INFINITY;
+    let mut i = 0;
+    while i < idx.len() {
+        // group of equal first-objective values
+        let mut j = i;
+        let x = points[idx[i]][0];
+        let mut group_min = f64::INFINITY;
+        while j < idx.len() && points[idx[j]][0] == x {
+            group_min = group_min.min(points[idx[j]][1]);
+            j += 1;
+        }
+        for k in i..j {
+            let y = points[idx[k]][1];
+            // kept iff not dominated by any strictly-smaller-x point and is
+            // minimal within its x group (ties on both coords all kept).
+            if y < best_second && y == group_min {
+                out.push(idx[k]);
+            }
+        }
+        best_second = best_second.min(group_min);
+        i = j;
+    }
+    out.sort_unstable();
+    out
+}
+
+/// A Pareto front in the (BEHAV, PPA) plane with back-references to the
+/// originating rows.
+#[derive(Debug, Clone)]
+pub struct ParetoFront {
+    pub indices: Vec<usize>,
+    pub points: Vec<Objectives>,
+}
+
+impl ParetoFront {
+    pub fn from_points(points: &[Objectives]) -> ParetoFront {
+        let indices = pareto_front_indices(points);
+        let pts = indices.iter().map(|&i| points[i]).collect();
+        ParetoFront { indices, points: pts }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Front sorted by the first objective (for plotting/report output).
+    pub fn sorted_points(&self) -> Vec<Objectives> {
+        let mut pts = self.points.clone();
+        pts.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+        pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_cases() {
+        assert!(dominates([1.0, 1.0], [2.0, 2.0]));
+        assert!(dominates([1.0, 2.0], [1.0, 3.0]));
+        assert!(!dominates([1.0, 1.0], [1.0, 1.0]));
+        assert!(!dominates([1.0, 3.0], [2.0, 2.0]));
+    }
+
+    #[test]
+    fn front_extraction() {
+        let pts = vec![
+            [1.0, 5.0], // front
+            [2.0, 3.0], // front
+            [3.0, 4.0], // dominated by [2,3]
+            [4.0, 1.0], // front
+            [4.0, 2.0], // dominated (same x, worse y)
+        ];
+        assert_eq!(pareto_front_indices(&pts), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn duplicates_all_kept() {
+        let pts = vec![[1.0, 1.0], [1.0, 1.0], [2.0, 0.5]];
+        assert_eq!(pareto_front_indices(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn front_matches_naive_on_random() {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(5);
+        let pts: Vec<Objectives> =
+            (0..200).map(|_| [rng.gen_f64(), rng.gen_f64()]).collect();
+        let fast = pareto_front_indices(&pts);
+        let naive: Vec<usize> = (0..pts.len())
+            .filter(|&i| !pts.iter().any(|&q| dominates(q, pts[i])))
+            .collect();
+        assert_eq!(fast, naive);
+    }
+
+    #[test]
+    fn front_struct_sorted() {
+        let pts = vec![[2.0, 1.0], [1.0, 2.0]];
+        let f = ParetoFront::from_points(&pts);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.sorted_points(), vec![[1.0, 2.0], [2.0, 1.0]]);
+    }
+}

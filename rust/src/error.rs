@@ -1,0 +1,68 @@
+//! Crate-wide error type.
+//!
+//! Library code returns [`Result`]; the CLI converts into `eyre` at the
+//! boundary. Variants are grouped by subsystem so failure injection tests
+//! can assert on the class of failure.
+
+use std::path::PathBuf;
+
+/// Unified error type for the AxOCS library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Artifact file (HLO text, weights, manifest, input set) missing.
+    #[error("artifact not found: {path} (run `make artifacts` first)")]
+    ArtifactMissing { path: PathBuf },
+
+    /// Artifact exists but failed to parse/validate.
+    #[error("corrupt artifact {path}: {reason}")]
+    ArtifactCorrupt { path: PathBuf, reason: String },
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Shape or batch-size mismatch between caller and compiled executable.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Invalid operator configuration (e.g. all-zeros, wrong length).
+    #[error("invalid configuration: {0}")]
+    InvalidConfig(String),
+
+    /// Dataset consistency problem (length mismatch, empty, bad columns).
+    #[error("dataset error: {0}")]
+    Dataset(String),
+
+    /// ML model error (untrained model queried, bad hyperparameters).
+    #[error("ml error: {0}")]
+    Ml(String),
+
+    /// DSE setup error (bad constraints, empty population).
+    #[error("dse error: {0}")]
+    Dse(String),
+
+    /// Coordinator/service failure (channel closed, worker panicked).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Experiment configuration file problem.
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    #[error(transparent)]
+    Json(#[from] crate::util::json::JsonError),
+
+    #[error(transparent)]
+    Toml(#[from] crate::util::tomlkit::TomlError),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,330 @@
+//! TOML experiment configuration system.
+//!
+//! Every CLI subcommand and example is driven by an [`ExperimentConfig`]
+//! (file via `--config`, overridable by flags). `configs/` in the repo root
+//! ships the paper-scale configurations; tests and the quickstart use the
+//! scaled-down defaults to stay fast.
+
+use crate::error::{Error, Result};
+use crate::matching::DistanceKind;
+use crate::surrogate::EstimatorBackend;
+use std::path::{Path, PathBuf};
+
+fn default_artifacts() -> PathBuf {
+    PathBuf::from("artifacts")
+}
+fn default_out() -> PathBuf {
+    PathBuf::from("results")
+}
+fn default_seed() -> u64 {
+    2023
+}
+fn default_samples() -> usize {
+    10_650 // paper §V-B
+}
+fn default_pop() -> usize {
+    100
+}
+fn default_gens() -> u32 {
+    250 // paper §IV-C-2
+}
+fn default_cx() -> f64 {
+    0.9
+}
+fn default_tourn() -> usize {
+    2
+}
+fn default_noise() -> u32 {
+    4
+}
+fn default_factors() -> Vec<f64> {
+    vec![0.2, 0.5, 0.75, 1.0] // paper §V-D
+}
+fn default_distance() -> DistanceKind {
+    DistanceKind::Euclidean
+}
+fn default_backend() -> EstimatorBackend {
+    EstimatorBackend::Gbt
+}
+
+/// Top-level experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// Operator under DSE (the paper's headline target is `mul8`).
+    pub operator: String,
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub seed: u64,
+    /// H_CHAR sample size for non-exhaustive spaces.
+    pub train_samples: usize,
+    pub surrogate: SurrogateConfig,
+    pub conss: ConssConfig,
+    pub ga: GaConfig,
+    pub scaling_factors: Vec<f64>,
+}
+
+impl ExperimentConfig {
+    fn default_operator() -> String {
+        "mul8".into()
+    }
+
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|_| Error::ArtifactMissing { path: path.to_path_buf() })?;
+        Self::from_toml_str(&text)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))
+    }
+
+    /// Parse the TOML subset `configs/*.toml` uses. Unknown keys are
+    /// rejected (typo protection).
+    pub fn from_toml_str(text: &str) -> Result<ExperimentConfig> {
+        use crate::util::tomlkit::{parse, TomlValue};
+        let map = parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        let bad =
+            |key: &str, want: &str| Error::Config(format!("key `{key}` must be {want}"));
+        let get_str = |key: &str, v: &TomlValue| -> Result<String> {
+            v.as_str().map(String::from).ok_or_else(|| bad(key, "a string"))
+        };
+        for (key, value) in &map {
+            match key.as_str() {
+                "name" => cfg.name = get_str(key, value)?,
+                "operator" => cfg.operator = get_str(key, value)?,
+                "artifacts_dir" => cfg.artifacts_dir = PathBuf::from(get_str(key, value)?),
+                "out_dir" => cfg.out_dir = PathBuf::from(get_str(key, value)?),
+                "seed" => {
+                    cfg.seed = value
+                        .as_i64()
+                        .and_then(|v| u64::try_from(v).ok())
+                        .ok_or_else(|| bad(key, "a non-negative integer"))?
+                }
+                "train_samples" => {
+                    cfg.train_samples =
+                        value.as_usize().ok_or_else(|| bad(key, "an integer"))?
+                }
+                "scaling_factors" => {
+                    cfg.scaling_factors =
+                        value.as_f64_array().ok_or_else(|| bad(key, "a number array"))?
+                }
+                "surrogate.backend" => {
+                    let s = get_str(key, value)?;
+                    cfg.surrogate.backend = EstimatorBackend::from_name(&s)
+                        .ok_or_else(|| bad(key, "table|gbt|pjrt-mlp"))?;
+                }
+                "surrogate.gbt_stages" => {
+                    cfg.surrogate.gbt_stages =
+                        Some(value.as_usize().ok_or_else(|| bad(key, "an integer"))?)
+                }
+                "conss.distance" => {
+                    let s = get_str(key, value)?;
+                    cfg.conss.distance = DistanceKind::from_name(&s)
+                        .ok_or_else(|| bad(key, "euclidean|manhattan|pareto"))?;
+                }
+                "conss.noise_bits" => {
+                    cfg.conss.noise_bits =
+                        value.as_usize().ok_or_else(|| bad(key, "an integer"))? as u32
+                }
+                "conss.forest_trees" => {
+                    cfg.conss.forest_trees =
+                        Some(value.as_usize().ok_or_else(|| bad(key, "an integer"))?)
+                }
+                "ga.pop_size" => {
+                    cfg.ga.pop_size =
+                        value.as_usize().ok_or_else(|| bad(key, "an integer"))?
+                }
+                "ga.generations" => {
+                    cfg.ga.generations =
+                        value.as_usize().ok_or_else(|| bad(key, "an integer"))? as u32
+                }
+                "ga.crossover_prob" => {
+                    cfg.ga.crossover_prob =
+                        value.as_f64().ok_or_else(|| bad(key, "a number"))?
+                }
+                "ga.mutation_prob" => {
+                    cfg.ga.mutation_prob =
+                        Some(value.as_f64().ok_or_else(|| bad(key, "a number"))?)
+                }
+                "ga.tournament_size" => {
+                    cfg.ga.tournament_size =
+                        value.as_usize().ok_or_else(|| bad(key, "an integer"))?
+                }
+                other => {
+                    return Err(Error::Config(format!("unknown config key `{other}`")))
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        crate::operator::Operator::from_name(&self.operator)?;
+        if self.train_samples == 0 {
+            return Err(Error::Config("train_samples must be > 0".into()));
+        }
+        if self.ga.pop_size < 2 {
+            return Err(Error::Config("ga.pop_size must be >= 2".into()));
+        }
+        for &f in &self.scaling_factors {
+            if !(0.0 < f && f <= 1.0) {
+                return Err(Error::Config(format!(
+                    "scaling factor {f} outside (0, 1]"
+                )));
+            }
+        }
+        if self.conss.noise_bits > 8 {
+            return Err(Error::Config("conss.noise_bits > 8 is unreasonable".into()));
+        }
+        Ok(())
+    }
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: String::new(),
+            operator: Self::default_operator(),
+            artifacts_dir: default_artifacts(),
+            out_dir: default_out(),
+            seed: default_seed(),
+            train_samples: default_samples(),
+            surrogate: SurrogateConfig::default(),
+            conss: ConssConfig::default(),
+            ga: GaConfig::default(),
+            scaling_factors: default_factors(),
+        }
+    }
+}
+
+/// Surrogate backend selection.
+#[derive(Debug, Clone)]
+pub struct SurrogateConfig {
+    pub backend: EstimatorBackend,
+    pub gbt_stages: Option<usize>,
+}
+
+impl Default for SurrogateConfig {
+    fn default() -> Self {
+        SurrogateConfig { backend: default_backend(), gbt_stages: None }
+    }
+}
+
+/// ConSS knobs.
+#[derive(Debug, Clone)]
+pub struct ConssConfig {
+    pub distance: DistanceKind,
+    pub noise_bits: u32,
+    pub forest_trees: Option<usize>,
+}
+
+impl Default for ConssConfig {
+    fn default() -> Self {
+        ConssConfig {
+            distance: default_distance(),
+            noise_bits: default_noise(),
+            forest_trees: None,
+        }
+    }
+}
+
+/// GA knobs (defaults = paper's DEAP setup).
+#[derive(Debug, Clone)]
+pub struct GaConfig {
+    pub pop_size: usize,
+    pub generations: u32,
+    pub crossover_prob: f64,
+    pub mutation_prob: Option<f64>,
+    pub tournament_size: usize,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            pop_size: default_pop(),
+            generations: default_gens(),
+            crossover_prob: default_cx(),
+            mutation_prob: None,
+            tournament_size: default_tourn(),
+        }
+    }
+}
+
+impl GaConfig {
+    pub fn to_options(&self, seed: u64) -> crate::dse::GaOptions {
+        crate::dse::GaOptions {
+            pop_size: self.pop_size,
+            generations: self.generations,
+            crossover_prob: self.crossover_prob,
+            mutation_prob: self.mutation_prob,
+            tournament_size: self.tournament_size,
+            seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_scale() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.train_samples, 10_650);
+        assert_eq!(c.ga.generations, 250);
+        assert_eq!(c.scaling_factors, vec![0.2, 0.5, 0.75, 1.0]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let p = dir.path().join("e.toml");
+        std::fs::write(
+            &p,
+            r#"
+name = "fig15"
+operator = "mul8"
+train_samples = 2000
+scaling_factors = [0.5]
+
+[ga]
+pop_size = 40
+generations = 30
+
+[conss]
+distance = "manhattan"
+noise_bits = 2
+
+[surrogate]
+backend = "pjrt-mlp"
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::load(&p).unwrap();
+        assert_eq!(c.ga.pop_size, 40);
+        assert_eq!(c.conss.distance, DistanceKind::Manhattan);
+        assert_eq!(c.surrogate.backend, EstimatorBackend::PjrtMlp);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        let mut c = ExperimentConfig::default();
+        c.operator = "div9".into();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.scaling_factors = vec![1.5];
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.ga.pop_size = 1;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_fields_rejected() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let p = dir.path().join("bad.toml");
+        std::fs::write(&p, "operatorr = \"mul8\"\n").unwrap();
+        assert!(matches!(ExperimentConfig::load(&p), Err(Error::Config(_))));
+    }
+}

@@ -1,0 +1,77 @@
+//! # AxOCS — Scaling FPGA-based Approximate Operators using Configuration Supersampling
+//!
+//! Production-grade reproduction of the IEEE TCAS-I paper (Sahoo, Ullah,
+//! Bhattacharjee, Kumar; DOI 10.1109/TCSI.2024.3385333) as a three-layer
+//! rust + JAX + Pallas stack. This crate is **Layer 3**: the DSE
+//! coordinator that owns the entire request path. Python (Layers 1/2) runs
+//! once at build time (`make artifacts`) to AOT-lower the Pallas
+//! characterization kernels and surrogate MLPs to HLO text, which
+//! [`runtime`] loads and executes through the PJRT CPU client.
+//!
+//! ## Pipeline (paper Fig. 4)
+//!
+//! ```text
+//! operator model ──► characterization ──► statistical analysis
+//!   (operator/)         (charac/ + synth/)     (stats/)
+//!                                                 │
+//!                       distance-based matching (matching/)
+//!                                                 │
+//!                       ML supersampling — ConSS (ml/ + conss/)
+//!                                                 │
+//!            augmented NSGA-II multi-objective DSE (dse/)
+//!                                                 │
+//!                    PPF ──validate──► VPF (charac/) ──► report/
+//! ```
+//!
+//! ## Module map
+//!
+//! * [`operator`] — LUT-level approximate operator model (AppAxO-style):
+//!   unsigned adders, signed Baugh-Wooley multipliers.
+//! * [`synth`] — analytical Vivado-substitute synthesis estimator (PPA).
+//! * [`charac`] — characterization pipeline: BEHAV × PPA datasets.
+//! * [`stats`] — k-means, min-max scaling, distance measures, histograms.
+//! * [`matching`] — distance-based matching → ConSS training datasets.
+//! * [`ml`] — native random forest + gradient-boosted trees.
+//! * [`surrogate`] — estimator backends (native GBT / exact table / PJRT MLP).
+//! * [`dse`] — NSGA-II genetic search, Pareto tools, hypervolume.
+//! * [`conss`] — configuration supersampling pipelines.
+//! * [`baselines`] — AppAxO-like GA and EvoApprox-like library baselines.
+//! * [`coordinator`] — tokio estimator service: batching, workers, metrics.
+//! * [`runtime`] — PJRT client wrapper; loads `artifacts/*.hlo.txt`.
+//! * [`report`] — regenerates every paper figure/table (Figs 1–18, Tab II).
+//! * [`expcfg`] — TOML experiment configuration system.
+
+pub mod baselines;
+pub mod charac;
+pub mod cli;
+pub mod conss;
+pub mod coordinator;
+pub mod dse;
+pub mod error;
+pub mod expcfg;
+pub mod matching;
+pub mod ml;
+pub mod operator;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod surrogate;
+pub mod synth;
+pub mod util;
+
+/// Convenience re-exports covering the public API surface used by the
+/// examples and the CLI.
+pub mod prelude {
+    pub use crate::charac::{characterize, Backend, Dataset};
+    pub use crate::conss::{ConssPipeline, SupersampleOptions};
+    pub use crate::dse::{
+        hypervolume2d, Constraints, GaOptions, NsgaRunner, Objectives, ParetoFront,
+    };
+    pub use crate::error::{Error, Result};
+    pub use crate::matching::{DistanceKind, Matcher};
+    pub use crate::ml::{forest::RandomForest, gbt::GradientBoostedTrees};
+    pub use crate::operator::{AxoConfig, Operator, OperatorKind};
+    pub use crate::stats::{kmeans::KMeans, scaling::MinMaxScaler};
+    pub use crate::surrogate::{EstimatorBackend, Surrogate};
+    pub use crate::synth::PpaMetrics;
+}

@@ -1,0 +1,349 @@
+//! `repro` — the AxOCS leader binary.
+//!
+//! Subcommands cover the full Fig. 4 pipeline: characterization, distance
+//! matching, (augmented) GA-based DSE, validation, figure regeneration, and
+//! a batched estimator-service demo. Python never runs here; everything
+//! executes against the Rust substrates and the AOT-compiled PJRT
+//! artifacts.
+
+use anyhow::{bail, Context};
+use repro::charac::{characterize, characterize_all, Backend, InputSet};
+use repro::cli::ParsedArgs;
+use repro::coordinator::{BatchOptions, EstimatorService};
+use repro::dse::{Constraints, NsgaRunner};
+use repro::expcfg::ExperimentConfig;
+use repro::matching::{DistanceKind, Matcher};
+use repro::operator::{AxoConfig, Operator};
+use repro::report::Harness;
+use repro::runtime::{AxoEvalExec, MlpExec, Runtime};
+use repro::surrogate::{
+    EstimatorBackend, GbtSurrogate, PjrtSurrogate, Surrogate, TableSurrogate,
+};
+use repro::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const USAGE: &str = "\
+repro — AxOCS: scaling FPGA-based approximate operators using configuration supersampling
+
+USAGE: repro <COMMAND> [OPTIONS]
+
+COMMANDS:
+  characterize <op>    Characterize a design space (add4|add8|add12|mul4|mul8)
+                         [--samples N] [--pjrt] [--output PATH]
+  match <l> <h>        Distance-based matching between two operators
+                         [--distance euclidean|manhattan|pareto]
+  dse                  Full DSE comparison for one scaling factor
+                         [--factor F] [--backend table|gbt|pjrt-mlp]
+  figures [ids...]     Regenerate paper figures/tables (fig1..fig18, tab2,
+                         tab_est, or `all`)
+  serve                Batched estimator-service demo
+                         [--clients N] [--requests-per-client N]
+  verify               Cross-check the PJRT runtime against the native model
+  quickstart           Tiny end-to-end tour of the API
+
+GLOBAL OPTIONS:
+  --config PATH        Experiment TOML (defaults = paper-scale settings)
+  --artifacts PATH     AOT artifacts directory (default: artifacts)
+  --out PATH           Results directory (default: results)
+  --quick              Scaled-down sample sizes / generations
+  --help               This help
+";
+
+const GLOBAL_OPTS: &[&str] = &[
+    "config",
+    "artifacts",
+    "out",
+    "samples",
+    "output",
+    "distance",
+    "factor",
+    "backend",
+    "clients",
+    "requests-per-client",
+];
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args.iter().any(|a| a == "--help" || a == "-h") {
+        print!("{USAGE}");
+        return;
+    }
+    match run(args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> anyhow::Result<()> {
+    let parsed = ParsedArgs::parse(args, &["quick", "pjrt"])?;
+    parsed.ensure_known(GLOBAL_OPTS)?;
+    let cfg = load_config(&parsed)?;
+    match parsed.command.as_str() {
+        "characterize" => cmd_characterize(&cfg, &parsed),
+        "match" => cmd_match(&cfg, &parsed),
+        "dse" => cmd_dse(&cfg, &parsed),
+        "figures" => {
+            let harness = Harness::new(cfg);
+            for s in harness.run(&parsed.positionals)? {
+                println!("{s}");
+            }
+            Ok(())
+        }
+        "serve" => cmd_serve(&cfg, &parsed),
+        "verify" => cmd_verify(&cfg),
+        "quickstart" => cmd_quickstart(&cfg),
+        other => bail!("unknown command `{other}` (try --help)"),
+    }
+}
+
+fn load_config(parsed: &ParsedArgs) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = match parsed.opt("config") {
+        Some(p) => ExperimentConfig::load(&PathBuf::from(p)).context("loading --config")?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(a) = parsed.opt("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(a);
+    }
+    if let Some(o) = parsed.opt("out") {
+        cfg.out_dir = PathBuf::from(o);
+    }
+    if parsed.flag("quick") {
+        cfg.train_samples = cfg.train_samples.min(2000);
+        cfg.ga.generations = cfg.ga.generations.min(40);
+        cfg.ga.pop_size = cfg.ga.pop_size.min(48);
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn parse_distance(s: &str) -> anyhow::Result<DistanceKind> {
+    DistanceKind::from_name(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown distance `{s}`"))
+}
+
+fn cmd_characterize(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> anyhow::Result<()> {
+    let op = Operator::from_name(parsed.positional(0, "operator name")?)?;
+    let samples: Option<usize> = parsed.opt_parse("samples")?;
+    let pjrt = parsed.flag("pjrt");
+    let inputs = InputSet::for_operator(op, &cfg.artifacts_dir)?;
+    let started = std::time::Instant::now();
+    let rt;
+    let exec;
+    let backend = if pjrt {
+        rt = Runtime::cpu(&cfg.artifacts_dir)?;
+        exec = AxoEvalExec::new(&rt, op, &inputs)?;
+        Backend::Evaluator(&exec)
+    } else {
+        Backend::Native
+    };
+    let ds = if op.exhaustive() && samples.is_none() {
+        characterize_all(op, &inputs, &backend)?
+    } else {
+        let n = samples.unwrap_or(cfg.train_samples);
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let cfgs = AxoConfig::sample_unique(op.config_len(), n, &mut rng);
+        characterize(op, &cfgs, &inputs, &backend)?
+    };
+    let elapsed = started.elapsed();
+    let out = parsed
+        .opt("output")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| cfg.out_dir.join(format!("{}.json", op.name())));
+    ds.save_json(&out)?;
+    ds.save_csv(&out.with_extension("csv"))?;
+    println!(
+        "characterized {} designs of {op} over {} inputs in {elapsed:.2?} ({} backend)\nwrote {}",
+        ds.len(),
+        inputs.len(),
+        if pjrt { "pjrt" } else { "native" },
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_match(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> anyhow::Result<()> {
+    let harness = Harness::new(cfg.clone());
+    let l = harness.dataset(Operator::from_name(parsed.positional(0, "L operator")?)?)?;
+    let h = harness.dataset(Operator::from_name(parsed.positional(1, "H operator")?)?)?;
+    let distance = parsed.opt("distance").unwrap_or("euclidean");
+    let matcher = Matcher::new(parse_distance(distance)?);
+    let m = matcher.match_datasets(&l, &h)?;
+    let counts = m.counts_per_l(l.len());
+    println!(
+        "matched {} H designs onto {} L designs ({distance} distance)",
+        m.h_to_l.len(),
+        l.len()
+    );
+    let used = counts.iter().filter(|&&c| c > 0).count();
+    println!(
+        "L designs used as matches: {used}/{}; max fan-out {}",
+        l.len(),
+        counts.iter().max().unwrap_or(&0)
+    );
+    let mean: f64 = m.distances.iter().sum::<f64>() / m.distances.len() as f64;
+    println!("mean matched distance (scaled plane): {mean:.4}");
+    Ok(())
+}
+
+fn cmd_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> anyhow::Result<()> {
+    use repro::report::dse_figs;
+    let factor: f64 = parsed.opt_parse("factor")?.unwrap_or(0.5);
+    let mut cfg = cfg.clone();
+    if let Some(b) = parsed.opt("backend") {
+        cfg.surrogate.backend = EstimatorBackend::from_name(b)
+            .ok_or_else(|| anyhow::anyhow!("unknown backend `{b}`"))?;
+    }
+    let harness = Harness::new(cfg.clone());
+    let setup = dse_figs::setup(&harness)?;
+    let run = dse_figs::run_factor(&setup, &cfg, factor)?;
+    let (vpf, extra) = dse_figs::validate_front(
+        &harness,
+        &setup,
+        &dse_figs::vpf_candidates(&run.conss_ga),
+        &run.constraints,
+    )?;
+    let vpf_hv = repro::dse::hypervolume2d(&vpf.points, run.constraints.reference());
+    println!(
+        "factor {factor}: B_MAX {:.4} P_MAX {:.4}",
+        run.constraints.b_max, run.constraints.p_max
+    );
+    println!("TRAIN     hv {:.4}", run.hv_train);
+    println!(
+        "GA        hv {:.4}  ({} evals)",
+        run.ga.final_hypervolume(),
+        run.ga.evaluations
+    );
+    println!(
+        "ConSS     hv {:.4}  (pool {}, {} seeds)",
+        run.hv_conss,
+        run.conss_pool.configs.len(),
+        run.conss_pool.n_seeds
+    );
+    println!(
+        "ConSS+GA  hv {:.4}  ({} evals)",
+        run.conss_ga.final_hypervolume(),
+        run.conss_ga.evaluations
+    );
+    println!(
+        "VPF: {} designs ({extra} extra characterizations), hv {vpf_hv:.4}",
+        vpf.len()
+    );
+    Ok(())
+}
+
+fn cmd_serve(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> anyhow::Result<()> {
+    let clients: usize = parsed.opt_parse("clients")?.unwrap_or(8);
+    let requests: usize = parsed.opt_parse("requests-per-client")?.unwrap_or(64);
+    let harness = Harness::new(cfg.clone());
+    let op = Operator::from_name(&cfg.operator)?;
+    let backend: Arc<dyn Surrogate> = match cfg.surrogate.backend {
+        EstimatorBackend::Table => {
+            let ds = harness.dataset(op)?;
+            Arc::new(TableSurrogate::from_dataset(&ds))
+        }
+        EstimatorBackend::Gbt => {
+            let ds = harness.dataset(op)?;
+            Arc::new(GbtSurrogate::train(&ds, Default::default())?)
+        }
+        EstimatorBackend::PjrtMlp => {
+            let rt = Runtime::cpu(&cfg.artifacts_dir)?;
+            let exec = MlpExec::new(&rt, "estimator_mul8")?;
+            Arc::new(PjrtSurrogate::new(exec)?)
+        }
+    };
+    let svc = EstimatorService::spawn(backend, BatchOptions::default());
+    let op_len = op.config_len();
+    let seed = cfg.seed;
+    let started = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let svc = svc.clone();
+            s.spawn(move || {
+                let mut rng = Rng::seed_from_u64(seed + c as u64);
+                for _ in 0..requests {
+                    let cfgs = AxoConfig::sample_unique(op_len, 8, &mut rng);
+                    svc.predict(cfgs).expect("prediction failed");
+                }
+            });
+        }
+    });
+    let elapsed = started.elapsed();
+    let snap = svc.metrics().snapshot();
+    println!(
+        "{} requests / {} configs in {elapsed:.2?} — {:.0} configs/s",
+        snap.requests,
+        snap.configs,
+        snap.configs as f64 / elapsed.as_secs_f64()
+    );
+    println!(
+        "{} backend batches, mean fill {:.1}, max fill {}, backend busy {:.1} ms",
+        snap.batches,
+        snap.mean_batch_fill(),
+        snap.max_batch_fill,
+        snap.busy_micros as f64 / 1000.0
+    );
+    Ok(())
+}
+
+fn cmd_verify(cfg: &ExperimentConfig) -> anyhow::Result<()> {
+    let rt = Runtime::cpu(&cfg.artifacts_dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut failures = 0;
+    for op in [Operator::ADD4, Operator::MUL4] {
+        let inputs = InputSet::for_operator(op, &cfg.artifacts_dir)?;
+        let exec = AxoEvalExec::new(&rt, op, &inputs)?;
+        let cfgs: Vec<AxoConfig> = AxoConfig::enumerate(op.config_len()).take(16).collect();
+        let pjrt = characterize(op, &cfgs, &inputs, &Backend::Evaluator(&exec))?;
+        let native = characterize(op, &cfgs, &inputs, &Backend::Native)?;
+        for i in 0..cfgs.len() {
+            let a = pjrt.behav[i].to_array();
+            let b = native.behav[i].to_array();
+            for k in 0..4 {
+                let denom = b[k].abs().max(1.0);
+                if ((a[k] - b[k]).abs() / denom) > 1e-4 {
+                    println!(
+                        "  MISMATCH {op} cfg {} metric {k}: pjrt {} native {}",
+                        cfgs[i], a[k], b[k]
+                    );
+                    failures += 1;
+                }
+            }
+        }
+        println!("{op}: pjrt == native over {} configs ✓", cfgs.len());
+    }
+    anyhow::ensure!(failures == 0, "{failures} metric mismatches");
+    println!("runtime verification OK");
+    Ok(())
+}
+
+fn cmd_quickstart(cfg: &ExperimentConfig) -> anyhow::Result<()> {
+    println!("AxOCS quickstart — 4-bit adder tour (see examples/ for the full flows)");
+    let op = Operator::ADD4;
+    let inputs = InputSet::exhaustive(op);
+    let ds = characterize_all(op, &inputs, &Backend::Native)?;
+    println!("characterized all {} designs of {op}", ds.len());
+    let pts: Vec<[f64; 2]> = ds.headline_points().iter().map(|p| [p[1], p[0]]).collect();
+    let constraints = Constraints::from_scaling_factor(0.75, &pts)?;
+    let table = TableSurrogate::from_dataset(&ds);
+    let fitness = |c: &[AxoConfig]| table.predict(c);
+    let runner = NsgaRunner::new(
+        repro::dse::GaOptions {
+            pop_size: 8,
+            generations: 10,
+            seed: cfg.seed,
+            ..Default::default()
+        },
+        constraints,
+    );
+    let result = runner.run(op.config_len(), &fitness, &[])?;
+    println!(
+        "NSGA-II over the exact table: front {} designs, hv {:.4}",
+        result.front_points.len(),
+        result.final_hypervolume()
+    );
+    Ok(())
+}

@@ -1,0 +1,193 @@
+//! Distance-based matching (paper §IV-B, Figs. 7/8/12).
+//!
+//! Builds the `INP_SEQ → OUT_SEQ` datasets that train ConSS models: every
+//! configuration in the high-bit-width dataset (`H_CHAR`) is matched to its
+//! nearest neighbour in the low-bit-width dataset (`L_CHAR`) in the
+//! *scaled* (PPA, BEHAV) metric plane. Multiple H configurations may share
+//! one L configuration — the one-to-many mapping of Fig. 7 — and noise-bit
+//! augmentation (Fig. 8) replicates each pair `2^n` times so the trained
+//! model can emit a diverse set of H candidates per L seed.
+
+pub mod noise;
+
+use crate::charac::Dataset;
+use crate::error::{Error, Result};
+use crate::stats::{distance::distance_matrix, MinMaxScaler};
+
+pub use crate::stats::DistanceKind;
+
+pub use noise::augment_with_noise;
+
+/// Result of matching every H configuration to its nearest L configuration.
+#[derive(Debug, Clone)]
+pub struct MatchResult {
+    pub kind: DistanceKind,
+    /// For each H row, the index of the matched L row.
+    pub h_to_l: Vec<usize>,
+    /// For each H row, the achieved (scaled) distance.
+    pub distances: Vec<f64>,
+}
+
+impl MatchResult {
+    /// Matches per L row — the Fig. 12(b) one-to-many counts.
+    pub fn counts_per_l(&self, n_l: usize) -> Vec<usize> {
+        let mut c = vec![0usize; n_l];
+        for &l in &self.h_to_l {
+            c[l] += 1;
+        }
+        c
+    }
+}
+
+/// Distance-based matcher over headline (PDPLUT, AVG_ABS_REL_ERR) planes.
+#[derive(Debug, Clone)]
+pub struct Matcher {
+    pub kind: DistanceKind,
+}
+
+impl Matcher {
+    pub fn new(kind: DistanceKind) -> Matcher {
+        Matcher { kind }
+    }
+
+    /// Scaled headline points of a dataset (each dataset scaled
+    /// independently, as in the paper's Fig. 1b comparison).
+    pub fn scaled_points(ds: &Dataset) -> Result<Vec<[f64; 2]>> {
+        let pts = ds.headline_points();
+        let scaler = MinMaxScaler::fit_points2(&pts)?;
+        Ok(scaler.transform_points2(&pts))
+    }
+
+    /// Match every H design to its nearest L design.
+    pub fn match_datasets(&self, l: &Dataset, h: &Dataset) -> Result<MatchResult> {
+        if l.is_empty() || h.is_empty() {
+            return Err(Error::Dataset("cannot match empty datasets".into()));
+        }
+        let lp = Self::scaled_points(l)?;
+        let hp = Self::scaled_points(h)?;
+        let mut h_to_l = Vec::with_capacity(hp.len());
+        let mut distances = Vec::with_capacity(hp.len());
+        for hpt in &hp {
+            let (mut best, mut best_i) = (f64::INFINITY, 0);
+            for (i, lpt) in lp.iter().enumerate() {
+                let d = self.kind.distance(*hpt, *lpt);
+                if d < best {
+                    best = d;
+                    best_i = i;
+                }
+            }
+            h_to_l.push(best_i);
+            distances.push(best);
+        }
+        Ok(MatchResult { kind: self.kind, h_to_l, distances })
+    }
+
+    /// All pairwise scaled distances (flattened H×L) — the Fig. 11
+    /// distribution input and Fig. 12(a) heat-map.
+    pub fn all_distances(&self, l: &Dataset, h: &Dataset) -> Result<Vec<f64>> {
+        let lp = Self::scaled_points(l)?;
+        let hp = Self::scaled_points(h)?;
+        Ok(distance_matrix(self.kind, &hp, &lp))
+    }
+}
+
+/// Assemble the ConSS training matrices from a match result: row-major
+/// `x = [l_config_bits | noise]`, `y = h_config_bits`, with `2^noise_bits`
+/// replicas per pair (Fig. 8).
+pub fn conss_training_set(
+    l: &Dataset,
+    h: &Dataset,
+    m: &MatchResult,
+    noise_bits: u32,
+) -> Result<(Vec<f64>, usize, Vec<f64>, usize)> {
+    if m.h_to_l.len() != h.len() {
+        return Err(Error::Dataset("match result does not cover H dataset".into()));
+    }
+    let lf = l.operator.config_len() as usize;
+    let hf = h.operator.config_len() as usize;
+    let pairs: Vec<(Vec<f64>, Vec<f64>)> = m
+        .h_to_l
+        .iter()
+        .enumerate()
+        .map(|(hi, &li)| {
+            let lx: Vec<f64> =
+                l.configs[li].to_bits_f32().iter().map(|&v| v as f64).collect();
+            let hy: Vec<f64> =
+                h.configs[hi].to_bits_f32().iter().map(|&v| v as f64).collect();
+            (lx, hy)
+        })
+        .collect();
+    let (x, y) = augment_with_noise(&pairs, noise_bits);
+    Ok((x, lf + noise_bits as usize, y, hf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::charac::{characterize_all, Backend, InputSet};
+    use crate::operator::Operator;
+
+    fn adder_datasets() -> (Dataset, Dataset) {
+        let li = InputSet::exhaustive(Operator::ADD4);
+        let hi = InputSet::exhaustive(Operator::ADD8);
+        let l = characterize_all(Operator::ADD4, &li, &Backend::Native).unwrap();
+        let h = characterize_all(Operator::ADD8, &hi, &Backend::Native).unwrap();
+        (l, h)
+    }
+
+    #[test]
+    fn matching_covers_all_h_and_is_one_to_many() {
+        let (l, h) = adder_datasets();
+        let m = Matcher::new(DistanceKind::Euclidean).match_datasets(&l, &h).unwrap();
+        assert_eq!(m.h_to_l.len(), 255);
+        let counts = m.counts_per_l(l.len());
+        assert_eq!(counts.iter().sum::<usize>(), 255);
+        // 255 H into 15 L: pigeonhole forces one-to-many.
+        assert!(counts.iter().any(|&c| c > 1));
+    }
+
+    #[test]
+    fn matched_distance_is_minimal() {
+        let (l, h) = adder_datasets();
+        let m = Matcher::new(DistanceKind::Manhattan).match_datasets(&l, &h).unwrap();
+        let lp = Matcher::scaled_points(&l).unwrap();
+        let hp = Matcher::scaled_points(&h).unwrap();
+        for (hi, &li) in m.h_to_l.iter().enumerate() {
+            let got = DistanceKind::Manhattan.distance(hp[hi], lp[li]);
+            for lpt in &lp {
+                assert!(got <= DistanceKind::Manhattan.distance(hp[hi], *lpt) + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn self_match_is_identity_with_zero_distance() {
+        let (l, _) = adder_datasets();
+        let m = Matcher::new(DistanceKind::Euclidean).match_datasets(&l, &l).unwrap();
+        for (hi, &li) in m.h_to_l.iter().enumerate() {
+            // Distances are zero (a point is its own nearest neighbour) —
+            // ties may pick another coincident point, so check distance.
+            assert!(m.distances[hi] <= 1e-12, "h {hi} -> l {li}");
+        }
+    }
+
+    #[test]
+    fn training_set_shapes() {
+        let (l, h) = adder_datasets();
+        let m = Matcher::new(DistanceKind::Euclidean).match_datasets(&l, &h).unwrap();
+        let (x, xf, y, yf) = conss_training_set(&l, &h, &m, 2).unwrap();
+        assert_eq!(xf, 4 + 2);
+        assert_eq!(yf, 8);
+        assert_eq!(x.len(), 255 * 4 * 6);
+        assert_eq!(y.len(), 255 * 4 * 8);
+        assert!(x.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn all_distances_size() {
+        let (l, h) = adder_datasets();
+        let d = Matcher::new(DistanceKind::Pareto).all_distances(&l, &h).unwrap();
+        assert_eq!(d.len(), 255 * 15);
+        assert!(d.iter().all(|&v| v >= 0.0));
+    }
+}

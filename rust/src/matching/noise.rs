@@ -1,0 +1,65 @@
+//! Noise-bit augmentation (paper Fig. 8).
+//!
+//! Each `INP_SEQ → OUT_SEQ` pair is replicated once per value of an
+//! `n`-bit noise suffix appended to the input sequence. At supersampling
+//! time the trained model is queried with every noise value, so one L
+//! configuration can fan out into up to `2^n` distinct H candidates.
+
+/// Expand `(l_bits, h_bits)` pairs into row-major (x, y) training matrices
+/// with all `2^noise_bits` noise suffixes.
+pub fn augment_with_noise(
+    pairs: &[(Vec<f64>, Vec<f64>)],
+    noise_bits: u32,
+) -> (Vec<f64>, Vec<f64>) {
+    let reps = 1usize << noise_bits;
+    let lf = pairs.first().map_or(0, |(l, _)| l.len());
+    let hf = pairs.first().map_or(0, |(_, h)| h.len());
+    let mut x = Vec::with_capacity(pairs.len() * reps * (lf + noise_bits as usize));
+    let mut y = Vec::with_capacity(pairs.len() * reps * hf);
+    for (l, h) in pairs {
+        for noise in 0..reps {
+            x.extend_from_slice(l);
+            for k in 0..noise_bits {
+                x.push(((noise >> k) & 1) as f64);
+            }
+            y.extend_from_slice(h);
+        }
+    }
+    (x, y)
+}
+
+/// The noise suffix row for one noise value (query-time helper).
+pub fn noise_row(noise: usize, noise_bits: u32) -> Vec<f64> {
+    (0..noise_bits).map(|k| ((noise >> k) & 1) as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replication_counts() {
+        let pairs = vec![(vec![1.0, 0.0], vec![1.0, 1.0, 0.0])];
+        let (x, y) = augment_with_noise(&pairs, 2);
+        assert_eq!(x.len(), 4 * 4); // 4 reps × (2 + 2) features
+        assert_eq!(y.len(), 4 * 3);
+        // Noise suffixes enumerate 00, 10, 01, 11 (LSB first).
+        let suffixes: Vec<(f64, f64)> =
+            (0..4).map(|r| (x[r * 4 + 2], x[r * 4 + 3])).collect();
+        assert_eq!(suffixes, vec![(0.0, 0.0), (1.0, 0.0), (0.0, 1.0), (1.0, 1.0)]);
+    }
+
+    #[test]
+    fn zero_noise_bits_is_identity() {
+        let pairs = vec![(vec![1.0], vec![0.0]), (vec![0.0], vec![1.0])];
+        let (x, y) = augment_with_noise(&pairs, 0);
+        assert_eq!(x, vec![1.0, 0.0]);
+        assert_eq!(y, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn noise_row_lsb_first() {
+        assert_eq!(noise_row(0b10, 2), vec![0.0, 1.0]);
+        assert_eq!(noise_row(0b01, 3), vec![1.0, 0.0, 0.0]);
+    }
+}

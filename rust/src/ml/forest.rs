@@ -1,0 +1,174 @@
+//! Random forest — the ConSS supersampling model (paper Fig. 13).
+//!
+//! Bagged multi-output CART ensemble with per-split feature subsampling
+//! (`sqrt(n_features)` by default, scikit's classifier default). The
+//! forest predicts all H-configuration bits jointly; classification output
+//! thresholds the averaged leaf means at 0.5 — for 0/1 targets this is
+//! exactly majority voting over per-tree probability estimates.
+
+use super::tree::{DecisionTree, TreeParams};
+use crate::error::{Error, Result};
+use crate::util::par::parallel_map;
+use crate::util::rng::Rng;
+
+/// Random forest hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    pub tree: TreeParams,
+    /// Bootstrap sample fraction (1.0 = classic bagging with replacement).
+    pub bootstrap_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams {
+            n_trees: 25,
+            tree: TreeParams { max_depth: 14, min_samples_leaf: 2, max_features: None },
+            bootstrap_fraction: 1.0,
+            seed: 2023,
+        }
+    }
+}
+
+/// A fitted random forest.
+#[derive(Debug, Clone)]
+pub struct RandomForest {
+    trees: Vec<DecisionTree>,
+    pub n_features: usize,
+    pub n_outputs: usize,
+    pub params: ForestParams,
+}
+
+impl RandomForest {
+    /// Fit on row-major `x` (n × n_features) / `y` (n × n_outputs).
+    ///
+    /// `max_features` defaults to `ceil(sqrt(n_features))` when unset.
+    pub fn fit(
+        x: &[f64],
+        n_features: usize,
+        y: &[f64],
+        n_outputs: usize,
+        mut params: ForestParams,
+    ) -> Result<RandomForest> {
+        if n_features == 0 || x.len() % n_features != 0 {
+            return Err(Error::Ml(format!("bad x shape: len {} nf {n_features}", x.len())));
+        }
+        let n = x.len() / n_features;
+        if n == 0 || y.len() != n * n_outputs {
+            return Err(Error::Ml(format!(
+                "bad y shape: len {} expected {}",
+                y.len(),
+                n * n_outputs
+            )));
+        }
+        if params.tree.max_features.is_none() {
+            params.tree.max_features =
+                Some((n_features as f64).sqrt().ceil() as usize);
+        }
+        let boot = ((n as f64) * params.bootstrap_fraction).ceil().max(1.0) as usize;
+        let seeds: Vec<u64> = (0..params.n_trees)
+            .map(|t| params.seed.wrapping_add(t as u64 * 0x9E37_79B9))
+            .collect();
+        let tp = params.tree.clone();
+        let trees: Vec<DecisionTree> = parallel_map(&seeds, |_, &s| {
+            let mut rng = Rng::seed_from_u64(s);
+            let sample: Vec<usize> =
+                (0..boot).map(|_| rng.gen_index(n)).collect();
+            DecisionTree::fit(x, n_features, y, n_outputs, &sample, &tp, &mut rng)
+        });
+        Ok(RandomForest { trees, n_features, n_outputs, params })
+    }
+
+    /// Averaged leaf means (per-output probabilities for 0/1 targets).
+    pub fn predict_proba_row(&self, row: &[f64]) -> Vec<f64> {
+        let mut acc = vec![0.0; self.n_outputs];
+        for t in &self.trees {
+            for (a, v) in acc.iter_mut().zip(t.predict_row(row)) {
+                *a += v;
+            }
+        }
+        let nt = self.trees.len() as f64;
+        acc.iter_mut().for_each(|a| *a /= nt);
+        acc
+    }
+
+    /// Hard 0/1 predictions (threshold 0.5 == majority vote).
+    pub fn predict_bits_row(&self, row: &[f64]) -> Vec<u8> {
+        self.predict_proba_row(row).iter().map(|&p| (p >= 0.5) as u8).collect()
+    }
+
+    /// Batch prediction over row-major features.
+    pub fn predict_proba(&self, x: &[f64]) -> Vec<f64> {
+        let rows: Vec<&[f64]> = x.chunks_exact(self.n_features).collect();
+        parallel_map(&rows, |_, row| self.predict_proba_row(row))
+            .into_iter()
+            .flatten()
+            .collect()
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// y = identity mapping of 4 input bits to 4 output bits + 2 constant.
+    fn bit_dataset(n: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let bits: Vec<f64> = (0..4).map(|k| ((i >> k) & 1) as f64).collect();
+            x.extend(&bits);
+            y.extend(&bits);
+            y.push(1.0);
+            y.push(0.0);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn learns_bit_identity() {
+        let (x, y) = bit_dataset(64);
+        let f = RandomForest::fit(&x, 4, &y, 6, ForestParams::default()).unwrap();
+        for i in 0..16 {
+            let row: Vec<f64> = (0..4).map(|k| ((i >> k) & 1) as f64).collect();
+            let bits = f.predict_bits_row(&row);
+            let want: Vec<u8> = (0..4)
+                .map(|k| ((i >> k) & 1) as u8)
+                .chain([1, 0])
+                .collect();
+            assert_eq!(bits, want, "input {i}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = bit_dataset(64);
+        let f1 = RandomForest::fit(&x, 4, &y, 6, ForestParams::default()).unwrap();
+        let f2 = RandomForest::fit(&x, 4, &y, 6, ForestParams::default()).unwrap();
+        for i in 0..16 {
+            let row: Vec<f64> = (0..4).map(|k| ((i >> k) & 1) as f64).collect();
+            assert_eq!(f1.predict_proba_row(&row), f2.predict_proba_row(&row));
+        }
+    }
+
+    #[test]
+    fn probabilities_bounded() {
+        let (x, y) = bit_dataset(32);
+        let f = RandomForest::fit(&x, 4, &y, 6, ForestParams::default()).unwrap();
+        let p = f.predict_proba(&x);
+        assert_eq!(p.len(), 32 * 6);
+        assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(RandomForest::fit(&[1.0, 2.0], 3, &[1.0], 1, ForestParams::default()).is_err());
+        assert!(RandomForest::fit(&[1.0, 2.0], 2, &[1.0], 2, ForestParams::default()).is_err());
+    }
+}

@@ -1,0 +1,148 @@
+//! Gradient-boosted regression trees — the CatBoost/LightGBM substitute.
+//!
+//! Squared-loss boosting: each stage fits a shallow CART to the current
+//! residuals and is added with shrinkage. Used by the surrogate estimator
+//! to predict scaled PDPLUT / AVG_ABS_REL_ERR from 0/1 configuration bits
+//! (paper §V-B: tree ensembles win on categorical features; products like
+//! PDP/PDPLUT regress worse than raw metrics — reproduced in the §V-B
+//! harness).
+
+use super::tree::{DecisionTree, TreeParams};
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// GBT hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct GbtParams {
+    pub n_stages: usize,
+    pub learning_rate: f64,
+    pub tree: TreeParams,
+    pub seed: u64,
+}
+
+impl Default for GbtParams {
+    fn default() -> Self {
+        GbtParams {
+            n_stages: 120,
+            learning_rate: 0.15,
+            tree: TreeParams { max_depth: 4, min_samples_leaf: 4, max_features: None },
+            seed: 2023,
+        }
+    }
+}
+
+/// A fitted single-output GBT regressor.
+#[derive(Debug, Clone)]
+pub struct GradientBoostedTrees {
+    base: f64,
+    stages: Vec<DecisionTree>,
+    pub params: GbtParams,
+    pub n_features: usize,
+    /// Training RMSE per stage (the §V-B convergence trace).
+    pub train_rmse: Vec<f64>,
+}
+
+impl GradientBoostedTrees {
+    /// Fit on row-major `x` (n × n_features) and targets `y` (n).
+    pub fn fit(
+        x: &[f64],
+        n_features: usize,
+        y: &[f64],
+        params: GbtParams,
+    ) -> Result<GradientBoostedTrees> {
+        if n_features == 0 || x.len() % n_features != 0 {
+            return Err(Error::Ml(format!("bad x shape: len {}", x.len())));
+        }
+        let n = x.len() / n_features;
+        if n == 0 || y.len() != n {
+            return Err(Error::Ml(format!("bad y len {} (n = {n})", y.len())));
+        }
+        let base = y.iter().sum::<f64>() / n as f64;
+        let mut pred = vec![base; n];
+        let mut stages = Vec::with_capacity(params.n_stages);
+        let mut train_rmse = Vec::with_capacity(params.n_stages);
+        let sample: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::seed_from_u64(params.seed);
+        for _ in 0..params.n_stages {
+            let resid: Vec<f64> = y.iter().zip(&pred).map(|(t, p)| t - p).collect();
+            let tree =
+                DecisionTree::fit(x, n_features, &resid, 1, &sample, &params.tree, &mut rng);
+            for (i, p) in pred.iter_mut().enumerate() {
+                *p += params.learning_rate * tree.predict_row(&x[i * n_features..(i + 1) * n_features])[0];
+            }
+            let rmse = (y
+                .iter()
+                .zip(&pred)
+                .map(|(t, p)| (t - p) * (t - p))
+                .sum::<f64>()
+                / n as f64)
+                .sqrt();
+            stages.push(tree);
+            train_rmse.push(rmse);
+        }
+        Ok(GradientBoostedTrees { base, stages, params, n_features, train_rmse })
+    }
+
+    pub fn predict_row(&self, row: &[f64]) -> f64 {
+        let mut v = self.base;
+        for t in &self.stages {
+            v += self.params.learning_rate * t.predict_row(row)[0];
+        }
+        v
+    }
+
+    pub fn predict(&self, x: &[f64]) -> Vec<f64> {
+        x.chunks_exact(self.n_features).map(|r| self.predict_row(r)).collect()
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_linear_function_of_bits() {
+        // y = 3·b0 + 2·b1 - b2 over all 3-bit inputs, replicated.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for rep in 0..8 {
+            for i in 0..8 {
+                let bits: Vec<f64> = (0..3).map(|k| ((i >> k) & 1) as f64).collect();
+                x.extend(&bits);
+                y.push(3.0 * bits[0] + 2.0 * bits[1] - bits[2] + (rep as f64) * 0.0);
+            }
+        }
+        let g = GradientBoostedTrees::fit(&x, 3, &y, GbtParams::default()).unwrap();
+        for i in 0..8 {
+            let bits: Vec<f64> = (0..3).map(|k| ((i >> k) & 1) as f64).collect();
+            let want = 3.0 * bits[0] + 2.0 * bits[1] - bits[2];
+            assert!((g.predict_row(&bits) - want).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn train_rmse_decreases() {
+        let x: Vec<f64> = (0..128).map(|i| (i % 17) as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| v * v).collect();
+        let g = GradientBoostedTrees::fit(&x, 1, &y, GbtParams::default()).unwrap();
+        assert!(g.train_rmse.last().unwrap() < &g.train_rmse[0]);
+    }
+
+    #[test]
+    fn constant_target_predicts_base() {
+        let x: Vec<f64> = (0..32).map(|i| i as f64).collect();
+        let y = vec![5.0; 32];
+        let g = GradientBoostedTrees::fit(&x, 1, &y, GbtParams::default()).unwrap();
+        assert!((g.predict_row(&[100.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(GradientBoostedTrees::fit(&[1.0], 2, &[1.0], GbtParams::default()).is_err());
+        assert!(GradientBoostedTrees::fit(&[1.0, 2.0], 1, &[1.0], GbtParams::default()).is_err());
+    }
+}

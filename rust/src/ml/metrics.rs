@@ -1,0 +1,89 @@
+//! Model-quality metrics: RMSE, R², Hamming accuracy (paper Fig. 13 /
+//! §V-B estimator table).
+
+/// Root mean squared error.
+pub fn rmse(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    let sse: f64 = y_true.iter().zip(y_pred).map(|(t, p)| (t - p) * (t - p)).sum();
+    (sse / y_true.len() as f64).sqrt()
+}
+
+/// Coefficient of determination.
+pub fn r2(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    let n = y_true.len() as f64;
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    let mean = y_true.iter().sum::<f64>() / n;
+    let ss_tot: f64 = y_true.iter().map(|t| (t - mean) * (t - mean)).sum();
+    let ss_res: f64 = y_true.iter().zip(y_pred).map(|(t, p)| (t - p) * (t - p)).sum();
+    if ss_tot <= 0.0 {
+        if ss_res <= 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Mean per-bit accuracy between two bit matrices (Fig. 13's metric:
+/// `1 - hamming_distance / n_bits`, averaged over rows).
+pub fn hamming_accuracy(y_true: &[u8], y_pred: &[u8]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    if y_true.is_empty() {
+        return 1.0;
+    }
+    let correct = y_true.iter().zip(y_pred).filter(|(a, b)| a == b).count();
+    correct as f64 / y_true.len() as f64
+}
+
+/// Fraction of rows predicted exactly (all bits correct).
+pub fn exact_match_rate(y_true: &[u8], y_pred: &[u8], row_len: usize) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    assert!(row_len > 0 && y_true.len() % row_len == 0);
+    let rows = y_true.len() / row_len;
+    if rows == 0 {
+        return 1.0;
+    }
+    let mut ok = 0;
+    for r in 0..rows {
+        if y_true[r * row_len..(r + 1) * row_len] == y_pred[r * row_len..(r + 1) * row_len] {
+            ok += 1;
+        }
+    }
+    ok as f64 / rows as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_known() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean() {
+        let y = [1.0, 2.0, 3.0];
+        assert_eq!(r2(&y, &y), 1.0);
+        assert_eq!(r2(&y, &[2.0, 2.0, 2.0]), 0.0);
+        assert!(r2(&y, &[3.0, 1.0, 2.0]) < 0.0); // worse than mean
+    }
+
+    #[test]
+    fn hamming_and_exact_match() {
+        let t = [1u8, 0, 1, 1, 0, 0];
+        let p = [1u8, 0, 0, 1, 0, 0];
+        assert!((hamming_accuracy(&t, &p) - 5.0 / 6.0).abs() < 1e-12);
+        assert_eq!(exact_match_rate(&t, &p, 3), 0.5);
+        assert_eq!(exact_match_rate(&t, &t, 3), 1.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Native ML substrate: CART trees, random forests, gradient boosting.
+//!
+//! The paper uses scikit's RandomForest (multi-output classification) for
+//! ConSS and AutoML-selected CatBoost/LightGBM regressors for PPA/BEHAV
+//! estimation (§V-B). Both roles are implemented natively here so the
+//! entire request path stays in rust:
+//!
+//! * [`tree`] — multi-output regression CART. For 0/1 targets, variance
+//!   reduction ranks splits identically to Gini impurity, so the same tree
+//!   serves classification (threshold at 0.5) and regression.
+//! * [`forest`] — bagged ensemble with per-split feature subsampling;
+//!   multi-output (predicts all 36 H-configuration bits jointly).
+//! * [`gbt`] — gradient-boosted regression trees (squared loss), the
+//!   CatBoost/LightGBM substitute for metric estimation.
+//! * [`metrics`] — RMSE, R², Hamming accuracy, exact-match rate.
+//!
+//! The MLP alternatives (AOT-compiled Pallas forwards executed via PJRT)
+//! live behind [`crate::surrogate`]; §V-B's model-quality table compares
+//! both backends.
+
+pub mod forest;
+pub mod gbt;
+pub mod metrics;
+pub mod tree;
+
+pub use forest::RandomForest;
+pub use gbt::GradientBoostedTrees;
+pub use tree::{DecisionTree, TreeParams};

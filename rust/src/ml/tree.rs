@@ -1,0 +1,317 @@
+//! Multi-output regression CART.
+//!
+//! Split criterion is total variance reduction summed over outputs, found
+//! by a sorted prefix-sum scan per candidate feature. For 0/1 targets this
+//! ranks splits identically to Gini impurity (`var = p(1-p)` =
+//! `gini / 2`), so the tree doubles as the classification CART the paper's
+//! RandomForest uses. Feature subsampling per split (`max_features`)
+//! provides the randomness the forest needs beyond bagging.
+
+use crate::util::rng::Rng;
+
+/// Hyper-parameters for one tree.
+#[derive(Debug, Clone)]
+pub struct TreeParams {
+    pub max_depth: u32,
+    pub min_samples_leaf: usize,
+    /// Number of features considered per split (None = all).
+    pub max_features: Option<usize>,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams { max_depth: 12, min_samples_leaf: 2, max_features: None }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf { value: Vec<f64> },
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+}
+
+/// A fitted multi-output regression tree.
+#[derive(Debug, Clone)]
+pub struct DecisionTree {
+    nodes: Vec<Node>,
+    pub n_features: usize,
+    pub n_outputs: usize,
+}
+
+struct FitCtx<'a> {
+    x: &'a [f64],
+    y: &'a [f64],
+    nf: usize,
+    no: usize,
+    params: &'a TreeParams,
+}
+
+impl DecisionTree {
+    /// Fit on row-major `x` (n × n_features) and `y` (n × n_outputs),
+    /// restricted to `sample` row indices (bootstrap support).
+    pub fn fit(
+        x: &[f64],
+        n_features: usize,
+        y: &[f64],
+        n_outputs: usize,
+        sample: &[usize],
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> DecisionTree {
+        assert!(n_features > 0 && n_outputs > 0);
+        assert_eq!(x.len() % n_features, 0);
+        assert_eq!(y.len() % n_outputs, 0);
+        assert!(!sample.is_empty());
+        let ctx = FitCtx { x, y, nf: n_features, no: n_outputs, params };
+        let mut tree =
+            DecisionTree { nodes: Vec::new(), n_features, n_outputs };
+        let mut idx = sample.to_vec();
+        tree.build(&ctx, &mut idx, 0, rng);
+        tree
+    }
+
+    fn leaf_value(ctx: &FitCtx, idx: &[usize]) -> Vec<f64> {
+        let mut v = vec![0.0; ctx.no];
+        for &i in idx {
+            for k in 0..ctx.no {
+                v[k] += ctx.y[i * ctx.no + k];
+            }
+        }
+        let n = idx.len() as f64;
+        v.iter_mut().for_each(|a| *a /= n);
+        v
+    }
+
+    fn build(
+        &mut self,
+        ctx: &FitCtx,
+        idx: &mut [usize],
+        depth: u32,
+        rng: &mut Rng,
+    ) -> usize {
+        let node_id = self.nodes.len();
+        self.nodes.push(Node::Leaf { value: Vec::new() }); // placeholder
+
+        let stop = depth >= ctx.params.max_depth
+            || idx.len() < 2 * ctx.params.min_samples_leaf;
+        let split = if stop { None } else { Self::best_split(ctx, idx, rng) };
+
+        match split {
+            None => {
+                self.nodes[node_id] = Node::Leaf { value: Self::leaf_value(ctx, idx) };
+            }
+            Some((feature, threshold)) => {
+                // Partition in place.
+                let mut lo = 0;
+                let mut hi = idx.len();
+                while lo < hi {
+                    if ctx.x[idx[lo] * ctx.nf + feature] <= threshold {
+                        lo += 1;
+                    } else {
+                        hi -= 1;
+                        idx.swap(lo, hi);
+                    }
+                }
+                if lo == 0 || lo == idx.len() {
+                    self.nodes[node_id] =
+                        Node::Leaf { value: Self::leaf_value(ctx, idx) };
+                    return node_id;
+                }
+                let (li, ri) = idx.split_at_mut(lo);
+                let left = self.build(ctx, li, depth + 1, rng);
+                let right = self.build(ctx, ri, depth + 1, rng);
+                self.nodes[node_id] = Node::Split { feature, threshold, left, right };
+            }
+        }
+        node_id
+    }
+
+    /// Best (feature, threshold) by total variance reduction, or None when
+    /// no split improves.
+    fn best_split(
+        ctx: &FitCtx,
+        idx: &[usize],
+        rng: &mut Rng,
+    ) -> Option<(usize, f64)> {
+        let mut features: Vec<usize> = (0..ctx.nf).collect();
+        if let Some(mf) = ctx.params.max_features {
+            rng.shuffle(&mut features);
+            features.truncate(mf.max(1));
+        }
+
+        let n = idx.len() as f64;
+        // Parent sum of squared deviations = sum(y²) - n·mean² per output.
+        let mut tot_sum = vec![0.0; ctx.no];
+        let mut tot_sq = vec![0.0; ctx.no];
+        for &i in idx {
+            for k in 0..ctx.no {
+                let v = ctx.y[i * ctx.no + k];
+                tot_sum[k] += v;
+                tot_sq[k] += v * v;
+            }
+        }
+        let parent_sse: f64 = (0..ctx.no)
+            .map(|k| tot_sq[k] - tot_sum[k] * tot_sum[k] / n)
+            .sum();
+        if parent_sse <= 1e-12 {
+            return None; // pure node
+        }
+
+        let min_leaf = ctx.params.min_samples_leaf;
+        let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, gain)
+
+        let mut order: Vec<usize> = idx.to_vec();
+        for &f in &features {
+            order.sort_by(|&a, &b| {
+                ctx.x[a * ctx.nf + f]
+                    .partial_cmp(&ctx.x[b * ctx.nf + f])
+                    .unwrap()
+            });
+            let mut left_sum = vec![0.0; ctx.no];
+            let mut left_sq = vec![0.0; ctx.no];
+            for (pos, &i) in order.iter().enumerate().take(order.len() - 1) {
+                for k in 0..ctx.no {
+                    let v = ctx.y[i * ctx.no + k];
+                    left_sum[k] += v;
+                    left_sq[k] += v * v;
+                }
+                let xl = ctx.x[i * ctx.nf + f];
+                let xr = ctx.x[order[pos + 1] * ctx.nf + f];
+                if xl == xr {
+                    continue; // no boundary between equal values
+                }
+                let nl = (pos + 1) as f64;
+                let nr = n - nl;
+                if (pos + 1) < min_leaf || (order.len() - pos - 1) < min_leaf {
+                    continue;
+                }
+                let mut child_sse = 0.0;
+                for k in 0..ctx.no {
+                    let rs = tot_sum[k] - left_sum[k];
+                    let rq = tot_sq[k] - left_sq[k];
+                    child_sse += left_sq[k] - left_sum[k] * left_sum[k] / nl;
+                    child_sse += rq - rs * rs / nr;
+                }
+                // Impure nodes may split even at zero gain (XOR-style
+                // targets need a pass-through split before any gain shows;
+                // scikit's CART behaves the same way).
+                let gain = parent_sse - child_sse;
+                if gain > -1e-12 && best.map_or(true, |(_, _, g)| gain > g) {
+                    best = Some((f, (xl + xr) / 2.0, gain));
+                }
+            }
+        }
+        best.map(|(f, t, _)| (f, t))
+    }
+
+    /// Predict one row-major feature row.
+    pub fn predict_row(&self, row: &[f64]) -> &[f64] {
+        debug_assert_eq!(row.len(), self.n_features);
+        let mut id = 0;
+        loop {
+            match &self.nodes[id] {
+                Node::Leaf { value } => return value,
+                Node::Split { feature, threshold, left, right } => {
+                    id = if row[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn depth(&self) -> u32 {
+        fn rec(nodes: &[Node], id: usize) -> u32 {
+            match &nodes[id] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => {
+                    1 + rec(nodes, *left).max(rec(nodes, *right))
+                }
+            }
+        }
+        rec(&self.nodes, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fit_simple(x: &[f64], nf: usize, y: &[f64], no: usize, p: &TreeParams) -> DecisionTree {
+        let sample: Vec<usize> = (0..x.len() / nf).collect();
+        let mut rng = Rng::seed_from_u64(0);
+        DecisionTree::fit(x, nf, y, no, &sample, p, &mut rng)
+    }
+
+    #[test]
+    fn learns_single_feature_step() {
+        // y = [x > 0.5]
+        let x: Vec<f64> = (0..20).map(|i| i as f64 / 19.0).collect();
+        let y: Vec<f64> = x.iter().map(|&v| (v > 0.5) as u8 as f64).collect();
+        let t = fit_simple(&x, 1, &y, 1, &TreeParams::default());
+        for (xi, yi) in x.iter().zip(&y) {
+            assert_eq!(t.predict_row(&[*xi])[0], *yi);
+        }
+    }
+
+    #[test]
+    fn learns_xor_with_depth2() {
+        let x = vec![0.0, 0.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0];
+        let y = vec![0.0, 1.0, 1.0, 0.0];
+        let p = TreeParams { max_depth: 3, min_samples_leaf: 1, max_features: None };
+        let t = fit_simple(&x, 2, &y, 1, &p);
+        for i in 0..4 {
+            let row = &x[2 * i..2 * i + 2];
+            assert_eq!(t.predict_row(row)[0], y[i], "row {row:?}");
+        }
+        assert!(t.depth() >= 2);
+    }
+
+    #[test]
+    fn multi_output_leaf_means() {
+        // One constant feature -> single leaf = column means.
+        let x = vec![1.0, 1.0, 1.0];
+        let y = vec![0.0, 2.0, 1.0, 4.0, 2.0, 6.0];
+        let t = fit_simple(&x, 1, &y, 2, &TreeParams::default());
+        assert_eq!(t.predict_row(&[1.0]), &[1.0, 4.0]);
+        assert_eq!(t.n_nodes(), 1);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let x: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        let y: Vec<f64> = (0..64).map(|i| (i % 2) as f64).collect();
+        let p = TreeParams { max_depth: 2, min_samples_leaf: 1, max_features: None };
+        let t = fit_simple(&x, 1, &y, 1, &p);
+        assert!(t.depth() <= 2);
+    }
+
+    #[test]
+    fn min_samples_leaf_respected() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = (0..10).map(|i| (i >= 1) as u8 as f64).collect();
+        // min leaf 3 forbids the pure split at 0|1..9.
+        let p = TreeParams { max_depth: 8, min_samples_leaf: 3, max_features: None };
+        let t = fit_simple(&x, 1, &y, 1, &p);
+        // first split must leave >= 3 on the left.
+        let pred0 = t.predict_row(&[0.0])[0];
+        assert!(pred0 > 0.0, "leaf mixes labels under min_samples_leaf");
+    }
+
+    #[test]
+    fn deterministic_given_seed_with_feature_subsampling() {
+        let x: Vec<f64> = (0..200).map(|i| ((i * 37) % 19) as f64).collect();
+        let y: Vec<f64> = (0..100).map(|i| ((i * 13) % 7) as f64).collect();
+        let p = TreeParams { max_depth: 6, min_samples_leaf: 1, max_features: Some(1) };
+        let sample: Vec<usize> = (0..100).collect();
+        let t1 = DecisionTree::fit(&x, 2, &y, 1, &sample, &p, &mut Rng::seed_from_u64(9));
+        let t2 = DecisionTree::fit(&x, 2, &y, 1, &sample, &p, &mut Rng::seed_from_u64(9));
+        assert_eq!(t1.n_nodes(), t2.n_nodes());
+        for i in 0..100 {
+            let row = &x[2 * i..2 * i + 2];
+            assert_eq!(t1.predict_row(row), t2.predict_row(row));
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Unsigned N-bit approximate ripple-carry adder (L = N).
+//!
+//! LUT *i* computes the propagate signal `p_i = a_i XOR b_i`; the carry
+//! chain MUXCY selects `c_{i+1} = c_i` when `p_i` else the DI input `b_i`,
+//! and the XORCY forms `s_i = p_i XOR c_i`. Removing LUT *i* (`l_i = 0`)
+//! forces `p_i = 0`, hence `s_i = c_i` and `c_{i+1} = b_i` — the carry
+//! chain is *cut and re-seeded* at that bit, which is exactly the sub-adder
+//! truncation effect the synthesis model's timing rule rewards.
+//!
+//! Mirrors `python/compile/operator_model.py::adder_eval` bit-for-bit.
+
+use super::AxoConfig;
+
+/// Approximate sum of one operand pair under `config`.
+#[inline]
+pub fn eval_one(config: &AxoConfig, a: u64, b: u64) -> u64 {
+    let n = config.len();
+    let cfg = config.as_uint();
+    let mut carry = 0u64;
+    let mut out = 0u64;
+    for i in 0..n {
+        let ai = (a >> i) & 1;
+        let bi = (b >> i) & 1;
+        let p = (ai ^ bi) & ((cfg >> i) & 1);
+        out |= (p ^ carry) << i;
+        // Branch-free MUXCY: select carry when p else DI = b_i (§Perf L3-3).
+        let pm = p.wrapping_neg();
+        carry = (carry & pm) | (bi & !pm);
+    }
+    out | (carry << n)
+}
+
+/// Exact sum (reference semantics).
+#[inline]
+pub fn exact(a: u64, b: u64) -> u64 {
+    a + b
+}
+
+/// Approximate sums for a batch of configs × shared input set.
+///
+/// Returns a `configs.len() × inputs.len()` row-major matrix. This is the
+/// native fallback for the Pallas `axo_eval` kernel; the characterization
+/// pipeline prefers the PJRT path and cross-checks against this one.
+pub fn eval_batch(configs: &[AxoConfig], a: &[u32], b: &[u32]) -> Vec<u64> {
+    assert_eq!(a.len(), b.len());
+    let mut out = Vec::with_capacity(configs.len() * a.len());
+    for cfg in configs {
+        for (&ai, &bi) in a.iter().zip(b) {
+            out.push(eval_one(cfg, ai as u64, bi as u64));
+        }
+    }
+    out
+}
+
+/// Exhaustive input set: all `2^(2n)` (a, b) pairs (n <= 8 in practice).
+pub fn exhaustive_inputs(n_bits: u32) -> (Vec<u32>, Vec<u32>) {
+    let n = 1u64 << n_bits;
+    let total = (n * n) as usize;
+    let mut a = Vec::with_capacity(total);
+    let mut b = Vec::with_capacity(total);
+    for idx in 0..(n * n) {
+        a.push((idx & (n - 1)) as u32);
+        b.push((idx >> n_bits) as u32);
+    }
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accurate_config_is_exact_exhaustive_4bit() {
+        let cfg = AxoConfig::accurate(4);
+        let (a, b) = exhaustive_inputs(4);
+        for (&ai, &bi) in a.iter().zip(&b) {
+            assert_eq!(eval_one(&cfg, ai as u64, bi as u64), (ai + bi) as u64);
+        }
+    }
+
+    #[test]
+    fn accurate_config_is_exact_sampled_12bit() {
+        let cfg = AxoConfig::accurate(12);
+        for (a, b) in [(0u64, 0u64), (4095, 4095), (1234, 987), (2048, 2047)] {
+            assert_eq!(eval_one(&cfg, a, b), a + b);
+        }
+    }
+
+    #[test]
+    fn removal_rule_bit0() {
+        // Same fixture as python test_adder_removal_rule_bit0.
+        let cfg = AxoConfig::from_bits(&[0, 1, 1]).unwrap();
+        assert_eq!(eval_one(&cfg, 1, 1), 2);
+        assert_eq!(eval_one(&cfg, 1, 0), 0);
+    }
+
+    #[test]
+    fn eval_batch_matches_eval_one() {
+        let cfgs: Vec<AxoConfig> = AxoConfig::enumerate(4).collect();
+        let (a, b) = exhaustive_inputs(4);
+        let m = eval_batch(&cfgs, &a, &b);
+        for (ci, cfg) in cfgs.iter().enumerate() {
+            for (t, (&ai, &bi)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(m[ci * a.len() + t], eval_one(cfg, ai as u64, bi as u64));
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_inputs_layout() {
+        let (a, b) = exhaustive_inputs(2);
+        assert_eq!(a.len(), 16);
+        assert_eq!(a[..4], [0, 1, 2, 3]);
+        assert_eq!(b[..4], [0, 0, 0, 0]);
+        assert_eq!(b[4], 1);
+    }
+}

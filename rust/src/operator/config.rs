@@ -1,0 +1,235 @@
+//! Approximate configuration bit-strings.
+//!
+//! A configuration is stored as the UINT encoding (bit k == `l_k`) in a
+//! `u64` — every operator in the paper has `L <= 36`. The all-zeros
+//! configuration is rejected at construction (paper footnote 4).
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+use std::collections::HashSet;
+
+/// An approximate operator configuration `O_i(l_0..l_{L-1})`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AxoConfig {
+    bits: u64,
+    len: u32,
+}
+
+impl AxoConfig {
+    /// Construct from a UINT encoding. Rejects zero and out-of-range values.
+    pub fn new(bits: u64, len: u32) -> Result<Self> {
+        if len == 0 || len > 64 {
+            return Err(Error::InvalidConfig(format!("bad config length {len}")));
+        }
+        if len < 64 && bits >> len != 0 {
+            return Err(Error::InvalidConfig(format!(
+                "value {bits:#x} does not fit in {len} bits"
+            )));
+        }
+        if bits == 0 {
+            return Err(Error::InvalidConfig(
+                "all-zeros configuration is excluded (paper fn. 4)".into(),
+            ));
+        }
+        Ok(AxoConfig { bits, len })
+    }
+
+    /// The accurate implementation `O_Ac(1,1,...,1)`.
+    pub fn accurate(len: u32) -> Self {
+        AxoConfig { bits: if len == 64 { u64::MAX } else { (1 << len) - 1 }, len }
+    }
+
+    /// UINT encoding (paper Figs. 2/5 horizontal axis).
+    pub fn as_uint(&self) -> u64 {
+        self.bits
+    }
+
+    pub fn len(&self) -> u32 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // all-zeros is unrepresentable
+    }
+
+    /// Whether LUT `k` is kept.
+    #[inline]
+    pub fn keeps(&self, k: u32) -> bool {
+        debug_assert!(k < self.len);
+        (self.bits >> k) & 1 == 1
+    }
+
+    /// Number of retained LUTs.
+    #[inline]
+    pub fn count_kept(&self) -> u32 {
+        self.bits.count_ones()
+    }
+
+    pub fn is_accurate(&self) -> bool {
+        self.count_kept() == self.len
+    }
+
+    /// 0/1 vector (LSB first), the representation fed to kernels and ML.
+    pub fn to_bits_f32(&self) -> Vec<f32> {
+        (0..self.len).map(|k| if self.keeps(k) { 1.0 } else { 0.0 }).collect()
+    }
+
+    pub fn to_bits_u8(&self) -> Vec<u8> {
+        (0..self.len).map(|k| self.keeps(k) as u8).collect()
+    }
+
+    /// Build from a 0/1 slice (LSB first). Values > 0 count as 1.
+    pub fn from_bits(bits: &[u8]) -> Result<Self> {
+        let mut v = 0u64;
+        for (k, &b) in bits.iter().enumerate() {
+            if b > 0 {
+                v |= 1 << k;
+            }
+        }
+        Self::new(v, bits.len() as u32)
+    }
+
+    /// Flip LUT `k`, returning `None` if that would produce all-zeros.
+    pub fn flipped(&self, k: u32) -> Option<Self> {
+        let bits = self.bits ^ (1 << k);
+        (bits != 0).then_some(AxoConfig { bits, len: self.len })
+    }
+
+    /// Hamming distance between two configurations of equal length.
+    pub fn hamming(&self, other: &AxoConfig) -> u32 {
+        debug_assert_eq!(self.len, other.len);
+        (self.bits ^ other.bits).count_ones()
+    }
+
+    /// Single-point crossover at `point` (1..len), paper §IV-C-2.
+    pub fn crossover(&self, other: &AxoConfig, point: u32) -> (Option<Self>, Option<Self>) {
+        debug_assert_eq!(self.len, other.len);
+        debug_assert!(point > 0 && point < self.len);
+        let low_mask = (1u64 << point) - 1;
+        let c1 = (self.bits & low_mask) | (other.bits & !low_mask);
+        let c2 = (other.bits & low_mask) | (self.bits & !low_mask);
+        let mk = |b: u64| (b != 0).then_some(AxoConfig { bits: b, len: self.len });
+        (mk(c1), mk(c2))
+    }
+
+    /// All `2^L - 1` usable configurations, ascending UINT order.
+    pub fn enumerate(len: u32) -> impl Iterator<Item = AxoConfig> {
+        debug_assert!(len <= 20, "enumerate() is for exhaustive small spaces");
+        (1..(1u64 << len)).map(move |v| AxoConfig { bits: v, len })
+    }
+
+    /// `n` unique seeded random non-zero configurations (paper §V-A samples
+    /// 10,650 of the 8×8 multiplier space).
+    pub fn sample_unique(len: u32, n: usize, rng: &mut Rng) -> Vec<AxoConfig> {
+        let space = if len >= 63 { u64::MAX } else { (1u64 << len) - 1 };
+        assert!((n as u64) <= space, "cannot sample {n} unique from 2^{len}-1");
+        let mut seen = HashSet::with_capacity(n);
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let v = rng.gen_range_inclusive(1, space);
+            if seen.insert(v) {
+                out.push(AxoConfig { bits: v, len });
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for AxoConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AxoConfig({:0width$b})", self.bits, width = self.len as usize)
+    }
+}
+
+/// `Display` shows the bit-string MSB-first, like the paper's figures.
+impl std::fmt::Display for AxoConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for k in (0..self.len).rev() {
+            write!(f, "{}", if self.keeps(k) { '1' } else { '0' })?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_zero_and_overflow() {
+        assert!(AxoConfig::new(0, 8).is_err());
+        assert!(AxoConfig::new(256, 8).is_err());
+        assert!(AxoConfig::new(255, 8).is_ok());
+    }
+
+    #[test]
+    fn accurate_is_all_ones() {
+        let c = AxoConfig::accurate(8);
+        assert!(c.is_accurate());
+        assert_eq!(c.as_uint(), 255);
+        assert_eq!(c.count_kept(), 8);
+    }
+
+    #[test]
+    fn bits_roundtrip() {
+        let c = AxoConfig::new(0b1011, 4).unwrap();
+        assert_eq!(c.to_bits_u8(), vec![1, 1, 0, 1]);
+        assert_eq!(AxoConfig::from_bits(&[1, 1, 0, 1]).unwrap(), c);
+        assert_eq!(c.to_bits_f32(), vec![1.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn crossover_masks() {
+        let a = AxoConfig::new(0b1111, 4).unwrap();
+        let b = AxoConfig::new(0b0001, 4).unwrap();
+        let (c1, c2) = a.crossover(&b, 2);
+        assert_eq!(c1.unwrap().as_uint(), 0b0011);
+        assert_eq!(c2.unwrap().as_uint(), 0b1101);
+    }
+
+    #[test]
+    fn crossover_never_yields_zero() {
+        let a = AxoConfig::new(0b1100, 4).unwrap();
+        let b = AxoConfig::new(0b1100, 4).unwrap();
+        let (c1, c2) = a.crossover(&b, 2);
+        // low(a)=00, high(b)=11xx -> 1100 fine; but low zero + high zero -> None
+        assert!(c1.is_some() && c2.is_some());
+        let z1 = AxoConfig::new(0b0011, 4).unwrap();
+        let z2 = AxoConfig::new(0b1100, 4).unwrap();
+        let (d1, d2) = z1.crossover(&z2, 2);
+        // low(z1)=11 | high(z2)=11xx -> 1111; low(z2)=00 | high(z1)=00 -> zero
+        assert_eq!(d1.unwrap().as_uint(), 0b1111);
+        assert_eq!(d2, None);
+    }
+
+    #[test]
+    fn enumerate_counts() {
+        assert_eq!(AxoConfig::enumerate(4).count(), 15);
+        assert_eq!(AxoConfig::enumerate(10).count(), 1023);
+    }
+
+    #[test]
+    fn sample_unique_deterministic() {
+        let mut r1 = Rng::seed_from_u64(42);
+        let mut r2 = Rng::seed_from_u64(42);
+        let a = AxoConfig::sample_unique(36, 500, &mut r1);
+        let b = AxoConfig::sample_unique(36, 500, &mut r2);
+        assert_eq!(a, b);
+        let set: HashSet<u64> = a.iter().map(|c| c.as_uint()).collect();
+        assert_eq!(set.len(), 500);
+        assert!(!set.contains(&0));
+    }
+
+    #[test]
+    fn hamming_distance() {
+        let a = AxoConfig::new(0b1010, 4).unwrap();
+        let b = AxoConfig::new(0b0110, 4).unwrap();
+        assert_eq!(a.hamming(&b), 2);
+    }
+
+    #[test]
+    fn display_msb_first() {
+        let c = AxoConfig::new(0b0011, 4).unwrap();
+        assert_eq!(c.to_string(), "0011");
+    }
+}

@@ -1,0 +1,164 @@
+//! LUT-level approximate operator model (paper Section III).
+//!
+//! An FPGA arithmetic operator is an ordered tuple `O_i(l_0..l_{L-1})`,
+//! `l = 1` keeps the corresponding LUT of the accurate implementation,
+//! `l = 0` removes it. The all-ones configuration is the accurate operator;
+//! the all-zeros configuration is excluded from every experiment (paper
+//! footnote 4).
+//!
+//! Two families are modelled bit-exactly, mirroring
+//! `python/compile/operator_model.py` (cross-checked by
+//! `artifacts/golden_behav.json`):
+//!
+//! * [`adder`] — unsigned N-bit ripple-carry adders (`L = N`);
+//! * [`multiplier`] — signed M×M Baugh-Wooley multipliers
+//!   (`L = M(M+1)/2`: 10 for 4×4, 36 for 8×8 — Table II).
+
+pub mod adder;
+pub mod config;
+pub mod multiplier;
+
+pub use config::AxoConfig;
+
+use crate::error::{Error, Result};
+
+/// Operator family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OperatorKind {
+    /// Unsigned ripple-carry adder.
+    UnsignedAdder,
+    /// Signed Baugh-Wooley multiplier.
+    SignedMultiplier,
+}
+
+/// A concrete operator instance from Table II of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Operator {
+    pub kind: OperatorKind,
+    /// Operand bit-width (N for adders, M for multipliers).
+    pub bits: u32,
+}
+
+impl Operator {
+    pub const ADD4: Operator = Operator { kind: OperatorKind::UnsignedAdder, bits: 4 };
+    pub const ADD8: Operator = Operator { kind: OperatorKind::UnsignedAdder, bits: 8 };
+    pub const ADD12: Operator = Operator { kind: OperatorKind::UnsignedAdder, bits: 12 };
+    pub const MUL4: Operator = Operator { kind: OperatorKind::SignedMultiplier, bits: 4 };
+    pub const MUL8: Operator = Operator { kind: OperatorKind::SignedMultiplier, bits: 8 };
+
+    /// Every operator evaluated in the paper (Table II).
+    pub const ALL: [Operator; 5] =
+        [Self::ADD4, Self::ADD8, Self::ADD12, Self::MUL4, Self::MUL8];
+
+    /// Configuration string length `L`.
+    pub fn config_len(&self) -> u32 {
+        match self.kind {
+            OperatorKind::UnsignedAdder => self.bits,
+            OperatorKind::SignedMultiplier => self.bits * (self.bits + 1) / 2,
+        }
+    }
+
+    /// Number of usable approximate designs (`2^L - 1`, all-zeros excluded).
+    /// `None` when it exceeds `u64` practicality reporting (not the case here).
+    pub fn design_space_size(&self) -> u128 {
+        (1u128 << self.config_len()) - 1
+    }
+
+    /// Short identifier used for artifact and dataset names
+    /// (`add4`, `add8`, `add12`, `mul4`, `mul8`).
+    pub fn name(&self) -> String {
+        match self.kind {
+            OperatorKind::UnsignedAdder => format!("add{}", self.bits),
+            OperatorKind::SignedMultiplier => format!("mul{}", self.bits),
+        }
+    }
+
+    /// Parse `add4`-style identifiers.
+    pub fn from_name(name: &str) -> Result<Operator> {
+        let op = match name {
+            "add4" => Self::ADD4,
+            "add8" => Self::ADD8,
+            "add12" => Self::ADD12,
+            "mul4" => Self::MUL4,
+            "mul8" => Self::MUL8,
+            _ => {
+                return Err(Error::InvalidConfig(format!(
+                    "unknown operator `{name}` (expected add4|add8|add12|mul4|mul8)"
+                )))
+            }
+        };
+        Ok(op)
+    }
+
+    /// Whether the full design space is exhaustively characterizable
+    /// (everything except the 8×8 multiplier's 68.7-billion space).
+    pub fn exhaustive(&self) -> bool {
+        self.config_len() <= 16
+    }
+
+    /// Exact outputs for operand pairs (reference semantics).
+    pub fn exact(&self, a: i64, b: i64) -> i64 {
+        match self.kind {
+            OperatorKind::UnsignedAdder => a + b,
+            OperatorKind::SignedMultiplier => a * b,
+        }
+    }
+
+    /// Approximate output under `config` for one operand pair.
+    ///
+    /// Batch paths ([`adder::eval_batch`], [`multiplier::eval_batch`]) are
+    /// the hot ones; this scalar form is the readable reference used by the
+    /// application case-study example and tests.
+    pub fn approx(&self, config: &AxoConfig, a: i64, b: i64) -> i64 {
+        debug_assert_eq!(config.len(), self.config_len());
+        match self.kind {
+            OperatorKind::UnsignedAdder => adder::eval_one(config, a as u64, b as u64) as i64,
+            OperatorKind::SignedMultiplier => multiplier::eval_one(self.bits, config, a, b),
+        }
+    }
+}
+
+impl std::fmt::Display for Operator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_lens_match_table2() {
+        assert_eq!(Operator::ADD4.config_len(), 4);
+        assert_eq!(Operator::ADD8.config_len(), 8);
+        assert_eq!(Operator::ADD12.config_len(), 12);
+        assert_eq!(Operator::MUL4.config_len(), 10);
+        assert_eq!(Operator::MUL8.config_len(), 36);
+    }
+
+    #[test]
+    fn design_space_sizes_match_table2() {
+        assert_eq!(Operator::ADD4.design_space_size(), 15); // 16 incl. zero
+        assert_eq!(Operator::ADD8.design_space_size(), 255);
+        assert_eq!(Operator::ADD12.design_space_size(), 4095);
+        assert_eq!(Operator::MUL4.design_space_size(), 1023);
+        // "68.7 Billion" in Table II.
+        assert_eq!(Operator::MUL8.design_space_size(), (1u128 << 36) - 1);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for op in Operator::ALL {
+            assert_eq!(Operator::from_name(&op.name()).unwrap(), op);
+        }
+        assert!(Operator::from_name("div2").is_err());
+    }
+
+    #[test]
+    fn exhaustive_flags() {
+        assert!(Operator::ADD12.exhaustive());
+        assert!(Operator::MUL4.exhaustive());
+        assert!(!Operator::MUL8.exhaustive());
+    }
+}

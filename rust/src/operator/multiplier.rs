@@ -1,0 +1,195 @@
+//! Signed M×M approximate Baugh-Wooley multiplier (L = M(M+1)/2).
+//!
+//! LUT `(i, j)`, `i <= j` in lexicographic order, generates the signed
+//! partial-product pair `w_i w_j (a_i b_j + a_j b_i)` (the single diagonal
+//! term when `i == j`), where `w_i = -2^(M-1)` for the sign bit and `2^i`
+//! otherwise. The sum of all pairs is exactly `A × B` for two's-complement
+//! operands, so the all-ones configuration is accurate by construction.
+//! Removing LUT `(i, j)` zeroes both partial products.
+//!
+//! `L = 10` for 4×4 and `L = 36` for 8×8, matching Table II.
+//! Mirrors `python/compile/operator_model.py::mult_*` bit-for-bit.
+
+use super::AxoConfig;
+
+/// Ordered `(i, j)`, `i <= j` LUT index pairs (lexicographic, i ascending).
+pub fn pairs(m_bits: u32) -> Vec<(u32, u32)> {
+    let mut v = Vec::with_capacity((m_bits * (m_bits + 1) / 2) as usize);
+    for i in 0..m_bits {
+        for j in i..m_bits {
+            v.push((i, j));
+        }
+    }
+    v
+}
+
+/// Baugh-Wooley bit weight: `-2^(M-1)` at the sign position, else `2^i`.
+#[inline]
+pub fn weight(m_bits: u32, i: u32) -> i64 {
+    if i == m_bits - 1 {
+        -(1i64 << i)
+    } else {
+        1i64 << i
+    }
+}
+
+/// Per-LUT contributions to the exact product of one operand pair.
+///
+/// `terms.iter().sum() == a * b`; the approximate product is the sum over
+/// retained LUTs only. Operands are signed two's-complement M-bit values.
+pub fn terms_one(m_bits: u32, a: i64, b: i64) -> Vec<i64> {
+    let n = 1i64 << m_bits;
+    let au = if a < 0 { a + n } else { a } as u64;
+    let bu = if b < 0 { b + n } else { b } as u64;
+    let mut out = Vec::with_capacity((m_bits * (m_bits + 1) / 2) as usize);
+    for i in 0..m_bits {
+        let ai = ((au >> i) & 1) as i64;
+        let bi_i = ((bu >> i) & 1) as i64;
+        for j in i..m_bits {
+            let aj = ((au >> j) & 1) as i64;
+            let bj = ((bu >> j) & 1) as i64;
+            let w = weight(m_bits, i) * weight(m_bits, j);
+            out.push(if i == j {
+                w * ai * bi_i
+            } else {
+                w * (ai * bj + aj * bi_i)
+            });
+        }
+    }
+    out
+}
+
+/// Approximate product of one operand pair under `config`.
+#[inline]
+pub fn eval_one(m_bits: u32, config: &AxoConfig, a: i64, b: i64) -> i64 {
+    let terms = terms_one(m_bits, a, b);
+    let mut acc = 0i64;
+    for (k, t) in terms.iter().enumerate() {
+        if config.keeps(k as u32) {
+            acc += t;
+        }
+    }
+    acc
+}
+
+/// Row-major `(T, L)` term matrix for an input set — the operand the PJRT
+/// `mult_eval` kernel consumes (`approx = configs @ terms.T`).
+pub fn term_matrix(m_bits: u32, a: &[i64], b: &[i64]) -> Vec<i64> {
+    assert_eq!(a.len(), b.len());
+    let l = (m_bits * (m_bits + 1) / 2) as usize;
+    let mut out = Vec::with_capacity(a.len() * l);
+    for (&ai, &bi) in a.iter().zip(b) {
+        out.extend(terms_one(m_bits, ai, bi));
+    }
+    out
+}
+
+/// Approximate products for a batch of configs × shared term matrix.
+///
+/// `terms` is the `(T, L)` row-major matrix from [`term_matrix`]; returns a
+/// `(B, T)` row-major matrix. Native fallback for the Pallas kernel.
+pub fn eval_batch(configs: &[AxoConfig], terms: &[i64], l: usize) -> Vec<i64> {
+    assert_eq!(terms.len() % l, 0);
+    let t = terms.len() / l;
+    let mut out = vec![0i64; configs.len() * t];
+    for (ci, cfg) in configs.iter().enumerate() {
+        let mask: Vec<i64> = (0..l as u32).map(|k| cfg.keeps(k) as i64).collect();
+        let row = &mut out[ci * t..(ci + 1) * t];
+        for (ti, chunk) in terms.chunks_exact(l).enumerate() {
+            let mut acc = 0i64;
+            for (v, m) in chunk.iter().zip(&mask) {
+                acc += v * m;
+            }
+            row[ti] = acc;
+        }
+    }
+    out
+}
+
+/// Exhaustive signed input set: all `2^(2m)` pairs, a fastest-varying.
+pub fn exhaustive_inputs(m_bits: u32) -> (Vec<i64>, Vec<i64>) {
+    let n = 1i64 << m_bits;
+    let half = n / 2;
+    let signed = |v: i64| if v >= half { v - n } else { v };
+    let mut a = Vec::with_capacity((n * n) as usize);
+    let mut b = Vec::with_capacity((n * n) as usize);
+    // Match python mult_inputs: a = repeat(signed), b = tile(signed).
+    for av in 0..n {
+        for bv in 0..n {
+            a.push(signed(av));
+            b.push(signed(bv));
+        }
+    }
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairs_order_and_len() {
+        assert_eq!(pairs(2), vec![(0, 0), (0, 1), (1, 1)]);
+        assert_eq!(pairs(4).len(), 10);
+        assert_eq!(pairs(8).len(), 36);
+    }
+
+    #[test]
+    fn terms_sum_to_exact_product_exhaustive_4bit() {
+        let (a, b) = exhaustive_inputs(4);
+        for (&ai, &bi) in a.iter().zip(&b) {
+            let s: i64 = terms_one(4, ai, bi).iter().sum();
+            assert_eq!(s, ai * bi, "a={ai} b={bi}");
+        }
+    }
+
+    #[test]
+    fn terms_sum_to_exact_product_sampled_8bit() {
+        for (a, b) in [(-128i64, -128i64), (-128, 127), (127, 127), (-37, 91), (0, -5)] {
+            let s: i64 = terms_one(8, a, b).iter().sum();
+            assert_eq!(s, a * b);
+        }
+    }
+
+    #[test]
+    fn accurate_config_eval_one() {
+        let cfg = AxoConfig::accurate(10);
+        assert_eq!(eval_one(4, &cfg, -8, 7), -56);
+        assert_eq!(eval_one(4, &cfg, 3, 3), 9);
+    }
+
+    #[test]
+    fn removing_pair00_zeroes_lsb_product() {
+        let mut bits = vec![1u8; 10];
+        bits[0] = 0; // pair (0,0)
+        let cfg = AxoConfig::from_bits(&bits).unwrap();
+        // a,b odd: product loses exactly a0*b0 = 1.
+        assert_eq!(eval_one(4, &cfg, 3, 5), 15 - 1);
+        assert_eq!(eval_one(4, &cfg, 2, 6), 12);
+    }
+
+    #[test]
+    fn eval_batch_matches_eval_one() {
+        let cfgs: Vec<AxoConfig> =
+            [0b1111111111u64, 0b1010101010, 0b0000000001, 0b1000000000]
+                .iter()
+                .map(|&v| AxoConfig::new(v, 10).unwrap())
+                .collect();
+        let (a, b) = exhaustive_inputs(4);
+        let tm = term_matrix(4, &a, &b);
+        let out = eval_batch(&cfgs, &tm, 10);
+        for (ci, cfg) in cfgs.iter().enumerate() {
+            for t in 0..a.len() {
+                assert_eq!(out[ci * a.len() + t], eval_one(4, cfg, a[t], b[t]));
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_inputs_signed_range() {
+        let (a, b) = exhaustive_inputs(4);
+        assert_eq!(a.len(), 256);
+        assert_eq!(*a.iter().min().unwrap(), -8);
+        assert_eq!(*b.iter().max().unwrap(), 7);
+    }
+}

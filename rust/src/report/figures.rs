@@ -1,0 +1,381 @@
+//! Statistical-analysis figures (Figs. 1, 2, 5, 10, 11, 12, 13, 14).
+
+use super::Harness;
+use crate::charac::Dataset;
+use crate::conss::{ConssPipeline, SupersampleOptions};
+use crate::dse::Objectives;
+use crate::error::Result;
+use crate::matching::{conss_training_set, DistanceKind, Matcher};
+use crate::ml::metrics::hamming_accuracy;
+use crate::ml::RandomForest;
+use crate::operator::Operator;
+use crate::stats::kmeans::centroid_alignment;
+use crate::stats::{correlation, Histogram, KMeans, MinMaxScaler};
+use crate::surrogate::{GbtSurrogate, Surrogate};
+use std::fmt::Write as _;
+
+fn scaled_headline(ds: &Dataset) -> Result<Vec<[f64; 2]>> {
+    Matcher::scaled_points(ds)
+}
+
+fn kmeans_compare(
+    h: &Harness,
+    name: &str,
+    op_a: Operator,
+    op_b: Operator,
+    k: usize,
+) -> Result<String> {
+    let da = h.dataset(op_a)?;
+    let db = h.dataset(op_b)?;
+    // (a) absolute-metric clustering per dataset.
+    let abs_a = KMeans::fit(&da.headline_points(), k, h.cfg.seed);
+    let abs_b = KMeans::fit(&db.headline_points(), k, h.cfg.seed + 1);
+    // (b) scaled clustering (the Fig. 1b/10b comparison).
+    let sa = scaled_headline(&da)?;
+    let sb = scaled_headline(&db)?;
+    let ka = KMeans::fit(&sa, k, h.cfg.seed);
+    let kb = KMeans::fit(&sb, k, h.cfg.seed + 1);
+    let align = centroid_alignment(&ka.centroids, &kb.centroids);
+    let (elbow_a, _) = KMeans::elbow(&sa, 8, h.cfg.seed);
+    let (elbow_b, _) = KMeans::elbow(&sb, 8, h.cfg.seed);
+
+    let mut rows = Vec::new();
+    for (tag, km) in [
+        (format!("{op_a}-abs"), &abs_a),
+        (format!("{op_b}-abs"), &abs_b),
+        (format!("{op_a}-scaled"), &ka),
+        (format!("{op_b}-scaled"), &kb),
+    ] {
+        for (i, c) in km.centroids.iter().enumerate() {
+            rows.push(vec![
+                tag.clone(),
+                i.to_string(),
+                c[0].to_string(),
+                c[1].to_string(),
+                km.sizes()[i].to_string(),
+            ]);
+        }
+    }
+    let path = h.write_csv(
+        &format!("{name}_centroids.csv"),
+        &["dataset", "cluster", "pdplut", "avg_abs_rel_err", "size"],
+        &rows,
+    )?;
+    let mut s = String::new();
+    writeln!(s, "k = {k} clusters over (PDPLUT, AVG_ABS_REL_ERR)").unwrap();
+    writeln!(s, "elbow-selected k: {op_a} = {elbow_a}, {op_b} = {elbow_b}").unwrap();
+    writeln!(
+        s,
+        "scaled centroid alignment (mean matched distance): {align:.4} \
+         (paper: centroids 'in the vicinity of each other')"
+    )
+    .unwrap();
+    writeln!(s, "csv: {}", path.display()).unwrap();
+    Ok(s)
+}
+
+/// Fig. 1 — k-means clustering of 8- vs 12-bit unsigned adder AxOs.
+pub fn fig1_clustering_adders(h: &Harness) -> Result<String> {
+    kmeans_compare(h, "fig1", Operator::ADD8, Operator::ADD12, 5)
+}
+
+/// Fig. 10 — k-means clustering of 4×4 vs 8×8 signed multiplier AxOs.
+pub fn fig10_clustering_multipliers(h: &Harness) -> Result<String> {
+    kmeans_compare(h, "fig10", Operator::MUL4, Operator::MUL8, 5)
+}
+
+fn uint_ordered_scaled_series(ds: &Dataset) -> Result<(Vec<f64>, Vec<f64>)> {
+    let mut idx: Vec<usize> = (0..ds.len()).collect();
+    idx.sort_by_key(|&i| ds.configs[i].as_uint());
+    let pts = ds.headline_points();
+    let scaler = MinMaxScaler::fit_points2(&pts)?;
+    let ppa: Vec<f64> = idx.iter().map(|&i| scaler.scale_value(0, pts[i][0])).collect();
+    let beh: Vec<f64> = idx.iter().map(|&i| scaler.scale_value(1, pts[i][1])).collect();
+    Ok((ppa, beh))
+}
+
+/// Fig. 2 — scaled PDPLUT / error vs UINT config, 8- vs 12-bit adders with
+/// 16-wide window sub-sampling of the 12-bit sequence.
+pub fn fig2_trends_subsampled(h: &Harness) -> Result<String> {
+    let d8 = h.dataset(Operator::ADD8)?;
+    let d12 = h.dataset(Operator::ADD12)?;
+    let (p8, b8) = uint_ordered_scaled_series(&d8)?;
+    let (p12, b12) = uint_ordered_scaled_series(&d12)?;
+    let p12s = correlation::window_means(&p12, 16);
+    let b12s = correlation::window_means(&b12, 16);
+    // 255 vs 256 points: compare over the common prefix.
+    let n = p8.len().min(p12s.len());
+    let rows: Vec<Vec<String>> = (0..n)
+        .map(|i| {
+            vec![
+                i.to_string(),
+                p8[i].to_string(),
+                b8[i].to_string(),
+                p12s[i].to_string(),
+                b12s[i].to_string(),
+            ]
+        })
+        .collect();
+    let path = h.write_csv(
+        "fig2_trends.csv",
+        &["rank", "pdplut_add8", "err_add8", "pdplut_add12_w16", "err_add12_w16"],
+        &rows,
+    )?;
+    let cp = correlation::pearson(&p8[..n], &p12s[..n]);
+    let cb = correlation::pearson(&b8[..n], &b12s[..n]);
+    let sp = correlation::spearman(&p8[..n], &p12s[..n]);
+    let sb = correlation::spearman(&b8[..n], &b12s[..n]);
+    Ok(format!(
+        "config-ordered scaled metric sequences, 12-bit sub-sampled x16\n\
+         PDPLUT  pearson {cp:.3} spearman {sp:.3}\n\
+         BEHAV   pearson {cb:.3} spearman {sb:.3}\n\
+         (paper: 'similar patterns for both bit-width operators')\n\
+         csv: {}",
+        path.display()
+    ))
+}
+
+/// Fig. 5 — Configuration-PPA/BEHAV trends for 4/8/12-bit adders.
+pub fn fig5_trends_all_adders(h: &Harness) -> Result<String> {
+    let mut s = String::new();
+    let mut all: Vec<(Operator, Vec<f64>, Vec<f64>)> = Vec::new();
+    for op in [Operator::ADD4, Operator::ADD8, Operator::ADD12] {
+        let ds = h.dataset(op)?;
+        let (p, b) = uint_ordered_scaled_series(&ds)?;
+        let rows: Vec<Vec<String>> = (0..p.len())
+            .map(|i| vec![i.to_string(), p[i].to_string(), b[i].to_string()])
+            .collect();
+        h.write_csv(
+            &format!("fig5_{}.csv", op.name()),
+            &["uint_rank", "pdplut_scaled", "err_scaled"],
+            &rows,
+        )?;
+        all.push((op, p, b));
+    }
+    // Cross-width pattern similarity via window-matched Spearman.
+    for w in all.windows(2) {
+        let (op_a, pa, ba) = &w[0];
+        let (op_b, pb, bb) = &w[1];
+        let win = pb.len() / pa.len().max(1);
+        let pbs = correlation::window_means(pb, win.max(1));
+        let bbs = correlation::window_means(bb, win.max(1));
+        let n = pa.len().min(pbs.len());
+        writeln!(
+            s,
+            "{op_a} vs {op_b}: PDPLUT spearman {:.3}, BEHAV spearman {:.3}",
+            correlation::spearman(&pa[..n], &pbs[..n]),
+            correlation::spearman(&ba[..n], &bbs[..n]),
+        )
+        .unwrap();
+    }
+    writeln!(s, "csv: fig5_add4/add8/add12.csv").unwrap();
+    Ok(s)
+}
+
+/// Fig. 11 — distributions of the three distance measures, 4- vs 8-bit
+/// adders.
+pub fn fig11_distance_distributions(h: &Harness) -> Result<String> {
+    let l = h.dataset(Operator::ADD4)?;
+    let hds = h.dataset(Operator::ADD8)?;
+    let mut rows = Vec::new();
+    let mut s = String::new();
+    let mut occupancy = Vec::new();
+    for kind in DistanceKind::ALL {
+        let d = Matcher::new(kind).all_distances(&l, &hds)?;
+        let hist = Histogram::from_values_range(&d, 30, 0.0, 1.5);
+        occupancy.push((kind, hist.occupancy()));
+        for (c, (&count, dens)) in hist
+            .centers()
+            .iter()
+            .zip(hist.counts.iter().zip(hist.densities()))
+        {
+            rows.push(vec![
+                kind.name().into(),
+                c.to_string(),
+                count.to_string(),
+                dens.to_string(),
+            ]);
+        }
+    }
+    let path = h.write_csv(
+        "fig11_distance_hist.csv",
+        &["measure", "bin_center", "count", "density"],
+        &rows,
+    )?;
+    for (kind, occ) in &occupancy {
+        writeln!(s, "{:<10} bin occupancy {occ:.3}", kind.name()).unwrap();
+    }
+    let e = occupancy[0].1;
+    let p = occupancy[2].1;
+    writeln!(
+        s,
+        "euclidean/manhattan spread wider than pareto: {} (paper Fig. 11 shape)",
+        e > p
+    )
+    .unwrap();
+    writeln!(s, "csv: {}", path.display()).unwrap();
+    Ok(s)
+}
+
+/// Fig. 12 — Euclidean heat-map + one-to-many match counts, 4→8-bit adders.
+pub fn fig12_matching(h: &Harness) -> Result<String> {
+    let l = h.dataset(Operator::ADD4)?;
+    let hds = h.dataset(Operator::ADD8)?;
+    let matcher = Matcher::new(DistanceKind::Euclidean);
+    let dm = matcher.all_distances(&l, &hds)?; // (H, L) row-major
+    let mut rows = Vec::new();
+    for (hi, chunk) in dm.chunks(l.len()).enumerate() {
+        for (li, d) in chunk.iter().enumerate() {
+            rows.push(vec![
+                hds.configs[hi].as_uint().to_string(),
+                l.configs[li].as_uint().to_string(),
+                d.to_string(),
+            ]);
+        }
+    }
+    h.write_csv("fig12_heatmap.csv", &["h_uint", "l_uint", "distance"], &rows)?;
+
+    let m = matcher.match_datasets(&l, &hds)?;
+    let counts = m.counts_per_l(l.len());
+    let count_rows: Vec<Vec<String>> = counts
+        .iter()
+        .enumerate()
+        .map(|(li, &c)| {
+            vec![
+                l.configs[li].as_uint().to_string(),
+                format!("{}", l.configs[li]),
+                c.to_string(),
+            ]
+        })
+        .collect();
+    let path = h.write_csv(
+        "fig12_match_counts.csv",
+        &["l_uint", "l_bits", "h_matches"],
+        &count_rows,
+    )?;
+    let top: Vec<String> = {
+        let mut order: Vec<usize> = (0..counts.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(counts[i]));
+        order
+            .iter()
+            .take(3)
+            .map(|&i| format!("{} → {} matches", l.configs[i], counts[i]))
+            .collect()
+    };
+    Ok(format!(
+        "one-to-many matching of 255 H configs onto 15 L configs\n{}\ncsv: {}",
+        top.join("\n"),
+        path.display()
+    ))
+}
+
+/// Fig. 13 — ConSS random-forest accuracy (Hamming) vs number of noise
+/// bits, 4×4 → 8×8 signed multipliers.
+pub fn fig13_conss_accuracy(h: &Harness) -> Result<String> {
+    let l = h.dataset(Operator::MUL4)?;
+    let hds = h.dataset(Operator::MUL8)?;
+    let matcher = Matcher::new(DistanceKind::Euclidean);
+    let m = matcher.match_datasets(&l, &hds)?;
+    let mut rows = Vec::new();
+    let mut s = String::new();
+    for noise_bits in 0..=4u32 {
+        let (x, xf, y, yf) = conss_training_set(&l, &hds, &m, noise_bits)?;
+        let n = x.len() / xf;
+        // 80/20 deterministic split on row index.
+        let split = n * 4 / 5;
+        let params = crate::ml::forest::ForestParams {
+            n_trees: h.cfg.conss.forest_trees.unwrap_or(15),
+            ..Default::default()
+        };
+        let forest = RandomForest::fit(&x[..split * xf], xf, &y[..split * yf], yf, params)?;
+        let acc_over = |lo: usize, hi: usize| {
+            let mut t = Vec::new();
+            let mut p = Vec::new();
+            for r in lo..hi {
+                let row = &x[r * xf..(r + 1) * xf];
+                p.extend(forest.predict_bits_row(row));
+                t.extend(y[r * yf..(r + 1) * yf].iter().map(|&v| v as u8));
+            }
+            hamming_accuracy(&t, &p)
+        };
+        let acc_train = acc_over(0, split);
+        let acc = acc_over(split, n);
+        rows.push(vec![
+            noise_bits.to_string(),
+            acc_train.to_string(),
+            acc.to_string(),
+            (n - split).to_string(),
+        ]);
+        writeln!(
+            s,
+            "noise_bits {noise_bits}: hamming accuracy train {acc_train:.4} / holdout {acc:.4}"
+        )
+        .unwrap();
+    }
+    let path = h.write_csv(
+        "fig13_conss_accuracy.csv",
+        &["noise_bits", "train_accuracy", "holdout_accuracy", "test_rows"],
+        &rows,
+    )?;
+    writeln!(s, "(paper: 'additional noise bits do not affect the accuracy')").unwrap();
+    writeln!(s, "csv: {}", path.display()).unwrap();
+    Ok(s)
+}
+
+/// Fig. 14 — unique supersampled 8×8 designs per BEHAV-PPA region, all-seed
+/// vs Pareto-only-seed variants.
+pub fn fig14_supersampling_regions(h: &Harness) -> Result<String> {
+    let l = h.dataset(Operator::MUL4)?;
+    let hds = h.dataset(Operator::MUL8)?;
+    let surrogate = GbtSurrogate::train(&hds, Default::default())?;
+    let mut rows = Vec::new();
+    let mut s = String::new();
+    for (label, seeds) in [
+        ("all", crate::conss::pipeline::SeedSelection::All),
+        ("pareto", crate::conss::pipeline::SeedSelection::ParetoOnly),
+    ] {
+        let opts = SupersampleOptions {
+            noise_bits: h.cfg.conss.noise_bits,
+            seeds,
+            ..Default::default()
+        };
+        let pipe = ConssPipeline::train(&l, &hds, opts)?;
+        let pool = pipe.supersample(None, &[])?;
+        let preds: Vec<Objectives> = surrogate.predict(&pool.configs)?;
+        // 3×3 regions over the scaled predicted plane.
+        let scaler = MinMaxScaler::fit(
+            &preds.iter().flatten().copied().collect::<Vec<f64>>(),
+            2,
+        )?;
+        let mut grid = [[0usize; 3]; 3];
+        for p in &preds {
+            let b = (scaler.scale_value(0, p[0]) * 3.0).min(2.999) as usize;
+            let q = (scaler.scale_value(1, p[1]) * 3.0).min(2.999) as usize;
+            grid[b][q] += 1;
+        }
+        for (bi, row) in grid.iter().enumerate() {
+            for (pi, &c) in row.iter().enumerate() {
+                rows.push(vec![
+                    label.into(),
+                    bi.to_string(),
+                    pi.to_string(),
+                    c.to_string(),
+                ]);
+            }
+        }
+        writeln!(
+            s,
+            "{label}-seeds: {} seeds → {} unique predicted 8×8 designs",
+            pool.n_seeds,
+            pool.configs.len()
+        )
+        .unwrap();
+    }
+    let path = h.write_csv(
+        "fig14_regions.csv",
+        &["seed_mode", "behav_region", "ppa_region", "unique_designs"],
+        &rows,
+    )?;
+    writeln!(s, "csv: {}", path.display()).unwrap();
+    Ok(s)
+}

@@ -1,0 +1,201 @@
+//! Figure/table regeneration harness.
+//!
+//! One function per figure and table of the paper's evaluation (see
+//! DESIGN.md §4 for the index). Every function writes machine-readable CSV
+//! series into the configured `out_dir` and returns a human-readable
+//! summary that the CLI prints; EXPERIMENTS.md records the paper-vs-
+//! measured comparison.
+
+pub mod ablations;
+pub mod dse_figs;
+pub mod figures;
+pub mod tables;
+
+use crate::charac::{characterize, characterize_all, Backend, Dataset, InputSet};
+use crate::error::{Error, Result};
+use crate::expcfg::ExperimentConfig;
+use crate::operator::{AxoConfig, Operator};
+use crate::util::rng::Rng;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Dataset-caching harness shared by all figure generators.
+pub struct Harness {
+    pub cfg: ExperimentConfig,
+    cache: RefCell<HashMap<String, Arc<Dataset>>>,
+}
+
+impl Harness {
+    pub fn new(cfg: ExperimentConfig) -> Harness {
+        Harness { cfg, cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// The low-bit-width partner used for ConSS (paper Table II arrows).
+    pub fn l_operator(h: Operator) -> Result<Operator> {
+        Ok(match h {
+            Operator::ADD8 => Operator::ADD4,
+            Operator::ADD12 => Operator::ADD8,
+            Operator::MUL8 => Operator::MUL4,
+            other => {
+                return Err(Error::Config(format!(
+                    "no smaller ConSS partner for {other}"
+                )))
+            }
+        })
+    }
+
+    /// Characterized dataset for `op` (exhaustive, or seeded sample for the
+    /// 8×8 multiplier), cached across figures.
+    pub fn dataset(&self, op: Operator) -> Result<Arc<Dataset>> {
+        let key = op.name();
+        if let Some(ds) = self.cache.borrow().get(&key) {
+            return Ok(ds.clone());
+        }
+        let inputs = InputSet::for_operator(op, &self.cfg.artifacts_dir)?;
+        let ds = if op.exhaustive() {
+            characterize_all(op, &inputs, &Backend::Native)?
+        } else {
+            let mut rng = Rng::seed_from_u64(self.cfg.seed);
+            let cfgs =
+                AxoConfig::sample_unique(op.config_len(), self.cfg.train_samples, &mut rng);
+            characterize(op, &cfgs, &inputs, &Backend::Native)?
+        };
+        let arc = Arc::new(ds);
+        self.cache.borrow_mut().insert(key, arc.clone());
+        Ok(arc)
+    }
+
+    /// Validate (characterize) arbitrary configs of `op` natively.
+    pub fn validate(&self, op: Operator, configs: &[AxoConfig]) -> Result<Dataset> {
+        let inputs = InputSet::for_operator(op, &self.cfg.artifacts_dir)?;
+        characterize(op, configs, &inputs, &Backend::Native)
+    }
+
+    pub fn out_path(&self, name: &str) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.cfg.out_dir)?;
+        Ok(self.cfg.out_dir.join(name))
+    }
+
+    /// Write a CSV with a header row.
+    pub fn write_csv(
+        &self,
+        name: &str,
+        header: &[&str],
+        rows: &[Vec<String>],
+    ) -> Result<PathBuf> {
+        let path = self.out_path(name)?;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        writeln!(w, "{}", header.join(","))?;
+        for r in rows {
+            writeln!(w, "{}", r.join(","))?;
+        }
+        Ok(path)
+    }
+
+    /// Run a set of figure ids (or all), returning the printed summaries.
+    pub fn run(&self, which: &[String]) -> Result<Vec<String>> {
+        let all = [
+            "fig1", "fig2", "fig5", "fig10", "fig11", "fig12", "fig13", "fig14",
+            "fig15", "fig16", "fig17", "fig18", "tab2", "tab_est",
+            "ablate_distance", "ablate_noise", "ablate_seeds",
+        ];
+        let selected: Vec<&str> = if which.is_empty() || which.iter().any(|w| w == "all") {
+            all.to_vec()
+        } else {
+            which.iter().map(|s| s.as_str()).collect()
+        };
+        let mut summaries = Vec::new();
+        for id in selected {
+            let summary = match id {
+                "fig1" => figures::fig1_clustering_adders(self)?,
+                "fig2" => figures::fig2_trends_subsampled(self)?,
+                "fig5" => figures::fig5_trends_all_adders(self)?,
+                "fig10" => figures::fig10_clustering_multipliers(self)?,
+                "fig11" => figures::fig11_distance_distributions(self)?,
+                "fig12" => figures::fig12_matching(self)?,
+                "fig13" => figures::fig13_conss_accuracy(self)?,
+                "fig14" => figures::fig14_supersampling_regions(self)?,
+                "fig15" => dse_figs::fig15_hypervolume_comparison(self)?,
+                "fig16" => dse_figs::fig16_hv_progress(self)?,
+                "fig17" => dse_figs::fig17_pareto_fronts(self)?,
+                "fig18" => dse_figs::fig18_relative_hypervolume(self)?,
+                "tab2" => tables::tab2_operators(self)?,
+                "tab_est" => tables::tab_estimator_quality(self)?,
+                "ablate" => {
+                    let mut s = ablations::ablate_distance(self)?;
+                    s.push_str(&ablations::ablate_noise(self)?);
+                    s.push_str(&ablations::ablate_seeds(self)?);
+                    s
+                }
+                "ablate_distance" => ablations::ablate_distance(self)?,
+                "ablate_noise" => ablations::ablate_noise(self)?,
+                "ablate_seeds" => ablations::ablate_seeds(self)?,
+                other => return Err(Error::Config(format!("unknown figure id `{other}`"))),
+            };
+            summaries.push(format!("== {id} ==\n{summary}"));
+        }
+        Ok(summaries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    fn tiny_harness(tmp: &TempDir) -> Harness {
+        let mut cfg = ExperimentConfig::default();
+        cfg.out_dir = tmp.path().to_path_buf();
+        cfg.train_samples = 200;
+        cfg.conss.forest_trees = Some(5);
+        Harness::new(cfg)
+    }
+
+    #[test]
+    fn dataset_caching_returns_same_arc() {
+        let tmp = TempDir::new().unwrap();
+        let h = tiny_harness(&tmp);
+        let a = h.dataset(Operator::ADD4).unwrap();
+        let b = h.dataset(Operator::ADD4).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.len(), 15);
+    }
+
+    #[test]
+    fn l_operator_pairs() {
+        assert_eq!(Harness::l_operator(Operator::MUL8).unwrap(), Operator::MUL4);
+        assert_eq!(Harness::l_operator(Operator::ADD8).unwrap(), Operator::ADD4);
+        assert!(Harness::l_operator(Operator::ADD4).is_err());
+    }
+
+    #[test]
+    fn cheap_figures_produce_csv() {
+        let tmp = TempDir::new().unwrap();
+        let h = tiny_harness(&tmp);
+        let out = h.run(&["tab2".to_string(), "fig12".to_string()]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(tmp.join("tab2_operators.csv").exists());
+        assert!(tmp.join("fig12_match_counts.csv").exists());
+        assert!(out[0].contains("68.7 Billion"));
+    }
+
+    #[test]
+    fn unknown_figure_id_rejected() {
+        let tmp = TempDir::new().unwrap();
+        let h = tiny_harness(&tmp);
+        assert!(h.run(&["fig99".to_string()]).is_err());
+    }
+
+    #[test]
+    fn csv_writer_layout() {
+        let tmp = TempDir::new().unwrap();
+        let h = tiny_harness(&tmp);
+        let p = h
+            .write_csv("t.csv", &["a", "b"], &[vec!["1".into(), "2".into()]])
+            .unwrap();
+        assert_eq!(std::fs::read_to_string(p).unwrap(), "a,b\n1,2\n");
+    }
+}

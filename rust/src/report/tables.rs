@@ -1,0 +1,136 @@
+//! Table II (operator inventory) and the §V-B estimator-quality table.
+
+use super::Harness;
+use crate::error::Result;
+use crate::ml::gbt::{GbtParams, GradientBoostedTrees};
+use crate::ml::metrics::{r2, rmse};
+use crate::operator::Operator;
+use std::fmt::Write as _;
+
+/// Table II — integer arithmetic operators used in the evaluation.
+pub fn tab2_operators(h: &Harness) -> Result<String> {
+    let mut s = String::new();
+    let mut rows = Vec::new();
+    writeln!(
+        s,
+        "{:<22} {:>9} {:>16} {:>14}",
+        "operator", "bit-width", "possible designs", "config length"
+    )
+    .unwrap();
+    for op in Operator::ALL {
+        let designs = if op.exhaustive() {
+            format!("{}", op.design_space_size() + 1) // paper counts incl. zero
+        } else {
+            "68.7 Billion".into()
+        };
+        writeln!(
+            s,
+            "{:<22} {:>9} {:>16} {:>11}-bit",
+            match op.kind {
+                crate::operator::OperatorKind::UnsignedAdder => "Unsigned Adder",
+                crate::operator::OperatorKind::SignedMultiplier => "Signed Multiplier",
+            },
+            op.bits,
+            designs,
+            op.config_len()
+        )
+        .unwrap();
+        rows.push(vec![
+            op.name(),
+            op.bits.to_string(),
+            designs,
+            op.config_len().to_string(),
+        ]);
+    }
+    // ConSS upscale factors (ratio of configuration lengths, Table II).
+    writeln!(s, "\nConSS upscale factors (config-length ratios):").unwrap();
+    for (l, hop) in [
+        (Operator::ADD4, Operator::ADD8),
+        (Operator::ADD4, Operator::ADD12),
+        (Operator::ADD8, Operator::ADD12),
+        (Operator::MUL4, Operator::MUL8),
+    ] {
+        writeln!(
+            s,
+            "  {} -> {}: {:.1}x",
+            l.name(),
+            hop.name(),
+            hop.config_len() as f64 / l.config_len() as f64
+        )
+        .unwrap();
+    }
+    let path = h.write_csv(
+        "tab2_operators.csv",
+        &["operator", "bits", "possible_designs", "config_len"],
+        &rows,
+    )?;
+    writeln!(s, "csv: {}", path.display()).unwrap();
+    Ok(s)
+}
+
+/// §V-B — estimator quality per metric: products (PDP, PDPLUT) regress
+/// worse than their factor metrics, reproducing the paper's observation.
+pub fn tab_estimator_quality(h: &Harness) -> Result<String> {
+    let op = Operator::from_name(&h.cfg.operator)?;
+    let ds = h.dataset(op)?;
+    let l = op.config_len() as usize;
+    let x: Vec<f64> = ds
+        .configs
+        .iter()
+        .flat_map(|c| c.to_bits_f32().into_iter().map(|v| v as f64))
+        .collect();
+    let n = ds.len();
+    let split = n * 4 / 5;
+
+    let metrics: Vec<(&str, Vec<f64>)> = vec![
+        ("power_mw", ds.ppa.iter().map(|p| p.power_mw).collect()),
+        ("cpd_ns", ds.ppa.iter().map(|p| p.cpd_ns).collect()),
+        ("luts", ds.ppa.iter().map(|p| p.luts).collect()),
+        ("pdp", ds.ppa.iter().map(|p| p.pdp).collect()),
+        ("pdplut", ds.ppa.iter().map(|p| p.pdplut).collect()),
+        (
+            "avg_abs_rel_err",
+            ds.behav.iter().map(|b| b.avg_abs_rel_err).collect(),
+        ),
+    ];
+
+    let mut s = String::new();
+    let mut rows = Vec::new();
+    writeln!(s, "{:<18} {:>12} {:>8} {:>12}", "metric", "test RMSE", "R2", "norm RMSE").unwrap();
+    for (name, y) in &metrics {
+        let gbt = GradientBoostedTrees::fit(
+            &x[..split * l],
+            l,
+            &y[..split],
+            GbtParams::default(),
+        )?;
+        let pred: Vec<f64> = (split..n)
+            .map(|i| gbt.predict_row(&x[i * l..(i + 1) * l]))
+            .collect();
+        let truth = &y[split..];
+        let e = rmse(truth, &pred);
+        let r = r2(truth, &pred);
+        let span = truth.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            - truth.iter().cloned().fold(f64::INFINITY, f64::min);
+        let nrmse = if span > 0.0 { e / span } else { 0.0 };
+        writeln!(s, "{name:<18} {e:>12.5} {r:>8.4} {nrmse:>12.5}").unwrap();
+        rows.push(vec![
+            name.to_string(),
+            e.to_string(),
+            r.to_string(),
+            nrmse.to_string(),
+        ]);
+    }
+    let path = h.write_csv(
+        "tab_estimator_quality.csv",
+        &["metric", "rmse", "r2", "normalized_rmse"],
+        &rows,
+    )?;
+    writeln!(
+        s,
+        "(paper §V-B: product metrics PDP/PDPLUT report larger RMSE than raw metrics)"
+    )
+    .unwrap();
+    writeln!(s, "csv: {}", path.display()).unwrap();
+    Ok(s)
+}

@@ -1,0 +1,253 @@
+//! Typed wrappers over the compiled artifacts.
+//!
+//! * [`AxoEvalExec`] — the Pallas characterization kernel
+//!   (`axo_eval_*.hlo.txt`); implements [`BehavEvaluator`] so the
+//!   characterization pipeline can run on PJRT.
+//! * [`MlpExec`] — the surrogate-estimator / ConSS-generator MLP forwards
+//!   with weights fed as runtime literals from the AXOW container.
+//!
+//! Compiled shapes are static; callers may pass any number of rows and the
+//! wrapper pads the final batch (replicating the last row) and trims the
+//! outputs.
+
+use super::{literal_f32_2d, literal_i32_2d, LoadedExec, Runtime, WeightsFile};
+use crate::charac::pipeline::BehavEvaluator;
+use crate::charac::{BehavMetrics, InputSet};
+use crate::error::{Error, Result};
+use crate::operator::{multiplier, AxoConfig, Operator, OperatorKind};
+
+/// PJRT-backed behavioral characterization.
+///
+/// Constructed for one (operator, input set): the heavy operands — the
+/// `(T, L)` term matrix / `(T, 1)` operand columns — are uploaded once as
+/// literals and reused across every batch.
+pub struct AxoEvalExec {
+    exec: LoadedExec,
+    op: Operator,
+    batch: usize,
+    n_inputs: usize,
+    /// Cached input literals: adder → [a, b]; multiplier → [terms, exact].
+    input_literals: Vec<xla::Literal>,
+}
+
+impl AxoEvalExec {
+    /// Load `axo_eval_<op>` and pre-build the input literals.
+    pub fn new(rt: &Runtime, op: Operator, inputs: &InputSet) -> Result<AxoEvalExec> {
+        let exec = rt.load(&format!("axo_eval_{}", op.name()))?;
+        let batch = exec.entry.config_batch;
+        let n_inputs = exec.entry.n_inputs.unwrap_or(inputs.len());
+        if n_inputs != inputs.len() {
+            return Err(Error::Shape(format!(
+                "executable compiled for {n_inputs} inputs, got {}",
+                inputs.len()
+            )));
+        }
+        let input_literals = match op.kind {
+            OperatorKind::UnsignedAdder => {
+                let a: Vec<i32> = inputs.a.iter().map(|&v| v as i32).collect();
+                let b: Vec<i32> = inputs.b.iter().map(|&v| v as i32).collect();
+                vec![
+                    literal_i32_2d(&a, n_inputs, 1)?,
+                    literal_i32_2d(&b, n_inputs, 1)?,
+                ]
+            }
+            OperatorKind::SignedMultiplier => {
+                let l = op.config_len() as usize;
+                let terms = multiplier::term_matrix(op.bits, &inputs.a, &inputs.b);
+                let terms_f: Vec<f32> = terms.iter().map(|&v| v as f32).collect();
+                let exact_f: Vec<f32> = terms
+                    .chunks_exact(l)
+                    .map(|c| c.iter().sum::<i64>() as f32)
+                    .collect();
+                vec![
+                    literal_f32_2d(&terms_f, n_inputs, l)?,
+                    literal_f32_2d(&exact_f, n_inputs, 1)?,
+                ]
+            }
+        };
+        Ok(AxoEvalExec { exec, op, batch, n_inputs, input_literals })
+    }
+
+    pub fn operator(&self) -> Operator {
+        self.op
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Evaluate BEHAV metrics for any number of configurations.
+    pub fn eval_configs(&self, configs: &[AxoConfig]) -> Result<Vec<BehavMetrics>> {
+        let l = self.op.config_len() as usize;
+        let mut out = Vec::with_capacity(configs.len());
+        for chunk in configs.chunks(self.batch) {
+            let mut rows: Vec<&AxoConfig> = chunk.iter().collect();
+            while rows.len() < self.batch {
+                rows.push(&chunk[chunk.len() - 1]); // pad with last row
+            }
+            let cfg_lit = match self.op.kind {
+                OperatorKind::UnsignedAdder => {
+                    let data: Vec<i32> = rows
+                        .iter()
+                        .flat_map(|c| c.to_bits_u8().into_iter().map(|b| b as i32))
+                        .collect();
+                    literal_i32_2d(&data, self.batch, l)?
+                }
+                OperatorKind::SignedMultiplier => {
+                    let data: Vec<f32> =
+                        rows.iter().flat_map(|c| c.to_bits_f32()).collect();
+                    literal_f32_2d(&data, self.batch, l)?
+                }
+            };
+            let raw = self.execute_with_inputs(&cfg_lit)?;
+            for row in raw.chunks_exact(4).take(chunk.len()) {
+                out.push(BehavMetrics {
+                    avg_abs_err: row[0] as f64,
+                    avg_abs_rel_err: row[1] as f64,
+                    max_abs_err: row[2] as f64,
+                    err_prob: row[3] as f64,
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    fn execute_with_inputs(&self, cfg_lit: &xla::Literal) -> Result<Vec<f32>> {
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3);
+        args.push(cfg_lit);
+        for lit in &self.input_literals {
+            args.push(lit);
+        }
+        let result = self.exec.execute_refs(&args)?;
+        Ok(result)
+    }
+}
+
+impl LoadedExec {
+    /// Execute with borrowed literals (avoids copying the cached heavy
+    /// operands) and return the f32 contents of the 1-tuple output.
+    pub fn execute_refs(&self, args: &[&xla::Literal]) -> Result<Vec<f32>> {
+        let result = self.exe.execute::<&xla::Literal>(args)?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Xla("empty execution result".into()))?
+            .to_literal_sync()?;
+        Ok(lit.to_tuple1()?.to_vec::<f32>()?)
+    }
+}
+
+impl BehavEvaluator for AxoEvalExec {
+    fn eval(
+        &self,
+        op: Operator,
+        configs: &[AxoConfig],
+        inputs: &InputSet,
+    ) -> Result<Vec<BehavMetrics>> {
+        if op != self.op {
+            return Err(Error::Shape(format!(
+                "executable is for {}, asked to evaluate {op}",
+                self.op
+            )));
+        }
+        if inputs.len() != self.n_inputs {
+            return Err(Error::Shape(format!(
+                "executable compiled for {} inputs, got {}",
+                self.n_inputs,
+                inputs.len()
+            )));
+        }
+        self.eval_configs(configs)
+    }
+}
+
+/// A compiled MLP forward (estimator or ConSS generator).
+pub struct MlpExec {
+    exec: LoadedExec,
+    weights: Vec<xla::Literal>,
+    pub batch: usize,
+    pub in_features: usize,
+    pub out_features: usize,
+    /// Target unscaling (estimator only): (min, max) per output column.
+    pub target_min: Vec<f64>,
+    pub target_max: Vec<f64>,
+}
+
+impl MlpExec {
+    pub fn new(rt: &Runtime, name: &str) -> Result<MlpExec> {
+        let exec = rt.load(name)?;
+        let entry = exec.entry.clone();
+        let weights_name = entry.weights.clone().ok_or_else(|| {
+            Error::ArtifactCorrupt {
+                path: "manifest.json".into(),
+                reason: format!("executable `{name}` has no weights"),
+            }
+        })?;
+        let wf = WeightsFile::load(&rt.artifacts_dir().join(weights_name))?;
+        let weights = wf.literals_in_order(&entry.param_order)?;
+        let in_features = entry.inputs[0].shape[1];
+        let out_features = wf
+            .tensors
+            .last()
+            .map(|t| *t.dims.last().unwrap_or(&0))
+            .unwrap_or(0);
+        Ok(MlpExec {
+            exec,
+            weights,
+            batch: entry.config_batch,
+            in_features,
+            out_features,
+            target_min: entry.target_min.clone(),
+            target_max: entry.target_max.clone(),
+        })
+    }
+
+    /// Raw forward over row-major f32 features (any row count; padded).
+    pub fn forward(&self, rows: &[f32]) -> Result<Vec<f32>> {
+        if rows.len() % self.in_features != 0 {
+            return Err(Error::Shape(format!(
+                "feature rows not divisible by {}",
+                self.in_features
+            )));
+        }
+        let n = rows.len() / self.in_features;
+        let mut out = Vec::with_capacity(n * self.out_features);
+        for chunk in rows.chunks(self.batch * self.in_features) {
+            let rows_in_chunk = chunk.len() / self.in_features;
+            let mut padded = chunk.to_vec();
+            let last_row = &chunk[(rows_in_chunk - 1) * self.in_features..];
+            while padded.len() < self.batch * self.in_features {
+                padded.extend_from_slice(last_row);
+            }
+            let x = literal_f32_2d(&padded, self.batch, self.in_features)?;
+            let mut args: Vec<&xla::Literal> = vec![&x];
+            for w in &self.weights {
+                args.push(w);
+            }
+            let raw = self.exec.execute_refs(&args)?;
+            out.extend_from_slice(&raw[..rows_in_chunk * self.out_features]);
+        }
+        Ok(out)
+    }
+
+    /// Estimator mode: unscale outputs to metric units using the manifest's
+    /// min/max (column order = manifest `targets`).
+    pub fn predict_unscaled(&self, rows: &[f32]) -> Result<Vec<Vec<f64>>> {
+        if self.target_min.len() != self.out_features {
+            return Err(Error::Ml("executable has no target scaling info".into()));
+        }
+        let raw = self.forward(rows)?;
+        Ok(raw
+            .chunks_exact(self.out_features)
+            .map(|r| {
+                r.iter()
+                    .enumerate()
+                    .map(|(k, &v)| {
+                        self.target_min[k]
+                            + (v as f64) * (self.target_max[k] - self.target_min[k])
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,176 @@
+//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`).
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One tensor argument of a compiled executable.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub role: String,
+}
+
+/// One executable's metadata.
+#[derive(Debug, Clone, Default)]
+pub struct ExecEntry {
+    pub hlo: String,
+    pub kind: String,
+    pub weights: Option<String>,
+    pub bits: Option<u32>,
+    pub config_len: Option<u32>,
+    pub config_batch: usize,
+    pub n_inputs: Option<usize>,
+    pub noise_bits: Option<u32>,
+    pub inputs: Vec<InputSpec>,
+    pub param_order: Vec<String>,
+    pub target_min: Vec<f64>,
+    pub target_max: Vec<f64>,
+    pub targets: Vec<String>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub executables: HashMap<String, ExecEntry>,
+}
+
+fn str_vec(v: Option<&Json>) -> Vec<String> {
+    v.and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+        .unwrap_or_default()
+}
+
+fn f64_vec(v: Option<&Json>) -> Vec<f64> {
+    v.and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+        .unwrap_or_default()
+}
+
+impl ExecEntry {
+    fn from_json(v: &Json) -> Option<ExecEntry> {
+        let inputs = v
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|i| {
+                Some(InputSpec {
+                    shape: i
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Option<Vec<usize>>>()?,
+                    dtype: i.get("dtype")?.as_str()?.to_string(),
+                    role: i.get("role")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Option<Vec<InputSpec>>>()?;
+        Some(ExecEntry {
+            hlo: v.get("hlo")?.as_str()?.to_string(),
+            kind: v.get("kind")?.as_str()?.to_string(),
+            weights: v.get("weights").and_then(Json::as_str).map(String::from),
+            bits: v.get("bits").and_then(Json::as_u64).map(|b| b as u32),
+            config_len: v.get("config_len").and_then(Json::as_u64).map(|b| b as u32),
+            config_batch: v.get("config_batch")?.as_usize()?,
+            n_inputs: v.get("n_inputs").and_then(Json::as_usize),
+            noise_bits: v.get("noise_bits").and_then(Json::as_u64).map(|b| b as u32),
+            inputs,
+            param_order: str_vec(v.get("param_order")),
+            target_min: f64_vec(v.get("target_min")),
+            target_max: f64_vec(v.get("target_max")),
+            targets: str_vec(v.get("targets")),
+        })
+    }
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|_| Error::ArtifactMissing { path: path.to_path_buf() })?;
+        Self::parse(&text).map_err(|reason| Error::ArtifactCorrupt {
+            path: path.to_path_buf(),
+            reason,
+        })
+    }
+
+    pub fn parse(text: &str) -> std::result::Result<Manifest, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        let version =
+            v.get("version").and_then(Json::as_u64).ok_or("missing version")? as u32;
+        if version != 1 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let mut executables = HashMap::new();
+        let execs = v
+            .get("executables")
+            .and_then(Json::as_obj)
+            .ok_or("missing executables")?;
+        for (name, entry) in execs {
+            let e = ExecEntry::from_json(entry)
+                .ok_or_else(|| format!("malformed entry `{name}`"))?;
+            executables.insert(name.clone(), e);
+        }
+        Ok(Manifest { version, executables })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ExecEntry> {
+        self.executables.get(name).ok_or_else(|| Error::ArtifactCorrupt {
+            path: "manifest.json".into(),
+            reason: format!("no executable `{name}` in manifest"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(
+            r#"{"version":1,"executables":{"x":{"hlo":"x.hlo.txt","kind":"adder_eval","config_batch":64,"inputs":[{"shape":[64,8],"dtype":"i32","role":"configs"}]}}}"#,
+        )
+        .unwrap();
+        let e = m.entry("x").unwrap();
+        assert_eq!(e.config_batch, 64);
+        assert_eq!(e.inputs[0].shape, vec![64, 8]);
+        assert_eq!(e.inputs[0].role, "configs");
+        assert!(e.weights.is_none());
+        assert!(m.entry("y").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version_and_shape() {
+        assert!(Manifest::parse(r#"{"version":9,"executables":{}}"#).is_err());
+        assert!(Manifest::parse(r#"{"executables":{}}"#).is_err());
+        assert!(Manifest::parse(r#"{"version":1}"#).is_err());
+        assert!(Manifest::parse(r#"{"version":1,"executables":{"x":{"kind":"y"}}}"#).is_err());
+    }
+
+    #[test]
+    fn load_missing_is_artifact_missing() {
+        let dir = TempDir::new().unwrap();
+        assert!(matches!(
+            Manifest::load(&dir.path().join("nope.json")),
+            Err(Error::ArtifactMissing { .. })
+        ));
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.executables.contains_key("axo_eval_mul8"));
+            let est = m.entry("estimator_mul8").unwrap();
+            assert_eq!(est.param_order.len(), 6); // 3 layers × (w, b)
+            assert_eq!(est.target_min.len(), 2);
+            assert_eq!(est.targets, vec!["pdplut", "avg_abs_rel_err"]);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! AXOW weights file parser.
+//!
+//! Trained MLP parameters are *runtime arguments* of the AOT-compiled
+//! forwards, shipped in a flat little-endian container written by
+//! `aot.py::write_weights_bin`:
+//!
+//! ```text
+//! "AXOW" | u32 version=1 | u32 n_tensors |
+//! per tensor: u32 name_len | name | u32 ndim | u32 dims[] | f32 data[]
+//! ```
+
+use crate::error::{Error, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// One named tensor.
+#[derive(Debug, Clone)]
+pub struct WeightTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl WeightTensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// A parsed weights container (ordered as written).
+#[derive(Debug, Clone)]
+pub struct WeightsFile {
+    pub tensors: Vec<WeightTensor>,
+}
+
+impl WeightsFile {
+    pub fn load(path: &Path) -> Result<WeightsFile> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|_| Error::ArtifactMissing { path: path.to_path_buf() })?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf).map_err(|reason| Error::ArtifactCorrupt {
+            path: path.to_path_buf(),
+            reason,
+        })
+    }
+
+    fn parse(buf: &[u8]) -> std::result::Result<WeightsFile, String> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> std::result::Result<&[u8], String> {
+            if *pos + n > buf.len() {
+                return Err(format!("truncated at offset {pos}"));
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let u32le = |pos: &mut usize| -> std::result::Result<u32, String> {
+            Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
+        };
+
+        if take(&mut pos, 4)? != b"AXOW" {
+            return Err("bad magic".into());
+        }
+        let version = u32le(&mut pos)?;
+        if version != 1 {
+            return Err(format!("unsupported version {version}"));
+        }
+        let n_tensors = u32le(&mut pos)? as usize;
+        if n_tensors > 10_000 {
+            return Err(format!("implausible tensor count {n_tensors}"));
+        }
+        let mut tensors = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let name_len = u32le(&mut pos)? as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+                .map_err(|e| e.to_string())?;
+            let ndim = u32le(&mut pos)? as usize;
+            if ndim > 8 {
+                return Err(format!("implausible ndim {ndim} for `{name}`"));
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(u32le(&mut pos)? as usize);
+            }
+            let count: usize = dims.iter().product();
+            let raw = take(&mut pos, count * 4)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.push(WeightTensor { name, dims, data });
+        }
+        if pos != buf.len() {
+            return Err(format!("{} trailing bytes", buf.len() - pos));
+        }
+        Ok(WeightsFile { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&WeightTensor> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| Error::Ml(format!("weight tensor `{name}` not found")))
+    }
+
+    /// Tensors as XLA literals in `order` (the manifest's `param_order`) —
+    /// 1-D tensors stay rank-1, 2-D reshape to their matrix shape.
+    pub fn literals_in_order(&self, order: &[String]) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(order.len());
+        for name in order {
+            let t = self.get(name)?;
+            let lit = xla::Literal::vec1(&t.data);
+            let lit = if t.dims.len() >= 2 {
+                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)?
+            } else {
+                lit
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_test_file(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"AXOW").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        // tensor "w": 2x2
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(b"w").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        // tensor "b": 2
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(b"b").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        for v in [0.5f32, -0.5] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let p = dir.path().join("w.bin");
+        write_test_file(&p);
+        let w = WeightsFile::load(&p).unwrap();
+        assert_eq!(w.tensors.len(), 2);
+        assert_eq!(w.get("w").unwrap().dims, vec![2, 2]);
+        assert_eq!(w.get("w").unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w.get("b").unwrap().data, vec![0.5, -0.5]);
+        assert!(w.get("nope").is_err());
+    }
+
+    #[test]
+    fn corrupt_files_rejected() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let p = dir.path().join("bad.bin");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(matches!(WeightsFile::load(&p), Err(Error::ArtifactCorrupt { .. })));
+        // Truncated.
+        let p2 = dir.path().join("trunc.bin");
+        write_test_file(&p2);
+        let full = std::fs::read(&p2).unwrap();
+        std::fs::write(&p2, &full[..full.len() - 3]).unwrap();
+        assert!(matches!(WeightsFile::load(&p2), Err(Error::ArtifactCorrupt { .. })));
+        // Trailing garbage.
+        let p3 = dir.path().join("trail.bin");
+        let mut with_trailer = full.clone();
+        with_trailer.extend_from_slice(b"xx");
+        std::fs::write(&p3, &with_trailer).unwrap();
+        assert!(matches!(WeightsFile::load(&p3), Err(Error::ArtifactCorrupt { .. })));
+    }
+
+    #[test]
+    fn real_weights_parse_if_present() {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/estimator_mul8.weights.bin");
+        if p.exists() {
+            let w = WeightsFile::load(&p).unwrap();
+            assert_eq!(w.tensors.len(), 6);
+            assert_eq!(w.get("estimator.layer0.w").unwrap().dims, vec![36, 64]);
+        }
+    }
+}

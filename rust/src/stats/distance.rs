@@ -1,0 +1,130 @@
+//! Distance measures for the similarity analysis (paper §IV-A-2, Fig. 6).
+//!
+//! Points live in the 2-D (BEHAV, PPA) metric plane (scaled). Three
+//! measures, each with an optional *sign* encoding the relative location of
+//! the L point w.r.t. the H point (paper: "adding a sign ... provides
+//! information regarding their relative location"):
+//!
+//! * Euclidean `d_e = sqrt(Δb² + Δp²)` — used for the supersampling
+//!   datasets (§V-C picks it for its wide, well-differentiated
+//!   distribution, Fig. 11);
+//! * Manhattan `d_m = |Δb| + |Δp|` — similar spread, slower growth;
+//! * Pareto `d_p = max(|Δb|, |Δp|)` — DSE-specific dominance-style
+//!   measure; long-tailed distribution (many ties), hence *not* chosen.
+
+/// Distance measure selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DistanceKind {
+    Euclidean,
+    Manhattan,
+    Pareto,
+}
+
+impl DistanceKind {
+    pub const ALL: [DistanceKind; 3] =
+        [DistanceKind::Euclidean, DistanceKind::Manhattan, DistanceKind::Pareto];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DistanceKind::Euclidean => "euclidean",
+            DistanceKind::Manhattan => "manhattan",
+            DistanceKind::Pareto => "pareto",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<DistanceKind> {
+        Self::ALL.into_iter().find(|k| k.name() == name)
+    }
+
+    /// Unsigned distance between two (BEHAV, PPA) points.
+    #[inline]
+    pub fn distance(&self, a: [f64; 2], b: [f64; 2]) -> f64 {
+        let db = (a[0] - b[0]).abs();
+        let dp = (a[1] - b[1]).abs();
+        match self {
+            DistanceKind::Euclidean => (db * db + dp * dp).sqrt(),
+            DistanceKind::Manhattan => db + dp,
+            DistanceKind::Pareto => db.max(dp),
+        }
+    }
+
+    /// Signed variant: negative when `to` dominates `from` (both coordinates
+    /// strictly smaller — i.e. the L design is better on both axes).
+    #[inline]
+    pub fn signed_distance(&self, from: [f64; 2], to: [f64; 2]) -> f64 {
+        let d = self.distance(from, to);
+        if to[0] < from[0] && to[1] < from[1] {
+            -d
+        } else {
+            d
+        }
+    }
+}
+
+/// Full pairwise distance matrix, row-major `(h.len(), l.len())` — the
+/// Fig. 12(a) heat-map and the matching substrate.
+pub fn distance_matrix(
+    kind: DistanceKind,
+    h_points: &[[f64; 2]],
+    l_points: &[[f64; 2]],
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(h_points.len() * l_points.len());
+    for h in h_points {
+        for l in l_points {
+            out.push(kind.distance(*h, *l));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_agree_on_axis() {
+        let a = [0.0, 0.0];
+        let b = [3.0, 0.0];
+        for k in DistanceKind::ALL {
+            assert_eq!(k.distance(a, b), 3.0);
+        }
+    }
+
+    #[test]
+    fn measure_ordering_off_axis() {
+        // For a 3-4-5 triangle: manhattan 7 > euclid 5 > pareto 4.
+        let a = [0.0, 0.0];
+        let b = [3.0, 4.0];
+        assert_eq!(DistanceKind::Euclidean.distance(a, b), 5.0);
+        assert_eq!(DistanceKind::Manhattan.distance(a, b), 7.0);
+        assert_eq!(DistanceKind::Pareto.distance(a, b), 4.0);
+    }
+
+    #[test]
+    fn signed_distance_negative_iff_dominating() {
+        let h = [0.5, 0.5];
+        assert!(DistanceKind::Euclidean.signed_distance(h, [0.1, 0.1]) < 0.0);
+        assert!(DistanceKind::Euclidean.signed_distance(h, [0.1, 0.9]) > 0.0);
+        assert!(DistanceKind::Euclidean.signed_distance(h, [0.9, 0.1]) > 0.0);
+    }
+
+    #[test]
+    fn matrix_layout() {
+        let h = [[0.0, 0.0], [1.0, 1.0]];
+        let l = [[0.0, 1.0], [1.0, 0.0], [0.0, 0.0]];
+        let m = distance_matrix(DistanceKind::Manhattan, &h, &l);
+        assert_eq!(m.len(), 6);
+        assert_eq!(m[0], 1.0); // h0-l0
+        assert_eq!(m[2], 0.0); // h0-l2
+        assert_eq!(m[3 + 2], 2.0); // h1-l2
+    }
+
+    #[test]
+    fn symmetry() {
+        let a = [0.3, 0.9];
+        let b = [0.7, 0.2];
+        for k in DistanceKind::ALL {
+            assert!((k.distance(a, b) - k.distance(b, a)).abs() < 1e-15);
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Fixed-bin histograms — the Fig. 11 distance-distribution analysis.
+
+/// A simple equal-width histogram over `[lo, hi]`.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub n: u64,
+}
+
+impl Histogram {
+    pub fn from_values(values: &[f64], bins: usize) -> Histogram {
+        assert!(bins >= 1);
+        let lo = values.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = values.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let (lo, hi) = if values.is_empty() { (0.0, 1.0) } else { (lo, hi) };
+        Self::from_values_range(values, bins, lo, hi)
+    }
+
+    pub fn from_values_range(values: &[f64], bins: usize, lo: f64, hi: f64) -> Histogram {
+        let span = if hi > lo { hi - lo } else { 1.0 };
+        let mut counts = vec![0u64; bins];
+        for &v in values {
+            let k = (((v - lo) / span) * bins as f64).floor() as isize;
+            let k = k.clamp(0, bins as isize - 1) as usize;
+            counts[k] += 1;
+        }
+        Histogram { lo, hi, counts, n: values.len() as u64 }
+    }
+
+    /// Bin centers for plotting.
+    pub fn centers(&self) -> Vec<f64> {
+        let bins = self.counts.len();
+        let w = (self.hi - self.lo) / bins as f64;
+        (0..bins).map(|k| self.lo + w * (k as f64 + 0.5)).collect()
+    }
+
+    /// Normalized densities (sum = 1).
+    pub fn densities(&self) -> Vec<f64> {
+        let n = self.n.max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / n).collect()
+    }
+
+    /// Spread proxy used in the paper's distance-measure selection: the
+    /// fraction of non-empty bins. A long-tailed measure (Pareto) piles
+    /// mass into few bins; Euclidean/Manhattan spread widely (Fig. 11).
+    pub fn occupancy(&self) -> f64 {
+        let nz = self.counts.iter().filter(|&&c| c > 0).count();
+        nz as f64 / self.counts.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_centers() {
+        let h = Histogram::from_values_range(&[0.1, 0.9, 0.5, 0.55], 2, 0.0, 1.0);
+        assert_eq!(h.counts, vec![1, 3]);
+        assert_eq!(h.centers(), vec![0.25, 0.75]);
+        assert_eq!(h.densities(), vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn values_at_edges_clamp() {
+        let h = Histogram::from_values_range(&[0.0, 1.0, 1.5, -0.5], 4, 0.0, 1.0);
+        assert_eq!(h.counts.iter().sum::<u64>(), 4);
+        assert_eq!(h.counts[0], 2); // 0.0 and clamped -0.5
+        assert_eq!(h.counts[3], 2); // 1.0 and clamped 1.5
+    }
+
+    #[test]
+    fn occupancy_detects_long_tail() {
+        let wide: Vec<f64> = (0..100).map(|i| i as f64 / 100.0).collect();
+        let tail = vec![0.0; 99].into_iter().chain([1.0]).collect::<Vec<_>>();
+        let hw = Histogram::from_values_range(&wide, 10, 0.0, 1.0);
+        let ht = Histogram::from_values_range(&tail, 10, 0.0, 1.0);
+        assert!(hw.occupancy() > ht.occupancy());
+    }
+
+    #[test]
+    fn empty_values() {
+        let h = Histogram::from_values(&[], 4);
+        assert_eq!(h.n, 0);
+        assert_eq!(h.counts, vec![0, 0, 0, 0]);
+    }
+}

@@ -1,0 +1,219 @@
+//! k-means clustering with k-means++ seeding and elbow-based k selection.
+//!
+//! Reproduces the clustering analysis of Figs. 1 and 10: the paper clusters
+//! the (PPA, BEHAV) design points of two bit-widths (scaled and unscaled)
+//! with k from the elbow method and compares centroid alignment.
+
+use crate::util::rng::Rng;
+
+/// Result of one k-means run over 2-D points.
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    pub centroids: Vec<[f64; 2]>,
+    pub assignment: Vec<usize>,
+    /// Total within-cluster sum of squared distances.
+    pub inertia: f64,
+    pub iterations: u32,
+}
+
+fn d2(a: [f64; 2], b: [f64; 2]) -> f64 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    dx * dx + dy * dy
+}
+
+impl KMeans {
+    /// Lloyd's algorithm with k-means++ init (seeded, deterministic).
+    pub fn fit(points: &[[f64; 2]], k: usize, seed: u64) -> KMeans {
+        assert!(k >= 1 && !points.is_empty());
+        let k = k.min(points.len());
+        let mut rng = Rng::seed_from_u64(seed);
+
+        // k-means++ seeding.
+        let mut centroids: Vec<[f64; 2]> = Vec::with_capacity(k);
+        centroids.push(points[rng.gen_index(points.len())]);
+        while centroids.len() < k {
+            let dists: Vec<f64> = points
+                .iter()
+                .map(|p| centroids.iter().map(|c| d2(*p, *c)).fold(f64::INFINITY, f64::min))
+                .collect();
+            let total: f64 = dists.iter().sum();
+            if total <= 0.0 {
+                // all points coincide with centroids; fill arbitrarily
+                centroids.push(points[rng.gen_index(points.len())]);
+                continue;
+            }
+            let mut target = rng.gen_f64() * total;
+            let mut pick = 0;
+            for (i, d) in dists.iter().enumerate() {
+                target -= d;
+                if target <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            centroids.push(points[pick]);
+        }
+
+        let mut assignment = vec![0usize; points.len()];
+        let mut iterations = 0;
+        for _ in 0..200 {
+            iterations += 1;
+            // Assign.
+            let mut changed = false;
+            for (i, p) in points.iter().enumerate() {
+                let best = (0..centroids.len())
+                    .min_by(|&a, &b| {
+                        d2(*p, centroids[a]).partial_cmp(&d2(*p, centroids[b])).unwrap()
+                    })
+                    .unwrap();
+                if assignment[i] != best {
+                    assignment[i] = best;
+                    changed = true;
+                }
+            }
+            // Update.
+            let mut sums = vec![[0.0f64; 2]; centroids.len()];
+            let mut counts = vec![0usize; centroids.len()];
+            for (i, p) in points.iter().enumerate() {
+                sums[assignment[i]][0] += p[0];
+                sums[assignment[i]][1] += p[1];
+                counts[assignment[i]] += 1;
+            }
+            for (c, (s, &n)) in centroids.iter_mut().zip(sums.iter().zip(&counts)) {
+                if n > 0 {
+                    *c = [s[0] / n as f64, s[1] / n as f64];
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+
+        let inertia = points
+            .iter()
+            .zip(&assignment)
+            .map(|(p, &a)| d2(*p, centroids[a]))
+            .sum();
+        KMeans { centroids, assignment, inertia, iterations }
+    }
+
+    /// Elbow method: fit k = 1..=k_max, pick the k with the largest drop in
+    /// the second difference of inertia (the classic knee heuristic).
+    pub fn elbow(points: &[[f64; 2]], k_max: usize, seed: u64) -> (usize, Vec<f64>) {
+        let k_max = k_max.min(points.len()).max(1);
+        let inertias: Vec<f64> =
+            (1..=k_max).map(|k| KMeans::fit(points, k, seed).inertia).collect();
+        if inertias.len() < 3 {
+            return (inertias.len(), inertias);
+        }
+        let mut best_k = 2;
+        let mut best_curv = f64::NEG_INFINITY;
+        for k in 1..inertias.len() - 1 {
+            let curv = inertias[k - 1] - 2.0 * inertias[k] + inertias[k + 1];
+            if curv > best_curv {
+                best_curv = curv;
+                best_k = k + 1; // inertias[k] is for k+1 clusters
+            }
+        }
+        (best_k, inertias)
+    }
+
+    /// Cluster sizes (used by the figure harness).
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut out = vec![0usize; self.centroids.len()];
+        for &a in &self.assignment {
+            out[a] += 1;
+        }
+        out
+    }
+}
+
+/// Greedy minimal-total-distance matching between two centroid sets —
+/// quantifies the Fig. 1(b)/10 "centroid alignment" observation.
+pub fn centroid_alignment(a: &[[f64; 2]], b: &[[f64; 2]]) -> f64 {
+    let mut used = vec![false; b.len()];
+    let mut total = 0.0;
+    for ca in a {
+        let mut best = f64::INFINITY;
+        let mut best_j = None;
+        for (j, cb) in b.iter().enumerate() {
+            if !used[j] {
+                let d = d2(*ca, *cb).sqrt();
+                if d < best {
+                    best = d;
+                    best_j = Some(j);
+                }
+            }
+        }
+        if let Some(j) = best_j {
+            used[j] = true;
+            total += best;
+        }
+    }
+    total / a.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs() -> Vec<[f64; 2]> {
+        let mut pts = Vec::new();
+        for i in 0..20 {
+            let t = i as f64 * 0.01;
+            pts.push([0.0 + t, 0.0 + t]);
+            pts.push([1.0 + t, 1.0 + t]);
+            pts.push([0.0 + t, 1.0 - t]);
+        }
+        pts
+    }
+
+    #[test]
+    fn separates_blobs() {
+        let km = KMeans::fit(&blobs(), 3, 1);
+        assert_eq!(km.centroids.len(), 3);
+        let sizes = km.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 60);
+        assert!(sizes.iter().all(|&s| s == 20), "{sizes:?}");
+        assert!(km.inertia < 1.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = KMeans::fit(&blobs(), 3, 7);
+        let b = KMeans::fit(&blobs(), 3, 7);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn inertia_nonincreasing_in_k() {
+        let pts = blobs();
+        let (_, inertias) = KMeans::elbow(&pts, 6, 3);
+        for w in inertias.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "{inertias:?}");
+        }
+    }
+
+    #[test]
+    fn elbow_finds_three_blobs() {
+        let (k, _) = KMeans::elbow(&blobs(), 8, 5);
+        assert!((2..=4).contains(&k), "elbow k = {k}");
+    }
+
+    #[test]
+    fn alignment_zero_for_identical() {
+        let c = vec![[0.0, 0.0], [1.0, 1.0]];
+        assert_eq!(centroid_alignment(&c, &c), 0.0);
+        let d = vec![[0.5, 0.0], [1.0, 1.0]];
+        assert!(centroid_alignment(&c, &d) > 0.0);
+    }
+
+    #[test]
+    fn k_clamped_to_points() {
+        let pts = vec![[0.0, 0.0], [1.0, 1.0]];
+        let km = KMeans::fit(&pts, 10, 0);
+        assert!(km.centroids.len() <= 2);
+    }
+}

@@ -1,0 +1,18 @@
+//! Statistical analysis toolkit (paper §IV-A).
+//!
+//! Everything the paper's "Statistical Analysis" block needs: min-max
+//! scaling, k-means clustering with elbow-based k selection (Figs. 1/10),
+//! the three distance measures with optional sign (Fig. 6, Fig. 11
+//! distributions), histograms, and correlation coefficients used in the
+//! similarity analysis across bit-widths (Figs. 2/5).
+
+pub mod correlation;
+pub mod distance;
+pub mod histogram;
+pub mod kmeans;
+pub mod scaling;
+
+pub use distance::DistanceKind;
+pub use histogram::Histogram;
+pub use kmeans::KMeans;
+pub use scaling::MinMaxScaler;

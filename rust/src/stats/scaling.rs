@@ -1,0 +1,102 @@
+//! Column-wise min-max scaling to [0, 1].
+//!
+//! The paper compares operators of different bit-widths in *scaled* metric
+//! space (Fig. 1b) and trains ConSS on scaled constraint values; constant
+//! columns map to 0 (same convention as `matching.minmax_scale` in python).
+
+use crate::error::{Error, Result};
+
+/// Fitted min-max scaler over fixed-width rows.
+#[derive(Debug, Clone)]
+pub struct MinMaxScaler {
+    pub min: Vec<f64>,
+    pub max: Vec<f64>,
+}
+
+impl MinMaxScaler {
+    /// Fit over row-major `data` with `dim` columns.
+    pub fn fit(data: &[f64], dim: usize) -> Result<MinMaxScaler> {
+        if dim == 0 || data.is_empty() || data.len() % dim != 0 {
+            return Err(Error::Dataset(format!(
+                "cannot fit scaler: len {} dim {dim}",
+                data.len()
+            )));
+        }
+        let mut min = vec![f64::INFINITY; dim];
+        let mut max = vec![f64::NEG_INFINITY; dim];
+        for row in data.chunks_exact(dim) {
+            for (k, &v) in row.iter().enumerate() {
+                min[k] = min[k].min(v);
+                max[k] = max[k].max(v);
+            }
+        }
+        Ok(MinMaxScaler { min, max })
+    }
+
+    pub fn fit_points2(points: &[[f64; 2]]) -> Result<MinMaxScaler> {
+        let flat: Vec<f64> = points.iter().flatten().copied().collect();
+        Self::fit(&flat, 2)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.min.len()
+    }
+
+    /// Scale one value in column `k` (constant columns map to 0).
+    #[inline]
+    pub fn scale_value(&self, k: usize, v: f64) -> f64 {
+        let span = self.max[k] - self.min[k];
+        if span > 0.0 {
+            (v - self.min[k]) / span
+        } else {
+            0.0
+        }
+    }
+
+    /// Inverse transform of one column value.
+    #[inline]
+    pub fn unscale_value(&self, k: usize, s: f64) -> f64 {
+        self.min[k] + s * (self.max[k] - self.min[k])
+    }
+
+    pub fn transform_row(&self, row: &[f64]) -> Vec<f64> {
+        row.iter().enumerate().map(|(k, &v)| self.scale_value(k, v)).collect()
+    }
+
+    pub fn transform_points2(&self, points: &[[f64; 2]]) -> Vec<[f64; 2]> {
+        points
+            .iter()
+            .map(|p| [self.scale_value(0, p[0]), self.scale_value(1, p[1])])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_transform_roundtrip() {
+        let pts = vec![[0.0, 5.0], [10.0, 5.0], [5.0, 5.0]];
+        let s = MinMaxScaler::fit_points2(&pts).unwrap();
+        let t = s.transform_points2(&pts);
+        assert_eq!(t, vec![[0.0, 0.0], [1.0, 0.0], [0.5, 0.0]]);
+        assert_eq!(s.unscale_value(0, 0.5), 5.0);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(MinMaxScaler::fit(&[1.0, 2.0, 3.0], 2).is_err());
+        assert!(MinMaxScaler::fit(&[], 2).is_err());
+        assert!(MinMaxScaler::fit(&[1.0], 0).is_err());
+    }
+
+    #[test]
+    fn scale_is_bounded() {
+        let s = MinMaxScaler::fit(&[1.0, 3.0, 9.0], 1).unwrap();
+        for v in [1.0, 3.0, 9.0] {
+            let t = s.scale_value(0, v);
+            assert!((0.0..=1.0).contains(&t));
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Surrogate estimators — the GA's fitness backends (paper §IV-A-1, §V-B).
+//!
+//! During GA evolution the PPF is ranked on *predicted* PPA and BEHAV
+//! metrics; validation (PPF → VPF) re-characterizes the survivors. Three
+//! interchangeable backends implement [`Surrogate`]:
+//!
+//! * [`TableSurrogate`] — exact lookup from a characterized dataset; the
+//!   paper uses actual characterization for every operator except the 8×8
+//!   multiplier ("we used ML-based estimators only for the signed 8-bit
+//!   multiplier AxOs").
+//! * [`GbtSurrogate`] — native gradient-boosted trees per metric, the
+//!   CatBoost/LightGBM stand-in.
+//! * `MlpExec` (via [`PjrtSurrogate`] in the coordinator) — the
+//!   AOT-compiled Pallas MLP forward executed through PJRT; the hot path
+//!   of the three-layer story.
+//!
+//! All backends emit the minimization pair `[avg_abs_rel_err, pdplut]`.
+
+pub mod pjrt;
+
+pub use pjrt::PjrtSurrogate;
+
+use crate::charac::Dataset;
+use crate::dse::Objectives;
+use crate::error::{Error, Result};
+use crate::ml::gbt::{GbtParams, GradientBoostedTrees};
+use crate::operator::AxoConfig;
+use std::collections::HashMap;
+
+/// Backend selector used by experiment configs / CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EstimatorBackend {
+    Table,
+    Gbt,
+    PjrtMlp,
+}
+
+impl EstimatorBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EstimatorBackend::Table => "table",
+            EstimatorBackend::Gbt => "gbt",
+            EstimatorBackend::PjrtMlp => "pjrt-mlp",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<EstimatorBackend> {
+        [Self::Table, Self::Gbt, Self::PjrtMlp]
+            .into_iter()
+            .find(|b| b.name() == name)
+    }
+}
+
+/// Batched metric prediction: configs → `[behav, ppa]`.
+///
+/// Adapting a surrogate to the GA's [`Fitness`] trait is a one-liner
+/// closure (`|c: &[AxoConfig]| surrogate.predict(c)`): the `Fn` blanket
+/// impl on [`Fitness`] picks it up. A blanket `Surrogate → Fitness` impl
+/// would conflict with that closure impl, so none is provided.
+pub trait Surrogate: Send + Sync {
+    fn predict(&self, configs: &[AxoConfig]) -> Result<Vec<Objectives>>;
+}
+
+// ---------------------------------------------------------------------------
+// Exact table lookup
+// ---------------------------------------------------------------------------
+
+/// Exact characterization lookup (small, exhaustively characterized spaces).
+pub struct TableSurrogate {
+    map: HashMap<u64, Objectives>,
+}
+
+impl TableSurrogate {
+    pub fn from_dataset(ds: &Dataset) -> TableSurrogate {
+        let map = ds
+            .configs
+            .iter()
+            .zip(ds.headline_points())
+            .map(|(c, p)| (c.as_uint(), [p[1], p[0]])) // [behav, ppa]
+            .collect();
+        TableSurrogate { map }
+    }
+}
+
+impl Surrogate for TableSurrogate {
+    fn predict(&self, configs: &[AxoConfig]) -> Result<Vec<Objectives>> {
+        configs
+            .iter()
+            .map(|c| {
+                self.map.get(&c.as_uint()).copied().ok_or_else(|| {
+                    Error::Ml(format!("config {c} not in characterization table"))
+                })
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native GBT
+// ---------------------------------------------------------------------------
+
+/// Per-metric gradient-boosted-tree regressors over configuration bits.
+pub struct GbtSurrogate {
+    behav_model: GradientBoostedTrees,
+    ppa_model: GradientBoostedTrees,
+    config_len: u32,
+}
+
+impl GbtSurrogate {
+    /// Train on a characterized dataset (paper: the 10,650-point sample).
+    pub fn train(ds: &Dataset, params: GbtParams) -> Result<GbtSurrogate> {
+        if ds.is_empty() {
+            return Err(Error::Ml("cannot train surrogate on empty dataset".into()));
+        }
+        let l = ds.operator.config_len();
+        let x: Vec<f64> = ds
+            .configs
+            .iter()
+            .flat_map(|c| c.to_bits_f32().into_iter().map(|v| v as f64))
+            .collect();
+        let behav: Vec<f64> = ds.behav.iter().map(|b| b.avg_abs_rel_err).collect();
+        let ppa: Vec<f64> = ds.ppa.iter().map(|p| p.pdplut).collect();
+        let behav_model =
+            GradientBoostedTrees::fit(&x, l as usize, &behav, params.clone())?;
+        let ppa_model = GradientBoostedTrees::fit(&x, l as usize, &ppa, params)?;
+        Ok(GbtSurrogate { behav_model, ppa_model, config_len: l })
+    }
+
+    /// Held-out quality report: (behav_rmse, behav_r2, ppa_rmse, ppa_r2).
+    pub fn evaluate_on(&self, ds: &Dataset) -> Result<[f64; 4]> {
+        let preds = self.predict(&ds.configs)?;
+        let bt: Vec<f64> = ds.behav.iter().map(|b| b.avg_abs_rel_err).collect();
+        let pt: Vec<f64> = ds.ppa.iter().map(|p| p.pdplut).collect();
+        let bp: Vec<f64> = preds.iter().map(|o| o[0]).collect();
+        let pp: Vec<f64> = preds.iter().map(|o| o[1]).collect();
+        use crate::ml::metrics::{r2, rmse};
+        Ok([rmse(&bt, &bp), r2(&bt, &bp), rmse(&pt, &pp), r2(&pt, &pp)])
+    }
+}
+
+impl Surrogate for GbtSurrogate {
+    fn predict(&self, configs: &[AxoConfig]) -> Result<Vec<Objectives>> {
+        let mut out = Vec::with_capacity(configs.len());
+        for c in configs {
+            if c.len() != self.config_len {
+                return Err(Error::Shape(format!(
+                    "config length {} != trained {}",
+                    c.len(),
+                    self.config_len
+                )));
+            }
+            let row: Vec<f64> =
+                c.to_bits_f32().into_iter().map(|v| v as f64).collect();
+            // Metrics are non-negative by construction; clamp tree output.
+            let b = self.behav_model.predict_row(&row).max(0.0);
+            let p = self.ppa_model.predict_row(&row).max(0.0);
+            out.push([b, p]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::charac::{characterize_all, Backend, InputSet};
+    use crate::operator::Operator;
+
+    fn add4_dataset() -> Dataset {
+        let inputs = InputSet::exhaustive(Operator::ADD4);
+        characterize_all(Operator::ADD4, &inputs, &Backend::Native).unwrap()
+    }
+
+    #[test]
+    fn table_surrogate_exact() {
+        let ds = add4_dataset();
+        let t = TableSurrogate::from_dataset(&ds);
+        let preds = t.predict(&ds.configs).unwrap();
+        for (i, p) in preds.iter().enumerate() {
+            assert_eq!(p[0], ds.behav[i].avg_abs_rel_err);
+            assert_eq!(p[1], ds.ppa[i].pdplut);
+        }
+    }
+
+    #[test]
+    fn table_surrogate_unknown_config_errors() {
+        let ds = add4_dataset();
+        let sub = ds.subset(&[0, 1, 2]);
+        let t = TableSurrogate::from_dataset(&sub);
+        assert!(t.predict(&[AxoConfig::accurate(4)]).is_err() || sub.configs.contains(&AxoConfig::accurate(4)));
+    }
+
+    #[test]
+    fn gbt_surrogate_fits_small_space_well() {
+        let ds = add4_dataset();
+        let g = GbtSurrogate::train(&ds, GbtParams::default()).unwrap();
+        let [b_rmse, b_r2, p_rmse, p_r2] = g.evaluate_on(&ds).unwrap();
+        assert!(b_r2 > 0.9, "behav r2 {b_r2} (rmse {b_rmse})");
+        assert!(p_r2 > 0.9, "ppa r2 {p_r2} (rmse {p_rmse})");
+    }
+
+    #[test]
+    fn gbt_rejects_wrong_length() {
+        let ds = add4_dataset();
+        let g = GbtSurrogate::train(&ds, GbtParams::default()).unwrap();
+        assert!(g.predict(&[AxoConfig::accurate(8)]).is_err());
+    }
+
+    #[test]
+    fn predictions_nonnegative() {
+        let ds = add4_dataset();
+        let g = GbtSurrogate::train(&ds, GbtParams::default()).unwrap();
+        for p in g.predict(&ds.configs).unwrap() {
+            assert!(p[0] >= 0.0 && p[1] >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! PJRT-backed surrogate: the AOT-compiled Pallas MLP on the GA hot path.
+//!
+//! Wraps [`MlpExec`] (the `estimator_mul8` artifact) behind the
+//! [`Surrogate`] trait so the coordinator service can batch GA fitness
+//! queries onto one compiled executable.
+
+use super::Surrogate;
+use crate::dse::Objectives;
+use crate::error::{Error, Result};
+use crate::operator::AxoConfig;
+use crate::runtime::MlpExec;
+use std::sync::Mutex;
+
+/// Thread-safe wrapper over the compiled estimator MLP.
+///
+/// # Safety of `Send`/`Sync`
+/// The `xla` crate's handles are raw FFI pointers and therefore `!Send`.
+/// The PJRT CPU client is thread-safe for execution, input literals are
+/// immutable host buffers after construction, and the `Mutex` serializes
+/// every `execute` call, so moving the wrapper across threads is sound.
+pub struct PjrtSurrogate {
+    inner: Mutex<MlpExec>,
+    config_len: u32,
+}
+
+unsafe impl Send for PjrtSurrogate {}
+unsafe impl Sync for PjrtSurrogate {}
+
+impl PjrtSurrogate {
+    pub fn new(exec: MlpExec) -> Result<PjrtSurrogate> {
+        if exec.target_min.len() != 2 {
+            return Err(Error::Ml(
+                "estimator executable must predict [pdplut, avg_abs_rel_err]".into(),
+            ));
+        }
+        let config_len = exec.in_features as u32;
+        Ok(PjrtSurrogate { inner: Mutex::new(exec), config_len })
+    }
+
+    pub fn config_len(&self) -> u32 {
+        self.config_len
+    }
+}
+
+impl Surrogate for PjrtSurrogate {
+    fn predict(&self, configs: &[AxoConfig]) -> Result<Vec<Objectives>> {
+        if configs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut rows = Vec::with_capacity(configs.len() * self.config_len as usize);
+        for c in configs {
+            if c.len() != self.config_len {
+                return Err(Error::Shape(format!(
+                    "config length {} != estimator features {}",
+                    c.len(),
+                    self.config_len
+                )));
+            }
+            rows.extend(c.to_bits_f32());
+        }
+        let exec = self
+            .inner
+            .lock()
+            .map_err(|_| Error::Coordinator("estimator mutex poisoned".into()))?;
+        let preds = exec.predict_unscaled(&rows)?;
+        // Manifest target order is [pdplut, avg_abs_rel_err]; objectives
+        // are [behav, ppa]. Metrics are non-negative; clamp MLP output.
+        Ok(preds
+            .iter()
+            .map(|p| [p[1].max(0.0), p[0].max(0.0)])
+            .collect())
+    }
+}

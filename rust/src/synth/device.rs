@@ -1,0 +1,19 @@
+//! Virtex-7-like device timing/power coefficients.
+//!
+//! Shared constants of the analytical synthesis model; the same values live
+//! in `python/compile/synth_model.py` (both are pinned by
+//! `golden_behav.json` and by unit tests on each side). Magnitudes follow
+//! published Virtex-7 (7VX330T, the paper's device) characteristics: LUT6
+//! logic delay ≈ 0.124 ns, one CARRY4 hop ≈ 0.042 ns/bit, sub-mW per-LUT
+//! dynamic power at moderate toggle rates.
+
+/// LUT6 logic delay (ns).
+pub const T_LUT_NS: f64 = 0.124;
+/// One CARRY4 hop, per bit (ns).
+pub const T_CARRY_NS: f64 = 0.042;
+/// Fixed routing + IOB overhead on the critical path (ns).
+pub const T_NET_NS: f64 = 0.458;
+/// Clock-tree / fixed-logic dynamic power (mW).
+pub const P_BASE_MW: f64 = 0.050;
+/// Per-LUT dynamic power at activity 1.0 (mW).
+pub const P_LUT_MW: f64 = 0.350;

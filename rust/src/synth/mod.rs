@@ -1,0 +1,195 @@
+//! Analytical FPGA synthesis estimator — the Vivado substitute.
+//!
+//! Replaces Xilinx Vivado 19.2 / Virtex-7 7VX330T characterization (paper
+//! §V-A), which is unavailable here (see DESIGN.md §2 substitution 1).
+//! Produces the paper's PPA metric set — LUT utilization, critical path
+//! delay, dynamic power, PDP, PDPLUT — as deterministic structural
+//! functions of the configuration. Formulas and constants mirror
+//! `python/compile/synth_model.py` exactly; `golden_behav.json` pins both.
+
+pub mod device;
+
+use crate::operator::{multiplier, AxoConfig, Operator, OperatorKind};
+use device::*;
+
+/// The PPA metric bundle the paper characterizes per design (Eq. 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PpaMetrics {
+    /// LUT utilization (paper `U`).
+    pub luts: f64,
+    /// Critical path delay in ns (paper `C`).
+    pub cpd_ns: f64,
+    /// Dynamic power in mW (paper `W`).
+    pub power_mw: f64,
+    /// Power-delay product `W × C` (pJ).
+    pub pdp: f64,
+    /// `PDPLUT = W × C × U` — the paper's headline PPA metric.
+    pub pdplut: f64,
+}
+
+impl PpaMetrics {
+    pub const NAMES: [&'static str; 5] = ["luts", "cpd_ns", "power_mw", "pdp", "pdplut"];
+
+    fn from_parts(luts: f64, cpd: f64, power: f64) -> Self {
+        let pdp = power * cpd;
+        PpaMetrics { luts, cpd_ns: cpd, power_mw: power, pdp, pdplut: pdp * luts }
+    }
+
+    pub fn to_array(&self) -> [f64; 5] {
+        [self.luts, self.cpd_ns, self.power_mw, self.pdp, self.pdplut]
+    }
+
+    pub fn from_array(a: [f64; 5]) -> Self {
+        PpaMetrics { luts: a[0], cpd_ns: a[1], power_mw: a[2], pdp: a[3], pdplut: a[4] }
+    }
+}
+
+/// Longest run of consecutive retained LUTs — the surviving ripple length.
+fn longest_run(config: &AxoConfig) -> u32 {
+    let mut best = 0;
+    let mut cur = 0;
+    for i in 0..config.len() {
+        cur = if config.keeps(i) { cur + 1 } else { 0 };
+        best = best.max(cur);
+    }
+    best
+}
+
+/// PPA of an unsigned adder configuration.
+///
+/// `CPD = T_NET + T_LUT + T_CARRY × R` with `R` the longest run of
+/// consecutive retained LUTs: a removed LUT regenerates the carry
+/// (`c_{i+1} = b_i`), cutting the ripple path. Activity of LUT i is
+/// `0.5 + (i+1)/(4N)` — propagate toggles at 0.5 for uniform inputs plus a
+/// significance-growing carry term.
+pub fn adder_ppa(config: &AxoConfig) -> PpaMetrics {
+    let n = config.len();
+    let luts = config.count_kept() as f64;
+    let cpd = T_NET_NS + T_LUT_NS + T_CARRY_NS * longest_run(config) as f64;
+    let mut act_sum = 0.0;
+    for i in 0..n {
+        if config.keeps(i) {
+            act_sum += 0.5 + (i as f64 + 1.0) / (4.0 * n as f64);
+        }
+    }
+    let power = P_BASE_MW + P_LUT_MW * act_sum;
+    PpaMetrics::from_parts(luts, cpd, power)
+}
+
+/// PPA of a signed Baugh-Wooley multiplier configuration.
+///
+/// Fixed logic: M LUT-equivalents of final carry-propagate adder. Column
+/// heights count retained partial-product bits (pair `(i,j)` adds 2 bits to
+/// column `i+j` when `i < j`, 1 when `i == j`); compressor-tree depth is
+/// `ceil(log_1.5(max height))` (Dadda-style 3:2 reduction) and the final
+/// adder ripples across the active-column span. Activity of LUT `(i,j)` is
+/// `(2 if i<j else 1) × (0.3 + 0.4 (i+j)/(2M-2))`.
+pub fn mult_ppa(m_bits: u32, config: &AxoConfig) -> PpaMetrics {
+    let prs = multiplier::pairs(m_bits);
+    debug_assert_eq!(prs.len() as u32, config.len());
+    let n_cols = (2 * m_bits - 1) as usize;
+    let mut heights = vec![0u32; n_cols];
+    let mut act_sum = 0.0;
+    for (k, &(i, j)) in prs.iter().enumerate() {
+        if config.keeps(k as u32) {
+            let w = if i < j { 2 } else { 1 };
+            heights[(i + j) as usize] += w;
+            act_sum +=
+                w as f64 * (0.3 + 0.4 * (i + j) as f64 / (2 * m_bits - 2) as f64);
+        }
+    }
+    let luts = config.count_kept() as f64 + m_bits as f64;
+    let hmax = *heights.iter().max().unwrap() as f64;
+    let depth = if hmax > 1.0 { (hmax.ln() / 1.5f64.ln()).ceil() } else { 0.0 };
+    let first = heights.iter().position(|&h| h > 0);
+    let span = match first {
+        Some(f) => {
+            let l = heights.iter().rposition(|&h| h > 0).unwrap();
+            (l - f + 1) as f64
+        }
+        None => 0.0,
+    };
+    let cpd = T_NET_NS + T_LUT_NS * (1.0 + depth) + T_CARRY_NS * span;
+    let power = P_BASE_MW + P_LUT_MW * act_sum;
+    PpaMetrics::from_parts(luts, cpd, power)
+}
+
+/// Dispatch on operator kind.
+pub fn ppa(op: Operator, config: &AxoConfig) -> PpaMetrics {
+    match op.kind {
+        OperatorKind::UnsignedAdder => adder_ppa(config),
+        OperatorKind::SignedMultiplier => mult_ppa(op.bits, config),
+    }
+}
+
+/// Batch characterization (parallelized by the caller via rayon when large).
+pub fn ppa_batch(op: Operator, configs: &[AxoConfig]) -> Vec<PpaMetrics> {
+    configs.iter().map(|c| ppa(op, c)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx_eq(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-12, "{a} != {b}");
+    }
+
+    #[test]
+    fn adder_accurate_pinned_values() {
+        // Mirror of python test_adder_accurate_pinned_values.
+        let m = adder_ppa(&AxoConfig::accurate(8));
+        approx_eq(m.luts, 8.0);
+        approx_eq(m.cpd_ns, T_NET_NS + T_LUT_NS + T_CARRY_NS * 8.0);
+        approx_eq(m.power_mw, P_BASE_MW + P_LUT_MW * (4.0 + 36.0 / 32.0));
+        approx_eq(m.pdp, m.power_mw * m.cpd_ns);
+        approx_eq(m.pdplut, m.pdp * 8.0);
+    }
+
+    #[test]
+    fn adder_removal_breaks_carry_chain() {
+        let full = adder_ppa(&AxoConfig::accurate(8));
+        let cut = adder_ppa(&AxoConfig::new(0b1110_1111, 8).unwrap());
+        assert!(cut.cpd_ns < full.cpd_ns);
+        approx_eq(cut.luts, 7.0);
+        assert!(cut.power_mw < full.power_mw);
+    }
+
+    #[test]
+    fn longest_run_cases() {
+        assert_eq!(longest_run(&AxoConfig::new(0b111011, 6).unwrap()), 3);
+        assert_eq!(longest_run(&AxoConfig::new(0b111111, 6).unwrap()), 6);
+        assert_eq!(longest_run(&AxoConfig::new(0b000001, 6).unwrap()), 1);
+    }
+
+    #[test]
+    fn mult_accurate_pinned_values() {
+        // Mirror of python test_mult_accurate_pinned_values (M = 4):
+        // heights [1,2,3,4,3,2,1], hmax 4, depth ceil(ln4/ln1.5)=4, span 7.
+        let m = mult_ppa(4, &AxoConfig::accurate(10));
+        approx_eq(m.luts, 14.0);
+        approx_eq(m.cpd_ns, T_NET_NS + T_LUT_NS * 5.0 + T_CARRY_NS * 7.0);
+        assert!(m.power_mw > P_BASE_MW);
+        approx_eq(m.pdplut, m.pdp * 14.0);
+    }
+
+    #[test]
+    fn mult_removal_monotone() {
+        let base = mult_ppa(8, &AxoConfig::accurate(36));
+        for k in [0u32, 17, 35] {
+            let cfg = AxoConfig::accurate(36).flipped(k).unwrap();
+            let red = mult_ppa(8, &cfg);
+            assert!(red.luts < base.luts);
+            assert!(red.power_mw < base.power_mw);
+            assert!(red.cpd_ns <= base.cpd_ns);
+        }
+    }
+
+    #[test]
+    fn dispatch_matches_direct() {
+        let c = AxoConfig::accurate(8);
+        assert_eq!(ppa(Operator::ADD8, &c), adder_ppa(&c));
+        let c = AxoConfig::accurate(36);
+        assert_eq!(ppa(Operator::MUL8, &c), mult_ppa(8, &c));
+    }
+}

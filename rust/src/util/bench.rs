@@ -1,0 +1,138 @@
+//! Micro-benchmark harness (the criterion substitute behind `cargo bench`).
+//!
+//! `harness = false` bench targets call [`Bench::new`] and register
+//! closures; each gets a warmup phase, then timed iterations until both a
+//! minimum iteration count and a minimum wall-clock budget are met.
+//! Reported: mean, median, p99, and min per iteration.
+
+use std::time::{Duration, Instant};
+
+/// Runs and reports a set of named benchmarks.
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+/// One benchmark's statistics (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        // `cargo bench -- --quick` halves budgets via env is overkill; keep
+        // fixed small budgets suited to CI.
+        Bench {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_millis(1500),
+            min_iters: 10,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, warmup: Duration, budget: Duration) -> Bench {
+        self.warmup = warmup;
+        self.budget = budget;
+        self
+    }
+
+    /// Time `f`, which should perform ONE unit of work and return a value
+    /// (kept alive to prevent dead-code elimination).
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &BenchResult {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Timed runs.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t1 = Instant::now();
+        while samples_ns.len() < self.min_iters || t1.elapsed() < self.budget {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+            if samples_ns.len() >= 1_000_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: samples_ns[n / 2],
+            p99_ns: samples_ns[(n * 99 / 100).min(n - 1)],
+            min_ns: samples_ns[0],
+        };
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  p99 {:>12}",
+            result.name,
+            result.iters,
+            fmt_ns(result.mean_ns),
+            fmt_ns(result.median_ns),
+            fmt_ns(result.p99_ns),
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render the standard footer (also parsed by EXPERIMENTS.md tooling).
+    pub fn finish(&self) {
+        println!("\n{} benchmarks completed", self.results.len());
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new().with_budget(Duration::from_millis(5), Duration::from_millis(20));
+        let r = b.bench("noop-sum", || (0..100u64).sum::<u64>());
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

@@ -1,0 +1,24 @@
+//! Self-contained infrastructure substrate.
+//!
+//! This repository builds **fully offline** against a minimal dependency
+//! set (`xla`, `anyhow`, `thiserror`), so the usual ecosystem crates are
+//! re-implemented here at the scale this project needs:
+//!
+//! * [`json`] — JSON value model, parser and writer (datasets, manifest,
+//!   golden fixtures).
+//! * [`tomlkit`] — the TOML subset used by `configs/*.toml` experiment
+//!   files (tables, scalars, homogeneous arrays).
+//! * [`rng`] — seedable splitmix64/xoshiro256** PRNG with the sampling
+//!   helpers the GA and forests need (deterministic across platforms).
+//! * [`par`] — scoped-thread parallel map over index chunks (the rayon
+//!   substitute used by characterization and forest training).
+//! * [`bench`] — the micro-benchmark harness behind `cargo bench`
+//!   (criterion substitute: warmup, timed iterations, mean/p50/p99).
+//! * [`tempdir`] — RAII temporary directories for tests.
+
+pub mod bench;
+pub mod json;
+pub mod par;
+pub mod rng;
+pub mod tempdir;
+pub mod tomlkit;

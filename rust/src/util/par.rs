@@ -1,0 +1,114 @@
+//! Scoped-thread data parallelism (the rayon substitute).
+//!
+//! [`parallel_map`] fans a slice out over `std::thread::scope` workers in
+//! contiguous chunks and reassembles results in order. Work items must be
+//! `Sync` to share and results `Send`; the closure runs on borrowed data so
+//! no `'static` bounds leak into callers.
+
+/// Number of workers: physical parallelism, capped by items.
+pub fn default_workers(items: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    hw.min(items).max(1)
+}
+
+/// Parallel map preserving order. `f` receives `(index, item)`.
+pub fn parallel_map<T: Sync, R: Send>(
+    items: &[T],
+    f: impl Fn(usize, &T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = default_workers(n);
+    if workers == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let mut results: Vec<Option<Vec<R>>> = (0..workers).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut handles = Vec::new();
+        for (w, slot) in results.iter_mut().enumerate() {
+            let start = w * chunk;
+            if start >= n {
+                break;
+            }
+            let end = (start + chunk).min(n);
+            let slice = &items[start..end];
+            handles.push(scope.spawn(move || {
+                let out: Vec<R> =
+                    slice.iter().enumerate().map(|(i, t)| f(start + i, t)).collect();
+                (slot, out)
+            }));
+        }
+        for h in handles {
+            let (slot, out) = h.join().expect("parallel_map worker panicked");
+            *slot = Some(out);
+        }
+    });
+    results.into_iter().flatten().flatten().collect()
+}
+
+/// Parallel for over mutable chunks of an output buffer: each worker owns
+/// `out[chunk]` rows and computes them from the shared context.
+pub fn parallel_fill<R: Send, C: Sync>(
+    out: &mut [R],
+    chunk_size: usize,
+    ctx: &C,
+    f: impl Fn(&C, usize, &mut [R]) + Sync,
+) {
+    assert!(chunk_size > 0);
+    std::thread::scope(|scope| {
+        let f = &f;
+        for (ci, chunk) in out.chunks_mut(chunk_size).enumerate() {
+            scope.spawn(move || f(ctx, ci * chunk_size, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let xs: Vec<u64> = (0..1000).collect();
+        let ys = parallel_map(&xs, |i, &x| x * 2 + i as u64);
+        for (i, y) in ys.iter().enumerate() {
+            assert_eq!(*y, xs[i] * 2 + i as u64);
+        }
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map(&empty, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn fill_covers_all() {
+        let mut out = vec![0usize; 103];
+        parallel_fill(&mut out, 10, &5usize, |&c, start, chunk| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = (start + k) * c;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")] // child payload resumes on the caller
+    fn worker_panic_propagates() {
+        let xs = vec![1u32; 64];
+        let _ = parallel_map(&xs, |i, _| {
+            if i == 33 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

@@ -1,0 +1,232 @@
+//! TOML-subset parser for experiment configuration files.
+//!
+//! Supports the grammar `configs/*.toml` actually uses: top-level and
+//! `[section]` tables, `key = value` with string / integer / float /
+//! boolean / homogeneous-array values, `#` comments, and quoted strings.
+//! Values land in a flat `section.key → TomlValue` map.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_array(&self) -> Option<Vec<f64>> {
+        match self {
+            TomlValue::Array(a) => a.iter().map(|v| v.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {message}")]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+/// Parse into a flat `"section.key"` (or `"key"` at top level) map.
+pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = ln + 1;
+        let mut s = raw.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        if s.starts_with('[') {
+            let end = s
+                .find(']')
+                .ok_or(TomlError { line, message: "unterminated section".into() })?;
+            section = s[1..end].trim().to_string();
+            if section.is_empty() {
+                return Err(TomlError { line, message: "empty section name".into() });
+            }
+            let rest = s[end + 1..].trim();
+            if !rest.is_empty() && !rest.starts_with('#') {
+                return Err(TomlError { line, message: "junk after section".into() });
+            }
+            continue;
+        }
+        let eq = s
+            .find('=')
+            .ok_or(TomlError { line, message: "expected `key = value`".into() })?;
+        let key = s[..eq].trim();
+        if key.is_empty() {
+            return Err(TomlError { line, message: "empty key".into() });
+        }
+        s = s[eq + 1..].trim();
+        let (value, rest) = parse_value(s, line)?;
+        let rest = rest.trim();
+        if !rest.is_empty() && !rest.starts_with('#') {
+            return Err(TomlError { line, message: format!("junk after value: `{rest}`") });
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        if out.insert(full_key.clone(), value).is_some() {
+            return Err(TomlError { line, message: format!("duplicate key `{full_key}`") });
+        }
+    }
+    Ok(out)
+}
+
+fn parse_value(s: &str, line: usize) -> Result<(TomlValue, &str), TomlError> {
+    let s = s.trim_start();
+    if s.is_empty() {
+        return Err(TomlError { line, message: "missing value".into() });
+    }
+    let err = |m: &str| TomlError { line, message: m.into() };
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.find('"').ok_or_else(|| err("unterminated string"))?;
+        return Ok((TomlValue::Str(rest[..end].to_string()), &rest[end + 1..]));
+    }
+    if let Some(mut rest) = s.strip_prefix('[') {
+        let mut items = Vec::new();
+        loop {
+            rest = rest.trim_start();
+            if let Some(r) = rest.strip_prefix(']') {
+                return Ok((TomlValue::Array(items), r));
+            }
+            let (v, r) = parse_value(rest, line)?;
+            items.push(v);
+            rest = r.trim_start();
+            if let Some(r) = rest.strip_prefix(',') {
+                rest = r;
+            } else if !rest.starts_with(']') {
+                return Err(err("expected `,` or `]` in array"));
+            }
+        }
+    }
+    if let Some(r) = s.strip_prefix("true") {
+        return Ok((TomlValue::Bool(true), r));
+    }
+    if let Some(r) = s.strip_prefix("false") {
+        return Ok((TomlValue::Bool(false), r));
+    }
+    // Number: consume up to delimiter.
+    let end = s
+        .find(|c: char| c == ',' || c == ']' || c == '#' || c.is_whitespace())
+        .unwrap_or(s.len());
+    let tok = &s[..end];
+    let rest = &s[end..];
+    if tok.contains('.') || tok.contains('e') || tok.contains('E') {
+        tok.parse::<f64>()
+            .map(|v| (TomlValue::Float(v), rest))
+            .map_err(|_| err(&format!("bad float `{tok}`")))
+    } else {
+        tok.parse::<i64>()
+            .map(|v| (TomlValue::Int(v), rest))
+            .map_err(|_| err(&format!("bad value `{tok}`")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_example() {
+        let text = r#"
+# experiment
+name = "fig15"
+operator = "mul8"
+train_samples = 2000
+scaling_factors = [0.2, 0.5, 0.75, 1.0]
+
+[ga]
+pop_size = 100
+generations = 250   # paper max
+crossover_prob = 0.9
+
+[conss]
+distance = "euclidean"
+noise_bits = 4
+enabled = true
+"#;
+        let m = parse(text).unwrap();
+        assert_eq!(m["name"].as_str(), Some("fig15"));
+        assert_eq!(m["train_samples"].as_usize(), Some(2000));
+        assert_eq!(
+            m["scaling_factors"].as_f64_array().unwrap(),
+            vec![0.2, 0.5, 0.75, 1.0]
+        );
+        assert_eq!(m["ga.pop_size"].as_usize(), Some(100));
+        assert_eq!(m["ga.crossover_prob"].as_f64(), Some(0.9));
+        assert_eq!(m["conss.enabled"].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("novalue").is_err());
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = \"oops").is_err());
+        assert!(parse("x = [1, 2").is_err());
+        assert!(parse("x = 1\nx = 2").is_err());
+        assert!(parse("x = 1 junk").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let m = parse("# only comment\n\n  \nx = 3 # trailing\n").unwrap();
+        assert_eq!(m["x"].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let m = parse("x = [[1, 2], [3]]").unwrap();
+        match &m["x"] {
+            TomlValue::Array(outer) => {
+                assert_eq!(outer.len(), 2);
+                assert_eq!(outer[0], TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Int(2)]));
+            }
+            _ => panic!(),
+        }
+    }
+}

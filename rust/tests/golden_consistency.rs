@@ -1,0 +1,117 @@
+//! Cross-language consistency: rust operator+synthesis models vs the
+//! python canonical models, pinned through `artifacts/golden_behav.json`.
+//!
+//! `aot.py` characterizes a fixed config set (accurate + single-removal +
+//! seeded random) for every Table II operator with the *python* models;
+//! this test recomputes everything with the *rust* models. Bit-exact
+//! arithmetic + identical metric formulas ⇒ agreement to float-summation
+//! noise.
+
+use repro::charac::{characterize, Backend, InputSet};
+use repro::operator::{AxoConfig, Operator};
+use repro::util::json::Json;
+use std::path::PathBuf;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn golden() -> Option<Json> {
+    let p = artifacts().join("golden_behav.json");
+    if !p.exists() {
+        eprintln!("skipping golden tests: run `make artifacts` first");
+        return None;
+    }
+    Some(Json::parse(&std::fs::read_to_string(p).unwrap()).unwrap())
+}
+
+fn check_operator(golden: &Json, op: Operator) {
+    let entry = golden.get("operators").unwrap().get(&op.name()).unwrap();
+    let uints: Vec<u64> = entry
+        .get("configs_uint")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap().parse().unwrap())
+        .collect();
+    let configs: Vec<AxoConfig> = uints
+        .iter()
+        .map(|&u| AxoConfig::new(u, op.config_len()).unwrap())
+        .collect();
+    let inputs = InputSet::for_operator(op, &artifacts()).unwrap();
+    let ds = characterize(op, &configs, &inputs, &Backend::Native).unwrap();
+
+    let rows = |key: &str| -> Vec<Vec<f64>> {
+        entry
+            .get(key)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| r.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect())
+            .collect()
+    };
+    let behav_g = rows("behav");
+    let ppa_g = rows("ppa");
+    assert_eq!(behav_g.len(), ds.len());
+    for i in 0..ds.len() {
+        let b = ds.behav[i].to_array();
+        for k in 0..4 {
+            let denom = behav_g[i][k].abs().max(1e-12);
+            assert!(
+                ((b[k] - behav_g[i][k]).abs() / denom) < 1e-9,
+                "{op} cfg {} behav[{k}]: rust {} python {}",
+                configs[i],
+                b[k],
+                behav_g[i][k]
+            );
+        }
+        let p = ds.ppa[i].to_array();
+        for k in 0..5 {
+            let denom = ppa_g[i][k].abs().max(1e-12);
+            assert!(
+                ((p[k] - ppa_g[i][k]).abs() / denom) < 1e-9,
+                "{op} cfg {} ppa[{k}]: rust {} python {}",
+                configs[i],
+                p[k],
+                ppa_g[i][k]
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_add4() {
+    if let Some(g) = golden() {
+        check_operator(&g, Operator::ADD4);
+    }
+}
+
+#[test]
+fn golden_add8() {
+    if let Some(g) = golden() {
+        check_operator(&g, Operator::ADD8);
+    }
+}
+
+#[test]
+fn golden_add12_uses_shared_sampled_inputs() {
+    if let Some(g) = golden() {
+        check_operator(&g, Operator::ADD12);
+    }
+}
+
+#[test]
+fn golden_mul4() {
+    if let Some(g) = golden() {
+        check_operator(&g, Operator::MUL4);
+    }
+}
+
+#[test]
+fn golden_mul8() {
+    if let Some(g) = golden() {
+        check_operator(&g, Operator::MUL8);
+    }
+}

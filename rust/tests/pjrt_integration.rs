@@ -1,0 +1,186 @@
+//! PJRT integration: the AOT-compiled Pallas kernels and MLPs, loaded and
+//! executed from rust, must agree with the native substrate.
+//!
+//! These tests exercise the full three-layer contract:
+//!   L1/L2 (python, build time)  →  HLO text  →  L3 (this crate, PJRT).
+//! They skip gracefully when `make artifacts` has not run.
+
+use repro::charac::{characterize, Backend, InputSet};
+use repro::operator::{AxoConfig, Operator};
+use repro::runtime::{AxoEvalExec, MlpExec, Runtime};
+use repro::surrogate::{PjrtSurrogate, Surrogate};
+use repro::util::rng::Rng;
+use std::path::PathBuf;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts().join("manifest.json").exists() {
+        eprintln!("skipping PJRT tests: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::cpu(&artifacts()).unwrap())
+}
+
+fn pjrt_matches_native(rt: &Runtime, op: Operator, configs: &[AxoConfig]) {
+    let inputs = InputSet::for_operator(op, &artifacts()).unwrap();
+    let exec = AxoEvalExec::new(rt, op, &inputs).unwrap();
+    let pjrt = characterize(op, configs, &inputs, &Backend::Evaluator(&exec)).unwrap();
+    let native = characterize(op, configs, &inputs, &Backend::Native).unwrap();
+    for i in 0..configs.len() {
+        let a = pjrt.behav[i].to_array();
+        let b = native.behav[i].to_array();
+        for k in 0..4 {
+            let denom = b[k].abs().max(1.0);
+            assert!(
+                ((a[k] - b[k]).abs() / denom) < 1e-4, // kernel runs in f32
+                "{op} cfg {} metric {k}: pjrt {} native {}",
+                configs[i],
+                a[k],
+                b[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn axo_eval_add4_matches_native_exhaustive() {
+    if let Some(rt) = runtime() {
+        let cfgs: Vec<AxoConfig> = AxoConfig::enumerate(4).collect();
+        pjrt_matches_native(&rt, Operator::ADD4, &cfgs);
+    }
+}
+
+#[test]
+fn axo_eval_add8_matches_native_sampled() {
+    if let Some(rt) = runtime() {
+        let mut rng = Rng::seed_from_u64(11);
+        let cfgs = AxoConfig::sample_unique(8, 32, &mut rng);
+        pjrt_matches_native(&rt, Operator::ADD8, &cfgs);
+    }
+}
+
+#[test]
+fn axo_eval_add12_matches_native_on_shared_inputs() {
+    if let Some(rt) = runtime() {
+        let mut rng = Rng::seed_from_u64(12);
+        let cfgs = AxoConfig::sample_unique(12, 16, &mut rng);
+        pjrt_matches_native(&rt, Operator::ADD12, &cfgs);
+    }
+}
+
+#[test]
+fn axo_eval_mul4_matches_native_sampled() {
+    if let Some(rt) = runtime() {
+        let mut rng = Rng::seed_from_u64(13);
+        let cfgs = AxoConfig::sample_unique(10, 48, &mut rng);
+        pjrt_matches_native(&rt, Operator::MUL4, &cfgs);
+    }
+}
+
+#[test]
+fn axo_eval_mul8_matches_native_sampled() {
+    if let Some(rt) = runtime() {
+        let mut rng = Rng::seed_from_u64(14);
+        let cfgs = AxoConfig::sample_unique(36, 16, &mut rng);
+        pjrt_matches_native(&rt, Operator::MUL8, &cfgs);
+    }
+}
+
+#[test]
+fn axo_eval_batch_padding_roundtrip() {
+    // Non-multiple-of-batch config counts exercise the padding path.
+    if let Some(rt) = runtime() {
+        let inputs = InputSet::exhaustive(Operator::MUL4);
+        let exec = AxoEvalExec::new(&rt, Operator::MUL4, &inputs).unwrap();
+        for n in [1usize, 3, 63, 65, 127] {
+            let mut rng = Rng::seed_from_u64(n as u64);
+            let cfgs = AxoConfig::sample_unique(10, n, &mut rng);
+            let out = exec.eval_configs(&cfgs).unwrap();
+            assert_eq!(out.len(), n);
+        }
+    }
+}
+
+#[test]
+fn estimator_mlp_predictions_are_sane() {
+    if let Some(rt) = runtime() {
+        let exec = MlpExec::new(&rt, "estimator_mul8").unwrap();
+        let sur = PjrtSurrogate::new(exec).unwrap();
+        let mut rng = Rng::seed_from_u64(15);
+        let cfgs = AxoConfig::sample_unique(36, 300, &mut rng);
+        let preds = sur.predict(&cfgs).unwrap();
+        assert_eq!(preds.len(), 300);
+        // Sanity: non-negative, finite, and correlated with the real error —
+        // fewer retained LUTs should predict more error on average.
+        assert!(preds.iter().all(|p| p[0].is_finite() && p[1].is_finite()));
+        assert!(preds.iter().all(|p| p[0] >= 0.0 && p[1] >= 0.0));
+        let mut few = Vec::new();
+        let mut many = Vec::new();
+        for (c, p) in cfgs.iter().zip(&preds) {
+            if c.count_kept() <= 12 {
+                few.push(p[0]);
+            } else if c.count_kept() >= 24 {
+                many.push(p[0]);
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        assert!(
+            mean(&few) > mean(&many),
+            "estimator should predict higher error for sparser configs: {} vs {}",
+            mean(&few),
+            mean(&many)
+        );
+    }
+}
+
+#[test]
+fn estimator_mlp_quality_against_real_characterization() {
+    if let Some(rt) = runtime() {
+        let exec = MlpExec::new(&rt, "estimator_mul8").unwrap();
+        let sur = PjrtSurrogate::new(exec).unwrap();
+        let mut rng = Rng::seed_from_u64(16);
+        let cfgs = AxoConfig::sample_unique(36, 128, &mut rng);
+        let inputs = InputSet::exhaustive(Operator::MUL8);
+        let ds = characterize(Operator::MUL8, &cfgs, &inputs, &Backend::Native).unwrap();
+        let preds = sur.predict(&cfgs).unwrap();
+        // Rank correlation between predicted and real PDPLUT should be
+        // strongly positive (the estimator steers the GA, it need not be
+        // perfect).
+        let real: Vec<f64> = ds.ppa.iter().map(|p| p.pdplut).collect();
+        let pred: Vec<f64> = preds.iter().map(|p| p[1]).collect();
+        let rho = repro::stats::correlation::spearman(&real, &pred);
+        assert!(rho > 0.7, "pdplut rank correlation too weak: {rho}");
+    }
+}
+
+#[test]
+fn conss_mlp_generates_valid_bit_probabilities() {
+    if let Some(rt) = runtime() {
+        let exec = MlpExec::new(&rt, "conss_mul4to8").unwrap();
+        assert_eq!(exec.out_features, 36);
+        let noise_bits = 4usize;
+        let mut rows = Vec::new();
+        for v in 1u64..=64 {
+            let cfg = AxoConfig::new(v % 1023 + 1, 10).unwrap();
+            let mut r: Vec<f32> = cfg.to_bits_f32();
+            for k in 0..noise_bits {
+                r.push(((v >> k) & 1) as f32);
+            }
+            rows.extend(r);
+        }
+        let out = exec.forward(&rows).unwrap();
+        assert_eq!(out.len(), 64 * 36);
+        assert!(out.iter().all(|&p| (0.0..=1.0).contains(&p)), "sigmoid outputs");
+    }
+}
+
+#[test]
+fn missing_artifact_fails_cleanly() {
+    if let Some(rt) = runtime() {
+        let err = rt.load("no_such_executable");
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,265 @@
+//! Property-based invariants (hand-rolled generator loop over the
+//! deterministic [`Rng`]; no external proptest crate is linked).
+//!
+//! Each property runs across many random cases with seeds printed on
+//! failure, covering the coordinator contract, GA legality, hypervolume
+//! monotonicity, dataset round-trips, matching minimality, and config
+//! algebra.
+
+use repro::charac::{characterize, Backend, Dataset, InputSet};
+use repro::coordinator::{BatchOptions, EstimatorService};
+use repro::dse::{
+    dominates, hypervolume2d, pareto_front_indices, Constraints, GaOptions, NsgaRunner,
+    Objectives,
+};
+use repro::matching::{DistanceKind, Matcher};
+use repro::operator::{AxoConfig, Operator};
+use repro::surrogate::Surrogate;
+use repro::util::rng::Rng;
+use repro::util::tempdir::TempDir;
+use std::sync::Arc;
+
+const CASES: u64 = 40;
+
+// ---------------------------------------------------------------------------
+// Configuration algebra
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_crossover_preserves_bits_per_position() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let len = 2 + rng.gen_index(34) as u32;
+        let a = AxoConfig::sample_unique(len, 1, &mut rng)[0];
+        let b = AxoConfig::sample_unique(len, 1, &mut rng)[0];
+        let point = 1 + rng.gen_index((len - 1) as usize) as u32;
+        let (c1, c2) = a.crossover(&b, point);
+        for k in 0..len {
+            let parents = [a.keeps(k), b.keeps(k)];
+            for c in [c1, c2].into_iter().flatten() {
+                assert!(
+                    parents.contains(&c.keeps(k)),
+                    "seed {seed}: child bit {k} not from a parent"
+                );
+            }
+        }
+        // Children never encode all-zeros.
+        for c in [c1, c2].into_iter().flatten() {
+            assert_ne!(c.as_uint(), 0, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_hamming_triangle_inequality() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(1000 + seed);
+        let len = 2 + rng.gen_index(34) as u32;
+        let cfgs = AxoConfig::sample_unique(len, 3, &mut rng);
+        let (a, b, c) = (cfgs[0], cfgs[1], cfgs[2]);
+        assert!(a.hamming(&c) <= a.hamming(&b) + b.hamming(&c), "seed {seed}");
+        assert_eq!(a.hamming(&b), b.hamming(&a));
+        assert_eq!(a.hamming(&a), 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pareto / hypervolume
+// ---------------------------------------------------------------------------
+
+fn random_points(rng: &mut Rng, n: usize) -> Vec<Objectives> {
+    (0..n).map(|_| [rng.gen_f64() * 2.0, rng.gen_f64() * 2.0]).collect()
+}
+
+#[test]
+fn prop_front_members_are_mutually_nondominated() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(2000 + seed);
+        let n = 50 + rng.gen_index(200);
+        let pts = random_points(&mut rng, n);
+        let front = pareto_front_indices(&pts);
+        for &i in &front {
+            for &j in &front {
+                assert!(!dominates(pts[j], pts[i]) || i == j, "seed {seed}");
+            }
+            // Every non-front point is dominated by some front point.
+        }
+        for k in 0..pts.len() {
+            if !front.contains(&k) {
+                assert!(
+                    front.iter().any(|&i| dominates(pts[i], pts[k])),
+                    "seed {seed}: dropped point {k} not dominated"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_hypervolume_monotone_under_adding_points() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(3000 + seed);
+        let mut pts = random_points(&mut rng, 30);
+        let reference = [1.5, 1.5];
+        let hv1 = hypervolume2d(&pts, reference);
+        pts.extend(random_points(&mut rng, 10));
+        let hv2 = hypervolume2d(&pts, reference);
+        assert!(hv2 >= hv1 - 1e-12, "seed {seed}: {hv2} < {hv1}");
+        // Bounded by the reference box.
+        assert!(hv2 <= 1.5 * 1.5 + 1e-12);
+    }
+}
+
+#[test]
+fn prop_hypervolume_equals_front_hypervolume() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(4000 + seed);
+        let pts = random_points(&mut rng, 120);
+        let reference = [2.0, 2.0];
+        let front: Vec<Objectives> =
+            pareto_front_indices(&pts).iter().map(|&i| pts[i]).collect();
+        let a = hypervolume2d(&pts, reference);
+        let b = hypervolume2d(&front, reference);
+        assert!((a - b).abs() < 1e-12, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GA invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ga_population_legal_and_front_feasible() {
+    let fitness = |cfgs: &[AxoConfig]| -> repro::error::Result<Vec<Objectives>> {
+        Ok(cfgs
+            .iter()
+            .map(|c| {
+                let ones = c.count_kept() as f64 / c.len() as f64;
+                [1.0 - ones, ones]
+            })
+            .collect())
+    };
+    for seed in 0..8 {
+        let constraints = Constraints::new(0.7, 0.9).unwrap();
+        let runner = NsgaRunner::new(
+            GaOptions { pop_size: 16, generations: 8, seed, ..Default::default() },
+            constraints,
+        );
+        let r = runner.run(14, &fitness, &[]).unwrap();
+        assert_eq!(r.population.len(), 16, "seed {seed}");
+        assert!(r.population.iter().all(|c| c.as_uint() != 0 && c.len() == 14));
+        assert!(r.front_points.iter().all(|&o| constraints.feasible(o)));
+        for w in r.hv_history.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12, "seed {seed}: archive HV decreased");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator service contract (fuzzed)
+// ---------------------------------------------------------------------------
+
+struct EchoBackend;
+impl Surrogate for EchoBackend {
+    fn predict(
+        &self,
+        configs: &[AxoConfig],
+    ) -> repro::error::Result<Vec<Objectives>> {
+        Ok(configs
+            .iter()
+            .map(|c| [c.as_uint() as f64, c.count_kept() as f64])
+            .collect())
+    }
+}
+
+#[test]
+fn prop_service_never_drops_reorders_or_duplicates() {
+    let svc = EstimatorService::spawn(Arc::new(EchoBackend), BatchOptions::default());
+    std::thread::scope(|s| {
+        for t in 0..6u64 {
+            let svc = svc.clone();
+            s.spawn(move || {
+                let mut rng = Rng::seed_from_u64(5000 + t);
+                for round in 0..30 {
+                    let n = 1 + rng.gen_index(40);
+                    let cfgs = AxoConfig::sample_unique(20, n, &mut rng);
+                    let out = svc.predict(cfgs.clone()).unwrap();
+                    assert_eq!(out.len(), n, "thread {t} round {round}");
+                    for (c, o) in cfgs.iter().zip(&out) {
+                        assert_eq!(o[0], c.as_uint() as f64);
+                        assert_eq!(o[1], c.count_kept() as f64);
+                    }
+                }
+            });
+        }
+    });
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.requests, 6 * 30);
+    assert_eq!(snap.errors, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Dataset round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dataset_json_roundtrip_exact() {
+    let inputs = InputSet::exhaustive(Operator::MUL4);
+    for seed in 0..6 {
+        let mut rng = Rng::seed_from_u64(6000 + seed);
+        let cfgs = AxoConfig::sample_unique(10, 20, &mut rng);
+        let ds = characterize(Operator::MUL4, &cfgs, &inputs, &Backend::Native).unwrap();
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("ds.json");
+        ds.save_json(&p).unwrap();
+        let back = Dataset::load_json(&p).unwrap();
+        assert_eq!(back.operator, ds.operator);
+        assert_eq!(back.configs, ds.configs);
+        for i in 0..ds.len() {
+            // f64 survives the JSON round-trip through our writer exactly
+            // for these magnitudes? Not guaranteed for all doubles — check
+            // to 1e-12 relative.
+            for (a, b) in ds.behav[i].to_array().iter().zip(back.behav[i].to_array()) {
+                assert!((a - b).abs() <= a.abs().max(1.0) * 1e-12, "seed {seed}");
+            }
+            for (a, b) in ds.ppa[i].to_array().iter().zip(back.ppa[i].to_array()) {
+                assert!((a - b).abs() <= a.abs().max(1.0) * 1e-12, "seed {seed}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Matching minimality
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_matching_picks_global_minimum() {
+    let l_in = InputSet::exhaustive(Operator::ADD4);
+    let h_in = InputSet::exhaustive(Operator::ADD8);
+    let l = characterize(
+        Operator::ADD4,
+        &AxoConfig::enumerate(4).collect::<Vec<_>>(),
+        &l_in,
+        &Backend::Native,
+    )
+    .unwrap();
+    for (seed, kind) in [(0u64, DistanceKind::Euclidean), (1, DistanceKind::Manhattan), (2, DistanceKind::Pareto)] {
+        let mut rng = Rng::seed_from_u64(7000 + seed);
+        let cfgs = AxoConfig::sample_unique(8, 60, &mut rng);
+        let h = characterize(Operator::ADD8, &cfgs, &h_in, &Backend::Native).unwrap();
+        let matcher = Matcher::new(kind);
+        let m = matcher.match_datasets(&l, &h).unwrap();
+        let all = matcher.all_distances(&l, &h).unwrap();
+        for (hi, &li) in m.h_to_l.iter().enumerate() {
+            let row = &all[hi * l.len()..(hi + 1) * l.len()];
+            let min = row.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!(
+                (row[li] - min).abs() < 1e-12,
+                "{kind:?} h {hi}: matched {} but min {}",
+                row[li],
+                min
+            );
+        }
+    }
+}
