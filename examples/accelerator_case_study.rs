@@ -69,7 +69,7 @@ fn psnr(exact: &[i64], approx: &[i64]) -> f64 {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> repro::error::Result<()> {
     // --- Find Pareto-optimal 8×8 multipliers (scaled-down DSE). ---
     let op = Operator::MUL8;
     let inputs = InputSet::exhaustive(op);
@@ -131,7 +131,7 @@ fn main() -> anyhow::Result<()> {
         let ppa = &ds.ppa[i];
         println!(
             "{:<38} {:>9.2} {:>11.5} {:>9.3} {:>8.1}%",
-            cfg.to_string(),
+            cfg,
             q,
             ds.behav[i].avg_abs_rel_err,
             ppa.pdplut,

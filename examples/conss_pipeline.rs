@@ -20,7 +20,7 @@ fn objectives(ds: &Dataset) -> Vec<Objectives> {
     ds.headline_points().iter().map(|p| [p[1], p[0]]).collect()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> repro::error::Result<()> {
     // --- Characterize L and H (Fig. 4 "Statistical Analysis"). ---
     let l_in = InputSet::exhaustive(Operator::ADD4);
     let h_in = InputSet::exhaustive(Operator::ADD8);

@@ -23,8 +23,6 @@ use repro::conss::{ConssPipeline, SupersampleOptions};
 use repro::coordinator::{BatchOptions, EstimatorService};
 use repro::dse::{hypervolume2d, Constraints, GaOptions, NsgaRunner, Objectives, ParetoFront};
 use repro::prelude::*;
-use repro::runtime::{MlpExec, Runtime};
-use repro::surrogate::PjrtSurrogate;
 use repro::util::rng::Rng;
 use std::path::Path;
 use std::sync::Arc;
@@ -34,7 +32,26 @@ fn objectives(ds: &Dataset) -> Vec<Objectives> {
     ds.headline_points().iter().map(|p| [p[1], p[0]]).collect()
 }
 
-fn main() -> anyhow::Result<()> {
+/// The AOT Pallas MLP on PJRT — only reachable when `Backend::pjrt_ready`
+/// says the feature is compiled in and artifacts exist.
+#[cfg(feature = "pjrt")]
+fn pjrt_surrogate(artifacts: &Path) -> repro::error::Result<Arc<dyn Surrogate>> {
+    use repro::runtime::{MlpExec, Runtime};
+    use repro::surrogate::PjrtSurrogate;
+    let rt = Runtime::cpu(artifacts)?;
+    println!("surrogate: AOT Pallas MLP on PJRT ({})", rt.platform());
+    let exec = MlpExec::new(&rt, "estimator_mul8")?;
+    Ok(Arc::new(PjrtSurrogate::new(exec)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_surrogate(_artifacts: &Path) -> repro::error::Result<Arc<dyn Surrogate>> {
+    Err(repro::error::Error::Config(
+        "pjrt surrogate requires a build with --features pjrt".into(),
+    ))
+}
+
+fn main() -> repro::error::Result<()> {
     let full = std::env::args().any(|a| a == "--full");
     let (n_samples, pop, gens) = if full { (10_650, 100, 250) } else { (2_000, 48, 40) };
     let seed = 2023u64;
@@ -68,13 +85,13 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 2. Surrogate estimator behind the batching service. ----
     let artifacts = Path::new("artifacts");
-    let backend: Arc<dyn Surrogate> = if artifacts.join("manifest.json").exists() {
-        let rt = Runtime::cpu(artifacts)?;
-        let exec = MlpExec::new(&rt, "estimator_mul8")?;
-        println!("[{:7.2?}] surrogate: AOT Pallas MLP on PJRT ({})", t0.elapsed(), rt.platform());
-        Arc::new(PjrtSurrogate::new(exec)?)
+    let backend: Arc<dyn Surrogate> = if Backend::pjrt_ready(artifacts) {
+        pjrt_surrogate(artifacts)?
     } else {
-        println!("[{:7.2?}] surrogate: native GBT (run `make artifacts` for the PJRT path)", t0.elapsed());
+        println!(
+            "[{:7.2?}] surrogate: native GBT (build with --features pjrt + `make artifacts` for the PJRT path)",
+            t0.elapsed()
+        );
         Arc::new(repro::surrogate::GbtSurrogate::train(&h_ds, Default::default())?)
     };
     let service = EstimatorService::spawn(backend, BatchOptions::default());
@@ -103,7 +120,7 @@ fn main() -> anyhow::Result<()> {
             NsgaRunner::new(opts, constraints).run(36, &service, &pool.configs)?;
 
         // VPF: re-characterize front configs with the real substrate.
-        let vpf = |front: &[AxoConfig]| -> anyhow::Result<(f64, usize)> {
+        let vpf = |front: &[AxoConfig]| -> repro::error::Result<(f64, usize)> {
             let fresh: Vec<AxoConfig> = front
                 .iter()
                 .filter(|c| !h_ds.configs.contains(c))

@@ -10,7 +10,7 @@ use repro::prelude::*;
 use repro::charac::InputSet;
 use repro::dse::{GaOptions, ParetoFront};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> repro::error::Result<()> {
     // 1. Characterize the full design space (15 usable configurations).
     let op = Operator::ADD4;
     let inputs = InputSet::exhaustive(op);
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     for i in 0..ds.len() {
         println!(
             "{:<6} {:>14.4} {:>16.5} {:>8} {:>10.4}",
-            ds.configs[i].to_string(),
+            ds.configs[i],
             ds.behav[i].avg_abs_err,
             ds.behav[i].avg_abs_rel_err,
             ds.ppa[i].luts,

@@ -51,23 +51,31 @@ fn main() {
         characterize(Operator::MUL4, &cfgs, &inputs_m4, &Backend::Native).unwrap()
     });
 
-    // PJRT path, when artifacts are built: the AOT Pallas kernel.
-    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if artifacts.join("manifest.json").exists() {
-        use repro::runtime::{AxoEvalExec, Runtime};
-        let rt = Runtime::cpu(&artifacts).unwrap();
-        let exec = AxoEvalExec::new(&rt, Operator::MUL4, &inputs_m4).unwrap();
-        b.bench("pjrt/mul4_axo_eval_64cfg_x256", || {
-            exec.eval_configs(&mcfgs.iter().map(|_| AxoConfig::accurate(10)).take(64).collect::<Vec<_>>())
-                .unwrap()
-        });
-        let exec8 = AxoEvalExec::new(&rt, Operator::MUL8, &inputs_m8).unwrap();
-        b.bench("pjrt/mul8_axo_eval_64cfg_x65536", || {
-            exec8.eval_configs(&mcfgs[..64.min(mcfgs.len())]).unwrap()
-        });
-    } else {
-        println!("(artifacts not built — skipping PJRT benches; run `make artifacts`)");
+    // PJRT path, when compiled in (`--features pjrt`) and artifacts built:
+    // the AOT Pallas kernel.
+    #[cfg(feature = "pjrt")]
+    {
+        let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if Backend::pjrt_ready(&artifacts) {
+            use repro::runtime::{AxoEvalExec, Runtime};
+            let rt = Runtime::cpu(&artifacts).unwrap();
+            let exec = AxoEvalExec::new(&rt, Operator::MUL4, &inputs_m4).unwrap();
+            b.bench("pjrt/mul4_axo_eval_64cfg_x256", || {
+                exec.eval_configs(&mcfgs.iter().map(|_| AxoConfig::accurate(10)).take(64).collect::<Vec<_>>())
+                    .unwrap()
+            });
+            let exec8 = AxoEvalExec::new(&rt, Operator::MUL8, &inputs_m8).unwrap();
+            b.bench("pjrt/mul8_axo_eval_64cfg_x65536", || {
+                exec8.eval_configs(&mcfgs[..64.min(mcfgs.len())]).unwrap()
+            });
+        } else {
+            println!(
+                "(PJRT not ready — artifacts missing or stub xla linked; skipping PJRT benches)"
+            );
+        }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(built without the `pjrt` feature — skipping PJRT benches)");
 
     b.finish();
 }

@@ -16,10 +16,12 @@ use std::time::Duration;
 
 fn main() {
     let tmp = TempDir::new().unwrap();
-    let mut cfg = ExperimentConfig::default();
-    cfg.train_samples = 800; // quick-scale H_CHAR sample
-    cfg.conss.forest_trees = Some(10);
-    cfg.out_dir = tmp.path().to_path_buf();
+    let cfg = ExperimentConfig {
+        train_samples: 800, // quick-scale H_CHAR sample
+        conss: repro::expcfg::ConssConfig { forest_trees: Some(10), ..Default::default() },
+        out_dir: tmp.path().to_path_buf(),
+        ..Default::default()
+    };
     let harness = Harness::new(cfg);
 
     // Datasets are cached inside the harness after the first call, so the

@@ -62,17 +62,24 @@ fn main() {
     let req: Vec<AxoConfig> = ds.configs[..100].to_vec();
     b.bench("service/roundtrip_100cfg", || svc.predict(req.clone()).unwrap());
 
-    // PJRT MLP estimator, when artifacts are built.
-    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if artifacts.join("manifest.json").exists() {
-        use repro::runtime::{MlpExec, Runtime};
-        use repro::surrogate::PjrtSurrogate;
-        let rt = Runtime::cpu(&artifacts).unwrap();
-        let mlp = PjrtSurrogate::new(MlpExec::new(&rt, "estimator_mul8").unwrap()).unwrap();
-        b.bench("surrogate/pjrt_mlp_predict_256", || mlp.predict(batch).unwrap());
-    } else {
-        println!("(artifacts not built — skipping PJRT MLP bench)");
+    // PJRT MLP estimator, when compiled in and artifacts are built.
+    #[cfg(feature = "pjrt")]
+    {
+        let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if Backend::pjrt_ready(&artifacts) {
+            use repro::runtime::{MlpExec, Runtime};
+            use repro::surrogate::PjrtSurrogate;
+            let rt = Runtime::cpu(&artifacts).unwrap();
+            let mlp = PjrtSurrogate::new(MlpExec::new(&rt, "estimator_mul8").unwrap()).unwrap();
+            b.bench("surrogate/pjrt_mlp_predict_256", || mlp.predict(batch).unwrap());
+        } else {
+            println!(
+                "(PJRT not ready — artifacts missing or stub xla linked; skipping PJRT MLP bench)"
+            );
+        }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(built without the `pjrt` feature — skipping PJRT MLP bench)");
 
     b.finish();
 }

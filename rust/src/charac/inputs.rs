@@ -11,8 +11,14 @@
 
 use crate::error::{Error, Result};
 use crate::operator::{adder, multiplier, Operator, OperatorKind};
+use crate::util::rng::Rng;
 use std::io::Read;
 use std::path::Path;
+
+/// Sample size and seed of the hermetic 12-bit fallback set (mirrors the
+/// `max_samples`/`seed` defaults of `operator_model.adder_inputs`).
+const SAMPLED_INPUTS: usize = 65_536;
+const SAMPLED_SEED: u64 = 2023;
 
 /// A shared (a, b) operand set. Adders store unsigned values in `i64`.
 #[derive(Debug, Clone)]
@@ -74,11 +80,44 @@ impl InputSet {
         Ok(InputSet { a, b })
     }
 
-    /// The input set the paper's Table II experiments use for `op`,
-    /// resolving the sampled 12-bit set from `artifacts_dir`.
+    /// Deterministic seeded operand sample for adders too wide to
+    /// enumerate — the hermetic fallback when `aot.py`'s persisted sample
+    /// is absent. The stream comes from the crate [`Rng`], so it is *not*
+    /// bit-identical to the numpy sample; cross-language golden tests
+    /// always read the persisted `inputs_add12.bin` instead.
+    pub fn sampled_adder(n_bits: u32, n: usize, seed: u64) -> InputSet {
+        let mask = (1u64 << n_bits) - 1;
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut a = Vec::with_capacity(n);
+        let mut b = Vec::with_capacity(n);
+        for _ in 0..n {
+            let idx = rng.next_u64();
+            a.push((idx & mask) as i64);
+            b.push(((idx >> n_bits) & mask) as i64);
+        }
+        InputSet { a, b }
+    }
+
+    /// The input set the paper's Table II experiments use for `op`:
+    /// exhaustive spaces directly, the 12-bit adder from the persisted
+    /// `artifacts_dir` sample when present, else the seeded native
+    /// fallback — so the hermetic build characterizes every operator
+    /// without `make artifacts`.
     pub fn for_operator(op: Operator, artifacts_dir: &Path) -> Result<InputSet> {
         if op.kind == OperatorKind::UnsignedAdder && op.bits > 8 {
-            Self::load_add12(&artifacts_dir.join("inputs_add12.bin"))
+            let path = artifacts_dir.join("inputs_add12.bin");
+            if path.exists() {
+                Self::load_add12(&path)
+            } else {
+                // Provenance matters: the native sample differs from the
+                // persisted numpy one, so say which set is in play.
+                eprintln!(
+                    "note: {} not found — characterizing {op} on the seeded \
+                     native input sample (hermetic fallback)",
+                    path.display()
+                );
+                Ok(Self::sampled_adder(op.bits, SAMPLED_INPUTS, SAMPLED_SEED))
+            }
         } else {
             Ok(Self::exhaustive(op))
         }
@@ -118,6 +157,28 @@ mod tests {
         let s = InputSet::load_add12(&path).unwrap();
         assert_eq!(s.a, vec![1, 2, 3]);
         assert_eq!(s.b, vec![4000, 5, 4095]);
+    }
+
+    #[test]
+    fn sampled_adder_is_deterministic_and_in_range() {
+        let a = InputSet::sampled_adder(12, 1000, 7);
+        let b = InputSet::sampled_adder(12, 1000, 7);
+        assert_eq!(a.a, b.a);
+        assert_eq!(a.b, b.b);
+        assert_eq!(a.len(), 1000);
+        assert!(a.a.iter().chain(&a.b).all(|&v| (0..4096).contains(&v)));
+        let c = InputSet::sampled_adder(12, 1000, 8);
+        assert_ne!(a.a, c.a);
+    }
+
+    #[test]
+    fn for_operator_falls_back_without_artifacts() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let s = InputSet::for_operator(Operator::ADD12, dir.path()).unwrap();
+        assert_eq!(s.len(), 65_536);
+        // Exhaustive operators never consult the artifacts dir.
+        let e = InputSet::for_operator(Operator::ADD4, dir.path()).unwrap();
+        assert_eq!(e.len(), 256);
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //!
 //! The paper characterizes every configuration by RTL simulation (BEHAV)
 //! plus Vivado synthesis (PPA). Here BEHAV comes from bit-exact behavioral
-//! simulation — either the AOT-compiled Pallas `axo_eval` executable via
-//! PJRT ([`Backend::Pjrt`]) or the rayon-parallel native fallback
-//! ([`Backend::Native`]), cross-checked against each other in integration
-//! tests — and PPA from the analytical synthesis estimator ([`crate::synth`]).
+//! simulation — either an injected evaluator ([`Backend::Evaluator`], in
+//! production the AOT-compiled Pallas `axo_eval` executable via PJRT) or
+//! the thread-parallel native default ([`Backend::Native`]), cross-checked
+//! against each other in integration tests — and PPA from the analytical
+//! synthesis estimator ([`crate::synth`]). `Backend::pjrt_ready` is the
+//! capability probe backend selection goes through.
 
 pub mod behav;
 pub mod dataset;

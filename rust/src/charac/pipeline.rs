@@ -26,11 +26,49 @@ pub trait BehavEvaluator {
 
 /// Which engine computes BEHAV metrics.
 pub enum Backend<'a> {
-    /// Rayon-parallel bit-exact native simulation.
+    /// Scoped-thread-parallel bit-exact native simulation.
     Native,
     /// An injected evaluator — in production the AOT-compiled Pallas
     /// `axo_eval` executable running on the PJRT CPU client.
     Evaluator(&'a dyn BehavEvaluator),
+}
+
+impl Backend<'_> {
+    /// Human-readable backend tag for logs and stamps.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Evaluator(_) => "evaluator",
+        }
+    }
+
+    /// Capability probe, build-time half: true when PJRT support was
+    /// compiled into this binary (`--features pjrt`).
+    pub fn pjrt_compiled() -> bool {
+        cfg!(feature = "pjrt")
+    }
+
+    /// Capability probe, runtime half: true when the PJRT path is fully
+    /// usable — compiled in, the AOT artifacts are present, *and* a real
+    /// PJRT backend is linked (the vendored `xla` stub is not one). Tests
+    /// and CLI paths use this to *skip* (not fail) the PJRT route.
+    pub fn pjrt_ready(artifacts_dir: &std::path::Path) -> bool {
+        Self::pjrt_compiled()
+            && artifacts_dir.join("manifest.json").exists()
+            && pjrt_backend_linked()
+    }
+}
+
+/// Whether the linked `xla` package can actually produce a PJRT client.
+/// The hermetic stub always errors here; real bindings return a client.
+#[cfg(feature = "pjrt")]
+fn pjrt_backend_linked() -> bool {
+    xla::PjRtClient::cpu().is_ok()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend_linked() -> bool {
+    false
 }
 
 /// Characterize `configs` of `op` over `inputs`.
@@ -64,6 +102,14 @@ pub fn characterize_all(
 mod tests {
     use super::*;
     use crate::error::Error;
+
+    #[test]
+    fn backend_probe_is_consistent_with_build() {
+        assert_eq!(Backend::pjrt_compiled(), cfg!(feature = "pjrt"));
+        // Without a manifest the PJRT path is never "ready".
+        assert!(!Backend::pjrt_ready(std::path::Path::new("/nonexistent")));
+        assert_eq!(Backend::Native.name(), "native");
+    }
 
     #[test]
     fn native_characterize_add4_exhaustive() {

@@ -197,8 +197,10 @@ mod tests {
     #[test]
     fn pareto_seeds_are_fewer() {
         let (l, h) = datasets();
-        let mut opts = SupersampleOptions::default();
-        opts.seeds = SeedSelection::ParetoOnly;
+        let opts = SupersampleOptions {
+            seeds: SeedSelection::ParetoOnly,
+            ..Default::default()
+        };
         let p = ConssPipeline::train(&l, &h, opts).unwrap();
         let seeds = p.select_seeds(None, &[]).unwrap();
         assert!(!seeds.is_empty());
@@ -208,8 +210,10 @@ mod tests {
     #[test]
     fn constraint_filter_tightens_seed_set() {
         let (l, h) = datasets();
-        let mut opts = SupersampleOptions::default();
-        opts.seeds = SeedSelection::ConstraintFiltered;
+        let opts = SupersampleOptions {
+            seeds: SeedSelection::ConstraintFiltered,
+            ..Default::default()
+        };
         let p = ConssPipeline::train(&l, &h, opts).unwrap();
         let h_train: Vec<Objectives> = h
             .headline_points()

@@ -1,64 +1,116 @@
 //! Crate-wide error type.
 //!
-//! Library code returns [`Result`]; the CLI converts into `eyre` at the
-//! boundary. Variants are grouped by subsystem so failure injection tests
-//! can assert on the class of failure.
+//! Hand-rolled `Display`/`Error` impls keep the default build std-only (no
+//! `thiserror`); the CLI prints the same [`Error`] at its boundary.
+//! Variants are grouped by subsystem so failure injection tests can assert
+//! on the class of failure.
 
+use std::fmt;
 use std::path::PathBuf;
 
 /// Unified error type for the AxOCS library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Artifact file (HLO text, weights, manifest, input set) missing.
-    #[error("artifact not found: {path} (run `make artifacts` first)")]
     ArtifactMissing { path: PathBuf },
 
     /// Artifact exists but failed to parse/validate.
-    #[error("corrupt artifact {path}: {reason}")]
     ArtifactCorrupt { path: PathBuf, reason: String },
 
     /// PJRT / XLA runtime failure.
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// Shape or batch-size mismatch between caller and compiled executable.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// Invalid operator configuration (e.g. all-zeros, wrong length).
-    #[error("invalid configuration: {0}")]
     InvalidConfig(String),
 
     /// Dataset consistency problem (length mismatch, empty, bad columns).
-    #[error("dataset error: {0}")]
     Dataset(String),
 
     /// ML model error (untrained model queried, bad hyperparameters).
-    #[error("ml error: {0}")]
     Ml(String),
 
     /// DSE setup error (bad constraints, empty population).
-    #[error("dse error: {0}")]
     Dse(String),
 
     /// Coordinator/service failure (channel closed, worker panicked).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
-    /// Experiment configuration file problem.
-    #[error("config error: {0}")]
+    /// Experiment configuration / CLI argument problem.
     Config(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error(transparent)]
-    Json(#[from] crate::util::json::JsonError),
+    Json(crate::util::json::JsonError),
 
-    #[error(transparent)]
-    Toml(#[from] crate::util::tomlkit::TomlError),
+    Toml(crate::util::tomlkit::TomlError),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::ArtifactMissing { path } => write!(
+                f,
+                "artifact not found: {} (run `make artifacts` first)",
+                path.display()
+            ),
+            Error::ArtifactCorrupt { path, reason } => {
+                write!(f, "corrupt artifact {}: {reason}", path.display())
+            }
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::InvalidConfig(m) => write!(f, "invalid configuration: {m}"),
+            Error::Dataset(m) => write!(f, "dataset error: {m}"),
+            Error::Ml(m) => write!(f, "ml error: {m}"),
+            Error::Dse(m) => write!(f, "dse error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            // Transparent wrappers: display the source verbatim.
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Json(e) => write!(f, "{e}"),
+            Error::Toml(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::Json(e) => Some(e),
+            Error::Toml(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error::Json(e)
+    }
+}
+
+impl From<crate::util::tomlkit::TomlError> for Error {
+    fn from(e: crate::util::tomlkit::TomlError) -> Self {
+        Error::Toml(e)
+    }
+}
+
+impl From<crate::cli::ArgError> for Error {
+    fn from(e: crate::cli::ArgError) -> Self {
+        Error::Config(e.to_string())
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -66,3 +118,26 @@ impl From<xla::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_subsystem_prefix() {
+        assert_eq!(Error::Shape("x".into()).to_string(), "shape mismatch: x");
+        assert_eq!(Error::Dse("y".into()).to_string(), "dse error: y");
+        let e = Error::ArtifactMissing { path: PathBuf::from("a/b.bin") };
+        assert!(e.to_string().contains("a/b.bin"));
+        assert!(e.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn transparent_wrappers_expose_source() {
+        use std::error::Error as _;
+        let io = Error::from(std::io::Error::other("disk"));
+        assert!(io.source().is_some());
+        assert!(io.to_string().contains("disk"));
+        assert!(Error::Config("c".into()).source().is_none());
+    }
+}

@@ -309,14 +309,14 @@ backend = "pjrt-mlp"
 
     #[test]
     fn rejects_invalid() {
-        let mut c = ExperimentConfig::default();
-        c.operator = "div9".into();
+        let c = ExperimentConfig { operator: "div9".into(), ..Default::default() };
         assert!(c.validate().is_err());
-        let mut c = ExperimentConfig::default();
-        c.scaling_factors = vec![1.5];
+        let c = ExperimentConfig { scaling_factors: vec![1.5], ..Default::default() };
         assert!(c.validate().is_err());
-        let mut c = ExperimentConfig::default();
-        c.ga.pop_size = 1;
+        let c = ExperimentConfig {
+            ga: GaConfig { pop_size: 1, ..Default::default() },
+            ..Default::default()
+        };
         assert!(c.validate().is_err());
     }
 

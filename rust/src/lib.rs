@@ -8,6 +8,19 @@
 //! characterization kernels and surrogate MLPs to HLO text, which
 //! [`runtime`] loads and executes through the PJRT CPU client.
 //!
+//! ## Build matrix
+//!
+//! * **default (hermetic)** — std-only, zero external crates, no network,
+//!   no artifacts: native bit-exact characterization, exact-table and GBT
+//!   surrogates, the full DSE/ConSS/report stack. This is the tier-1
+//!   `cargo build --release && cargo test -q` configuration.
+//! * **`--features pjrt`** — additionally compiles [`runtime`]'s PJRT
+//!   client/executables and [`surrogate::pjrt`](surrogate) against the
+//!   (vendored, stubbed) `xla` bindings; running compiled artifacts needs
+//!   `make artifacts` plus a real `xla` package override (see
+//!   `rust/xla-stub`). PJRT tests skip, not fail, when artifacts are
+//!   absent — probe with `charac::Backend::pjrt_ready`.
+//!
 //! ## Pipeline (paper Fig. 4)
 //!
 //! ```text
@@ -36,8 +49,10 @@
 //! * [`dse`] — NSGA-II genetic search, Pareto tools, hypervolume.
 //! * [`conss`] — configuration supersampling pipelines.
 //! * [`baselines`] — AppAxO-like GA and EvoApprox-like library baselines.
-//! * [`coordinator`] — tokio estimator service: batching, workers, metrics.
-//! * [`runtime`] — PJRT client wrapper; loads `artifacts/*.hlo.txt`.
+//! * [`coordinator`] — std-thread estimator service: batching, workers,
+//!   metrics (this repo links no async runtime).
+//! * [`runtime`] — artifact schemas (always) + PJRT client wrapper that
+//!   loads `artifacts/*.hlo.txt` (`pjrt` feature).
 //! * [`report`] — regenerates every paper figure/table (Figs 1–18, Tab II).
 //! * [`expcfg`] — TOML experiment configuration system.
 

@@ -3,22 +3,19 @@
 //! Subcommands cover the full Fig. 4 pipeline: characterization, distance
 //! matching, (augmented) GA-based DSE, validation, figure regeneration, and
 //! a batched estimator-service demo. Python never runs here; everything
-//! executes against the Rust substrates and the AOT-compiled PJRT
-//! artifacts.
+//! executes against the Rust substrates and — in `--features pjrt` builds
+//! with `make artifacts` — the AOT-compiled PJRT executables.
 
-use anyhow::{bail, Context};
-use repro::charac::{characterize, characterize_all, Backend, InputSet};
+use repro::charac::{characterize, characterize_all, Backend, Dataset, InputSet};
 use repro::cli::ParsedArgs;
 use repro::coordinator::{BatchOptions, EstimatorService};
 use repro::dse::{Constraints, NsgaRunner};
+use repro::error::{Error, Result};
 use repro::expcfg::ExperimentConfig;
 use repro::matching::{DistanceKind, Matcher};
 use repro::operator::{AxoConfig, Operator};
 use repro::report::Harness;
-use repro::runtime::{AxoEvalExec, MlpExec, Runtime};
-use repro::surrogate::{
-    EstimatorBackend, GbtSurrogate, PjrtSurrogate, Surrogate, TableSurrogate,
-};
+use repro::surrogate::{build_backend, EstimatorBackend, Surrogate, TableSurrogate};
 use repro::util::rng::Rng;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -48,6 +45,10 @@ GLOBAL OPTIONS:
   --out PATH           Results directory (default: results)
   --quick              Scaled-down sample sizes / generations
   --help               This help
+
+The `--pjrt` switch, the `pjrt-mlp` backend, and `verify` need a binary
+built with `--features pjrt` plus `make artifacts`; every other path is
+hermetic (native substrates only).
 ";
 
 const GLOBAL_OPTS: &[&str] = &[
@@ -72,13 +73,13 @@ fn main() {
     match run(args) {
         Ok(()) => {}
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             std::process::exit(1);
         }
     }
 }
 
-fn run(args: Vec<String>) -> anyhow::Result<()> {
+fn run(args: Vec<String>) -> Result<()> {
     let parsed = ParsedArgs::parse(args, &["quick", "pjrt"])?;
     parsed.ensure_known(GLOBAL_OPTS)?;
     let cfg = load_config(&parsed)?;
@@ -96,13 +97,14 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         "serve" => cmd_serve(&cfg, &parsed),
         "verify" => cmd_verify(&cfg),
         "quickstart" => cmd_quickstart(&cfg),
-        other => bail!("unknown command `{other}` (try --help)"),
+        other => Err(Error::Config(format!("unknown command `{other}` (try --help)"))),
     }
 }
 
-fn load_config(parsed: &ParsedArgs) -> anyhow::Result<ExperimentConfig> {
+fn load_config(parsed: &ParsedArgs) -> Result<ExperimentConfig> {
     let mut cfg = match parsed.opt("config") {
-        Some(p) => ExperimentConfig::load(&PathBuf::from(p)).context("loading --config")?,
+        Some(p) => ExperimentConfig::load(&PathBuf::from(p))
+            .map_err(|e| Error::Config(format!("loading --config {p}: {e}")))?,
         None => ExperimentConfig::default(),
     };
     if let Some(a) = parsed.opt("artifacts") {
@@ -120,33 +122,71 @@ fn load_config(parsed: &ParsedArgs) -> anyhow::Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-fn parse_distance(s: &str) -> anyhow::Result<DistanceKind> {
+fn parse_distance(s: &str) -> Result<DistanceKind> {
     DistanceKind::from_name(s)
-        .ok_or_else(|| anyhow::anyhow!("unknown distance `{s}`"))
+        .ok_or_else(|| Error::Config(format!("unknown distance `{s}`")))
 }
 
-fn cmd_characterize(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> anyhow::Result<()> {
+/// Config selection shared by the native and PJRT characterization paths:
+/// `None` = exhaustive enumeration, `Some` = seeded sample.
+fn select_configs(
+    cfg: &ExperimentConfig,
+    op: Operator,
+    samples: Option<usize>,
+) -> Option<Vec<AxoConfig>> {
+    if op.exhaustive() && samples.is_none() {
+        None
+    } else {
+        let n = samples.unwrap_or(cfg.train_samples);
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        Some(AxoConfig::sample_unique(op.config_len(), n, &mut rng))
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn characterize_pjrt(
+    cfg: &ExperimentConfig,
+    op: Operator,
+    inputs: &InputSet,
+    configs: Option<&[AxoConfig]>,
+) -> Result<Dataset> {
+    use repro::runtime::{AxoEvalExec, Runtime};
+    let rt = Runtime::cpu(&cfg.artifacts_dir)?;
+    let exec = AxoEvalExec::new(&rt, op, inputs)?;
+    let backend = Backend::Evaluator(&exec);
+    match configs {
+        None => characterize_all(op, inputs, &backend),
+        Some(c) => characterize(op, c, inputs, &backend),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn characterize_pjrt(
+    _cfg: &ExperimentConfig,
+    op: Operator,
+    _inputs: &InputSet,
+    _configs: Option<&[AxoConfig]>,
+) -> Result<Dataset> {
+    Err(Error::Config(format!(
+        "--pjrt characterization of {op} needs a build with `--features pjrt` \
+         (and `make artifacts`); drop --pjrt for the native backend"
+    )))
+}
+
+fn cmd_characterize(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     let op = Operator::from_name(parsed.positional(0, "operator name")?)?;
     let samples: Option<usize> = parsed.opt_parse("samples")?;
     let pjrt = parsed.flag("pjrt");
     let inputs = InputSet::for_operator(op, &cfg.artifacts_dir)?;
+    let configs = select_configs(cfg, op, samples);
     let started = std::time::Instant::now();
-    let rt;
-    let exec;
-    let backend = if pjrt {
-        rt = Runtime::cpu(&cfg.artifacts_dir)?;
-        exec = AxoEvalExec::new(&rt, op, &inputs)?;
-        Backend::Evaluator(&exec)
+    let ds = if pjrt {
+        characterize_pjrt(cfg, op, &inputs, configs.as_deref())?
     } else {
-        Backend::Native
-    };
-    let ds = if op.exhaustive() && samples.is_none() {
-        characterize_all(op, &inputs, &backend)?
-    } else {
-        let n = samples.unwrap_or(cfg.train_samples);
-        let mut rng = Rng::seed_from_u64(cfg.seed);
-        let cfgs = AxoConfig::sample_unique(op.config_len(), n, &mut rng);
-        characterize(op, &cfgs, &inputs, &backend)?
+        match &configs {
+            None => characterize_all(op, &inputs, &Backend::Native)?,
+            Some(c) => characterize(op, c, &inputs, &Backend::Native)?,
+        }
     };
     let elapsed = started.elapsed();
     let out = parsed
@@ -165,7 +205,7 @@ fn cmd_characterize(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> anyhow::Resu
     Ok(())
 }
 
-fn cmd_match(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> anyhow::Result<()> {
+fn cmd_match(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     let harness = Harness::new(cfg.clone());
     let l = harness.dataset(Operator::from_name(parsed.positional(0, "L operator")?)?)?;
     let h = harness.dataset(Operator::from_name(parsed.positional(1, "H operator")?)?)?;
@@ -189,13 +229,13 @@ fn cmd_match(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> anyhow::Result<()> 
     Ok(())
 }
 
-fn cmd_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> anyhow::Result<()> {
+fn cmd_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     use repro::report::dse_figs;
     let factor: f64 = parsed.opt_parse("factor")?.unwrap_or(0.5);
     let mut cfg = cfg.clone();
     if let Some(b) = parsed.opt("backend") {
         cfg.surrogate.backend = EstimatorBackend::from_name(b)
-            .ok_or_else(|| anyhow::anyhow!("unknown backend `{b}`"))?;
+            .ok_or_else(|| Error::Config(format!("unknown backend `{b}`")))?;
     }
     let harness = Harness::new(cfg.clone());
     let setup = dse_figs::setup(&harness)?;
@@ -235,26 +275,18 @@ fn cmd_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> anyhow::Result<()> {
+fn cmd_serve(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     let clients: usize = parsed.opt_parse("clients")?.unwrap_or(8);
     let requests: usize = parsed.opt_parse("requests-per-client")?.unwrap_or(64);
     let harness = Harness::new(cfg.clone());
     let op = Operator::from_name(&cfg.operator)?;
-    let backend: Arc<dyn Surrogate> = match cfg.surrogate.backend {
-        EstimatorBackend::Table => {
-            let ds = harness.dataset(op)?;
-            Arc::new(TableSurrogate::from_dataset(&ds))
-        }
-        EstimatorBackend::Gbt => {
-            let ds = harness.dataset(op)?;
-            Arc::new(GbtSurrogate::train(&ds, Default::default())?)
-        }
-        EstimatorBackend::PjrtMlp => {
-            let rt = Runtime::cpu(&cfg.artifacts_dir)?;
-            let exec = MlpExec::new(&rt, "estimator_mul8")?;
-            Arc::new(PjrtSurrogate::new(exec)?)
-        }
-    };
+    let backend: Arc<dyn Surrogate> = build_backend(
+        cfg.surrogate.backend,
+        cfg.surrogate.gbt_stages,
+        &cfg.artifacts_dir,
+        op,
+        || harness.dataset(op),
+    )?;
     let svc = EstimatorService::spawn(backend, BatchOptions::default());
     let op_len = op.config_len();
     let seed = cfg.seed;
@@ -289,7 +321,9 @@ fn cmd_serve(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> anyhow::Result<()> 
     Ok(())
 }
 
-fn cmd_verify(cfg: &ExperimentConfig) -> anyhow::Result<()> {
+#[cfg(feature = "pjrt")]
+fn cmd_verify(cfg: &ExperimentConfig) -> Result<()> {
+    use repro::runtime::{AxoEvalExec, Runtime};
     let rt = Runtime::cpu(&cfg.artifacts_dir)?;
     println!("PJRT platform: {}", rt.platform());
     let mut failures = 0;
@@ -315,12 +349,23 @@ fn cmd_verify(cfg: &ExperimentConfig) -> anyhow::Result<()> {
         }
         println!("{op}: pjrt == native over {} configs ✓", cfgs.len());
     }
-    anyhow::ensure!(failures == 0, "{failures} metric mismatches");
+    if failures != 0 {
+        return Err(Error::Xla(format!("{failures} metric mismatches")));
+    }
     println!("runtime verification OK");
     Ok(())
 }
 
-fn cmd_quickstart(cfg: &ExperimentConfig) -> anyhow::Result<()> {
+#[cfg(not(feature = "pjrt"))]
+fn cmd_verify(_cfg: &ExperimentConfig) -> Result<()> {
+    Err(Error::Config(
+        "`verify` cross-checks the PJRT runtime and needs a build with \
+         `--features pjrt` plus `make artifacts`"
+            .into(),
+    ))
+}
+
+fn cmd_quickstart(cfg: &ExperimentConfig) -> Result<()> {
     println!("AxOCS quickstart — 4-bit adder tour (see examples/ for the full flows)");
     let op = Operator::ADD4;
     let inputs = InputSet::exhaustive(op);

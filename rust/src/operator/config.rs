@@ -142,12 +142,14 @@ impl std::fmt::Debug for AxoConfig {
 }
 
 /// `Display` shows the bit-string MSB-first, like the paper's figures.
+/// Goes through `Formatter::pad` so width/alignment flags work in tables.
 impl std::fmt::Display for AxoConfig {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::with_capacity(self.len as usize);
         for k in (0..self.len).rev() {
-            write!(f, "{}", if self.keeps(k) { '1' } else { '0' })?;
+            s.push(if self.keeps(k) { '1' } else { '0' });
         }
-        Ok(())
+        f.pad(&s)
     }
 }
 

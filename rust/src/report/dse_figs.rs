@@ -20,8 +20,7 @@ use crate::dse::{
 use crate::error::Result;
 use crate::expcfg::ExperimentConfig;
 use crate::operator::{AxoConfig, Operator};
-use crate::runtime::{MlpExec, Runtime};
-use crate::surrogate::{EstimatorBackend, GbtSurrogate, PjrtSurrogate, Surrogate, TableSurrogate};
+use crate::surrogate::{build_backend, Surrogate};
 use std::fmt::Write as _;
 use std::sync::Arc;
 
@@ -41,21 +40,13 @@ pub fn setup(h: &Harness) -> Result<DseSetup> {
     let l_op = Harness::l_operator(op)?;
     let l_ds = h.dataset(l_op)?;
     let h_ds = h.dataset(op)?;
-    let surrogate: Arc<dyn Surrogate> = match h.cfg.surrogate.backend {
-        EstimatorBackend::Gbt => {
-            let mut gbt_params = crate::ml::gbt::GbtParams::default();
-            if let Some(st) = h.cfg.surrogate.gbt_stages {
-                gbt_params.n_stages = st;
-            }
-            Arc::new(GbtSurrogate::train(&h_ds, gbt_params)?)
-        }
-        EstimatorBackend::Table => Arc::new(TableSurrogate::from_dataset(&h_ds)),
-        EstimatorBackend::PjrtMlp => {
-            let rt = Runtime::cpu(&h.cfg.artifacts_dir)?;
-            let exec = MlpExec::new(&rt, &format!("estimator_{}", op.name()))?;
-            Arc::new(PjrtSurrogate::new(exec)?)
-        }
-    };
+    let surrogate: Arc<dyn Surrogate> = build_backend(
+        h.cfg.surrogate.backend,
+        h.cfg.surrogate.gbt_stages,
+        &h.cfg.artifacts_dir,
+        op,
+        || Ok(h_ds.clone()),
+    )?;
     let opts = SupersampleOptions {
         distance: h.cfg.conss.distance,
         noise_bits: h.cfg.conss.noise_bits,

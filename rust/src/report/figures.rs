@@ -243,7 +243,7 @@ pub fn fig12_matching(h: &Harness) -> Result<String> {
         .map(|(li, &c)| {
             vec![
                 l.configs[li].as_uint().to_string(),
-                format!("{}", l.configs[li]),
+                l.configs[li].to_string(),
                 c.to_string(),
             ]
         })

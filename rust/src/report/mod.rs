@@ -147,10 +147,12 @@ mod tests {
     use crate::util::tempdir::TempDir;
 
     fn tiny_harness(tmp: &TempDir) -> Harness {
-        let mut cfg = ExperimentConfig::default();
-        cfg.out_dir = tmp.path().to_path_buf();
-        cfg.train_samples = 200;
-        cfg.conss.forest_trees = Some(5);
+        let cfg = ExperimentConfig {
+            out_dir: tmp.path().to_path_buf(),
+            train_samples: 200,
+            conss: crate::expcfg::ConssConfig { forest_trees: Some(5), ..Default::default() },
+            ..Default::default()
+        };
         Harness::new(cfg)
     }
 

@@ -19,7 +19,7 @@ pub fn tab2_operators(h: &Harness) -> Result<String> {
     .unwrap();
     for op in Operator::ALL {
         let designs = if op.exhaustive() {
-            format!("{}", op.design_space_size() + 1) // paper counts incl. zero
+            (op.design_space_size() + 1).to_string() // paper counts incl. zero
         } else {
             "68.7 Billion".into()
         };

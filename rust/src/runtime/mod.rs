@@ -1,143 +1,24 @@
-//! PJRT runtime: loads and executes the AOT-compiled artifacts.
+//! Runtime layer: artifact schemas always, PJRT execution behind `pjrt`.
 //!
-//! Wraps the `xla` crate (xla_extension 0.5.1 via the PJRT C API):
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `client.compile` → `execute`. HLO **text** is the interchange format —
-//! jax ≥ 0.5 emits serialized protos with 64-bit instruction ids that this
-//! XLA rejects, while the text parser reassigns ids (see aot.py).
-//!
-//! One compiled executable per (graph, batch-shape) variant; the
-//! coordinator's batcher pads requests to the compiled batch size.
+//! The artifact *formats* — [`manifest`] (`manifest.json`) and [`weights`]
+//! (AXOW containers) — are plain std-only parsers and are always compiled,
+//! so the hermetic default build can validate artifacts it cannot execute.
+//! Everything that touches the `xla` bindings — the `Runtime` client
+//! wrapper in `client` and the typed executables in `executables` —
+//! compiles only with the `pjrt` cargo feature; the default backends
+//! (native characterization, exact table, GBT surrogate) cover the same
+//! roles without it.
 
+#[cfg(feature = "pjrt")]
+pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod executables;
 pub mod manifest;
 pub mod weights;
 
+#[cfg(feature = "pjrt")]
+pub use client::{literal_f32_2d, literal_i32_2d, LoadedExec, Runtime};
+#[cfg(feature = "pjrt")]
 pub use executables::{AxoEvalExec, MlpExec};
 pub use manifest::{ExecEntry, Manifest};
 pub use weights::WeightsFile;
-
-use crate::error::{Error, Result};
-use std::path::{Path, PathBuf};
-
-/// A live PJRT client plus the artifact directory it loads from.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifacts_dir: PathBuf,
-    pub manifest: Manifest,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client and read `manifest.json`.
-    pub fn cpu(artifacts_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, artifacts_dir: artifacts_dir.to_path_buf(), manifest })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn artifacts_dir(&self) -> &Path {
-        &self.artifacts_dir
-    }
-
-    /// Load + compile one HLO-text artifact.
-    pub fn load(&self, name: &str) -> Result<LoadedExec> {
-        let entry = self.manifest.entry(name)?.clone();
-        let path = self.artifacts_dir.join(&entry.hlo);
-        if !path.exists() {
-            return Err(Error::ArtifactMissing { path });
-        }
-        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
-            Error::ArtifactCorrupt { path: path.clone(), reason: e.to_string() }
-        })?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(LoadedExec { exe, name: name.to_string(), entry })
-    }
-}
-
-/// A compiled executable plus its manifest entry.
-pub struct LoadedExec {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-    pub entry: ExecEntry,
-}
-
-impl LoadedExec {
-    /// Execute and unwrap the 1-tuple output (aot.py lowers with
-    /// `return_tuple=True`).
-    pub fn execute(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self.exe.execute::<xla::Literal>(args)?;
-        let lit = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| Error::Xla("empty execution result".into()))?
-            .to_literal_sync()?;
-        Ok(lit.to_tuple1()?)
-    }
-
-    /// Output as f32 vector.
-    pub fn execute_f32(&self, args: &[xla::Literal]) -> Result<Vec<f32>> {
-        Ok(self.execute(args)?.to_vec::<f32>()?)
-    }
-}
-
-/// Build a row-major f32 literal of shape `(rows, cols)`.
-pub fn literal_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    if data.len() != rows * cols {
-        return Err(Error::Shape(format!(
-            "literal data {} != {rows}x{cols}",
-            data.len()
-        )));
-    }
-    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
-}
-
-/// Build a row-major i32 literal of shape `(rows, cols)`.
-pub fn literal_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    if data.len() != rows * cols {
-        return Err(Error::Shape(format!(
-            "literal data {} != {rows}x{cols}",
-            data.len()
-        )));
-    }
-    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn artifacts() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
-    #[test]
-    fn missing_manifest_is_artifact_missing() {
-        let r = Runtime::cpu(Path::new("/nonexistent"));
-        assert!(matches!(r, Err(Error::ArtifactMissing { .. })));
-    }
-
-    #[test]
-    fn literal_shape_checks() {
-        assert!(literal_f32_2d(&[1.0, 2.0], 2, 2).is_err());
-        assert!(literal_f32_2d(&[1.0; 4], 2, 2).is_ok());
-        assert!(literal_i32_2d(&[1; 6], 2, 3).is_ok());
-    }
-
-    // Full PJRT-backed tests live in rust/tests/ and need `make artifacts`.
-    #[test]
-    fn runtime_loads_if_artifacts_present() {
-        let dir = artifacts();
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let rt = Runtime::cpu(&dir).unwrap();
-        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
-        assert!(rt.manifest.entry("axo_eval_add4").is_ok());
-    }
-}

@@ -106,6 +106,8 @@ impl WeightsFile {
 
     /// Tensors as XLA literals in `order` (the manifest's `param_order`) —
     /// 1-D tensors stay rank-1, 2-D reshape to their matrix shape.
+    /// Only available with the `pjrt` feature (needs the `xla` bindings).
+    #[cfg(feature = "pjrt")]
     pub fn literals_in_order(&self, order: &[String]) -> Result<Vec<xla::Literal>> {
         let mut out = Vec::with_capacity(order.len());
         for name in order {

@@ -16,16 +16,20 @@
 //!
 //! All backends emit the minimization pair `[avg_abs_rel_err, pdplut]`.
 
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtSurrogate;
 
 use crate::charac::Dataset;
 use crate::dse::Objectives;
 use crate::error::{Error, Result};
 use crate::ml::gbt::{GbtParams, GradientBoostedTrees};
-use crate::operator::AxoConfig;
+use crate::operator::{AxoConfig, Operator};
 use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
 
 /// Backend selector used by experiment configs / CLI.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,6 +53,63 @@ impl EstimatorBackend {
             .into_iter()
             .find(|b| b.name() == name)
     }
+
+    /// Whether this backend can be constructed by the current binary —
+    /// `pjrt-mlp` needs the `pjrt` cargo feature compiled in. (Artifacts
+    /// are probed separately at construction time.)
+    pub fn compiled_in(&self) -> bool {
+        !matches!(self, EstimatorBackend::PjrtMlp) || cfg!(feature = "pjrt")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend registry
+// ---------------------------------------------------------------------------
+
+/// Construct the configured estimator backend — the one registry the CLI,
+/// the figure harness, and the examples all go through.
+///
+/// `dataset` is pulled lazily: the table/GBT backends train on it, while
+/// the PJRT MLP loads compiled weights instead and never touches it. The
+/// `pjrt-mlp` selection fails with a clear [`Error::Config`] when the
+/// binary was built without the `pjrt` feature, so hermetic builds degrade
+/// with an actionable message instead of a link error.
+pub fn build_backend(
+    kind: EstimatorBackend,
+    gbt_stages: Option<usize>,
+    artifacts_dir: &Path,
+    op: Operator,
+    dataset: impl FnOnce() -> Result<Arc<Dataset>>,
+) -> Result<Arc<dyn Surrogate>> {
+    match kind {
+        EstimatorBackend::Table => {
+            Ok(Arc::new(TableSurrogate::from_dataset(&dataset()?)))
+        }
+        EstimatorBackend::Gbt => {
+            let mut params = GbtParams::default();
+            if let Some(stages) = gbt_stages {
+                params.n_stages = stages;
+            }
+            Ok(Arc::new(GbtSurrogate::train(&dataset()?, params)?))
+        }
+        EstimatorBackend::PjrtMlp => pjrt_backend(artifacts_dir, op),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(artifacts_dir: &Path, op: Operator) -> Result<Arc<dyn Surrogate>> {
+    let rt = crate::runtime::Runtime::cpu(artifacts_dir)?;
+    let exec =
+        crate::runtime::MlpExec::new(&rt, &format!("estimator_{}", op.name()))?;
+    Ok(Arc::new(PjrtSurrogate::new(exec)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_artifacts_dir: &Path, op: Operator) -> Result<Arc<dyn Surrogate>> {
+    Err(Error::Config(format!(
+        "estimator backend `pjrt-mlp` for {op} needs a build with `--features pjrt` \
+         (and `make artifacts`); use `table` or `gbt` in hermetic builds"
+    )))
 }
 
 /// Batched metric prediction: configs → `[behav, ppa]`.
@@ -204,6 +265,36 @@ mod tests {
         let ds = add4_dataset();
         let g = GbtSurrogate::train(&ds, GbtParams::default()).unwrap();
         assert!(g.predict(&[AxoConfig::accurate(8)]).is_err());
+    }
+
+    #[test]
+    fn registry_builds_native_backends() {
+        let ds = Arc::new(add4_dataset());
+        for kind in [EstimatorBackend::Table, EstimatorBackend::Gbt] {
+            assert!(kind.compiled_in());
+            let ds2 = ds.clone();
+            let backend =
+                build_backend(kind, Some(10), Path::new("artifacts"), Operator::ADD4, move || {
+                    Ok(ds2)
+                })
+                .unwrap();
+            let preds = backend.predict(&ds.configs).unwrap();
+            assert_eq!(preds.len(), ds.len());
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn registry_rejects_pjrt_when_not_compiled() {
+        assert!(!EstimatorBackend::PjrtMlp.compiled_in());
+        let r = build_backend(
+            EstimatorBackend::PjrtMlp,
+            None,
+            Path::new("artifacts"),
+            Operator::MUL8,
+            || unreachable!("pjrt backend must not touch the dataset"),
+        );
+        assert!(matches!(r, Err(Error::Config(_))));
     }
 
     #[test]

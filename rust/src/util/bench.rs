@@ -26,10 +26,31 @@ pub struct BenchResult {
     pub min_ns: f64,
 }
 
+/// CI smoke mode (`REPRO_BENCH_SMOKE=1`): one iteration per benchmark, no
+/// warmup, no statistics budget — catches bench bit-rot on every PR
+/// without spending wall-clock on measurement quality.
+pub fn smoke_mode() -> bool {
+    std::env::var_os("REPRO_BENCH_SMOKE").is_some_and(|v| is_truthy(&v))
+}
+
+fn is_truthy(v: &std::ffi::OsStr) -> bool {
+    !(v.is_empty()
+        || v == "0"
+        || v.eq_ignore_ascii_case("false")
+        || v.eq_ignore_ascii_case("no")
+        || v.eq_ignore_ascii_case("off"))
+}
+
 impl Bench {
     pub fn new() -> Bench {
-        // `cargo bench -- --quick` halves budgets via env is overkill; keep
-        // fixed small budgets suited to CI.
+        if smoke_mode() {
+            return Bench {
+                warmup: Duration::ZERO,
+                budget: Duration::ZERO,
+                min_iters: 1,
+                results: Vec::new(),
+            };
+        }
         Bench {
             warmup: Duration::from_millis(200),
             budget: Duration::from_millis(1500),
@@ -38,9 +59,13 @@ impl Bench {
         }
     }
 
+    /// Override warmup/measurement budgets (ignored in smoke mode, which
+    /// always runs exactly one iteration).
     pub fn with_budget(mut self, warmup: Duration, budget: Duration) -> Bench {
-        self.warmup = warmup;
-        self.budget = budget;
+        if !smoke_mode() {
+            self.warmup = warmup;
+            self.budget = budget;
+        }
         self
     }
 
@@ -126,6 +151,16 @@ mod tests {
         assert!(r.iters >= 10);
         assert!(r.mean_ns > 0.0);
         assert!(r.min_ns <= r.median_ns && r.median_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn smoke_truthiness() {
+        for off in ["", "0", "false", "FALSE", "no", "off"] {
+            assert!(!is_truthy(std::ffi::OsStr::new(off)), "{off:?}");
+        }
+        for on in ["1", "true", "yes"] {
+            assert!(is_truthy(std::ffi::OsStr::new(on)), "{on:?}");
+        }
     }
 
     #[test]

@@ -20,12 +20,19 @@ pub enum Json {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {message}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub offset: usize,
     pub message: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // -- accessors ---------------------------------------------------------
@@ -115,13 +122,7 @@ impl Json {
         Ok(v)
     }
 
-    // -- write ---------------------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
+    // -- write (serialization lives in the `Display` impl) -------------------
 
     fn write(&self, out: &mut String) {
         match self {
@@ -158,6 +159,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact (no-whitespace) JSON serialization; `Json::to_string()` comes
+/// from the blanket `ToString` impl.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -1,7 +1,8 @@
 //! Self-contained infrastructure substrate.
 //!
-//! This repository builds **fully offline** against a minimal dependency
-//! set (`xla`, `anyhow`, `thiserror`), so the usual ecosystem crates are
+//! This repository builds **fully offline** with zero external
+//! dependencies by default (the optional `pjrt` feature adds only the
+//! vendored `xla` bindings), so the usual ecosystem crates are
 //! re-implemented here at the scale this project needs:
 //!
 //! * [`json`] — JSON value model, parser and writer (datasets, manifest,
@@ -11,7 +12,8 @@
 //! * [`rng`] — seedable splitmix64/xoshiro256** PRNG with the sampling
 //!   helpers the GA and forests need (deterministic across platforms).
 //! * [`par`] — scoped-thread parallel map over index chunks (the rayon
-//!   substitute used by characterization and forest training).
+//!   substitute used by characterization and forest training); pool width
+//!   is tunable via the `REPRO_THREADS` env knob.
 //! * [`bench`] — the micro-benchmark harness behind `cargo bench`
 //!   (criterion substitute: warmup, timed iterations, mean/p50/p99).
 //! * [`tempdir`] — RAII temporary directories for tests.

@@ -5,10 +5,28 @@
 //! `Sync` to share and results `Send`; the closure runs on borrowed data so
 //! no `'static` bounds leak into callers.
 
-/// Number of workers: physical parallelism, capped by items.
+/// Worker-pool width: the `REPRO_THREADS` env knob when set to a positive
+/// integer, else the machine's available parallelism. Cached after the
+/// first read so every `parallel_map` call shares one decision — CI
+/// runners pin it low (`REPRO_THREADS=2`) while laptops get every core.
+pub fn configured_parallelism() -> usize {
+    static CONFIGURED: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CONFIGURED.get_or_init(|| {
+        parse_thread_knob(std::env::var("REPRO_THREADS").ok().as_deref()).unwrap_or_else(
+            || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        )
+    })
+}
+
+/// `REPRO_THREADS` parsing: positive integers pass through; unset, junk,
+/// and zero all mean "auto".
+fn parse_thread_knob(value: Option<&str>) -> Option<usize> {
+    value.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0)
+}
+
+/// Number of workers: configured parallelism, capped by items.
 pub fn default_workers(items: usize) -> usize {
-    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    hw.min(items).max(1)
+    configured_parallelism().min(items).max(1)
 }
 
 /// Parallel map preserving order. `f` receives `(index, item)`.
@@ -70,6 +88,23 @@ pub fn parallel_fill<R: Send, C: Sync>(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn thread_knob_parsing() {
+        assert_eq!(parse_thread_knob(None), None);
+        assert_eq!(parse_thread_knob(Some("")), None);
+        assert_eq!(parse_thread_knob(Some("abc")), None);
+        assert_eq!(parse_thread_knob(Some("0")), None);
+        assert_eq!(parse_thread_knob(Some("1")), Some(1));
+        assert_eq!(parse_thread_knob(Some(" 8 ")), Some(8));
+    }
+
+    #[test]
+    fn configured_parallelism_is_positive_and_stable() {
+        let a = configured_parallelism();
+        assert!(a >= 1);
+        assert_eq!(a, configured_parallelism()); // cached
+    }
 
     #[test]
     fn map_preserves_order() {

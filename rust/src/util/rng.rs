@@ -108,7 +108,7 @@ impl Rng {
     /// Weighted index over non-negative weights (k-means++ seeding).
     pub fn gen_weighted(&mut self, weights: &[f64]) -> Option<usize> {
         let total: f64 = weights.iter().sum();
-        if !(total > 0.0) {
+        if !(total.is_finite() && total > 0.0) {
             return None;
         }
         let mut target = self.gen_f64() * total;

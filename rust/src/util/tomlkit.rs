@@ -60,12 +60,19 @@ impl TomlValue {
 }
 
 /// Parse error with line number.
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error on line {line}: {message}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub message: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// Parse into a flat `"section.key"` (or `"key"` at top level) map.
 pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {

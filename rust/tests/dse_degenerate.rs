@@ -1,0 +1,140 @@
+//! Degenerate-input coverage for `dse::hypervolume` and `dse::pareto`:
+//! empty fronts, single points, duplicated points, and reference points
+//! that the front does not dominate. These inputs show up in practice at
+//! tight constraint scaling factors (empty feasible set) and with exact
+//! table lookups (duplicated objective vectors), so the edge behavior is
+//! pinned here rather than left to the property suite's random draws.
+
+use repro::dse::{
+    dominates, hypervolume2d, pareto_front_indices, Constraints, Objectives, ParetoFront,
+};
+
+// ---------------------------------------------------------------------------
+// Hypervolume
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hv_empty_front_is_zero() {
+    assert_eq!(hypervolume2d(&[], [1.0, 1.0]), 0.0);
+    assert_eq!(repro::dse::hypervolume::relative_hypervolume2d(&[], [1.0, 1.0]), 0.0);
+}
+
+#[test]
+fn hv_single_point_is_its_rectangle() {
+    let hv = hypervolume2d(&[[0.25, 0.5]], [1.0, 2.0]);
+    assert!((hv - 0.75 * 1.5).abs() < 1e-12);
+}
+
+#[test]
+fn hv_duplicated_points_count_once() {
+    let single = hypervolume2d(&[[0.3, 0.4]], [1.0, 1.0]);
+    let dup = hypervolume2d(&[[0.3, 0.4]; 5], [1.0, 1.0]);
+    assert!((single - dup).abs() < 1e-12);
+    // Duplicates mixed into a larger front change nothing either.
+    let front = [[0.1, 0.8], [0.5, 0.2]];
+    let with_dups = [[0.1, 0.8], [0.5, 0.2], [0.1, 0.8], [0.5, 0.2]];
+    assert!(
+        (hypervolume2d(&front, [1.0, 1.0]) - hypervolume2d(&with_dups, [1.0, 1.0])).abs()
+            < 1e-12
+    );
+}
+
+#[test]
+fn hv_reference_dominated_by_front_is_zero() {
+    // Minimization: a point contributes only when it is strictly inside
+    // the reference box. A reference that dominates (is below/left of)
+    // every front point yields zero volume.
+    let front = [[0.5, 0.5], [0.9, 0.2]];
+    assert_eq!(hypervolume2d(&front, [0.1, 0.1]), 0.0);
+    // Points exactly ON the reference boundary also contribute nothing.
+    assert_eq!(hypervolume2d(&[[0.5, 1.0]], [1.0, 1.0]), 0.0);
+    assert_eq!(hypervolume2d(&[[1.0, 0.5]], [1.0, 1.0]), 0.0);
+}
+
+#[test]
+fn hv_zero_area_reference_box() {
+    // Degenerate (zero-area) reference boxes cannot enclose any volume.
+    assert_eq!(hypervolume2d(&[[0.0, 0.0]], [0.0, 1.0]), 0.0);
+    assert_eq!(
+        repro::dse::hypervolume::relative_hypervolume2d(&[[0.0, 0.0]], [0.0, 1.0]),
+        0.0
+    );
+}
+
+#[test]
+fn hv_identical_coordinate_column() {
+    // All points share one coordinate — the sweep must not double-count.
+    let pts = [[0.2, 0.5], [0.4, 0.5], [0.8, 0.5]];
+    let hv = hypervolume2d(&pts, [1.0, 1.0]);
+    assert!((hv - 0.8 * 0.5).abs() < 1e-12); // only [0.2, 0.5] matters
+}
+
+// ---------------------------------------------------------------------------
+// Pareto front extraction
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pareto_empty_input() {
+    assert!(pareto_front_indices(&[]).is_empty());
+    let f = ParetoFront::from_points(&[]);
+    assert!(f.is_empty());
+    assert_eq!(f.len(), 0);
+    assert!(f.sorted_points().is_empty());
+}
+
+#[test]
+fn pareto_single_point_is_the_front() {
+    let pts: Vec<Objectives> = vec![[3.0, 7.0]];
+    assert_eq!(pareto_front_indices(&pts), vec![0]);
+    let f = ParetoFront::from_points(&pts);
+    assert_eq!(f.points, pts);
+}
+
+#[test]
+fn pareto_all_points_identical() {
+    // No duplicate dominates its copy, so every index survives.
+    let pts: Vec<Objectives> = vec![[1.0, 2.0]; 4];
+    assert_eq!(pareto_front_indices(&pts), vec![0, 1, 2, 3]);
+    assert!(!dominates(pts[0], pts[1]));
+}
+
+#[test]
+fn pareto_duplicates_of_dominated_point_all_dropped() {
+    let pts: Vec<Objectives> = vec![[0.0, 0.0], [1.0, 1.0], [1.0, 1.0]];
+    assert_eq!(pareto_front_indices(&pts), vec![0]);
+}
+
+#[test]
+fn pareto_collinear_column_keeps_only_minimum() {
+    // Same first objective everywhere: only the minimal second survives
+    // (ties on both coordinates would all survive).
+    let pts: Vec<Objectives> = vec![[1.0, 3.0], [1.0, 1.0], [1.0, 2.0], [1.0, 1.0]];
+    assert_eq!(pareto_front_indices(&pts), vec![1, 3]);
+}
+
+#[test]
+fn pareto_front_feeds_hypervolume_consistently() {
+    // The front of a degenerate set gives the same HV as the full set.
+    let pts: Vec<Objectives> =
+        vec![[0.5, 0.5], [0.5, 0.5], [0.2, 0.9], [0.9, 0.9], [0.9, 0.2]];
+    let front: Vec<Objectives> =
+        pareto_front_indices(&pts).iter().map(|&i| pts[i]).collect();
+    let reference = [1.0, 1.0];
+    assert!(
+        (hypervolume2d(&pts, reference) - hypervolume2d(&front, reference)).abs() < 1e-12
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Constraints interplay (the producer of degenerate fronts in practice)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn constraints_reference_with_infeasible_set_gives_zero_hv() {
+    let c = Constraints::new(0.5, 0.5).unwrap();
+    let objs: Vec<Objectives> = vec![[0.9, 0.9], [0.6, 0.7]];
+    let feasible: Vec<Objectives> =
+        objs.into_iter().filter(|&o| c.feasible(o)).collect();
+    assert!(feasible.is_empty());
+    assert_eq!(hypervolume2d(&feasible, c.reference()), 0.0);
+}
