@@ -9,8 +9,8 @@
 //!
 //! Run: `cargo run --release --example accelerator_case_study`
 
-use repro::charac::InputSet;
 use repro::dse::{Objectives, ParetoFront};
+use repro::expcfg::ExperimentConfig;
 use repro::operator::{multiplier, AxoConfig, Operator};
 use repro::prelude::*;
 use repro::util::rng::Rng;
@@ -71,17 +71,20 @@ fn psnr(exact: &[i64], approx: &[i64]) -> f64 {
 
 fn main() -> repro::error::Result<()> {
     // --- Find Pareto-optimal 8×8 multipliers (scaled-down DSE). ---
+    // The engine caches the seeded characterization sample; the structured
+    // library goes through its validation path.
     let op = Operator::MUL8;
-    let inputs = InputSet::exhaustive(op);
-    let mut rng = Rng::seed_from_u64(2023);
-    let sample = AxoConfig::sample_unique(36, 1500, &mut rng);
-    let ds = characterize(op, &sample, &inputs, &Backend::Native)?;
+    let engine = EngineContext::new(ExperimentConfig {
+        train_samples: 1500,
+        ..Default::default() // operator mul8, seed 2023
+    });
+    let ds = engine.dataset(op)?;
     // Augment the random sample with the structured EvoApprox-style
     // library — truncation families supply the low-error region that pure
     // random 36-bit sampling misses.
     let lib = repro::baselines::evoapprox_library(op);
-    let lib_ds = characterize(op, &lib, &inputs, &Backend::Native)?;
-    let mut all = ds.clone();
+    let lib_ds = engine.validate(op, &lib)?;
+    let mut all = (*ds).clone();
     all.merge(&lib_ds)?;
     let objs: Vec<Objectives> = all.headline_points().iter().map(|p| [p[1], p[0]]).collect();
     let front = ParetoFront::from_points(&objs);

@@ -1,17 +1,17 @@
 //! ConSS pipeline walkthrough: scale 4-bit adder knowledge to 8 bits.
 //!
 //! Reproduces the paper's §IV flow on the adder pair: characterize
-//! L = add4 (exhaustive) and H = add8 (exhaustive here — it is small
-//! enough), analyze the three distance measures (Fig. 11), match with the
-//! Euclidean measure (Fig. 12), train the random-forest supersampler with
-//! noise bits (Fig. 8/13), and compare the supersampled pool's hypervolume
-//! against the training data.
+//! L = add4 and H = add8 (both exhaustive — small enough) through the
+//! engine's cached dataset path, analyze the three distance measures
+//! (Fig. 11), match with the Euclidean measure (Fig. 12), train the
+//! random-forest supersampler with noise bits (Fig. 8/13), and compare the
+//! supersampled pool's hypervolume against the training data.
 //!
 //! Run: `cargo run --release --example conss_pipeline`
 
-use repro::charac::InputSet;
 use repro::conss::{ConssPipeline, SupersampleOptions};
 use repro::dse::{hypervolume2d, Constraints, Objectives};
+use repro::expcfg::ExperimentConfig;
 use repro::matching::Matcher;
 use repro::prelude::*;
 use repro::stats::Histogram;
@@ -22,20 +22,11 @@ fn objectives(ds: &Dataset) -> Vec<Objectives> {
 
 fn main() -> repro::error::Result<()> {
     // --- Characterize L and H (Fig. 4 "Statistical Analysis"). ---
-    let l_in = InputSet::exhaustive(Operator::ADD4);
-    let h_in = InputSet::exhaustive(Operator::ADD8);
-    let l = characterize(
-        Operator::ADD4,
-        &AxoConfig::enumerate(4).collect::<Vec<_>>(),
-        &l_in,
-        &Backend::Native,
-    )?;
-    let h = characterize(
-        Operator::ADD8,
-        &AxoConfig::enumerate(8).collect::<Vec<_>>(),
-        &h_in,
-        &Backend::Native,
-    )?;
+    // The engine caches both datasets; re-running any step below (or the
+    // figure harness in the same process) reuses them for free.
+    let engine = EngineContext::new(ExperimentConfig::default());
+    let l = engine.dataset(Operator::ADD4)?;
+    let h = engine.dataset(Operator::ADD8)?;
     println!("L_CHAR: {} designs of add4; H_CHAR: {} designs of add8", l.len(), h.len());
 
     // --- Distance measure analysis (Fig. 11). ---
@@ -72,7 +63,7 @@ fn main() -> repro::error::Result<()> {
     );
 
     // --- Validate the pool and compare hypervolume vs TRAIN. ---
-    let pool_ds = characterize(Operator::ADD8, &pool.configs, &h_in, &Backend::Native)?;
+    let pool_ds = engine.validate(Operator::ADD8, &pool.configs)?;
     let h_obj = objectives(&h);
     let pool_obj = objectives(&pool_ds);
     for factor in [0.3, 0.5, 1.0] {

@@ -1,150 +1,113 @@
 //! END-TO-END DRIVER: the complete AxOCS system on the paper's headline
 //! workload — DSE of 8×8 signed approximate multipliers.
 //!
-//! Exercises every layer of the three-layer stack on one real run:
+//! Exercises the engine layer on one real run:
 //!
-//!   1. characterize the 4×4 space exhaustively and a seeded sample of the
-//!      8×8 space (native substrate; Table II);
-//!   2. train the surrogate estimator — the AOT-compiled Pallas MLP via
-//!      PJRT when `artifacts/` is built, else the native GBT — and wrap it
-//!      in the batching coordinator service;
-//!   3. distance-match, train the ConSS random forest, supersample;
-//!   4. run GA (AppAxO baseline) and ConSS+GA (AxOCS) through the service
-//!      for every constraint scaling factor (Fig. 15);
-//!   5. validate fronts (PPF → VPF) with the real substrate and print the
-//!      headline comparison + service batching metrics.
+//!   1. `EngineContext::prepare_dse` characterizes the 4×4 space
+//!      exhaustively and a seeded sample of the 8×8 space (each exactly
+//!      once, via the thread-safe dataset cache), trains the surrogate
+//!      estimator — the AOT-compiled Pallas MLP via PJRT when `artifacts/`
+//!      is built, else the native GBT — behind the shared batching
+//!      service, and trains the ConSS random forest;
+//!   2. `run_many` executes one [`DseJob`] per constraint scaling factor
+//!      (Fig. 15) **concurrently** on scoped threads, every search
+//!      funneling GA fitness through the one service so batches coalesce
+//!      across factors;
+//!   3. fronts are validated (PPF → VPF) with the real substrate and the
+//!      headline comparison + service batching metrics are printed.
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 //!
 //! Run: `cargo run --release --example end_to_end_dse [-- --full]`
 
-use repro::charac::InputSet;
-use repro::conss::{ConssPipeline, SupersampleOptions};
-use repro::coordinator::{BatchOptions, EstimatorService};
-use repro::dse::{hypervolume2d, Constraints, GaOptions, NsgaRunner, Objectives, ParetoFront};
+use repro::charac::Backend;
+use repro::dse::hypervolume2d;
+use repro::engine::vpf_candidates;
+use repro::expcfg::{ExperimentConfig, GaConfig, SurrogateConfig};
 use repro::prelude::*;
-use repro::util::rng::Rng;
 use std::path::Path;
-use std::sync::Arc;
 use std::time::Instant;
-
-fn objectives(ds: &Dataset) -> Vec<Objectives> {
-    ds.headline_points().iter().map(|p| [p[1], p[0]]).collect()
-}
-
-/// The AOT Pallas MLP on PJRT — only reachable when `Backend::pjrt_ready`
-/// says the feature is compiled in and artifacts exist.
-#[cfg(feature = "pjrt")]
-fn pjrt_surrogate(artifacts: &Path) -> repro::error::Result<Arc<dyn Surrogate>> {
-    use repro::runtime::{MlpExec, Runtime};
-    use repro::surrogate::PjrtSurrogate;
-    let rt = Runtime::cpu(artifacts)?;
-    println!("surrogate: AOT Pallas MLP on PJRT ({})", rt.platform());
-    let exec = MlpExec::new(&rt, "estimator_mul8")?;
-    Ok(Arc::new(PjrtSurrogate::new(exec)?))
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn pjrt_surrogate(_artifacts: &Path) -> repro::error::Result<Arc<dyn Surrogate>> {
-    Err(repro::error::Error::Config(
-        "pjrt surrogate requires a build with --features pjrt".into(),
-    ))
-}
 
 fn main() -> repro::error::Result<()> {
     let full = std::env::args().any(|a| a == "--full");
     let (n_samples, pop, gens) = if full { (10_650, 100, 250) } else { (2_000, 48, 40) };
-    let seed = 2023u64;
+    let factors = [0.2, 0.5, 0.75, 1.0];
     let t0 = Instant::now();
     println!(
         "AxOCS end-to-end: mul4 → mul8 supersampled DSE \
          ({n_samples} samples, pop {pop}, {gens} gens{})",
-        if full { ", FULL paper scale" } else { ", quick scale — pass --full for paper scale" }
+        if full { ", FULL paper scale" } else { ", quick scale (--full for paper scale)" }
     );
 
-    // ---- 1. Characterization (the paper's Vivado+RTL-sim step). ----
-    let l_in = InputSet::exhaustive(Operator::MUL4);
-    let h_in = InputSet::exhaustive(Operator::MUL8);
-    let l_ds = characterize(
-        Operator::MUL4,
-        &AxoConfig::enumerate(10).collect::<Vec<_>>(),
-        &l_in,
-        &Backend::Native,
-    )?;
-    let mut rng = Rng::seed_from_u64(seed);
-    let h_cfgs = AxoConfig::sample_unique(36, n_samples, &mut rng);
-    let t = Instant::now();
-    let h_ds = characterize(Operator::MUL8, &h_cfgs, &h_in, &Backend::Native)?;
-    println!(
-        "[{:7.2?}] characterized {} of 68.7e9 mul8 designs over 65536 input pairs ({:.0} cfg/s)",
-        t0.elapsed(),
-        h_ds.len(),
-        h_ds.len() as f64 / t.elapsed().as_secs_f64()
-    );
-    let h_obj = objectives(&h_ds);
-
-    // ---- 2. Surrogate estimator behind the batching service. ----
+    // ---- Engine context: operator pair, surrogate, GA scale. ----
     let artifacts = Path::new("artifacts");
-    let backend: Arc<dyn Surrogate> = if Backend::pjrt_ready(artifacts) {
-        pjrt_surrogate(artifacts)?
+    let backend = if Backend::pjrt_ready(artifacts) {
+        println!("surrogate: AOT Pallas MLP on PJRT");
+        EstimatorBackend::PjrtMlp
     } else {
         println!(
-            "[{:7.2?}] surrogate: native GBT (build with --features pjrt + `make artifacts` for the PJRT path)",
-            t0.elapsed()
+            "surrogate: native GBT (build with --features pjrt + `make artifacts` \
+             for the PJRT path)"
         );
-        Arc::new(repro::surrogate::GbtSurrogate::train(&h_ds, Default::default())?)
+        EstimatorBackend::Gbt
     };
-    let service = EstimatorService::spawn(backend, BatchOptions::default());
+    let cfg = ExperimentConfig {
+        train_samples: n_samples,
+        surrogate: SurrogateConfig { backend, gbt_stages: None },
+        ga: GaConfig { pop_size: pop, generations: gens, ..Default::default() },
+        scaling_factors: factors.to_vec(),
+        ..Default::default() // operator mul8, seed 2023
+    };
+    let engine = EngineContext::new(cfg);
 
-    // ---- 3. ConSS: match → forest → supersample. ----
-    let pipe = ConssPipeline::train(&l_ds, &h_ds, SupersampleOptions::default())?;
-    println!("[{:7.2?}] ConSS forest trained (euclidean matching, 4 noise bits)", t0.elapsed());
+    // ---- 1. Prepare: characterize L/H once, train ConSS + estimator. ----
+    let prep = engine.prepare_dse()?;
+    println!(
+        "[{:7.2?}] characterized {} of 68.7e9 mul8 designs (and all {} mul4) — cached",
+        t0.elapsed(),
+        prep.h_ds.len(),
+        prep.l_ds.len()
+    );
+    println!("[{:7.2?}] ConSS forest trained (euclidean matching)", t0.elapsed());
 
-    // ---- 4+5. Per-factor: GA vs ConSS+GA through the service, then VPF. ----
+    // ---- 2. All four scaling factors concurrently through one service. ----
+    let jobs: Vec<DseJob> = factors.iter().map(|&f| DseJob::new(f)).collect();
+    let t_dse = Instant::now();
+    let runs = prep.run_many(&jobs)?;
+    println!(
+        "[{:7.2?}] {} factor jobs ran concurrently in {:.2?}",
+        t0.elapsed(),
+        runs.len(),
+        t_dse.elapsed()
+    );
+
+    // ---- 3. Per-factor: headline comparison + VPF validation. ----
     println!(
         "\n{:>7} {:>11} {:>11} {:>11} {:>11} | {:>11} {:>11} {:>6}",
         "factor", "TRAIN", "GA", "ConSS", "ConSS+GA", "VPF(GA)", "VPF(AxOCS)", "extra"
     );
-    for factor in [0.2, 0.5, 0.75, 1.0] {
-        let constraints = Constraints::from_scaling_factor(factor, &h_obj)?;
-        let reference = constraints.reference();
-        let hv_train = hypervolume2d(&h_obj, reference);
-
-        let pool = pipe.supersample(Some(&constraints), &h_obj)?;
-        let pool_pred = service.predict(pool.configs.clone())?;
-        let hv_conss = hypervolume2d(&pool_pred, reference);
-
-        let opts = GaOptions { pop_size: pop, generations: gens, seed, ..Default::default() };
-        let ga = NsgaRunner::new(opts.clone(), constraints).run(36, &service, &[])?;
-        let axocs =
-            NsgaRunner::new(opts, constraints).run(36, &service, &pool.configs)?;
-
-        // VPF: re-characterize front configs with the real substrate.
-        let vpf = |front: &[AxoConfig]| -> repro::error::Result<(f64, usize)> {
-            let fresh: Vec<AxoConfig> = front
-                .iter()
-                .filter(|c| !h_ds.configs.contains(c))
-                .copied()
-                .collect();
-            let ds = characterize(Operator::MUL8, &fresh, &h_in, &Backend::Native)?;
-            let objs: Vec<Objectives> = objectives(&ds)
-                .into_iter()
-                .filter(|o| constraints.feasible(*o))
-                .collect();
-            let front = ParetoFront::from_points(&objs);
-            Ok((hypervolume2d(&front.points, reference), fresh.len()))
-        };
-        let (vpf_ga, _) = vpf(&ga.front_configs)?;
-        let (vpf_axocs, extra) = vpf(&axocs.front_configs)?;
-
+    for run in &runs {
+        let reference = run.constraints.reference();
+        let (ga_front, _) =
+            engine.validate_front(&prep, &vpf_candidates(&run.ga), &run.constraints)?;
+        let (axocs_front, extra) = engine.validate_front(
+            &prep,
+            &vpf_candidates(&run.conss_ga),
+            &run.constraints,
+        )?;
         println!(
-            "{factor:>7.2} {hv_train:>11.4} {:>11.4} {hv_conss:>11.4} {:>11.4} | {vpf_ga:>11.4} {vpf_axocs:>11.4} {extra:>6}",
-            ga.final_hypervolume(),
-            axocs.final_hypervolume(),
+            "{:>7.2} {:>11.4} {:>11.4} {:>11.4} {:>11.4} | {:>11.4} {:>11.4} {extra:>6}",
+            run.factor,
+            run.hv_train,
+            run.ga.final_hypervolume(),
+            run.hv_conss,
+            run.conss_ga.final_hypervolume(),
+            hypervolume2d(&ga_front.points, reference),
+            hypervolume2d(&axocs_front.points, reference),
         );
     }
 
-    let snap = service.metrics().snapshot();
+    let snap = prep.service.metrics().snapshot();
     println!(
         "\nestimator service: {} requests / {} configs in {} batches \
          (mean fill {:.1}, max {}), backend busy {:.1} ms",
@@ -154,6 +117,11 @@ fn main() -> repro::error::Result<()> {
         snap.mean_batch_fill(),
         snap.max_batch_fill,
         snap.busy_micros as f64 / 1000.0
+    );
+    let cache = engine.cache_stats();
+    println!(
+        "dataset cache: {} entries, {} hits, {} misses — L/H characterized once each",
+        cache.entries, cache.hits, cache.misses
     );
     println!("total wall clock: {:.2?}", t0.elapsed());
     println!("\npaper-shape checks: ConSS+GA ≥ GA per row; gap widest at factor 0.2;");

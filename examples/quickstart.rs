@@ -1,26 +1,23 @@
 //! Quickstart: the whole AxOCS loop on the smallest operator.
 //!
 //! Characterizes every approximate 4-bit adder (the operator model of
-//! paper Fig. 3), prints the Pareto designs, and runs a small NSGA-II
-//! search against the exact characterization table.
+//! paper Fig. 3) through the engine's cached dataset path, prints the
+//! Pareto designs, and runs a small NSGA-II search against the exact
+//! characterization table.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use repro::prelude::*;
-use repro::charac::InputSet;
 use repro::dse::{GaOptions, ParetoFront};
 
 fn main() -> repro::error::Result<()> {
     // 1. Characterize the full design space (15 usable configurations).
+    //    The EngineContext caches datasets process-wide: a second
+    //    `dataset(op)` call (or a concurrent one) reuses this result.
     let op = Operator::ADD4;
-    let inputs = InputSet::exhaustive(op);
-    let ds = characterize(
-        op,
-        &AxoConfig::enumerate(op.config_len()).collect::<Vec<_>>(),
-        &inputs,
-        &Backend::Native,
-    )?;
-    println!("characterized {} designs of {op} over {} input pairs\n", ds.len(), inputs.len());
+    let engine = EngineContext::new(repro::expcfg::ExperimentConfig::default());
+    let ds = engine.dataset(op)?;
+    println!("characterized {} designs of {op} (engine-cached)\n", ds.len());
 
     println!("{:<6} {:>14} {:>16} {:>8} {:>10}", "config", "avg_abs_err", "avg_abs_rel_err", "luts", "pdplut");
     for i in 0..ds.len() {

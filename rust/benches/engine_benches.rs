@@ -1,0 +1,52 @@
+//! Engine-layer benches: dataset cache (cold vs cached) and the concurrent
+//! multi-factor DSE driver. CI's bench-smoke job runs this suite with
+//! `REPRO_BENCH_SMOKE=1` and stamps BENCH_engine.json so the engine's perf
+//! trajectory is recorded per commit.
+//!
+//! Run: `cargo bench --bench engine_benches`
+
+use repro::engine::{DseJob, EngineContext};
+use repro::expcfg::{ConssConfig, ExperimentConfig, GaConfig, SurrogateConfig};
+use repro::operator::Operator;
+use repro::surrogate::EstimatorBackend;
+use repro::util::bench::Bench;
+use std::time::Duration;
+
+/// Small add4 → add8 pipeline: exhaustive spaces, exact-table surrogate,
+/// tiny GA — isolates engine overhead from substrate cost.
+fn cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        operator: "add8".into(),
+        surrogate: SurrogateConfig { backend: EstimatorBackend::Table, gbt_stages: None },
+        conss: ConssConfig { forest_trees: Some(4), noise_bits: 2, ..Default::default() },
+        ga: GaConfig { pop_size: 16, generations: 8, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let mut b =
+        Bench::new().with_budget(Duration::from_millis(100), Duration::from_millis(800));
+
+    // Dataset path: cold characterization vs cache hit.
+    b.bench("engine/dataset_add8_cold", || {
+        EngineContext::new(cfg()).dataset(Operator::ADD8).unwrap()
+    });
+    let ctx = EngineContext::new(cfg());
+    ctx.dataset(Operator::ADD8).unwrap();
+    b.bench("engine/dataset_add8_cached", || ctx.dataset(Operator::ADD8).unwrap());
+
+    // Multi-factor DSE: four concurrent jobs over a warm context vs the
+    // full cold path (characterize + train + spawn + run).
+    let jobs: Vec<DseJob> =
+        [0.35, 0.5, 0.65, 0.8].iter().map(|&f| DseJob::new(f)).collect();
+    let prep = ctx.prepare_dse().unwrap();
+    b.bench("engine/run_many_4_factors_warm", || prep.run_many(&jobs).unwrap());
+    b.bench("engine/cold_prepare_plus_4_factors", || {
+        let ctx = EngineContext::new(cfg());
+        let prep = ctx.prepare_dse().unwrap();
+        prep.run_many(&jobs).unwrap()
+    });
+
+    b.finish();
+}

@@ -75,6 +75,27 @@ impl ParsedArgs {
         }
     }
 
+    /// Parse a comma-separated option value (e.g. `--factors 0.2,0.5,0.75`).
+    /// Empty segments are ignored, so trailing commas are harmless.
+    pub fn opt_parse_list<T: std::str::FromStr>(
+        &self,
+        name: &str,
+    ) -> Result<Option<Vec<T>>, ArgError> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse::<T>()
+                        .map_err(|_| ArgError(format!("--{name}: cannot parse `{s}`")))
+                })
+                .collect::<Result<Vec<T>, ArgError>>()
+                .map(Some),
+        }
+    }
+
     pub fn positional(&self, idx: usize, what: &str) -> Result<&str, ArgError> {
         self.positionals
             .get(idx)
@@ -130,6 +151,20 @@ mod tests {
     fn bad_parse_is_error() {
         let a = parse(&["dse", "--factor", "abc"]);
         assert!(a.opt_parse::<f64>("factor").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["dse", "--factors", "0.2, 0.5,0.75,"]);
+        assert_eq!(
+            a.opt_parse_list::<f64>("factors").unwrap(),
+            Some(vec![0.2, 0.5, 0.75])
+        );
+        assert_eq!(a.opt_parse_list::<f64>("absent").unwrap(), None);
+        let bad = parse(&["dse", "--factors", "0.2,x"]);
+        assert!(bad.opt_parse_list::<f64>("factors").is_err());
+        let empty = parse(&["dse", "--factors", ","]);
+        assert_eq!(empty.opt_parse_list::<f64>("factors").unwrap(), Some(vec![]));
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 pub mod pipeline;
 
-pub use pipeline::{ConssPipeline, ConssPool, SupersampleOptions};
+pub use pipeline::{ConssPipeline, ConssPool, SeedSelection, SupersampleOptions};
 
 use crate::error::{Error, Result};
 use crate::matching::noise::noise_row;

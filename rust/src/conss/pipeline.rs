@@ -94,15 +94,26 @@ impl ConssPipeline {
     }
 
     /// Seed subset per the configured selection strategy.
+    pub fn select_seeds(&self, constraints: Option<&Constraints>, h_train: &[Objectives])
+        -> Result<Vec<AxoConfig>>
+    {
+        self.select_seeds_as(self.options.seeds, constraints, h_train)
+    }
+
+    /// Seed subset per an explicit selection strategy (the engine layer
+    /// varies the strategy per job without retraining the forest).
     ///
     /// For `ConstraintFiltered` the H constraints are transferred to the L
     /// space by *scaled position*: an L design qualifies when its min-max
     /// scaled metrics fall inside the scaled constraint box (the paper's
     /// "L_CONFIGs satisfying the scaled constraints").
-    pub fn select_seeds(&self, constraints: Option<&Constraints>, h_train: &[Objectives])
-        -> Result<Vec<AxoConfig>>
-    {
-        match self.options.seeds {
+    pub fn select_seeds_as(
+        &self,
+        selection: SeedSelection,
+        constraints: Option<&Constraints>,
+        h_train: &[Objectives],
+    ) -> Result<Vec<AxoConfig>> {
+        match selection {
             SeedSelection::All => Ok(self.l_configs.clone()),
             SeedSelection::ParetoOnly => {
                 let idx = pareto_front_indices(&self.l_objectives);
@@ -115,9 +126,20 @@ impl ConssPipeline {
                 if h_train.is_empty() {
                     return Err(Error::Dse("empty H training set".into()));
                 }
-                // Scaled constraint box position in H space.
-                let hb = h_train.iter().map(|o| o[0]).fold(f64::NEG_INFINITY, f64::max);
-                let hp = h_train.iter().map(|o| o[1]).fold(f64::NEG_INFINITY, f64::max);
+                // Scaled constraint box position in H space. The 1e-30
+                // floor mirrors the L side below: a degenerate H training
+                // set (all-zero behav or ppa) must clamp the filter to
+                // "everything passes" instead of scaling by inf/NaN.
+                let hb = h_train
+                    .iter()
+                    .map(|o| o[0])
+                    .fold(f64::NEG_INFINITY, f64::max)
+                    .max(1e-30);
+                let hp = h_train
+                    .iter()
+                    .map(|o| o[1])
+                    .fold(f64::NEG_INFINITY, f64::max)
+                    .max(1e-30);
                 let fb = (c.b_max / hb).min(1.0);
                 let fp = (c.p_max / hp).min(1.0);
                 // L metrics scaled to [0,1].
@@ -150,7 +172,18 @@ impl ConssPipeline {
         constraints: Option<&Constraints>,
         h_train: &[Objectives],
     ) -> Result<ConssPool> {
-        let seeds = self.select_seeds(constraints, h_train)?;
+        self.supersample_as(self.options.seeds, constraints, h_train)
+    }
+
+    /// Supersample under an explicit seed-selection strategy, reusing the
+    /// trained forest (selection does not affect training).
+    pub fn supersample_as(
+        &self,
+        selection: SeedSelection,
+        constraints: Option<&Constraints>,
+        h_train: &[Objectives],
+    ) -> Result<ConssPool> {
+        let seeds = self.select_seeds_as(selection, constraints, h_train)?;
         if seeds.is_empty() {
             return Err(Error::Dse("seed selection produced no seeds".into()));
         }
@@ -228,5 +261,41 @@ mod tests {
         assert_eq!(sl.len(), 15);
         // Missing constraints is an error for this mode.
         assert!(p.select_seeds(None, &h_train).is_err());
+    }
+
+    #[test]
+    fn constraint_filter_survives_degenerate_h_training_set() {
+        let (l, h) = datasets();
+        let opts = SupersampleOptions {
+            seeds: SeedSelection::ConstraintFiltered,
+            ..Default::default()
+        };
+        let p = ConssPipeline::train(&l, &h, opts).unwrap();
+        let c = Constraints::new(0.5, 0.5).unwrap();
+        // All-zero behav AND ppa: the floored maxima clamp both scale
+        // factors to 1.0, so every L seed passes instead of an inf/NaN
+        // comparison deciding the filter.
+        let degenerate = vec![[0.0, 0.0]; 4];
+        let seeds = p.select_seeds(Some(&c), &degenerate).unwrap();
+        assert_eq!(seeds.len(), 15);
+        // One zero axis only: the other axis still filters normally.
+        let h_train: Vec<Objectives> =
+            h.headline_points().iter().map(|p| [p[1], 0.0]).collect();
+        let seeds = p.select_seeds(Some(&c), &h_train).unwrap();
+        assert!(!seeds.is_empty());
+    }
+
+    #[test]
+    fn supersample_as_varies_selection_without_retraining() {
+        let (l, h) = datasets();
+        let p = ConssPipeline::train(&l, &h, SupersampleOptions::default()).unwrap();
+        let all = p.supersample_as(SeedSelection::All, None, &[]).unwrap();
+        let pareto = p.supersample_as(SeedSelection::ParetoOnly, None, &[]).unwrap();
+        assert_eq!(all.n_seeds, 15);
+        assert!(pareto.n_seeds < all.n_seeds);
+        // The baked-in default still routes through the same path.
+        let default = p.supersample(None, &[]).unwrap();
+        assert_eq!(default.n_seeds, all.n_seeds);
+        assert_eq!(default.configs, all.configs);
     }
 }

@@ -1,0 +1,248 @@
+//! [`EngineContext`] — process-wide shared state for DSE jobs.
+//!
+//! Two resources dominate the cost of every AxOCS flow and were previously
+//! re-created by each caller: characterized datasets (L_CHAR/H_CHAR, minutes
+//! at paper scale) and the trained estimator backend behind the batching
+//! service. The context owns both:
+//!
+//! * a **thread-safe dataset cache** keyed by operator × characterization
+//!   backend × sample spec, so each dataset is characterized exactly once
+//!   per process no matter how many jobs, figures, or examples ask for it;
+//! * a **lazily-spawned shared [`EstimatorService`]** fronting the
+//!   configured surrogate backend, so concurrent searches funnel fitness
+//!   queries through one batcher and their batches coalesce.
+//!
+//! The cache lock is held across characterization on purpose: the invariant
+//! is "exactly once per process", and the expensive datasets are pre-warmed
+//! by [`EngineContext::prepare_dse`] before any job fan-out, so the lock is
+//! uncontended on the hot path.
+
+use crate::charac::{characterize, characterize_all, Backend, Dataset, InputSet};
+use crate::coordinator::EstimatorService;
+use crate::error::{Error, Result};
+use crate::expcfg::ExperimentConfig;
+use crate::operator::{AxoConfig, Operator};
+use crate::surrogate::build_backend;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Which substrate characterized a cached dataset. Only the native
+/// bit-exact substrate is routed through the cache today; the variant
+/// exists so PJRT-characterized datasets get distinct keys when the
+/// runtime path starts feeding the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CharacSubstrate {
+    Native,
+}
+
+/// How a dataset's configurations were selected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SampleSpec {
+    /// Every usable configuration of the space.
+    Exhaustive,
+    /// `n` unique configurations drawn from the seeded sampler.
+    Seeded { seed: u64, n: usize },
+}
+
+/// Cache key: operator × substrate × sample spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DatasetKey {
+    pub op: Operator,
+    pub substrate: CharacSubstrate,
+    pub spec: SampleSpec,
+}
+
+/// Point-in-time dataset-cache counters.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+/// The low-bit-width ConSS partner of an operator (paper Table II arrows).
+pub fn l_operator(h: Operator) -> Result<Operator> {
+    Ok(match h {
+        Operator::ADD8 => Operator::ADD4,
+        Operator::ADD12 => Operator::ADD8,
+        Operator::MUL8 => Operator::MUL4,
+        other => {
+            return Err(Error::Config(format!("no smaller ConSS partner for {other}")))
+        }
+    })
+}
+
+/// Shared engine state: configuration, dataset cache, estimator service.
+pub struct EngineContext {
+    cfg: ExperimentConfig,
+    datasets: Mutex<HashMap<DatasetKey, Arc<Dataset>>>,
+    estimator: Mutex<Option<EstimatorService>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl EngineContext {
+    pub fn new(cfg: ExperimentConfig) -> EngineContext {
+        EngineContext {
+            cfg,
+            datasets: Mutex::new(HashMap::new()),
+            estimator: Mutex::new(None),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn cfg(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// The default sample spec for `op` under this configuration:
+    /// exhaustive where enumerable, else the seeded `train_samples` draw
+    /// (paper §V-B — only the 8×8 multiplier space needs sampling).
+    pub fn default_spec(&self, op: Operator) -> SampleSpec {
+        if op.exhaustive() {
+            SampleSpec::Exhaustive
+        } else {
+            SampleSpec::Seeded { seed: self.cfg.seed, n: self.cfg.train_samples }
+        }
+    }
+
+    /// Characterized dataset for `op` under the default spec, cached.
+    pub fn dataset(&self, op: Operator) -> Result<Arc<Dataset>> {
+        self.dataset_with(op, self.default_spec(op))
+    }
+
+    /// Characterized dataset for `op` under an explicit spec, cached.
+    pub fn dataset_with(&self, op: Operator, spec: SampleSpec) -> Result<Arc<Dataset>> {
+        let key = DatasetKey { op, substrate: CharacSubstrate::Native, spec };
+        let mut cache = self.datasets.lock().expect("engine dataset cache poisoned");
+        if let Some(ds) = cache.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(ds.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if spec == SampleSpec::Exhaustive && !op.exhaustive() {
+            return Err(Error::Config(format!(
+                "{op} is not exhaustively characterizable (2^{} designs)",
+                op.config_len()
+            )));
+        }
+        let inputs = InputSet::for_operator(op, &self.cfg.artifacts_dir)?;
+        let ds = match spec {
+            SampleSpec::Exhaustive => characterize_all(op, &inputs, &Backend::Native)?,
+            SampleSpec::Seeded { seed, n } => {
+                let mut rng = Rng::seed_from_u64(seed);
+                let cfgs = AxoConfig::sample_unique(op.config_len(), n, &mut rng);
+                characterize(op, &cfgs, &inputs, &Backend::Native)?
+            }
+        };
+        let arc = Arc::new(ds);
+        cache.insert(key, arc.clone());
+        Ok(arc)
+    }
+
+    /// Characterize arbitrary configs of `op` natively (PPF → VPF
+    /// validation). Deliberately uncached: validation sets are one-shot.
+    pub fn validate(&self, op: Operator, configs: &[AxoConfig]) -> Result<Dataset> {
+        let inputs = InputSet::for_operator(op, &self.cfg.artifacts_dir)?;
+        characterize(op, configs, &inputs, &Backend::Native)
+    }
+
+    /// The shared estimator service for the configured operator, spawned on
+    /// first use. Every caller gets a clone of the same handle, so fitness
+    /// batches coalesce across concurrent searches; the batcher thread
+    /// exits when the context (and all clones) drop.
+    pub fn estimator(&self) -> Result<EstimatorService> {
+        let mut slot = self.estimator.lock().expect("engine estimator slot poisoned");
+        if let Some(svc) = slot.as_ref() {
+            return Ok(svc.clone());
+        }
+        let op = Operator::from_name(&self.cfg.operator)?;
+        let backend = build_backend(
+            self.cfg.surrogate.backend,
+            self.cfg.surrogate.gbt_stages,
+            &self.cfg.artifacts_dir,
+            op,
+            || self.dataset(op),
+        )?;
+        let svc = EstimatorService::spawn(backend, self.cfg.service.to_batch_options());
+        *slot = Some(svc.clone());
+        Ok(svc)
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.datasets.lock().expect("engine dataset cache poisoned").len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            operator: "add8".into(),
+            train_samples: 100,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn dataset_is_characterized_once_and_shared() {
+        let ctx = EngineContext::new(tiny_cfg());
+        let a = ctx.dataset(Operator::ADD4).unwrap();
+        let b = ctx.dataset(Operator::ADD4).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.len(), 15);
+        let s = ctx.cache_stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_specs_get_distinct_entries() {
+        let ctx = EngineContext::new(tiny_cfg());
+        let full = ctx.dataset_with(Operator::ADD8, SampleSpec::Exhaustive).unwrap();
+        let sampled = ctx
+            .dataset_with(Operator::ADD8, SampleSpec::Seeded { seed: 1, n: 40 })
+            .unwrap();
+        assert_eq!(full.len(), 255);
+        assert_eq!(sampled.len(), 40);
+        assert_eq!(ctx.cache_stats().entries, 2);
+    }
+
+    #[test]
+    fn exhaustive_spec_rejected_for_huge_spaces() {
+        let ctx = EngineContext::new(tiny_cfg());
+        assert!(ctx.dataset_with(Operator::MUL8, SampleSpec::Exhaustive).is_err());
+        // The default spec for mul8 is a seeded sample, not exhaustive.
+        assert_eq!(
+            ctx.default_spec(Operator::MUL8),
+            SampleSpec::Seeded { seed: 2023, n: 100 }
+        );
+    }
+
+    #[test]
+    fn l_operator_pairs() {
+        assert_eq!(l_operator(Operator::MUL8).unwrap(), Operator::MUL4);
+        assert_eq!(l_operator(Operator::ADD8).unwrap(), Operator::ADD4);
+        assert_eq!(l_operator(Operator::ADD12).unwrap(), Operator::ADD8);
+        assert!(l_operator(Operator::ADD4).is_err());
+    }
+
+    #[test]
+    fn estimator_is_spawned_once() {
+        let ctx = EngineContext::new(tiny_cfg());
+        let a = ctx.estimator().unwrap();
+        let b = ctx.estimator().unwrap();
+        // Both handles point at the same metrics allocation → one service.
+        assert!(std::ptr::eq(a.metrics(), b.metrics()));
+        a.predict(vec![AxoConfig::new(3, 8).unwrap()]).unwrap();
+        assert_eq!(b.metrics().snapshot().requests, 1);
+    }
+}

@@ -1,0 +1,311 @@
+//! [`DseJob`] — one constraint-scaled DSE experiment, and the drivers that
+//! run many of them concurrently against shared state.
+//!
+//! A job describes *what* to search (constraint scaling factor, ConSS seed
+//! selection, GA knobs); [`EngineContext::prepare_dse`] builds the shared
+//! *how* once — cached L_CHAR/H_CHAR datasets, the trained ConSS pipeline,
+//! and the batching estimator service — and [`DsePrepared::run_many`] fans
+//! independent jobs out over scoped threads. Every job funnels its fitness
+//! queries through the one [`EstimatorService`], so batches coalesce across
+//! searches (the Fig. 15 scenario the coordinator was built for), while
+//! results stay bit-identical to sequential runs: each search is seeded
+//! deterministically and the surrogate is a pure function of the
+//! configuration, so batching order cannot change any objective value.
+
+use super::context::{l_operator, EngineContext};
+use crate::baselines::appaxo_search;
+use crate::charac::Dataset;
+use crate::conss::pipeline::SeedSelection;
+use crate::conss::{ConssPipeline, ConssPool, SupersampleOptions};
+use crate::coordinator::EstimatorService;
+use crate::dse::{
+    hypervolume2d, Constraints, GaOptions, GaResult, NsgaRunner, Objectives, ParetoFront,
+};
+use crate::error::Result;
+use crate::expcfg::GaConfig;
+use crate::ml::forest::ForestParams;
+use crate::operator::{AxoConfig, Operator};
+use crate::util::par::parallel_map;
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+/// One DSE experiment: a constraint scaling factor plus optional overrides
+/// of the prepared defaults.
+#[derive(Debug, Clone)]
+pub struct DseJob {
+    /// Constraint scaling factor (paper §V-D, Eq. 3).
+    pub factor: f64,
+    /// Which L designs seed the supersampler for this job.
+    pub seed_selection: SeedSelection,
+    /// GA knobs; `None` = the experiment config's `[ga]` section.
+    pub ga: Option<GaConfig>,
+    /// GA RNG seed; `None` = the experiment config's seed.
+    pub ga_seed: Option<u64>,
+}
+
+impl DseJob {
+    pub fn new(factor: f64) -> DseJob {
+        DseJob { factor, seed_selection: SeedSelection::All, ga: None, ga_seed: None }
+    }
+
+    pub fn seed_selection(mut self, selection: SeedSelection) -> DseJob {
+        self.seed_selection = selection;
+        self
+    }
+
+    pub fn ga(mut self, ga: GaConfig) -> DseJob {
+        self.ga = Some(ga);
+        self
+    }
+
+    pub fn ga_seed(mut self, seed: u64) -> DseJob {
+        self.ga_seed = Some(seed);
+        self
+    }
+}
+
+/// Everything DSE jobs share, built once per context by
+/// [`EngineContext::prepare_dse`]: cached datasets, the trained ConSS
+/// pipeline, and a handle to the shared estimator service.
+pub struct DsePrepared {
+    pub op: Operator,
+    pub l_op: Operator,
+    pub l_ds: Arc<Dataset>,
+    pub h_ds: Arc<Dataset>,
+    pub service: EstimatorService,
+    pub pipeline: ConssPipeline,
+    /// H_CHAR objectives `[behav, ppa]` (the TRAIN method's points).
+    pub h_objectives: Vec<Objectives>,
+    ga_defaults: GaConfig,
+    default_seed: u64,
+}
+
+/// One job's outcome: the four methods the paper compares per factor
+/// (TRAIN / GA / ConSS / ConSS+GA) plus the artifacts figures need.
+pub struct DseOutcome {
+    pub factor: f64,
+    pub constraints: Constraints,
+    pub hv_train: f64,
+    pub hv_conss: f64,
+    pub conss_pool: ConssPool,
+    pub conss_objs: Vec<Objectives>,
+    pub ga: GaResult,
+    pub conss_ga: GaResult,
+}
+
+impl EngineContext {
+    /// Build the shared DSE state for the configured operator pair:
+    /// characterize (or fetch cached) L/H datasets, train the ConSS
+    /// pipeline, and spawn/fetch the shared estimator service.
+    pub fn prepare_dse(&self) -> Result<DsePrepared> {
+        let op = Operator::from_name(&self.cfg().operator)?;
+        let l_op = l_operator(op)?;
+        let l_ds = self.dataset(l_op)?;
+        let h_ds = self.dataset(op)?;
+        let service = self.estimator()?;
+        let opts = SupersampleOptions {
+            distance: self.cfg().conss.distance,
+            noise_bits: self.cfg().conss.noise_bits,
+            seeds: SeedSelection::All,
+            forest: ForestParams {
+                n_trees: self.cfg().conss.forest_trees.unwrap_or(25),
+                ..Default::default()
+            },
+        };
+        let pipeline = ConssPipeline::train(&l_ds, &h_ds, opts)?;
+        let h_objectives: Vec<Objectives> =
+            h_ds.headline_points().iter().map(|p| [p[1], p[0]]).collect();
+        Ok(DsePrepared {
+            op,
+            l_op,
+            l_ds,
+            h_ds,
+            service,
+            pipeline,
+            h_objectives,
+            ga_defaults: self.cfg().ga.clone(),
+            default_seed: self.cfg().seed,
+        })
+    }
+
+    /// VPF: validate front configs with the real substrate; returns the
+    /// validated front and the number of *additional* characterizations
+    /// (the paper reports 31/282/365/390 for the four factors). Configs
+    /// already in H_CHAR reuse their characterized metrics.
+    pub fn validate_front(
+        &self,
+        prep: &DsePrepared,
+        configs: &[AxoConfig],
+        constraints: &Constraints,
+    ) -> Result<(ParetoFront, usize)> {
+        let known: HashMap<u64, usize> = prep
+            .h_ds
+            .configs
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (c.as_uint(), i))
+            .collect();
+        let fresh: Vec<AxoConfig> = configs
+            .iter()
+            .filter(|c| !known.contains_key(&c.as_uint()))
+            .copied()
+            .collect();
+        let mut objs: Vec<Objectives> = Vec::new();
+        if !fresh.is_empty() {
+            let ds = self.validate(prep.op, &fresh)?;
+            objs.extend(ds.headline_points().iter().map(|p| [p[1], p[0]] as Objectives));
+        }
+        let h_points = prep.h_ds.headline_points();
+        for c in configs {
+            if let Some(&i) = known.get(&c.as_uint()) {
+                let p = h_points[i];
+                objs.push([p[1], p[0]]);
+            }
+        }
+        let feasible: Vec<Objectives> =
+            objs.into_iter().filter(|o| constraints.feasible(*o)).collect();
+        Ok((ParetoFront::from_points(&feasible), fresh.len()))
+    }
+}
+
+impl DsePrepared {
+    /// The GA options a job resolves to (overrides applied over defaults).
+    pub fn ga_options(&self, job: &DseJob) -> GaOptions {
+        job.ga
+            .as_ref()
+            .unwrap_or(&self.ga_defaults)
+            .to_options(job.ga_seed.unwrap_or(self.default_seed))
+    }
+
+    /// Run one job: constraints → ConSS pool → GA (AppAxO baseline) and
+    /// ConSS+GA (augmented AxOCS), all fitness through the shared service.
+    pub fn run_job(&self, job: &DseJob) -> Result<DseOutcome> {
+        let constraints =
+            Constraints::from_scaling_factor(job.factor, &self.h_objectives)?;
+        let reference = constraints.reference();
+
+        // TRAIN: hypervolume of the characterized sample itself.
+        let hv_train = hypervolume2d(&self.h_objectives, reference);
+
+        // Standalone ConSS: supersample → predicted objectives → HV.
+        let pool = self.pipeline.supersample_as(
+            job.seed_selection,
+            Some(&constraints),
+            &self.h_objectives,
+        )?;
+        let conss_objs = self.service.predict(pool.configs.clone())?;
+        let hv_conss = hypervolume2d(&conss_objs, reference);
+
+        // GA (AppAxO-style, random init) and ConSS+GA (augmented), both
+        // driving the shared batching service as their Fitness backend.
+        let opts = self.ga_options(job);
+        let ga = appaxo_search(
+            self.op.config_len(),
+            &self.service,
+            constraints,
+            opts.clone(),
+        )?;
+        let conss_ga = NsgaRunner::new(opts, constraints).run(
+            self.op.config_len(),
+            &self.service,
+            &pool.configs,
+        )?;
+
+        Ok(DseOutcome {
+            factor: job.factor,
+            constraints,
+            hv_train,
+            hv_conss,
+            conss_pool: pool,
+            conss_objs,
+            ga,
+            conss_ga,
+        })
+    }
+
+    /// Run independent jobs concurrently on scoped worker threads
+    /// (`REPRO_THREADS` wide), results in job order. All searches share
+    /// the one estimator service, so their fitness batches coalesce.
+    pub fn run_many(&self, jobs: &[DseJob]) -> Result<Vec<DseOutcome>> {
+        parallel_map(jobs, |_, job| self.run_job(job)).into_iter().collect()
+    }
+}
+
+/// Candidate set for VPF validation: the predicted front plus the final
+/// population (the paper re-characterizes 31-390 designs per factor, far
+/// more than the front alone).
+pub fn vpf_candidates(result: &GaResult) -> Vec<AxoConfig> {
+    let mut seen = HashSet::new();
+    let mut out = Vec::new();
+    for c in result.front_configs.iter().chain(&result.population) {
+        if seen.insert(c.as_uint()) {
+            out.push(*c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expcfg::{ConssConfig, ExperimentConfig, SurrogateConfig};
+    use crate::surrogate::EstimatorBackend;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            operator: "add8".into(),
+            surrogate: SurrogateConfig {
+                backend: EstimatorBackend::Table,
+                gbt_stages: None,
+            },
+            conss: ConssConfig {
+                forest_trees: Some(4),
+                noise_bits: 2,
+                ..Default::default()
+            },
+            ga: GaConfig { pop_size: 10, generations: 4, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prepare_and_run_single_job() {
+        let ctx = EngineContext::new(tiny_cfg());
+        let prep = ctx.prepare_dse().unwrap();
+        assert_eq!(prep.op, Operator::ADD8);
+        assert_eq!(prep.l_op, Operator::ADD4);
+        let out = prep.run_job(&DseJob::new(0.8)).unwrap();
+        assert!(out.hv_train > 0.0);
+        assert_eq!(out.conss_objs.len(), out.conss_pool.configs.len());
+        assert!(out.conss_ga.final_hypervolume() >= 0.0);
+        // Datasets came from the cache exactly once each.
+        assert_eq!(ctx.cache_stats().entries, 2);
+    }
+
+    #[test]
+    fn job_builder_overrides() {
+        let job = DseJob::new(0.5)
+            .seed_selection(SeedSelection::ParetoOnly)
+            .ga(GaConfig { pop_size: 8, generations: 2, ..Default::default() })
+            .ga_seed(7);
+        assert_eq!(job.seed_selection, SeedSelection::ParetoOnly);
+        assert_eq!(job.ga.as_ref().unwrap().pop_size, 8);
+        assert_eq!(job.ga_seed, Some(7));
+    }
+
+    #[test]
+    fn vpf_candidates_dedup() {
+        let c1 = AxoConfig::new(3, 8).unwrap();
+        let c2 = AxoConfig::new(5, 8).unwrap();
+        let r = GaResult {
+            population: vec![c1, c2],
+            objectives: vec![[0.0, 0.0]; 2],
+            front_configs: vec![c1],
+            front_points: vec![[0.0, 0.0]],
+            hv_history: vec![0.0],
+            evaluations: 2,
+        };
+        let cands = vpf_candidates(&r);
+        assert_eq!(cands, vec![c1, c2]);
+    }
+}

@@ -1,0 +1,30 @@
+//! Job-oriented orchestration layer — the engine that owns the full
+//! Fig. 4 pipeline end to end.
+//!
+//! Before this layer existed, the charac → match → ConSS → augmented
+//! NSGA-II → VPF flow was wired by hand in the CLI, the figure harness,
+//! and every example, each re-characterizing datasets and training its own
+//! surrogate, and constraint scaling factors always ran sequentially. The
+//! engine centralizes that wiring behind two types:
+//!
+//! * [`EngineContext`] — process-wide shared state: a thread-safe dataset
+//!   cache (keyed operator × substrate × sample spec, so L_CHAR/H_CHAR are
+//!   characterized exactly once per process) and a lazily-spawned shared
+//!   [`EstimatorService`](crate::coordinator::EstimatorService).
+//! * [`DseJob`] / [`DsePrepared`] — a job describes one constraint-scaled
+//!   search; `prepare_dse` builds the shared pipeline once; `run_many`
+//!   executes independent factor jobs concurrently on scoped threads, all
+//!   funneling fitness through the one batching service so batches
+//!   coalesce across searches.
+//!
+//! This is the seam future sharding/serving work builds on: a DSE job is
+//! already a self-contained description that could be queued, sharded, or
+//! served remotely (see ROADMAP "Open items").
+
+pub mod context;
+pub mod job;
+
+pub use context::{
+    l_operator, CacheStats, CharacSubstrate, DatasetKey, EngineContext, SampleSpec,
+};
+pub use job::{vpf_candidates, DseJob, DseOutcome, DsePrepared};

@@ -61,6 +61,7 @@ pub struct ExperimentConfig {
     pub surrogate: SurrogateConfig,
     pub conss: ConssConfig,
     pub ga: GaConfig,
+    pub service: ServiceConfig,
     pub scaling_factors: Vec<f64>,
 }
 
@@ -149,6 +150,16 @@ impl ExperimentConfig {
                     cfg.ga.tournament_size =
                         value.as_usize().ok_or_else(|| bad(key, "an integer"))?
                 }
+                "service.max_batch" => {
+                    cfg.service.max_batch =
+                        value.as_usize().ok_or_else(|| bad(key, "an integer"))?
+                }
+                "service.max_wait_us" => {
+                    cfg.service.max_wait_us = value
+                        .as_i64()
+                        .and_then(|v| u64::try_from(v).ok())
+                        .ok_or_else(|| bad(key, "a non-negative integer"))?
+                }
                 other => {
                     return Err(Error::Config(format!("unknown config key `{other}`")))
                 }
@@ -176,6 +187,9 @@ impl ExperimentConfig {
         if self.conss.noise_bits > 8 {
             return Err(Error::Config("conss.noise_bits > 8 is unreasonable".into()));
         }
+        if self.service.max_batch == 0 {
+            return Err(Error::Config("service.max_batch must be > 0".into()));
+        }
         Ok(())
     }
 }
@@ -192,7 +206,37 @@ impl Default for ExperimentConfig {
             surrogate: SurrogateConfig::default(),
             conss: ConssConfig::default(),
             ga: GaConfig::default(),
+            service: ServiceConfig::default(),
             scaling_factors: default_factors(),
+        }
+    }
+}
+
+/// Estimator-service batching knobs (the engine's shared
+/// [`EstimatorService`](crate::coordinator::EstimatorService)).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Flush when this many configurations are pending.
+    pub max_batch: usize,
+    /// Flush this long after the first pending request (microseconds).
+    pub max_wait_us: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        let opts = crate::coordinator::BatchOptions::default();
+        ServiceConfig {
+            max_batch: opts.max_batch,
+            max_wait_us: opts.max_wait.as_micros() as u64,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn to_batch_options(&self) -> crate::coordinator::BatchOptions {
+        crate::coordinator::BatchOptions {
+            max_batch: self.max_batch,
+            max_wait: std::time::Duration::from_micros(self.max_wait_us),
         }
     }
 }
@@ -298,6 +342,10 @@ noise_bits = 2
 
 [surrogate]
 backend = "pjrt-mlp"
+
+[service]
+max_batch = 128
+max_wait_us = 500
 "#,
         )
         .unwrap();
@@ -305,6 +353,8 @@ backend = "pjrt-mlp"
         assert_eq!(c.ga.pop_size, 40);
         assert_eq!(c.conss.distance, DistanceKind::Manhattan);
         assert_eq!(c.surrogate.backend, EstimatorBackend::PjrtMlp);
+        assert_eq!(c.service.max_batch, 128);
+        assert_eq!(c.service.to_batch_options().max_wait.as_micros(), 500);
     }
 
     #[test]
@@ -315,6 +365,11 @@ backend = "pjrt-mlp"
         assert!(c.validate().is_err());
         let c = ExperimentConfig {
             ga: GaConfig { pop_size: 1, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+        let c = ExperimentConfig {
+            service: ServiceConfig { max_batch: 0, ..Default::default() },
             ..Default::default()
         };
         assert!(c.validate().is_err());

@@ -36,6 +36,12 @@
 //!                    PPF ──validate──► VPF (charac/) ──► report/
 //! ```
 //!
+//! The whole flow is orchestrated by the [`engine`] layer: an
+//! [`engine::EngineContext`] caches characterized datasets (one
+//! characterization per process) and shares one batching estimator
+//! service, and [`engine::DseJob`]s for independent constraint scaling
+//! factors run concurrently through it ([`engine::DsePrepared::run_many`]).
+//!
 //! ## Module map
 //!
 //! * [`operator`] — LUT-level approximate operator model (AppAxO-style):
@@ -51,6 +57,8 @@
 //! * [`baselines`] — AppAxO-like GA and EvoApprox-like library baselines.
 //! * [`coordinator`] — std-thread estimator service: batching, workers,
 //!   metrics (this repo links no async runtime).
+//! * [`engine`] — job-oriented orchestration: thread-safe dataset cache,
+//!   shared estimator service, concurrent multi-factor DSE jobs.
 //! * [`runtime`] — artifact schemas (always) + PJRT client wrapper that
 //!   loads `artifacts/*.hlo.txt` (`pjrt` feature).
 //! * [`report`] — regenerates every paper figure/table (Figs 1–18, Tab II).
@@ -62,6 +70,7 @@ pub mod cli;
 pub mod conss;
 pub mod coordinator;
 pub mod dse;
+pub mod engine;
 pub mod error;
 pub mod expcfg;
 pub mod matching;
@@ -82,6 +91,7 @@ pub mod prelude {
     pub use crate::dse::{
         hypervolume2d, Constraints, GaOptions, NsgaRunner, Objectives, ParetoFront,
     };
+    pub use crate::engine::{DseJob, EngineContext};
     pub use crate::error::{Error, Result};
     pub use crate::matching::{DistanceKind, Matcher};
     pub use crate::ml::{forest::RandomForest, gbt::GradientBoostedTrees};

@@ -8,17 +8,16 @@
 
 use repro::charac::{characterize, characterize_all, Backend, Dataset, InputSet};
 use repro::cli::ParsedArgs;
-use repro::coordinator::{BatchOptions, EstimatorService};
 use repro::dse::{Constraints, NsgaRunner};
+use repro::engine::{vpf_candidates, DseJob, EngineContext};
 use repro::error::{Error, Result};
 use repro::expcfg::ExperimentConfig;
 use repro::matching::{DistanceKind, Matcher};
 use repro::operator::{AxoConfig, Operator};
 use repro::report::Harness;
-use repro::surrogate::{build_backend, EstimatorBackend, Surrogate, TableSurrogate};
+use repro::surrogate::{EstimatorBackend, Surrogate, TableSurrogate};
 use repro::util::rng::Rng;
 use std::path::PathBuf;
-use std::sync::Arc;
 
 const USAGE: &str = "\
 repro — AxOCS: scaling FPGA-based approximate operators using configuration supersampling
@@ -30,8 +29,11 @@ COMMANDS:
                          [--samples N] [--pjrt] [--output PATH]
   match <l> <h>        Distance-based matching between two operators
                          [--distance euclidean|manhattan|pareto]
-  dse                  Full DSE comparison for one scaling factor
-                         [--factor F] [--backend table|gbt|pjrt-mlp]
+  dse                  Full DSE comparison across constraint scaling factors
+                         [--factor F | --factors F1,F2,...]
+                         [--backend table|gbt|pjrt-mlp]
+                         Multiple factors run concurrently through one
+                         shared batching estimator service.
   figures [ids...]     Regenerate paper figures/tables (fig1..fig18, tab2,
                          tab_est, or `all`)
   serve                Batched estimator-service demo
@@ -59,6 +61,7 @@ const GLOBAL_OPTS: &[&str] = &[
     "output",
     "distance",
     "factor",
+    "factors",
     "backend",
     "clients",
     "requests-per-client",
@@ -224,53 +227,88 @@ fn cmd_match(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
         l.len(),
         counts.iter().max().unwrap_or(&0)
     );
-    let mean: f64 = m.distances.iter().sum::<f64>() / m.distances.len() as f64;
-    println!("mean matched distance (scaled plane): {mean:.4}");
+    if m.distances.is_empty() {
+        println!("mean matched distance (scaled plane): n/a (no matched pairs)");
+    } else {
+        let mean: f64 = m.distances.iter().sum::<f64>() / m.distances.len() as f64;
+        println!("mean matched distance (scaled plane): {mean:.4}");
+    }
     Ok(())
 }
 
 fn cmd_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
-    use repro::report::dse_figs;
-    let factor: f64 = parsed.opt_parse("factor")?.unwrap_or(0.5);
     let mut cfg = cfg.clone();
     if let Some(b) = parsed.opt("backend") {
         cfg.surrogate.backend = EstimatorBackend::from_name(b)
             .ok_or_else(|| Error::Config(format!("unknown backend `{b}`")))?;
     }
-    let harness = Harness::new(cfg.clone());
-    let setup = dse_figs::setup(&harness)?;
-    let run = dse_figs::run_factor(&setup, &cfg, factor)?;
-    let (vpf, extra) = dse_figs::validate_front(
-        &harness,
-        &setup,
-        &dse_figs::vpf_candidates(&run.conss_ga),
-        &run.constraints,
-    )?;
-    let vpf_hv = repro::dse::hypervolume2d(&vpf.points, run.constraints.reference());
+    let factors: Vec<f64> = match parsed.opt_parse_list("factors")? {
+        Some(_) if parsed.opt("factor").is_some() => {
+            return Err(Error::Config(
+                "pass either --factor or --factors, not both".into(),
+            ))
+        }
+        Some(list) if list.is_empty() => {
+            return Err(Error::Config("--factors needs at least one value".into()))
+        }
+        Some(list) => list,
+        None => vec![parsed.opt_parse("factor")?.unwrap_or(0.5)],
+    };
+    let engine = EngineContext::new(cfg);
+    let prep = engine.prepare_dse()?;
+    let jobs: Vec<DseJob> = factors.iter().map(|&f| DseJob::new(f)).collect();
+    let started = std::time::Instant::now();
+    let runs = prep.run_many(&jobs)?;
+    let elapsed = started.elapsed();
+    for run in &runs {
+        let (vpf, extra) = engine.validate_front(
+            &prep,
+            &vpf_candidates(&run.conss_ga),
+            &run.constraints,
+        )?;
+        let vpf_hv = repro::dse::hypervolume2d(&vpf.points, run.constraints.reference());
+        println!(
+            "factor {}: B_MAX {:.4} P_MAX {:.4}",
+            run.factor, run.constraints.b_max, run.constraints.p_max
+        );
+        println!("  TRAIN     hv {:.4}", run.hv_train);
+        println!(
+            "  GA        hv {:.4}  ({} evals)",
+            run.ga.final_hypervolume(),
+            run.ga.evaluations
+        );
+        println!(
+            "  ConSS     hv {:.4}  (pool {}, {} seeds)",
+            run.hv_conss,
+            run.conss_pool.configs.len(),
+            run.conss_pool.n_seeds
+        );
+        println!(
+            "  ConSS+GA  hv {:.4}  ({} evals)",
+            run.conss_ga.final_hypervolume(),
+            run.conss_ga.evaluations
+        );
+        println!(
+            "  VPF: {} designs ({extra} extra characterizations), hv {vpf_hv:.4}",
+            vpf.len()
+        );
+    }
+    let snap = prep.service.metrics().snapshot();
     println!(
-        "factor {factor}: B_MAX {:.4} P_MAX {:.4}",
-        run.constraints.b_max, run.constraints.p_max
+        "{} factor(s) in {elapsed:.2?} — estimator service: {} requests / {} configs \
+         in {} batches (mean fill {:.1}, max {}), backend busy {:.1} ms",
+        runs.len(),
+        snap.requests,
+        snap.configs,
+        snap.batches,
+        snap.mean_batch_fill(),
+        snap.max_batch_fill,
+        snap.busy_micros as f64 / 1000.0
     );
-    println!("TRAIN     hv {:.4}", run.hv_train);
+    let cache = engine.cache_stats();
     println!(
-        "GA        hv {:.4}  ({} evals)",
-        run.ga.final_hypervolume(),
-        run.ga.evaluations
-    );
-    println!(
-        "ConSS     hv {:.4}  (pool {}, {} seeds)",
-        run.hv_conss,
-        run.conss_pool.configs.len(),
-        run.conss_pool.n_seeds
-    );
-    println!(
-        "ConSS+GA  hv {:.4}  ({} evals)",
-        run.conss_ga.final_hypervolume(),
-        run.conss_ga.evaluations
-    );
-    println!(
-        "VPF: {} designs ({extra} extra characterizations), hv {vpf_hv:.4}",
-        vpf.len()
+        "dataset cache: {} entries, {} hits, {} misses (each dataset characterized once)",
+        cache.entries, cache.hits, cache.misses
     );
     Ok(())
 }
@@ -278,16 +316,9 @@ fn cmd_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
 fn cmd_serve(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     let clients: usize = parsed.opt_parse("clients")?.unwrap_or(8);
     let requests: usize = parsed.opt_parse("requests-per-client")?.unwrap_or(64);
-    let harness = Harness::new(cfg.clone());
+    let engine = EngineContext::new(cfg.clone());
     let op = Operator::from_name(&cfg.operator)?;
-    let backend: Arc<dyn Surrogate> = build_backend(
-        cfg.surrogate.backend,
-        cfg.surrogate.gbt_stages,
-        &cfg.artifacts_dir,
-        op,
-        || harness.dataset(op),
-    )?;
-    let svc = EstimatorService::spawn(backend, BatchOptions::default());
+    let svc = engine.estimator()?;
     let op_len = op.config_len();
     let seed = cfg.seed;
     let started = std::time::Instant::now();
@@ -368,8 +399,8 @@ fn cmd_verify(_cfg: &ExperimentConfig) -> Result<()> {
 fn cmd_quickstart(cfg: &ExperimentConfig) -> Result<()> {
     println!("AxOCS quickstart — 4-bit adder tour (see examples/ for the full flows)");
     let op = Operator::ADD4;
-    let inputs = InputSet::exhaustive(op);
-    let ds = characterize_all(op, &inputs, &Backend::Native)?;
+    let engine = EngineContext::new(cfg.clone());
+    let ds = engine.dataset(op)?;
     println!("characterized all {} designs of {op}", ds.len());
     let pts: Vec<[f64; 2]> = ds.headline_points().iter().map(|p| [p[1], p[0]]).collect();
     let constraints = Constraints::from_scaling_factor(0.75, &pts)?;

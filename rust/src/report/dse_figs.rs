@@ -1,178 +1,37 @@
 //! DSE evaluation figures (Figs. 15, 16, 17, 18) — the headline results.
 //!
-//! Shared setup: characterize the L (4×4) and H (8×8 sampled) multiplier
-//! datasets, train the surrogate estimator and the ConSS pipeline, then per
-//! constraint scaling factor run the four methods the paper compares:
-//! TRAIN (the characterized sample itself), GA (random-init NSGA-II =
-//! AppAxO), ConSS (standalone supersampling pool), and ConSS+GA (the
-//! augmented AxOCS search). Hypervolumes are measured on predicted metrics
-//! (the PPF, exactly as §V-D) and the VPF validation re-characterizes the
-//! front configurations.
+//! All pipeline wiring lives in the [`engine`](crate::engine) layer: the
+//! harness's [`EngineContext`](crate::engine::EngineContext) caches the L
+//! (4×4) and H (8×8 sampled) datasets and shares one batching estimator
+//! service, `prepare_dse` trains the ConSS pipeline once, and per
+//! constraint scaling factor a [`DseJob`] runs the four methods the paper
+//! compares: TRAIN (the characterized sample itself), GA (random-init
+//! NSGA-II = AppAxO), ConSS (standalone supersampling pool), and ConSS+GA
+//! (the augmented AxOCS search). Fig. 15 runs its factors *concurrently*
+//! through `run_many`. Hypervolumes are measured on predicted metrics (the
+//! PPF, exactly as §V-D) and the VPF validation re-characterizes the front
+//! configurations.
 
 use super::Harness;
-use crate::baselines::{appaxo_search, evoapprox_library};
-use crate::charac::Dataset;
-use crate::conss::{ConssPipeline, ConssPool, SupersampleOptions};
+use crate::baselines::evoapprox_library;
 use crate::dse::{
-    hypervolume::relative_hypervolume2d, hypervolume2d, Constraints, GaResult,
-    NsgaRunner, Objectives, ParetoFront,
+    hypervolume::relative_hypervolume2d, hypervolume2d, Constraints, Objectives,
+    ParetoFront,
 };
+use crate::engine::{vpf_candidates, DseJob, DsePrepared};
 use crate::error::Result;
-use crate::expcfg::ExperimentConfig;
-use crate::operator::{AxoConfig, Operator};
-use crate::surrogate::{build_backend, Surrogate};
 use std::fmt::Write as _;
-use std::sync::Arc;
-
-/// Everything the DSE figures share (built once per harness call).
-pub struct DseSetup {
-    pub op: Operator,
-    pub l_ds: Arc<Dataset>,
-    pub h_ds: Arc<Dataset>,
-    pub surrogate: Arc<dyn Surrogate>,
-    pub pipeline: ConssPipeline,
-    /// H_CHAR objectives `[behav, ppa]` (the TRAIN method's points).
-    pub h_objectives: Vec<Objectives>,
-}
-
-pub fn setup(h: &Harness) -> Result<DseSetup> {
-    let op = Operator::from_name(&h.cfg.operator)?;
-    let l_op = Harness::l_operator(op)?;
-    let l_ds = h.dataset(l_op)?;
-    let h_ds = h.dataset(op)?;
-    let surrogate: Arc<dyn Surrogate> = build_backend(
-        h.cfg.surrogate.backend,
-        h.cfg.surrogate.gbt_stages,
-        &h.cfg.artifacts_dir,
-        op,
-        || Ok(h_ds.clone()),
-    )?;
-    let opts = SupersampleOptions {
-        distance: h.cfg.conss.distance,
-        noise_bits: h.cfg.conss.noise_bits,
-        seeds: crate::conss::pipeline::SeedSelection::All,
-        forest: crate::ml::forest::ForestParams {
-            n_trees: h.cfg.conss.forest_trees.unwrap_or(25),
-            ..Default::default()
-        },
-    };
-    let pipeline = ConssPipeline::train(&l_ds, &h_ds, opts)?;
-    let h_objectives: Vec<Objectives> = h_ds
-        .headline_points()
-        .iter()
-        .map(|p| [p[1], p[0]])
-        .collect();
-    Ok(DseSetup { op, l_ds, h_ds, surrogate, pipeline, h_objectives })
-}
-
-/// One (factor, method) experiment bundle.
-pub struct FactorRun {
-    pub factor: f64,
-    pub constraints: Constraints,
-    pub hv_train: f64,
-    pub hv_conss: f64,
-    pub conss_pool: ConssPool,
-    pub conss_objs: Vec<Objectives>,
-    pub ga: GaResult,
-    pub conss_ga: GaResult,
-}
-
-pub fn run_factor(setup: &DseSetup, cfg: &ExperimentConfig, factor: f64) -> Result<FactorRun> {
-    let constraints = Constraints::from_scaling_factor(factor, &setup.h_objectives)?;
-    let reference = constraints.reference();
-
-    // TRAIN: hypervolume of the characterized sample itself.
-    let hv_train = hypervolume2d(&setup.h_objectives, reference);
-
-    // Standalone ConSS: supersample → predicted objectives → HV.
-    let pool = setup.pipeline.supersample(Some(&constraints), &setup.h_objectives)?;
-    let conss_objs = setup.surrogate.predict(&pool.configs)?;
-    let hv_conss = hypervolume2d(&conss_objs, reference);
-
-    // GA (AppAxO-style, random init). The blanket closure impl adapts the
-    // dyn-surrogate to the Fitness trait.
-    let sur = setup.surrogate.clone();
-    let fitness = move |c: &[AxoConfig]| sur.predict(c);
-    let ga = appaxo_search(
-        setup.op.config_len(),
-        &fitness,
-        constraints,
-        cfg.ga.to_options(cfg.seed),
-    )?;
-
-    // ConSS+GA (augmented).
-    let runner = NsgaRunner::new(cfg.ga.to_options(cfg.seed), constraints);
-    let conss_ga = runner.run(setup.op.config_len(), &fitness, &pool.configs)?;
-
-    Ok(FactorRun {
-        factor,
-        constraints,
-        hv_train,
-        hv_conss,
-        conss_pool: pool,
-        conss_objs,
-        ga,
-        conss_ga,
-    })
-}
-
-/// Candidate set for VPF validation: the predicted front plus the final
-/// population (the paper re-characterizes 31-390 designs per factor, far
-/// more than the front alone).
-pub fn vpf_candidates(result: &GaResult) -> Vec<AxoConfig> {
-    let mut seen = std::collections::HashSet::new();
-    let mut out = Vec::new();
-    for c in result.front_configs.iter().chain(&result.population) {
-        if seen.insert(c.as_uint()) {
-            out.push(*c);
-        }
-    }
-    out
-}
-
-/// VPF: validate front configs with the real substrate; returns the
-/// validated front and the number of *additional* characterizations (the
-/// paper reports 31/282/365/390 for the four factors).
-pub fn validate_front(
-    h: &Harness,
-    setup: &DseSetup,
-    configs: &[AxoConfig],
-    constraints: &Constraints,
-) -> Result<(ParetoFront, usize)> {
-    let known: std::collections::HashSet<u64> =
-        setup.h_ds.configs.iter().map(|c| c.as_uint()).collect();
-    let fresh: Vec<AxoConfig> = configs
-        .iter()
-        .filter(|c| !known.contains(&c.as_uint()))
-        .copied()
-        .collect();
-    let mut objs: Vec<Objectives> = Vec::new();
-    if !fresh.is_empty() {
-        let ds = h.validate(setup.op, &fresh)?;
-        objs.extend(
-            ds.headline_points().iter().map(|p| [p[1], p[0]] as Objectives),
-        );
-    }
-    // Known configs reuse their characterized metrics.
-    for c in configs.iter().filter(|c| known.contains(&c.as_uint())) {
-        let i = setup
-            .h_ds
-            .configs
-            .iter()
-            .position(|k| k.as_uint() == c.as_uint())
-            .unwrap();
-        let p = setup.h_ds.headline_points()[i];
-        objs.push([p[1], p[0]]);
-    }
-    let feasible: Vec<Objectives> =
-        objs.into_iter().filter(|o| constraints.feasible(*o)).collect();
-    Ok((ParetoFront::from_points(&feasible), fresh.len()))
-}
 
 /// Fig. 15 — final PPF hypervolume: TRAIN / GA / ConSS / ConSS+GA across
-/// the constraint scaling factors.
+/// the constraint scaling factors, all factors running concurrently
+/// through the shared estimator service.
 pub fn fig15_hypervolume_comparison(h: &Harness) -> Result<String> {
-    let setup = setup(h)?;
+    let prep = h.engine().prepare_dse()?;
+    let jobs: Vec<DseJob> =
+        h.cfg.scaling_factors.iter().map(|&f| DseJob::new(f)).collect();
+    let before = prep.service.metrics().snapshot();
+    let runs = prep.run_many(&jobs)?;
+    let after = prep.service.metrics().snapshot();
     let mut rows = Vec::new();
     let mut s = String::new();
     writeln!(
@@ -181,20 +40,22 @@ pub fn fig15_hypervolume_comparison(h: &Harness) -> Result<String> {
         "factor", "TRAIN", "GA", "ConSS", "ConSS+GA", "VPF+"
     )
     .unwrap();
-    for &factor in &h.cfg.scaling_factors {
-        let run = run_factor(&setup, &h.cfg, factor)?;
-        let (_, extra) =
-            validate_front(h, &setup, &vpf_candidates(&run.conss_ga), &run.constraints)?;
+    for run in &runs {
+        let (_, extra) = h.engine().validate_front(
+            &prep,
+            &vpf_candidates(&run.conss_ga),
+            &run.constraints,
+        )?;
         let hv_ga = run.ga.final_hypervolume();
         let hv_cga = run.conss_ga.final_hypervolume();
         writeln!(
             s,
-            "{factor:>7.2} {:>12.4} {:>12.4} {:>12.4} {:>12.4} {extra:>6}",
-            run.hv_train, hv_ga, run.hv_conss, hv_cga
+            "{:>7.2} {:>12.4} {:>12.4} {:>12.4} {:>12.4} {extra:>6}",
+            run.factor, run.hv_train, hv_ga, run.hv_conss, hv_cga
         )
         .unwrap();
         rows.push(vec![
-            factor.to_string(),
+            run.factor.to_string(),
             run.hv_train.to_string(),
             hv_ga.to_string(),
             run.hv_conss.to_string(),
@@ -207,15 +68,29 @@ pub fn fig15_hypervolume_comparison(h: &Harness) -> Result<String> {
         &["factor", "hv_train", "hv_ga", "hv_conss", "hv_conss_ga", "vpf_extra_configs"],
         &rows,
     )?;
+    // This figure's own service traffic (the shared engine service is
+    // process-cumulative, so report the run_many delta).
+    let (requests, configs, batches) = (
+        after.requests - before.requests,
+        after.configs - before.configs,
+        after.batches - before.batches,
+    );
     writeln!(s, "(paper shape: ConSS+GA ≥ GA; ConSS > TRAIN, up to ~40% when tight)").unwrap();
+    writeln!(
+        s,
+        "estimator service: {requests} requests / {configs} configs in {batches} \
+         batches (mean fill {:.1})",
+        if batches == 0 { 0.0 } else { configs as f64 / batches as f64 }
+    )
+    .unwrap();
     writeln!(s, "csv: {}", path.display()).unwrap();
     Ok(s)
 }
 
 /// Fig. 16 — hypervolume progression over generations at factor 0.5.
 pub fn fig16_hv_progress(h: &Harness) -> Result<String> {
-    let setup = setup(h)?;
-    let run = run_factor(&setup, &h.cfg, 0.5)?;
+    let prep = h.engine().prepare_dse()?;
+    let run = prep.run_job(&DseJob::new(0.5))?;
     let n = run.ga.hv_history.len().max(run.conss_ga.hv_history.len());
     let last = |v: &Vec<f64>, i: usize| *v.get(i).or(v.last()).unwrap_or(&0.0);
     let rows: Vec<Vec<String>> = (0..n)
@@ -244,14 +119,13 @@ pub fn fig16_hv_progress(h: &Harness) -> Result<String> {
 /// Methods compared in Figs. 17/18.
 fn method_fronts(
     h: &Harness,
-    setup: &DseSetup,
-    cfg: &ExperimentConfig,
+    prep: &DsePrepared,
     factor: f64,
 ) -> Result<(Constraints, Vec<(String, ParetoFront, usize)>)> {
-    let run = run_factor(setup, cfg, factor)?;
+    let run = prep.run_job(&DseJob::new(factor))?;
     let c = run.constraints;
     // TRAIN front: characterized sample.
-    let feasible: Vec<Objectives> = setup
+    let feasible: Vec<Objectives> = prep
         .h_objectives
         .iter()
         .copied()
@@ -260,10 +134,10 @@ fn method_fronts(
     let train_front = ParetoFront::from_points(&feasible);
     // AppAxO: GA-only VPF (front + final population, as validated designs).
     let (appaxo_front, appaxo_extra) =
-        validate_front(h, setup, &vpf_candidates(&run.ga), &c)?;
+        h.engine().validate_front(prep, &vpf_candidates(&run.ga), &c)?;
     // EvoApprox: structured library, characterized, Pareto-selected.
-    let lib = evoapprox_library(setup.op);
-    let lib_ds = h.validate(setup.op, &lib)?;
+    let lib = evoapprox_library(prep.op);
+    let lib_ds = h.validate(prep.op, &lib)?;
     let lib_objs: Vec<Objectives> = lib_ds
         .headline_points()
         .iter()
@@ -281,7 +155,7 @@ fn method_fronts(
             axocs_cand.push(*c);
         }
     }
-    let (axocs_front, axocs_extra) = validate_front(h, setup, &axocs_cand, &c)?;
+    let (axocs_front, axocs_extra) = h.engine().validate_front(prep, &axocs_cand, &c)?;
     Ok((
         c,
         vec![
@@ -295,8 +169,8 @@ fn method_fronts(
 
 /// Fig. 17 — validated Pareto fronts at factor 0.5.
 pub fn fig17_pareto_fronts(h: &Harness) -> Result<String> {
-    let setup = setup(h)?;
-    let (c, fronts) = method_fronts(h, &setup, &h.cfg, 0.5)?;
+    let prep = h.engine().prepare_dse()?;
+    let (c, fronts) = method_fronts(h, &prep, 0.5)?;
     let mut rows = Vec::new();
     let mut s = String::new();
     for (name, front, extra) in &fronts {
@@ -323,7 +197,7 @@ pub fn fig17_pareto_fronts(h: &Harness) -> Result<String> {
 
 /// Fig. 18 — relative hypervolume vs scaling factor for all methods.
 pub fn fig18_relative_hypervolume(h: &Harness) -> Result<String> {
-    let setup = setup(h)?;
+    let prep = h.engine().prepare_dse()?;
     let mut rows = Vec::new();
     let mut s = String::new();
     writeln!(
@@ -333,7 +207,7 @@ pub fn fig18_relative_hypervolume(h: &Harness) -> Result<String> {
     )
     .unwrap();
     for &factor in &h.cfg.scaling_factors {
-        let (c, fronts) = method_fronts(h, &setup, &h.cfg, factor)?;
+        let (c, fronts) = method_fronts(h, &prep, factor)?;
         let mut vals = Vec::new();
         for (_, front, _) in &fronts {
             vals.push(relative_hypervolume2d(&front.points, c.reference()));

@@ -11,67 +11,48 @@ pub mod dse_figs;
 pub mod figures;
 pub mod tables;
 
-use crate::charac::{characterize, characterize_all, Backend, Dataset, InputSet};
+use crate::charac::Dataset;
+use crate::engine::EngineContext;
 use crate::error::{Error, Result};
 use crate::expcfg::ExperimentConfig;
 use crate::operator::{AxoConfig, Operator};
-use crate::util::rng::Rng;
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::io::Write;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-/// Dataset-caching harness shared by all figure generators.
+/// Figure-generation harness: CSV plumbing over a shared [`EngineContext`]
+/// (which owns the thread-safe dataset cache and estimator service).
 pub struct Harness {
     pub cfg: ExperimentConfig,
-    cache: RefCell<HashMap<String, Arc<Dataset>>>,
+    engine: EngineContext,
 }
 
 impl Harness {
     pub fn new(cfg: ExperimentConfig) -> Harness {
-        Harness { cfg, cache: RefCell::new(HashMap::new()) }
+        let engine = EngineContext::new(cfg.clone());
+        Harness { cfg, engine }
+    }
+
+    /// The engine behind this harness (dataset cache, estimator service,
+    /// DSE job drivers).
+    pub fn engine(&self) -> &EngineContext {
+        &self.engine
     }
 
     /// The low-bit-width partner used for ConSS (paper Table II arrows).
     pub fn l_operator(h: Operator) -> Result<Operator> {
-        Ok(match h {
-            Operator::ADD8 => Operator::ADD4,
-            Operator::ADD12 => Operator::ADD8,
-            Operator::MUL8 => Operator::MUL4,
-            other => {
-                return Err(Error::Config(format!(
-                    "no smaller ConSS partner for {other}"
-                )))
-            }
-        })
+        crate::engine::l_operator(h)
     }
 
     /// Characterized dataset for `op` (exhaustive, or seeded sample for the
-    /// 8×8 multiplier), cached across figures.
+    /// 8×8 multiplier), cached across figures by the engine.
     pub fn dataset(&self, op: Operator) -> Result<Arc<Dataset>> {
-        let key = op.name();
-        if let Some(ds) = self.cache.borrow().get(&key) {
-            return Ok(ds.clone());
-        }
-        let inputs = InputSet::for_operator(op, &self.cfg.artifacts_dir)?;
-        let ds = if op.exhaustive() {
-            characterize_all(op, &inputs, &Backend::Native)?
-        } else {
-            let mut rng = Rng::seed_from_u64(self.cfg.seed);
-            let cfgs =
-                AxoConfig::sample_unique(op.config_len(), self.cfg.train_samples, &mut rng);
-            characterize(op, &cfgs, &inputs, &Backend::Native)?
-        };
-        let arc = Arc::new(ds);
-        self.cache.borrow_mut().insert(key, arc.clone());
-        Ok(arc)
+        self.engine.dataset(op)
     }
 
     /// Validate (characterize) arbitrary configs of `op` natively.
     pub fn validate(&self, op: Operator, configs: &[AxoConfig]) -> Result<Dataset> {
-        let inputs = InputSet::for_operator(op, &self.cfg.artifacts_dir)?;
-        characterize(op, configs, &inputs, &Backend::Native)
+        self.engine.validate(op, configs)
     }
 
     pub fn out_path(&self, name: &str) -> Result<PathBuf> {

@@ -1,0 +1,165 @@
+//! Engine-layer integration tests: concurrent multi-factor DSE is
+//! bit-identical to sequential runs (determinism under cross-search
+//! batching), the dataset cache characterizes each dataset exactly once,
+//! and one shared `EstimatorService` serves every search.
+
+use repro::coordinator::{BatchOptions, EstimatorService};
+use repro::dse::{Constraints, GaOptions, NsgaRunner, Objectives};
+use repro::engine::{DseJob, EngineContext};
+use repro::error::Result;
+use repro::expcfg::{ConssConfig, ExperimentConfig, GaConfig, SurrogateConfig};
+use repro::operator::{AxoConfig, Operator};
+use repro::surrogate::{EstimatorBackend, Surrogate};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Small add4 → add8 configuration: exhaustive spaces, exact-table
+/// surrogate (total over add8, so every GA query hits), tiny GA.
+fn tiny_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        operator: "add8".into(),
+        surrogate: SurrogateConfig { backend: EstimatorBackend::Table, gbt_stages: None },
+        conss: ConssConfig { forest_trees: Some(4), noise_bits: 2, ..Default::default() },
+        ga: GaConfig { pop_size: 12, generations: 6, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn concurrent_run_many_matches_sequential_bit_for_bit() {
+    let jobs = vec![DseJob::new(0.4), DseJob::new(0.7), DseJob::new(1.0)];
+
+    // Sequential ground truth: fresh context, one job at a time.
+    let seq_ctx = EngineContext::new(tiny_cfg());
+    let seq_prep = seq_ctx.prepare_dse().unwrap();
+    let sequential: Vec<_> =
+        jobs.iter().map(|j| seq_prep.run_job(j).unwrap()).collect();
+
+    // Concurrent: fresh context, all jobs through run_many, every search
+    // sharing the one batching estimator service.
+    let par_ctx = EngineContext::new(tiny_cfg());
+    let par_prep = par_ctx.prepare_dse().unwrap();
+    let concurrent = par_prep.run_many(&jobs).unwrap();
+
+    assert_eq!(sequential.len(), concurrent.len());
+    for (a, b) in sequential.iter().zip(&concurrent) {
+        assert_eq!(a.factor, b.factor);
+        assert_eq!(a.hv_train.to_bits(), b.hv_train.to_bits());
+        assert_eq!(a.hv_conss.to_bits(), b.hv_conss.to_bits());
+        assert_eq!(a.conss_pool.configs, b.conss_pool.configs);
+        assert_eq!(a.ga.hv_history, b.ga.hv_history);
+        assert_eq!(a.ga.front_points, b.ga.front_points);
+        assert_eq!(a.conss_ga.hv_history, b.conss_ga.hv_history);
+        assert_eq!(a.conss_ga.front_points, b.conss_ga.front_points);
+        assert_eq!(a.conss_ga.evaluations, b.conss_ga.evaluations);
+    }
+
+    // The shared service saw every search's traffic, error-free.
+    let snap = par_prep.service.metrics().snapshot();
+    assert!(snap.requests >= jobs.len() as u64);
+    assert_eq!(snap.errors, 0);
+}
+
+#[test]
+fn dataset_cache_characterizes_each_dataset_exactly_once() {
+    let ctx = EngineContext::new(tiny_cfg());
+    let a = ctx.dataset(Operator::ADD4).unwrap();
+    let b = ctx.dataset(Operator::ADD4).unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "cache must hand out the same dataset");
+    let s = ctx.cache_stats();
+    assert_eq!(s.misses, 1);
+    assert_eq!(s.hits, 1);
+    assert_eq!(s.entries, 1);
+
+    // prepare_dse pulls L, H, and the estimator's training set — all
+    // cache traffic, only one new characterization (add8).
+    ctx.prepare_dse().unwrap();
+    let s = ctx.cache_stats();
+    assert_eq!(s.entries, 2, "L/H characterized exactly once per process");
+    assert_eq!(s.misses, 2);
+    assert!(s.hits >= 3);
+}
+
+#[test]
+fn engine_estimator_is_shared_across_callers() {
+    let ctx = EngineContext::new(tiny_cfg());
+    let a = ctx.estimator().unwrap();
+    let b = ctx.estimator().unwrap();
+    assert!(std::ptr::eq(a.metrics(), b.metrics()), "one service, two handles");
+    a.predict(vec![AxoConfig::new(9, 8).unwrap()]).unwrap();
+    assert_eq!(b.metrics().snapshot().requests, 1);
+}
+
+/// Deterministic toy surrogate with a tunable delay; slow enough that
+/// concurrent searches pile requests behind the batcher.
+struct SlowToy {
+    delay: Duration,
+}
+
+impl Surrogate for SlowToy {
+    fn predict(&self, configs: &[AxoConfig]) -> Result<Vec<Objectives>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(configs
+            .iter()
+            .map(|c| {
+                let ones = c.count_kept() as f64 / c.len() as f64;
+                [1.0 - ones, ones * ones]
+            })
+            .collect())
+    }
+}
+
+#[test]
+fn two_searches_sharing_one_service_match_their_sequential_runs() {
+    let constraints = Constraints::new(1.0, 1.0).unwrap();
+    let mk_runner = |seed| {
+        NsgaRunner::new(
+            GaOptions { pop_size: 16, generations: 6, seed, ..Default::default() },
+            constraints,
+        )
+    };
+
+    // Sequential ground truth: plain closure fitness, no service.
+    let direct =
+        |cfgs: &[AxoConfig]| SlowToy { delay: Duration::ZERO }.predict(cfgs);
+    let seq_a = mk_runner(11).run(12, &direct, &[]).unwrap();
+    let seq_b = mk_runner(22).run(12, &direct, &[]).unwrap();
+
+    // Concurrent: both searches share one batching service over a slow
+    // backend, so their per-generation requests coalesce into joint
+    // batches.
+    // max_batch = both searches' population: the batch flushes the moment
+    // the two per-generation requests are both in (no deadline spin), and
+    // the generous max_wait keeps them paired even on loaded CI runners.
+    let svc = EstimatorService::spawn(
+        Arc::new(SlowToy { delay: Duration::from_millis(2) }),
+        BatchOptions { max_batch: 32, max_wait: Duration::from_millis(150) },
+    );
+    let (par_a, par_b) = std::thread::scope(|s| {
+        let sa = svc.clone();
+        let ha = s.spawn(move || mk_runner(11).run(12, &sa, &[]).unwrap());
+        let sb = svc.clone();
+        let hb = s.spawn(move || mk_runner(22).run(12, &sb, &[]).unwrap());
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+
+    // Batching cannot change any objective value: hypervolume traces and
+    // fronts are bit-identical to the sequential runs.
+    assert_eq!(seq_a.hv_history, par_a.hv_history);
+    assert_eq!(seq_b.hv_history, par_b.hv_history);
+    assert_eq!(seq_a.front_points, par_a.front_points);
+    assert_eq!(seq_b.front_points, par_b.front_points);
+
+    // Cross-search coalescing actually happened: fewer backend batches
+    // than requests means at least one batch mixed both searches.
+    let snap = svc.metrics().snapshot();
+    assert!(snap.requests > 0);
+    assert!(
+        snap.batches < snap.requests,
+        "no cross-search coalescing: {} batches for {} requests",
+        snap.batches,
+        snap.requests
+    );
+}
