@@ -1,15 +1,24 @@
-//! Engine-layer benches: dataset cache (cold vs cached) and the concurrent
-//! multi-factor DSE driver. CI's bench-smoke job runs this suite with
-//! `REPRO_BENCH_SMOKE=1` and stamps BENCH_engine.json so the engine's perf
-//! trajectory is recorded per commit.
+//! Engine-layer benches: dataset cache (cold vs cached), the concurrent
+//! multi-factor DSE driver, and the characterization scaling story —
+//! cold-serial vs cold-sharded vs warm-from-disk on the paper's mul8
+//! `Seeded` spec (scaled down). CI's bench-smoke job runs this suite with
+//! `REPRO_BENCH_SMOKE=1` and uploads the stamps; the suite itself writes
+//! `BENCH_charac.json` so the characterization speedups are recorded in
+//! the perf trajectory alongside BENCH_engine.json.
 //!
 //! Run: `cargo bench --bench engine_benches`
 
+use repro::charac::{characterize, characterize_sharded, Backend, InputSet};
 use repro::engine::{DseJob, EngineContext};
-use repro::expcfg::{ConssConfig, ExperimentConfig, GaConfig, SurrogateConfig};
-use repro::operator::Operator;
+use repro::expcfg::{
+    CharacConfig, ConssConfig, ExperimentConfig, GaConfig, StoreConfig, SurrogateConfig,
+};
+use repro::operator::{AxoConfig, Operator};
 use repro::surrogate::EstimatorBackend;
 use repro::util::bench::Bench;
+use repro::util::par;
+use repro::util::rng::Rng;
+use repro::util::tempdir::TempDir;
 use std::time::Duration;
 
 /// Small add4 → add8 pipeline: exhaustive spaces, exact-table surrogate,
@@ -48,5 +57,50 @@ fn main() {
         prep.run_many(&jobs).unwrap()
     });
 
+    // Characterization scaling on the paper's headline mul8 Seeded spec
+    // (scaled to 128 configs so the smoke run stays fast): the same work
+    // serial, sharded over the work-stealing pool, and warm from the
+    // persistent store.
+    const MUL8_SAMPLES: usize = 128;
+    const SHARD: usize = 32;
+    let inputs = InputSet::exhaustive(Operator::MUL8);
+    let mcfgs: Vec<AxoConfig> = {
+        let mut rng = Rng::seed_from_u64(2023);
+        AxoConfig::sample_unique(Operator::MUL8.config_len(), MUL8_SAMPLES, &mut rng)
+    };
+    b.bench("charac/mul8_seeded128_cold_serial", || {
+        par::serial_scope(|| {
+            characterize(Operator::MUL8, &mcfgs, &inputs, &Backend::Native).unwrap()
+        })
+    });
+    b.bench("charac/mul8_seeded128_cold_sharded", || {
+        characterize_sharded(Operator::MUL8, &mcfgs, &inputs, SHARD).unwrap()
+    });
+
+    // Warm-from-disk: the store directory is pre-warmed once; every
+    // iteration is a fresh EngineContext (cold in-memory cache) whose
+    // only source is the on-disk store.
+    let tmp = TempDir::new().expect("tempdir for store bench");
+    let store_cfg = ExperimentConfig {
+        operator: "mul8".into(),
+        train_samples: MUL8_SAMPLES,
+        artifacts_dir: tmp.path().to_path_buf(),
+        charac: CharacConfig { shard_size: SHARD },
+        store: StoreConfig { enabled: Some(true), dir: None },
+        ..cfg()
+    };
+    EngineContext::new(store_cfg.clone())
+        .dataset(Operator::MUL8)
+        .expect("store warm-up characterization");
+    b.bench("charac/mul8_seeded128_warm_store", || {
+        let ctx = EngineContext::new(store_cfg.clone());
+        let ds = ctx.dataset(Operator::MUL8).unwrap();
+        assert_eq!(ctx.cache_stats().characterized, 0, "store must serve warm runs");
+        ds
+    });
+
     b.finish();
+    let stamp = std::path::Path::new("BENCH_charac.json");
+    b.write_json(stamp).expect("write BENCH_charac.json");
+    println!("wrote {}", stamp.display());
 }

@@ -6,7 +6,7 @@
 //! golden fixtures.
 
 use crate::operator::{adder, multiplier, AxoConfig, Operator, OperatorKind};
-use crate::util::par::parallel_map;
+use crate::util::par::parallel_map_dynamic;
 
 /// Behavioral error metrics of one approximate design over an input set.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -98,10 +98,12 @@ impl MetricAccumulator {
 ///
 /// §Perf L3-3: exact sums and relative-error reciprocals depend only on
 /// the shared input set — computed once per batch instead of per config.
+/// Grain 1: each config scans the whole input set, so per-chunk cursor
+/// overhead is negligible and work-stealing rebalances stragglers.
 pub fn adder_behav(configs: &[AxoConfig], a: &[u32], b: &[u32]) -> Vec<BehavMetrics> {
     let exact: Vec<i64> = a.iter().zip(b).map(|(&x, &y)| (x as i64) + (y as i64)).collect();
     let recip: Vec<f64> = exact.iter().map(|&e| 1.0 / (e.max(1) as f64)).collect();
-    parallel_map(configs, |_, cfg| {
+    parallel_map_dynamic(configs, 1, |_, cfg| {
         let mut acc = MetricAccumulator::default();
         for (((&ai, &bi), &ex), &r) in a.iter().zip(b).zip(&exact).zip(&recip) {
             let approx = adder::eval_one(cfg, ai as u64, bi as u64) as i64;
@@ -133,7 +135,7 @@ pub fn mult_behav(configs: &[AxoConfig], terms: &[i64], l: usize) -> Vec<BehavMe
         .iter()
         .map(|cfg| (0..l as u32).map(|k| -(cfg.keeps(k) as i32)).collect())
         .collect();
-    let accs: Vec<MetricAccumulator> = parallel_map(&masks, |_, mask| {
+    let accs: Vec<MetricAccumulator> = parallel_map_dynamic(&masks, 1, |_, mask| {
         let mut acc = MetricAccumulator::default();
         for ((chunk, &ex), &r) in terms32.chunks_exact(l).zip(&exact).zip(&recip) {
             let mut approx = 0i32;

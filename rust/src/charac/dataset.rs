@@ -174,8 +174,16 @@ impl Dataset {
     }
 
     pub fn load_json(path: &Path) -> Result<Dataset> {
-        let text = std::fs::read_to_string(path).map_err(|_| Error::ArtifactMissing {
-            path: path.to_path_buf(),
+        // Only a genuinely absent file is `ArtifactMissing`; permission
+        // and short-read faults surface as `ArtifactCorrupt` with the OS
+        // reason, so callers (the dataset store in particular) never
+        // silently re-characterize over a real I/O fault.
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                Error::ArtifactMissing { path: path.to_path_buf() }
+            } else {
+                Error::ArtifactCorrupt { path: path.to_path_buf(), reason: e.to_string() }
+            }
         })?;
         let v = Json::parse(&text).map_err(|e| Error::ArtifactCorrupt {
             path: path.to_path_buf(),
@@ -266,6 +274,31 @@ mod tests {
         let text = std::fs::read_to_string(cp).unwrap();
         assert!(text.starts_with("config_uint,config_bits,avg_abs_err"));
         assert_eq!(text.lines().count(), 3);
+    }
+
+    #[test]
+    fn load_json_distinguishes_missing_from_io_faults() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        // Absent file: missing.
+        assert!(matches!(
+            Dataset::load_json(&dir.path().join("absent.json")),
+            Err(Error::ArtifactMissing { .. })
+        ));
+        // Reading a directory is an I/O fault, not a missing artifact —
+        // it must carry the OS reason, never trigger re-characterization.
+        let sub = dir.path().join("is_a_dir.json");
+        std::fs::create_dir(&sub).unwrap();
+        match Dataset::load_json(&sub) {
+            Err(Error::ArtifactCorrupt { reason, .. }) => assert!(!reason.is_empty()),
+            other => panic!("expected ArtifactCorrupt, got {other:?}"),
+        }
+        // Unparseable content is corrupt too.
+        let bad = dir.path().join("bad.json");
+        std::fs::write(&bad, "{not json").unwrap();
+        assert!(matches!(
+            Dataset::load_json(&bad),
+            Err(Error::ArtifactCorrupt { .. })
+        ));
     }
 
     #[test]

@@ -17,4 +17,6 @@ pub mod pipeline;
 pub use behav::BehavMetrics;
 pub use dataset::Dataset;
 pub use inputs::InputSet;
-pub use pipeline::{characterize, characterize_all, Backend};
+pub use pipeline::{
+    characterize, characterize_all, characterize_sharded, shard_ranges, Backend,
+};

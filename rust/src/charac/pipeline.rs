@@ -98,6 +98,53 @@ pub fn characterize_all(
     characterize(op, &configs, inputs, backend)
 }
 
+/// Deterministic contiguous shard ranges covering `0..n`: every shard but
+/// the last is exactly `shard_size` long, independent of pool width, so a
+/// shard plan is a pure function of `(n, shard_size)`.
+pub fn shard_ranges(n: usize, shard_size: usize) -> Vec<std::ops::Range<usize>> {
+    let s = shard_size.max(1);
+    let mut out = Vec::with_capacity(n.div_ceil(s));
+    let mut start = 0;
+    while start < n {
+        let end = (start + s).min(n);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// Characterize `configs` natively in deterministic sub-range shards
+/// executed by the work-stealing pool, merged order-stably into one
+/// [`Dataset`] — bit-identical to [`characterize`] over the whole slice
+/// (per-config metrics are independent and the shared input-derived
+/// precomputations are pure functions of `inputs`). Native-only: the
+/// injected-evaluator backend is not `Sync` and stays on the unsharded
+/// path. Shards run serially inside pool workers (no nested fan-out).
+pub fn characterize_sharded(
+    op: Operator,
+    configs: &[AxoConfig],
+    inputs: &InputSet,
+    shard_size: usize,
+) -> Result<Dataset> {
+    let ranges = shard_ranges(configs.len(), shard_size);
+    if ranges.len() <= 1 {
+        return characterize(op, configs, inputs, &Backend::Native);
+    }
+    let shards = crate::util::par::parallel_map_dynamic(&ranges, 1, |_, r| {
+        characterize(op, &configs[r.clone()], inputs, &Backend::Native)
+    });
+    let mut all = Vec::with_capacity(configs.len());
+    let mut behav = Vec::with_capacity(configs.len());
+    let mut ppa = Vec::with_capacity(configs.len());
+    for shard in shards {
+        let shard = shard?;
+        all.extend(shard.configs);
+        behav.extend(shard.behav);
+        ppa.extend(shard.ppa);
+    }
+    Dataset::new(op, all, behav, ppa)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +204,41 @@ mod tests {
             _inputs: &InputSet,
         ) -> Result<Vec<BehavMetrics>> {
             Ok(vec![BehavMetrics::ZERO; configs.len()])
+        }
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        assert!(shard_ranges(0, 4).is_empty());
+        assert_eq!(shard_ranges(10, 4), vec![0..4, 4..8, 8..10]);
+        assert_eq!(shard_ranges(4, 4), vec![0..4]);
+        assert_eq!(shard_ranges(3, 100), vec![0..3]);
+        // Zero shard size is clamped to 1 rather than looping forever.
+        assert_eq!(shard_ranges(2, 0), vec![0..1, 1..2]);
+    }
+
+    #[test]
+    fn sharded_characterization_is_bit_identical() {
+        let inputs = InputSet::exhaustive(Operator::MUL4);
+        let cfgs: Vec<AxoConfig> = AxoConfig::enumerate(10).take(101).collect();
+        let whole =
+            characterize(Operator::MUL4, &cfgs, &inputs, &Backend::Native).unwrap();
+        for shard_size in [7, 32, 101, 500] {
+            let sharded =
+                characterize_sharded(Operator::MUL4, &cfgs, &inputs, shard_size).unwrap();
+            assert_eq!(sharded.configs, whole.configs, "shard {shard_size}");
+            for i in 0..whole.len() {
+                assert_eq!(
+                    sharded.behav[i].to_array().map(f64::to_bits),
+                    whole.behav[i].to_array().map(f64::to_bits),
+                    "behav row {i}, shard {shard_size}"
+                );
+                assert_eq!(
+                    sharded.ppa[i].to_array().map(f64::to_bits),
+                    whole.ppa[i].to_array().map(f64::to_bits),
+                    "ppa row {i}, shard {shard_size}"
+                );
+            }
         }
     }
 

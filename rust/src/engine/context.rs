@@ -6,18 +6,26 @@
 //! service. The context owns both:
 //!
 //! * a **thread-safe dataset cache** keyed by operator × characterization
-//!   backend × sample spec, so each dataset is characterized exactly once
-//!   per process no matter how many jobs, figures, or examples ask for it;
+//!   backend × sample spec, with a *per-key* in-flight guard: the map lock
+//!   is only held to find a key's cell, never across characterization, so
+//!   concurrent misses on different keys characterize in parallel while a
+//!   second miss on the *same* key blocks and then observes the result;
+//! * an optional **persistent [`DatasetStore`]** consulted on cache miss
+//!   and written on characterize, so repeated processes warm-start from
+//!   disk instead of re-paying H_CHAR;
 //! * a **lazily-spawned shared [`EstimatorService`]** fronting the
 //!   configured surrogate backend, so concurrent searches funnel fitness
 //!   queries through one batcher and their batches coalesce.
 //!
-//! The cache lock is held across characterization on purpose: the invariant
-//! is "exactly once per process", and the expensive datasets are pre-warmed
-//! by [`EngineContext::prepare_dse`] before any job fan-out, so the lock is
-//! uncontended on the hot path.
+//! `Seeded` characterizations are split into deterministic sub-range
+//! shards on the work-stealing pool
+//! ([`characterize_sharded`](crate::charac::characterize_sharded)), merged
+//! order-stably — bit-identical to the sequential path.
 
-use crate::charac::{characterize, characterize_all, Backend, Dataset, InputSet};
+use super::store::DatasetStore;
+use crate::charac::{
+    characterize, characterize_all, characterize_sharded, Backend, Dataset, InputSet,
+};
 use crate::coordinator::EstimatorService;
 use crate::error::{Error, Result};
 use crate::expcfg::ExperimentConfig;
@@ -25,6 +33,7 @@ use crate::operator::{AxoConfig, Operator};
 use crate::surrogate::build_backend;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
+use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -60,6 +69,10 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub entries: usize,
+    /// Cache misses served from the persistent on-disk store.
+    pub store_hits: u64,
+    /// Cache misses that ran an actual characterization.
+    pub characterized: u64,
 }
 
 /// The low-bit-width ConSS partner of an operator (paper Table II arrows).
@@ -74,28 +87,100 @@ pub fn l_operator(h: Operator) -> Result<Operator> {
     })
 }
 
-/// Shared engine state: configuration, dataset cache, estimator service.
+/// Per-key once-map: each key owns a cell whose lock is held across that
+/// key's (single) computation, while the outer map lock is only held to
+/// find or create the cell. Concurrent computes on distinct keys therefore
+/// run in parallel; a second request for an in-flight key blocks on the
+/// cell and then observes the first result. A failed compute leaves the
+/// cell empty, so the next request retries.
+type Cell<V> = Arc<Mutex<Option<Arc<V>>>>;
+
+struct KeyedOnce<K, V> {
+    cells: Mutex<HashMap<K, Cell<V>>>,
+}
+
+impl<K: Eq + Hash + Copy, V> KeyedOnce<K, V> {
+    fn new() -> KeyedOnce<K, V> {
+        KeyedOnce { cells: Mutex::new(HashMap::new()) }
+    }
+
+    /// Fetch `key`, running `compute` under the key's cell lock if absent.
+    /// Returns the value and whether it was already present.
+    fn get_or_try_compute(
+        &self,
+        key: K,
+        compute: impl FnOnce() -> Result<Arc<V>>,
+    ) -> Result<(Arc<V>, bool)> {
+        let cell = {
+            let mut map = self.cells.lock().expect("keyed cache map poisoned");
+            map.entry(key).or_default().clone()
+        };
+        let mut slot = cell.lock().expect("keyed cache cell poisoned");
+        if let Some(v) = slot.as_ref() {
+            return Ok((v.clone(), true));
+        }
+        let v = compute()?;
+        *slot = Some(v.clone());
+        Ok((v, false))
+    }
+
+    /// Number of keys whose computation has completed. Snapshots the cell
+    /// list first (the map lock must never be held while touching cell
+    /// locks), then counts via `try_lock`: a cell whose lock is contended
+    /// is mid-compute, i.e. not yet filled — so a stats probe never blocks
+    /// behind an in-flight characterization.
+    fn filled(&self) -> usize {
+        let cells: Vec<Cell<V>> = {
+            let map = self.cells.lock().expect("keyed cache map poisoned");
+            map.values().cloned().collect()
+        };
+        cells
+            .iter()
+            .filter(|cell| matches!(cell.try_lock().as_deref(), Ok(Some(_))))
+            .count()
+    }
+}
+
+/// Shared engine state: configuration, dataset cache, optional persistent
+/// store, estimator service.
 pub struct EngineContext {
     cfg: ExperimentConfig,
-    datasets: Mutex<HashMap<DatasetKey, Arc<Dataset>>>,
+    datasets: KeyedOnce<DatasetKey, Dataset>,
+    inputs: KeyedOnce<Operator, InputSet>,
+    store: Option<DatasetStore>,
     estimator: Mutex<Option<EstimatorService>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    store_hits: AtomicU64,
+    characterized: AtomicU64,
 }
 
 impl EngineContext {
     pub fn new(cfg: ExperimentConfig) -> EngineContext {
+        let store = cfg
+            .store
+            .is_enabled()
+            .then(|| DatasetStore::open(cfg.store.dir_under(&cfg.artifacts_dir)));
         EngineContext {
             cfg,
-            datasets: Mutex::new(HashMap::new()),
+            datasets: KeyedOnce::new(),
+            inputs: KeyedOnce::new(),
+            store,
             estimator: Mutex::new(None),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            store_hits: AtomicU64::new(0),
+            characterized: AtomicU64::new(0),
         }
     }
 
     pub fn cfg(&self) -> &ExperimentConfig {
         &self.cfg
+    }
+
+    /// The persistent dataset store, when enabled by the configuration.
+    pub fn store(&self) -> Option<&DatasetStore> {
+        self.store.as_ref()
     }
 
     /// The default sample spec for `op` under this configuration:
@@ -109,44 +194,87 @@ impl EngineContext {
         }
     }
 
+    /// Characterization inputs for `op`, loaded once per context and
+    /// shared by every dataset build and VPF validation batch (previously
+    /// re-read from disk on each `validate` call).
+    pub fn inputs(&self, op: Operator) -> Result<Arc<InputSet>> {
+        let (inputs, _) = self.inputs.get_or_try_compute(op, || {
+            Ok(Arc::new(InputSet::for_operator(op, &self.cfg.artifacts_dir)?))
+        })?;
+        Ok(inputs)
+    }
+
     /// Characterized dataset for `op` under the default spec, cached.
     pub fn dataset(&self, op: Operator) -> Result<Arc<Dataset>> {
         self.dataset_with(op, self.default_spec(op))
     }
 
-    /// Characterized dataset for `op` under an explicit spec, cached.
+    /// Characterized dataset for `op` under an explicit spec: in-memory
+    /// cache first, then the persistent store (entries are only served
+    /// when their recorded input-set fingerprint matches the inputs this
+    /// context characterizes against), then a (sharded) characterization
+    /// whose result is written back to the store.
     pub fn dataset_with(&self, op: Operator, spec: SampleSpec) -> Result<Arc<Dataset>> {
         let key = DatasetKey { op, substrate: CharacSubstrate::Native, spec };
-        let mut cache = self.datasets.lock().expect("engine dataset cache poisoned");
-        if let Some(ds) = cache.get(&key) {
+        let (ds, was_hit) = self.datasets.get_or_try_compute(key, || {
+            if spec == SampleSpec::Exhaustive && !op.exhaustive() {
+                return Err(Error::Config(format!(
+                    "{op} is not exhaustively characterizable (2^{} designs)",
+                    op.config_len()
+                )));
+            }
+            let inputs = self.inputs(op)?;
+            let inputs_fp = super::store::inputs_fingerprint(&inputs);
+            if let Some(store) = &self.store {
+                if let Some(ds) = store.load(&key, inputs_fp)? {
+                    self.store_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Arc::new(ds));
+                }
+            }
+            let ds = self.characterize_spec(op, spec, &inputs)?;
+            self.characterized.fetch_add(1, Ordering::Relaxed);
+            if let Some(store) = &self.store {
+                if let Err(e) = store.save(&key, &ds, inputs_fp) {
+                    eprintln!(
+                        "warning: failed to persist dataset {}: {e}",
+                        super::store::key_slug(&key)
+                    );
+                }
+            }
+            Ok(Arc::new(ds))
+        })?;
+        if was_hit {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(ds.clone());
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        if spec == SampleSpec::Exhaustive && !op.exhaustive() {
-            return Err(Error::Config(format!(
-                "{op} is not exhaustively characterizable (2^{} designs)",
-                op.config_len()
-            )));
-        }
-        let inputs = InputSet::for_operator(op, &self.cfg.artifacts_dir)?;
-        let ds = match spec {
-            SampleSpec::Exhaustive => characterize_all(op, &inputs, &Backend::Native)?,
+        Ok(ds)
+    }
+
+    /// Run the actual characterization for a cache miss: exhaustive spaces
+    /// in one call, seeded samples as deterministic sub-range shards on
+    /// the work-stealing pool.
+    fn characterize_spec(
+        &self,
+        op: Operator,
+        spec: SampleSpec,
+        inputs: &InputSet,
+    ) -> Result<Dataset> {
+        match spec {
+            SampleSpec::Exhaustive => characterize_all(op, inputs, &Backend::Native),
             SampleSpec::Seeded { seed, n } => {
                 let mut rng = Rng::seed_from_u64(seed);
                 let cfgs = AxoConfig::sample_unique(op.config_len(), n, &mut rng);
-                characterize(op, &cfgs, &inputs, &Backend::Native)?
+                characterize_sharded(op, &cfgs, inputs, self.cfg.charac.shard_size)
             }
-        };
-        let arc = Arc::new(ds);
-        cache.insert(key, arc.clone());
-        Ok(arc)
+        }
     }
 
     /// Characterize arbitrary configs of `op` natively (PPF → VPF
-    /// validation). Deliberately uncached: validation sets are one-shot.
+    /// validation). Deliberately uncached: validation sets are one-shot
+    /// (the inputs they share *are* cached per operator).
     pub fn validate(&self, op: Operator, configs: &[AxoConfig]) -> Result<Dataset> {
-        let inputs = InputSet::for_operator(op, &self.cfg.artifacts_dir)?;
+        let inputs = self.inputs(op)?;
         characterize(op, configs, &inputs, &Backend::Native)
     }
 
@@ -176,7 +304,9 @@ impl EngineContext {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.datasets.lock().expect("engine dataset cache poisoned").len(),
+            entries: self.datasets.filled(),
+            store_hits: self.store_hits.load(Ordering::Relaxed),
+            characterized: self.characterized.load(Ordering::Relaxed),
         }
     }
 }
@@ -184,6 +314,8 @@ impl EngineContext {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::mpsc;
+    use std::time::Duration;
 
     fn tiny_cfg() -> ExperimentConfig {
         ExperimentConfig {
@@ -202,6 +334,9 @@ mod tests {
         assert_eq!(a.len(), 15);
         let s = ctx.cache_stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!(s.characterized, 1);
+        assert_eq!(s.store_hits, 0, "store is off by default in library use");
+        assert!(ctx.store().is_none());
     }
 
     #[test]
@@ -225,6 +360,11 @@ mod tests {
             ctx.default_spec(Operator::MUL8),
             SampleSpec::Seeded { seed: 2023, n: 100 }
         );
+        // A failed compute leaves no entry behind (and no characterization
+        // was counted).
+        let s = ctx.cache_stats();
+        assert_eq!(s.entries, 0);
+        assert_eq!(s.characterized, 0);
     }
 
     #[test]
@@ -244,5 +384,83 @@ mod tests {
         assert!(std::ptr::eq(a.metrics(), b.metrics()));
         a.predict(vec![AxoConfig::new(3, 8).unwrap()]).unwrap();
         assert_eq!(b.metrics().snapshot().requests, 1);
+    }
+
+    // -- KeyedOnce semantics -------------------------------------------------
+
+    #[test]
+    fn keyed_once_distinct_keys_compute_concurrently() {
+        // Each compute closure announces itself, then waits for the *other*
+        // closure's announcement: this only completes if both keys are in
+        // flight simultaneously. A serialized cache (one lock across the
+        // compute) would time out here.
+        let m: KeyedOnce<u32, u32> = KeyedOnce::new();
+        let (tx1, rx1) = mpsc::channel::<()>();
+        let (tx2, rx2) = mpsc::channel::<()>();
+        let wait = Duration::from_secs(30);
+        let mref = &m;
+        std::thread::scope(|s| {
+            let ha = s.spawn(move || {
+                mref.get_or_try_compute(1, move || {
+                    tx1.send(()).unwrap();
+                    rx2.recv_timeout(wait).expect(
+                        "key 2 never started computing while key 1 was in flight \
+                         — distinct-key misses are serializing",
+                    );
+                    Ok(Arc::new(10))
+                })
+            });
+            let hb = s.spawn(move || {
+                mref.get_or_try_compute(2, move || {
+                    tx2.send(()).unwrap();
+                    rx1.recv_timeout(wait).expect(
+                        "key 1 never started computing while key 2 was in flight \
+                         — distinct-key misses are serializing",
+                    );
+                    Ok(Arc::new(20))
+                })
+            });
+            assert_eq!(*ha.join().unwrap().unwrap().0, 10);
+            assert_eq!(*hb.join().unwrap().unwrap().0, 20);
+        });
+        assert_eq!(m.filled(), 2);
+    }
+
+    #[test]
+    fn keyed_once_same_key_computes_exactly_once() {
+        let m: KeyedOnce<u32, u32> = KeyedOnce::new();
+        let computes = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| {
+                        m.get_or_try_compute(7, || {
+                            computes.fetch_add(1, Ordering::Relaxed);
+                            // Widen the race window.
+                            std::thread::sleep(Duration::from_millis(5));
+                            Ok(Arc::new(42))
+                        })
+                        .unwrap()
+                    })
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(*h.join().unwrap().0, 42);
+            }
+        });
+        assert_eq!(computes.load(Ordering::Relaxed), 1);
+        assert_eq!(m.filled(), 1);
+    }
+
+    #[test]
+    fn keyed_once_failed_compute_retries() {
+        let m: KeyedOnce<u32, u32> = KeyedOnce::new();
+        let r = m.get_or_try_compute(1, || Err(Error::Config("transient".into())));
+        assert!(r.is_err());
+        assert_eq!(m.filled(), 0);
+        let (v, hit) = m.get_or_try_compute(1, || Ok(Arc::new(5))).unwrap();
+        assert_eq!((*v, hit), (5, false));
+        let (v, hit) = m.get_or_try_compute(1, || unreachable!()).unwrap();
+        assert_eq!((*v, hit), (5, true));
     }
 }

@@ -8,9 +8,14 @@
 //! engine centralizes that wiring behind two types:
 //!
 //! * [`EngineContext`] — process-wide shared state: a thread-safe dataset
-//!   cache (keyed operator × substrate × sample spec, so L_CHAR/H_CHAR are
-//!   characterized exactly once per process) and a lazily-spawned shared
-//!   [`EstimatorService`](crate::coordinator::EstimatorService).
+//!   cache (keyed operator × substrate × sample spec, per-key in-flight
+//!   guard so concurrent misses on distinct keys characterize in
+//!   parallel), an optional persistent [`DatasetStore`] under
+//!   `artifacts_dir/datasets/` that makes characterization once-*ever*
+//!   across processes, and a lazily-spawned shared
+//!   [`EstimatorService`](crate::coordinator::EstimatorService). `Seeded`
+//!   characterizations run as deterministic sub-range shards on the
+//!   work-stealing pool, bit-identical to the sequential path.
 //! * [`DseJob`] / [`DsePrepared`] — a job describes one constraint-scaled
 //!   search; `prepare_dse` builds the shared pipeline once; `run_many`
 //!   executes independent factor jobs concurrently on scoped threads, all
@@ -23,8 +28,13 @@
 
 pub mod context;
 pub mod job;
+pub mod store;
 
 pub use context::{
     l_operator, CacheStats, CharacSubstrate, DatasetKey, EngineContext, SampleSpec,
 };
 pub use job::{vpf_candidates, DseJob, DseOutcome, DsePrepared};
+pub use store::{
+    inputs_fingerprint, key_slug, DatasetStore, StoreEntry, VerifyStatus,
+    STORE_FORMAT_VERSION,
+};

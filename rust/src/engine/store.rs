@@ -1,0 +1,531 @@
+//! [`DatasetStore`] — the persistent on-disk dataset store.
+//!
+//! Spills characterized datasets to `artifacts_dir/datasets/` keyed by the
+//! engine's [`DatasetKey`] (operator × substrate × sample spec), so
+//! repeated CLI invocations, CI jobs, and the figure harness warm-start
+//! from disk instead of re-paying H_CHAR. Layout:
+//!
+//! ```text
+//! datasets/
+//!   manifest.json            {"version": 1, "entries": {"<slug>": {...}}}
+//!   <slug>.json              Dataset::save_json payload per entry
+//! ```
+//!
+//! Every entry records an FNV-1a 64 content hash in the manifest; loads
+//! re-hash the file bytes before parsing. A failed integrity check (hash
+//! mismatch, truncated/garbled payload, stale format version) is a *miss*
+//! — the caller re-characterizes and overwrites — while genuine I/O
+//! faults (permissions, short reads) surface as errors so a real fault is
+//! never papered over by silent re-characterization.
+//!
+//! Manifest read-modify-write is serialized by one process-wide mutex
+//! (covering every store instance, whatever directory it points at);
+//! cross-process locking and eviction are ROADMAP follow-ons.
+
+use super::context::{CharacSubstrate, DatasetKey, SampleSpec};
+use crate::charac::Dataset;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Bump when the on-disk layout or the dataset JSON schema changes; a
+/// mismatching store is ignored (treated as empty) rather than misread.
+pub const STORE_FORMAT_VERSION: u64 = 1;
+
+/// Deterministic filename stem for a dataset key, e.g.
+/// `mul8-native-seeded-s2023-n10650` or `add8-native-exhaustive`.
+pub fn key_slug(key: &DatasetKey) -> String {
+    let substrate = match key.substrate {
+        CharacSubstrate::Native => "native",
+    };
+    match key.spec {
+        SampleSpec::Exhaustive => format!("{}-{substrate}-exhaustive", key.op.name()),
+        SampleSpec::Seeded { seed, n } => {
+            format!("{}-{substrate}-seeded-s{seed}-n{n}", key.op.name())
+        }
+    }
+}
+
+/// FNV-1a 64-bit content hash (std-only; collision resistance is ample
+/// for corruption detection, which is all the manifest needs).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn parse_hash(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Content fingerprint of the input set a dataset was characterized
+/// against, recorded in the manifest and checked on load. The cache key
+/// alone cannot capture this: the 12-bit adder characterizes against the
+/// persisted `inputs_add12.bin` sample when present but a seeded native
+/// fallback otherwise, so the same `DatasetKey` can legitimately mean two
+/// different input sets across processes — a store hit must only be
+/// served when the inputs match.
+pub fn inputs_fingerprint(inputs: &crate::charac::InputSet) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut push = |v: i64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    push(inputs.a.len() as i64);
+    for &v in &inputs.a {
+        push(v);
+    }
+    for &v in &inputs.b {
+        push(v);
+    }
+    h
+}
+
+/// One manifest entry as seen by `repro store ls`.
+#[derive(Debug, Clone)]
+pub struct StoreEntry {
+    pub slug: String,
+    pub hash: u64,
+    pub len: usize,
+    pub path: PathBuf,
+}
+
+/// Integrity state of one entry, as reported by `repro store verify`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VerifyStatus {
+    Ok,
+    MissingFile,
+    HashMismatch,
+    Corrupt(String),
+}
+
+impl std::fmt::Display for VerifyStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VerifyStatus::Ok => write!(f, "ok"),
+            VerifyStatus::MissingFile => write!(f, "missing file"),
+            VerifyStatus::HashMismatch => write!(f, "hash mismatch"),
+            VerifyStatus::Corrupt(reason) => write!(f, "corrupt: {reason}"),
+        }
+    }
+}
+
+/// Whether a filename is one the store itself writes: the manifest (and
+/// its rename temp), or a key-slug payload / payload temp — every slug
+/// embeds a `-<substrate>-` marker (see [`key_slug`]), which is what
+/// keeps [`DatasetStore::clear`] from touching unrelated files when the
+/// configured store directory is shared with other artifacts.
+fn is_store_file(name: &str) -> bool {
+    const SUBSTRATE_TAGS: [&str; 1] = ["native"];
+    if name == "manifest.json" || name == ".manifest.tmp" {
+        return true;
+    }
+    let stem = name.strip_prefix('.').unwrap_or(name);
+    let Some(stem) = stem.strip_suffix(".json").or_else(|| stem.strip_suffix(".tmp"))
+    else {
+        return false;
+    };
+    SUBSTRATE_TAGS.iter().any(|tag| stem.contains(&format!("-{tag}-")))
+}
+
+/// Serializes manifest read-modify-write for every store instance in the
+/// process — two `DatasetStore`s opened on the same directory (e.g. a DSE
+/// engine plus a figure harness) must not interleave manifest updates.
+/// Cross-process locking is a ROADMAP follow-on.
+static WRITE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Disk-backed dataset store. Cheap to construct: the directory is only
+/// created on the first write.
+pub struct DatasetStore {
+    dir: PathBuf,
+}
+
+impl DatasetStore {
+    pub fn open(dir: PathBuf) -> DatasetStore {
+        DatasetStore { dir }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.dir.join("manifest.json")
+    }
+
+    fn entry_path(&self, slug: &str) -> PathBuf {
+        self.dir.join(format!("{slug}.json"))
+    }
+
+    /// The parsed manifest, or `None` for absent / stale-version /
+    /// unparseable (the latter with a warning — its entries are
+    /// unrecoverable metadata, the datasets get rewritten on demand).
+    fn read_manifest(&self) -> Result<Option<Json>> {
+        let path = self.manifest_path();
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(Error::ArtifactCorrupt { path, reason: e.to_string() })
+            }
+        };
+        match Json::parse(&text) {
+            Ok(m) if m.get("version").and_then(Json::as_u64)
+                == Some(STORE_FORMAT_VERSION) =>
+            {
+                Ok(Some(m))
+            }
+            Ok(_) => Ok(None), // older/newer format: treat the store as empty
+            Err(e) => {
+                eprintln!(
+                    "warning: dataset store manifest {} is unparseable ({e}) — \
+                     treating the store as empty",
+                    path.display()
+                );
+                Ok(None)
+            }
+        }
+    }
+
+    /// Look up `key` for a dataset characterized against inputs matching
+    /// `inputs_fp` (see [`inputs_fingerprint`]). `Ok(None)` is a miss —
+    /// absent, stale format, different inputs, or a failed integrity
+    /// check (the caller re-characterizes and the next save overwrites
+    /// the bad entry). Genuine I/O faults are errors.
+    pub fn load(&self, key: &DatasetKey, inputs_fp: u64) -> Result<Option<Dataset>> {
+        let slug = key_slug(key);
+        let Some(manifest) = self.read_manifest()? else { return Ok(None) };
+        let Some(entry) = manifest.get("entries").and_then(|e| e.get(&slug)) else {
+            return Ok(None);
+        };
+        if entry.get("inputs").and_then(Json::as_str).and_then(parse_hash)
+            != Some(inputs_fp)
+        {
+            eprintln!(
+                "warning: dataset store entry {slug} was characterized against a \
+                 different input set — re-characterizing"
+            );
+            return Ok(None);
+        }
+        let want = entry.get("hash").and_then(Json::as_str).and_then(parse_hash);
+        let path = self.entry_path(&slug);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                eprintln!(
+                    "warning: dataset store entry {slug} is in the manifest but \
+                     missing on disk — re-characterizing"
+                );
+                return Ok(None);
+            }
+            Err(e) => {
+                return Err(Error::ArtifactCorrupt { path, reason: e.to_string() })
+            }
+        };
+        if want != Some(fnv1a64(&bytes)) {
+            eprintln!(
+                "warning: dataset store entry {slug} failed its integrity check — \
+                 re-characterizing"
+            );
+            return Ok(None);
+        }
+        let parsed = String::from_utf8(bytes)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|v| Dataset::from_json(&v).ok());
+        match parsed {
+            Some(ds) if ds.operator == key.op => Ok(Some(ds)),
+            _ => {
+                eprintln!(
+                    "warning: dataset store entry {slug} hash-matches but does not \
+                     parse as a {} dataset — re-characterizing",
+                    key.op.name()
+                );
+                Ok(None)
+            }
+        }
+    }
+
+    /// Persist `ds` under `key`: payload written to a temp file and
+    /// renamed into place, then the manifest entry (content hash, input
+    /// fingerprint, length) updated the same way.
+    pub fn save(&self, key: &DatasetKey, ds: &Dataset, inputs_fp: u64) -> Result<()> {
+        let _guard = WRITE_LOCK.lock().expect("dataset store write lock poisoned");
+        std::fs::create_dir_all(&self.dir)?;
+        let slug = key_slug(key);
+        let text = ds.to_json().to_string();
+        let hash = fnv1a64(text.as_bytes());
+        let tmp = self.dir.join(format!(".{slug}.tmp"));
+        std::fs::write(&tmp, &text)?;
+        std::fs::rename(&tmp, self.entry_path(&slug))?;
+        let mut entries: BTreeMap<String, Json> = self
+            .read_manifest()?
+            .and_then(|m| m.get("entries").and_then(Json::as_obj).cloned())
+            .unwrap_or_default();
+        entries.insert(
+            slug.clone(),
+            Json::obj(vec![
+                ("hash", Json::Str(format!("{hash:016x}"))),
+                ("inputs", Json::Str(format!("{inputs_fp:016x}"))),
+                ("len", Json::Num(ds.len() as f64)),
+                ("operator", Json::Str(ds.operator.name())),
+                ("file", Json::Str(format!("{slug}.json"))),
+            ]),
+        );
+        let manifest = Json::obj(vec![
+            ("version", Json::Num(STORE_FORMAT_VERSION as f64)),
+            ("entries", Json::Obj(entries)),
+        ]);
+        let mtmp = self.dir.join(".manifest.tmp");
+        std::fs::write(&mtmp, manifest.to_string())?;
+        std::fs::rename(&mtmp, self.manifest_path())?;
+        Ok(())
+    }
+
+    /// Every manifest entry (`repro store ls`).
+    pub fn entries(&self) -> Result<Vec<StoreEntry>> {
+        let Some(manifest) = self.read_manifest()? else { return Ok(Vec::new()) };
+        let mut out = Vec::new();
+        if let Some(map) = manifest.get("entries").and_then(Json::as_obj) {
+            for (slug, e) in map {
+                out.push(StoreEntry {
+                    slug: slug.clone(),
+                    hash: e
+                        .get("hash")
+                        .and_then(Json::as_str)
+                        .and_then(parse_hash)
+                        .unwrap_or(0),
+                    len: e.get("len").and_then(Json::as_usize).unwrap_or(0),
+                    path: self.entry_path(slug),
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Delete the manifest and every store-owned file in the directory —
+    /// a directory sweep, not a manifest walk, so payloads orphaned by a
+    /// format-version bump, an unparseable manifest, or a crashed save's
+    /// `.tmp` files are reclaimed too. Only filenames the store itself
+    /// writes are touched (see [`is_store_file`]): pointing `store.dir`
+    /// at a shared directory must never delete unrelated files. Returns
+    /// how many dataset payloads were removed.
+    pub fn clear(&self) -> Result<usize> {
+        let _guard = WRITE_LOCK.lock().expect("dataset store write lock poisoned");
+        let read_dir = match std::fs::read_dir(&self.dir) {
+            Ok(rd) => rd,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+            Err(e) => return Err(e.into()),
+        };
+        let mut removed = 0usize;
+        for entry in read_dir {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if !is_store_file(&name) {
+                continue;
+            }
+            std::fs::remove_file(entry.path())?;
+            removed += (name.ends_with(".json") && name != "manifest.json") as usize;
+        }
+        Ok(removed)
+    }
+
+    /// Re-hash and re-parse every manifest entry (`repro store verify`).
+    pub fn verify(&self) -> Result<Vec<(String, VerifyStatus)>> {
+        let mut out = Vec::new();
+        for e in self.entries()? {
+            let status = match std::fs::read(&e.path) {
+                Err(err) if err.kind() == std::io::ErrorKind::NotFound => {
+                    VerifyStatus::MissingFile
+                }
+                Err(err) => VerifyStatus::Corrupt(err.to_string()),
+                Ok(bytes) if fnv1a64(&bytes) != e.hash => VerifyStatus::HashMismatch,
+                Ok(bytes) => {
+                    let parsed = String::from_utf8(bytes)
+                        .ok()
+                        .and_then(|t| Json::parse(&t).ok())
+                        .map(|v| Dataset::from_json(&v));
+                    match parsed {
+                        Some(Ok(_)) => VerifyStatus::Ok,
+                        Some(Err(err)) => VerifyStatus::Corrupt(err.to_string()),
+                        None => VerifyStatus::Corrupt("not valid JSON".into()),
+                    }
+                }
+            };
+            out.push((e.slug, status));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::charac::BehavMetrics;
+    use crate::operator::{AxoConfig, Operator};
+    use crate::synth::PpaMetrics;
+    use crate::util::tempdir::TempDir;
+
+    fn tiny_ds() -> Dataset {
+        let cfgs = vec![AxoConfig::accurate(4), AxoConfig::new(0b0111, 4).unwrap()];
+        let behav = vec![
+            BehavMetrics::ZERO,
+            BehavMetrics {
+                avg_abs_err: 1.0,
+                avg_abs_rel_err: 0.1,
+                max_abs_err: 8.0,
+                err_prob: 0.5,
+            },
+        ];
+        let ppa = vec![
+            PpaMetrics { luts: 4.0, cpd_ns: 0.75, power_mw: 0.8, pdp: 0.6, pdplut: 2.4 },
+            PpaMetrics { luts: 3.0, cpd_ns: 0.7, power_mw: 0.7, pdp: 0.49, pdplut: 1.47 },
+        ];
+        Dataset::new(Operator::ADD4, cfgs, behav, ppa).unwrap()
+    }
+
+    fn key() -> DatasetKey {
+        DatasetKey {
+            op: Operator::ADD4,
+            substrate: CharacSubstrate::Native,
+            spec: SampleSpec::Seeded { seed: 7, n: 2 },
+        }
+    }
+
+    #[test]
+    fn slug_is_deterministic_and_distinct() {
+        assert_eq!(key_slug(&key()), "add4-native-seeded-s7-n2");
+        let ex = DatasetKey {
+            op: Operator::MUL8,
+            substrate: CharacSubstrate::Native,
+            spec: SampleSpec::Exhaustive,
+        };
+        assert_eq!(key_slug(&ex), "mul8-native-exhaustive");
+    }
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    /// Fixed input fingerprint used by tests that don't vary the inputs.
+    const FP: u64 = 0x1234_5678_9abc_def0;
+
+    #[test]
+    fn round_trip_and_ls() {
+        let dir = TempDir::new().unwrap();
+        let store = DatasetStore::open(dir.path().join("ds"));
+        assert!(store.load(&key(), FP).unwrap().is_none());
+        assert!(store.entries().unwrap().is_empty());
+        store.save(&key(), &tiny_ds(), FP).unwrap();
+        let loaded = store.load(&key(), FP).unwrap().expect("stored entry loads");
+        assert_eq!(loaded.configs, tiny_ds().configs);
+        assert_eq!(loaded.len(), 2);
+        let ls = store.entries().unwrap();
+        assert_eq!(ls.len(), 1);
+        assert_eq!(ls[0].slug, "add4-native-seeded-s7-n2");
+        assert_eq!(ls[0].len, 2);
+        assert_eq!(
+            store.verify().unwrap(),
+            vec![("add4-native-seeded-s7-n2".into(), VerifyStatus::Ok)]
+        );
+        assert_eq!(store.clear().unwrap(), 1);
+        assert!(store.load(&key(), FP).unwrap().is_none());
+    }
+
+    #[test]
+    fn clear_never_touches_foreign_files_in_a_shared_dir() {
+        // `store.dir` may point at a shared directory (even `artifacts/`
+        // itself): clear must only remove store-owned filenames.
+        let dir = TempDir::new().unwrap();
+        let store = DatasetStore::open(dir.path().to_path_buf());
+        store.save(&key(), &tiny_ds(), FP).unwrap();
+        let foreign_json = dir.path().join("golden_behav.json");
+        let foreign_txt = dir.path().join("notes.txt");
+        std::fs::write(&foreign_json, "{}").unwrap();
+        std::fs::write(&foreign_txt, "keep me").unwrap();
+        assert!(is_store_file("add4-native-seeded-s7-n2.json"));
+        assert!(is_store_file(".add4-native-seeded-s7-n2.tmp"));
+        assert!(is_store_file("manifest.json"));
+        assert!(!is_store_file("golden_behav.json"));
+        assert!(!is_store_file("inputs_add12.bin"));
+        assert_eq!(store.clear().unwrap(), 1);
+        assert!(foreign_json.exists());
+        assert!(foreign_txt.exists());
+        assert!(!store.manifest_path().exists());
+    }
+
+    #[test]
+    fn mismatched_input_fingerprint_is_a_miss() {
+        let dir = TempDir::new().unwrap();
+        let store = DatasetStore::open(dir.path().join("ds"));
+        store.save(&key(), &tiny_ds(), FP).unwrap();
+        assert!(store.load(&key(), FP).unwrap().is_some());
+        // Same key, different input set: never served.
+        assert!(store.load(&key(), FP ^ 1).unwrap().is_none());
+    }
+
+    #[test]
+    fn inputs_fingerprint_tracks_content() {
+        use crate::charac::InputSet;
+        let a = InputSet { a: vec![1, 2, 3], b: vec![4, 5, 6] };
+        let same = InputSet { a: vec![1, 2, 3], b: vec![4, 5, 6] };
+        let diff = InputSet { a: vec![1, 2, 3], b: vec![4, 5, 7] };
+        assert_eq!(inputs_fingerprint(&a), inputs_fingerprint(&same));
+        assert_ne!(inputs_fingerprint(&a), inputs_fingerprint(&diff));
+    }
+
+    #[test]
+    fn corrupted_payload_is_a_miss_not_an_error() {
+        let dir = TempDir::new().unwrap();
+        let store = DatasetStore::open(dir.path().join("ds"));
+        store.save(&key(), &tiny_ds(), FP).unwrap();
+        let entry = store.entries().unwrap().remove(0);
+        std::fs::write(&entry.path, "garbage").unwrap();
+        assert_eq!(
+            store.verify().unwrap()[0].1,
+            VerifyStatus::HashMismatch,
+            "verify flags the tampered entry"
+        );
+        assert!(store.load(&key(), FP).unwrap().is_none(), "load falls back to a miss");
+        // Re-saving heals the entry.
+        store.save(&key(), &tiny_ds(), FP).unwrap();
+        assert!(store.load(&key(), FP).unwrap().is_some());
+    }
+
+    #[test]
+    fn missing_payload_and_stale_version_are_misses() {
+        let dir = TempDir::new().unwrap();
+        let store = DatasetStore::open(dir.path().join("ds"));
+        store.save(&key(), &tiny_ds(), FP).unwrap();
+        let entry = store.entries().unwrap().remove(0);
+        std::fs::remove_file(&entry.path).unwrap();
+        assert_eq!(store.verify().unwrap()[0].1, VerifyStatus::MissingFile);
+        assert!(store.load(&key(), FP).unwrap().is_none());
+
+        // A manifest from a different format version empties the store.
+        store.save(&key(), &tiny_ds(), FP).unwrap();
+        let manifest = store.manifest_path();
+        let text = std::fs::read_to_string(&manifest).unwrap();
+        assert!(text.contains("\"version\":1"), "compact manifest layout changed?");
+        std::fs::write(&manifest, text.replace("\"version\":1", "\"version\":999"))
+            .unwrap();
+        assert!(store.load(&key(), FP).unwrap().is_none());
+        assert!(store.entries().unwrap().is_empty());
+        // ...but clear() sweeps the directory, so the now-orphaned payload
+        // is still reclaimed rather than leaking forever.
+        assert_eq!(store.clear().unwrap(), 1);
+        assert!(!entry.path.exists());
+        assert!(!store.manifest_path().exists());
+    }
+}

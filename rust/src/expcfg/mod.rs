@@ -62,6 +62,8 @@ pub struct ExperimentConfig {
     pub conss: ConssConfig,
     pub ga: GaConfig,
     pub service: ServiceConfig,
+    pub charac: CharacConfig,
+    pub store: StoreConfig,
     pub scaling_factors: Vec<f64>,
 }
 
@@ -160,6 +162,15 @@ impl ExperimentConfig {
                         .and_then(|v| u64::try_from(v).ok())
                         .ok_or_else(|| bad(key, "a non-negative integer"))?
                 }
+                "charac.shard_size" => {
+                    cfg.charac.shard_size =
+                        value.as_usize().ok_or_else(|| bad(key, "an integer"))?
+                }
+                "store.enabled" => {
+                    cfg.store.enabled =
+                        Some(value.as_bool().ok_or_else(|| bad(key, "a boolean"))?)
+                }
+                "store.dir" => cfg.store.dir = Some(PathBuf::from(get_str(key, value)?)),
                 other => {
                     return Err(Error::Config(format!("unknown config key `{other}`")))
                 }
@@ -190,6 +201,9 @@ impl ExperimentConfig {
         if self.service.max_batch == 0 {
             return Err(Error::Config("service.max_batch must be > 0".into()));
         }
+        if self.charac.shard_size == 0 {
+            return Err(Error::Config("charac.shard_size must be > 0".into()));
+        }
         Ok(())
     }
 }
@@ -207,8 +221,51 @@ impl Default for ExperimentConfig {
             conss: ConssConfig::default(),
             ga: GaConfig::default(),
             service: ServiceConfig::default(),
+            charac: CharacConfig::default(),
+            store: StoreConfig::default(),
             scaling_factors: default_factors(),
         }
+    }
+}
+
+/// Characterization execution knobs.
+#[derive(Debug, Clone)]
+pub struct CharacConfig {
+    /// Configurations per shard when a `Seeded` characterization job is
+    /// split across the worker pool. The shard plan is a pure function of
+    /// `(n, shard_size)`, so results are bit-identical for any value.
+    pub shard_size: usize,
+}
+
+impl Default for CharacConfig {
+    fn default() -> Self {
+        CharacConfig { shard_size: 512 }
+    }
+}
+
+/// Persistent on-disk dataset store knobs (`artifacts_dir/datasets/`).
+#[derive(Debug, Clone, Default)]
+pub struct StoreConfig {
+    /// Tri-state: `None` leaves the decision to the embedding — the
+    /// `repro` CLI turns the store on (opt out with `--no-store`), while
+    /// library/test embedding defaults to off so hermetic runs never
+    /// touch the filesystem. `Some(_)` is an explicit choice (TOML
+    /// `store.enabled` or CLI flag).
+    pub enabled: Option<bool>,
+    /// Store directory; `None` = `artifacts_dir/datasets`.
+    pub dir: Option<PathBuf>,
+}
+
+impl StoreConfig {
+    /// Whether the store is active for this configuration (`None` = off:
+    /// the hermetic library default).
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.unwrap_or(false)
+    }
+
+    /// The resolved store directory under `artifacts_dir`.
+    pub fn dir_under(&self, artifacts_dir: &Path) -> PathBuf {
+        self.dir.clone().unwrap_or_else(|| artifacts_dir.join("datasets"))
     }
 }
 
@@ -346,6 +403,13 @@ backend = "pjrt-mlp"
 [service]
 max_batch = 128
 max_wait_us = 500
+
+[charac]
+shard_size = 64
+
+[store]
+enabled = true
+dir = "/tmp/ds"
 "#,
         )
         .unwrap();
@@ -355,6 +419,27 @@ max_wait_us = 500
         assert_eq!(c.surrogate.backend, EstimatorBackend::PjrtMlp);
         assert_eq!(c.service.max_batch, 128);
         assert_eq!(c.service.to_batch_options().max_wait.as_micros(), 500);
+        assert_eq!(c.charac.shard_size, 64);
+        assert_eq!(c.store.enabled, Some(true));
+        assert!(c.store.is_enabled());
+        assert_eq!(c.store.dir_under(Path::new("a")), PathBuf::from("/tmp/ds"));
+    }
+
+    #[test]
+    fn store_defaults_are_hermetic() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.store.enabled, None);
+        assert!(!c.store.is_enabled(), "library default must not touch disk");
+        assert_eq!(
+            c.store.dir_under(Path::new("artifacts")),
+            PathBuf::from("artifacts").join("datasets")
+        );
+        assert_eq!(c.charac.shard_size, 512);
+        let c = ExperimentConfig {
+            charac: CharacConfig { shard_size: 0 },
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
     }
 
     #[test]

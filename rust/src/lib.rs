@@ -57,7 +57,8 @@
 //! * [`baselines`] — AppAxO-like GA and EvoApprox-like library baselines.
 //! * [`coordinator`] — std-thread estimator service: batching, workers,
 //!   metrics (this repo links no async runtime).
-//! * [`engine`] — job-oriented orchestration: thread-safe dataset cache,
+//! * [`engine`] — job-oriented orchestration: per-key-guarded dataset
+//!   cache, persistent on-disk dataset store, sharded characterization,
 //!   shared estimator service, concurrent multi-factor DSE jobs.
 //! * [`runtime`] — artifact schemas (always) + PJRT client wrapper that
 //!   loads `artifacts/*.hlo.txt` (`pjrt` feature).

@@ -9,7 +9,7 @@
 use repro::charac::{characterize, characterize_all, Backend, Dataset, InputSet};
 use repro::cli::ParsedArgs;
 use repro::dse::{Constraints, NsgaRunner};
-use repro::engine::{vpf_candidates, DseJob, EngineContext};
+use repro::engine::{vpf_candidates, DatasetStore, DseJob, EngineContext};
 use repro::error::{Error, Result};
 use repro::expcfg::ExperimentConfig;
 use repro::matching::{DistanceKind, Matcher};
@@ -38,6 +38,9 @@ COMMANDS:
                          tab_est, or `all`)
   serve                Batched estimator-service demo
                          [--clients N] [--requests-per-client N]
+  store <action>       Persistent dataset store maintenance:
+                         ls (list entries), clear (delete all),
+                         verify (re-hash + re-parse every entry)
   verify               Cross-check the PJRT runtime against the native model
   quickstart           Tiny end-to-end tour of the API
 
@@ -45,6 +48,9 @@ GLOBAL OPTIONS:
   --config PATH        Experiment TOML (defaults = paper-scale settings)
   --artifacts PATH     AOT artifacts directory (default: artifacts)
   --out PATH           Results directory (default: results)
+  --no-store           Skip the persistent dataset store (on by default:
+                         datasets are loaded from / saved to
+                         artifacts/datasets across invocations)
   --quick              Scaled-down sample sizes / generations
   --help               This help
 
@@ -83,13 +89,14 @@ fn main() {
 }
 
 fn run(args: Vec<String>) -> Result<()> {
-    let parsed = ParsedArgs::parse(args, &["quick", "pjrt"])?;
+    let parsed = ParsedArgs::parse(args, &["quick", "pjrt", "no-store"])?;
     parsed.ensure_known(GLOBAL_OPTS)?;
     let cfg = load_config(&parsed)?;
     match parsed.command.as_str() {
         "characterize" => cmd_characterize(&cfg, &parsed),
         "match" => cmd_match(&cfg, &parsed),
         "dse" => cmd_dse(&cfg, &parsed),
+        "store" => cmd_store(&cfg, &parsed),
         "figures" => {
             let harness = Harness::new(cfg);
             for s in harness.run(&parsed.positionals)? {
@@ -121,8 +128,68 @@ fn load_config(parsed: &ParsedArgs) -> Result<ExperimentConfig> {
         cfg.ga.generations = cfg.ga.generations.min(40);
         cfg.ga.pop_size = cfg.ga.pop_size.min(48);
     }
+    // The CLI defaults the persistent dataset store ON (repeated
+    // invocations warm-start from artifacts/datasets); `--no-store` or an
+    // explicit `store.enabled` in the TOML wins.
+    if parsed.flag("no-store") {
+        cfg.store.enabled = Some(false);
+    } else {
+        cfg.store.enabled.get_or_insert(true);
+    }
     cfg.validate()?;
     Ok(cfg)
+}
+
+fn cmd_store(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
+    let store = DatasetStore::open(cfg.store.dir_under(&cfg.artifacts_dir));
+    match parsed.positional(0, "store action (ls|clear|verify)")? {
+        "ls" => {
+            let entries = store.entries()?;
+            if entries.is_empty() {
+                println!("dataset store empty at {}", store.dir().display());
+            }
+            for e in &entries {
+                println!(
+                    "{:<44} {:>8} designs  fnv1a64 {:016x}  {}",
+                    e.slug,
+                    e.len,
+                    e.hash,
+                    e.path.display()
+                );
+            }
+            Ok(())
+        }
+        "clear" => {
+            let n = store.clear()?;
+            println!("removed {n} dataset(s) from {}", store.dir().display());
+            Ok(())
+        }
+        "verify" => {
+            let results = store.verify()?;
+            if results.is_empty() {
+                println!("dataset store empty at {}", store.dir().display());
+                return Ok(());
+            }
+            let mut bad = 0usize;
+            for (slug, status) in &results {
+                println!("{slug:<44} {status}");
+                if *status != repro::engine::VerifyStatus::Ok {
+                    bad += 1;
+                }
+            }
+            if bad != 0 {
+                return Err(Error::Dataset(format!(
+                    "{bad}/{} store entries failed verification",
+                    results.len()
+                )));
+            }
+            println!("{} entries verified", results.len());
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown store action `{other}` (expected ls|clear|verify)"
+        ))),
+    }
 }
 
 fn parse_distance(s: &str) -> Result<DistanceKind> {
@@ -307,8 +374,17 @@ fn cmd_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     );
     let cache = engine.cache_stats();
     println!(
-        "dataset cache: {} entries, {} hits, {} misses (each dataset characterized once)",
-        cache.entries, cache.hits, cache.misses
+        "dataset cache: {} entries, {} hits, {} misses; characterizations: {}; \
+         store hits: {}{}",
+        cache.entries,
+        cache.hits,
+        cache.misses,
+        cache.characterized,
+        cache.store_hits,
+        match engine.store() {
+            Some(s) => format!(" ({})", s.dir().display()),
+            None => " (store off)".to_string(),
+        }
     );
     Ok(())
 }

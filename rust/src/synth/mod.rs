@@ -122,9 +122,12 @@ pub fn ppa(op: Operator, config: &AxoConfig) -> PpaMetrics {
     }
 }
 
-/// Batch characterization (parallelized by the caller via rayon when large).
+/// Batch characterization on the work-stealing pool. Per-config cost is
+/// tiny (a few hundred ops), so the grain is coarse: small batches stay
+/// on the calling thread, large ones split into a handful of chunks.
 pub fn ppa_batch(op: Operator, configs: &[AxoConfig]) -> Vec<PpaMetrics> {
-    configs.iter().map(|c| ppa(op, c)).collect()
+    let grain = crate::util::par::default_grain(configs.len()).max(256);
+    crate::util::par::parallel_map_dynamic(configs, grain, |_, c| ppa(op, c))
 }
 
 #[cfg(test)]

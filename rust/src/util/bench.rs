@@ -119,6 +119,40 @@ impl Bench {
     pub fn finish(&self) {
         println!("\n{} benchmarks completed", self.results.len());
     }
+
+    /// Results as a JSON document (the `BENCH_*.json` perf-trajectory
+    /// stamp format: mode + per-bench iteration statistics).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let benches: std::collections::BTreeMap<String, Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                (
+                    r.name.clone(),
+                    Json::obj(vec![
+                        ("iters", Json::Num(r.iters as f64)),
+                        ("mean_ns", Json::Num(r.mean_ns)),
+                        ("median_ns", Json::Num(r.median_ns)),
+                        ("p99_ns", Json::Num(r.p99_ns)),
+                        ("min_ns", Json::Num(r.min_ns)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "mode",
+                Json::Str(if smoke_mode() { "smoke".into() } else { "full".into() }),
+            ),
+            ("benches", Json::Obj(benches)),
+        ])
+    }
+
+    /// Persist [`Bench::to_json`] to `path` (e.g. `BENCH_charac.json`).
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
 }
 
 impl Default for Bench {
@@ -161,6 +195,21 @@ mod tests {
         for on in ["1", "true", "yes"] {
             assert!(is_truthy(std::ffi::OsStr::new(on)), "{on:?}");
         }
+    }
+
+    #[test]
+    fn json_stamp_round_trips() {
+        let mut b =
+            Bench::new().with_budget(Duration::from_millis(1), Duration::from_millis(5));
+        b.bench("a/x", || 1u32 + 1);
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let p = dir.join("BENCH_test.json");
+        b.write_json(&p).unwrap();
+        let v = crate::util::json::Json::parse(&std::fs::read_to_string(p).unwrap())
+            .unwrap();
+        assert!(v.get("mode").is_some());
+        let bench = v.get("benches").and_then(|bs| bs.get("a/x")).unwrap();
+        assert!(bench.get("mean_ns").and_then(|m| m.as_f64()).unwrap() >= 0.0);
     }
 
     #[test]

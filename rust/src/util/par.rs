@@ -4,6 +4,48 @@
 //! contiguous chunks and reassembles results in order. Work items must be
 //! `Sync` to share and results `Send`; the closure runs on borrowed data so
 //! no `'static` bounds leak into callers.
+//!
+//! [`parallel_map_dynamic`] is the work-stealing variant: workers claim
+//! `grain`-sized contiguous chunks off a shared atomic cursor, so uneven
+//! per-item cost (multiplier configs vary widely in retained-term count)
+//! no longer leaves workers idle behind a straggler's static chunk.
+//! Results are reassembled order-stably, so both maps are bit-identical to
+//! the serial loop.
+//!
+//! Nested parallelism policy: a [`parallel_map_dynamic`] call made from
+//! inside a *dynamic* pool worker (or a [`serial_scope`]) runs serially
+//! inline instead of spawning a second level of threads — the sharded
+//! characterization fan-out keeps the machine busy without W² thread
+//! explosions, and results are unchanged either way. The static
+//! [`parallel_map`] deliberately keeps its original nested-spawn behavior
+//! so coarse job fan-outs (e.g. 2 DSE jobs on a 16-core box) still reach
+//! full width through their inner maps.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+thread_local! {
+    /// Set while the current thread is a dynamic pool worker (or inside
+    /// [`serial_scope`]); nested [`parallel_map_dynamic`] calls then run
+    /// inline.
+    static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Whether the current thread is already inside a parallel region.
+pub fn in_pool() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+/// Run `f` with every nested [`parallel_map_dynamic`] call executing
+/// serially inline. Used by dynamic pool workers (automatically) and by
+/// benchmarks that need a single-threaded baseline.
+pub fn serial_scope<R>(f: impl FnOnce() -> R) -> R {
+    IN_POOL.with(|c| {
+        let prev = c.replace(true);
+        let out = f();
+        c.set(prev);
+        out
+    })
+}
 
 /// Worker-pool width: the `REPRO_THREADS` env knob when set to a positive
 /// integer, else the machine's available parallelism. Cached after the
@@ -66,6 +108,69 @@ pub fn parallel_map<T: Sync, R: Send>(
         }
     });
     results.into_iter().flatten().flatten().collect()
+}
+
+/// Default grain for [`parallel_map_dynamic`]: roughly four chunks per
+/// worker, so the cursor amortizes while stragglers still rebalance.
+pub fn default_grain(items: usize) -> usize {
+    (items / (configured_parallelism() * 4)).max(1)
+}
+
+/// Work-stealing parallel map preserving order. `f` receives
+/// `(index, item)`. Workers claim `grain`-sized contiguous chunks off a
+/// shared atomic cursor until the slice is drained, so uneven per-item
+/// cost rebalances instead of idling workers behind static chunks.
+/// Results are bit-identical to [`parallel_map`] and the serial loop.
+pub fn parallel_map_dynamic<T: Sync, R: Send>(
+    items: &[T],
+    grain: usize,
+    f: impl Fn(usize, &T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let grain = grain.max(1);
+    let workers = default_workers(n.div_ceil(grain));
+    if workers == 1 || in_pool() {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut parts: Vec<Vec<(usize, Vec<R>)>> = Vec::with_capacity(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let cursor = &cursor;
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            handles.push(scope.spawn(move || {
+                serial_scope(|| {
+                    let mut local: Vec<(usize, Vec<R>)> = Vec::new();
+                    loop {
+                        let start = cursor.fetch_add(grain, Ordering::Relaxed);
+                        if start >= n {
+                            break;
+                        }
+                        let end = (start + grain).min(n);
+                        let out: Vec<R> = items[start..end]
+                            .iter()
+                            .enumerate()
+                            .map(|(k, t)| f(start + k, t))
+                            .collect();
+                        local.push((start, out));
+                    }
+                    local
+                })
+            }));
+        }
+        for h in handles {
+            parts.push(h.join().expect("parallel_map_dynamic worker panicked"));
+        }
+    });
+    // Chunks are contiguous and disjoint: sorting by start index restores
+    // the exact input order.
+    let mut chunks: Vec<(usize, Vec<R>)> = parts.into_iter().flatten().collect();
+    chunks.sort_by_key(|&(start, _)| start);
+    chunks.into_iter().flat_map(|(_, out)| out).collect()
 }
 
 /// Parallel for over mutable chunks of an output buffer: each worker owns
@@ -133,6 +238,67 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i * 5);
         }
+    }
+
+    #[test]
+    fn dynamic_map_preserves_order_for_every_grain() {
+        let xs: Vec<u64> = (0..997).collect();
+        let want: Vec<u64> =
+            xs.iter().enumerate().map(|(i, &x)| x * 3 + i as u64).collect();
+        for grain in [1, 2, 7, 64, 997, 5000] {
+            let got = parallel_map_dynamic(&xs, grain, |i, &x| x * 3 + i as u64);
+            assert_eq!(got, want, "grain {grain}");
+        }
+    }
+
+    #[test]
+    fn dynamic_map_matches_static_on_skewed_work() {
+        // Pathological skew: item cost grows quadratically, so the last
+        // static chunk dominates; both maps must still agree bit-for-bit
+        // with the serial loop.
+        let xs: Vec<u64> = (0..257).map(|i| (i % 97) * (i % 89)).collect();
+        let cost = |_i: usize, &x: &u64| -> u64 {
+            let mut acc = 0u64;
+            for k in 0..(x * 8 + 1) {
+                acc = acc.wrapping_add(k.wrapping_mul(2654435761));
+            }
+            acc
+        };
+        let serial: Vec<u64> = xs.iter().enumerate().map(|(i, x)| cost(i, x)).collect();
+        assert_eq!(parallel_map(&xs, cost), serial);
+        assert_eq!(parallel_map_dynamic(&xs, 1, cost), serial);
+        assert_eq!(parallel_map_dynamic(&xs, 16, cost), serial);
+    }
+
+    #[test]
+    fn dynamic_map_empty_single_and_zero_grain() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map_dynamic(&empty, 4, |_, &x| x).is_empty());
+        // A zero grain is clamped to 1 rather than spinning forever.
+        assert_eq!(parallel_map_dynamic(&[7u32], 0, |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn default_grain_is_positive() {
+        assert_eq!(default_grain(0), 1);
+        assert!(default_grain(1) >= 1);
+        assert!(default_grain(1_000_000) >= 1);
+    }
+
+    #[test]
+    fn serial_scope_inlines_nested_maps() {
+        assert!(!in_pool());
+        let out = serial_scope(|| {
+            assert!(in_pool());
+            // Nested maps run inline on this thread — observable as the
+            // flag staying set inside the closure.
+            parallel_map_dynamic(&[1u32, 2, 3], 1, |_, &x| {
+                assert!(in_pool());
+                x * 2
+            })
+        });
+        assert_eq!(out, vec![2, 4, 6]);
+        assert!(!in_pool());
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Integration tests for the sharded characterization scheduler and the
+//! persistent dataset store: shard-merge determinism (1 vs N shards
+//! bit-identical), store round-trips across fresh contexts (warm runs
+//! perform zero characterizations), corrupted / hash-mismatched entries
+//! falling back to recompute, input-set caching in `validate`, and
+//! concurrent misses on distinct keys completing without convoying.
+
+use repro::charac::{characterize, characterize_sharded, Backend, Dataset, InputSet};
+use repro::engine::{key_slug, CharacSubstrate, DatasetKey, EngineContext, SampleSpec};
+use repro::expcfg::{CharacConfig, ExperimentConfig, StoreConfig};
+use repro::operator::{AxoConfig, Operator};
+use repro::util::rng::Rng;
+use repro::util::tempdir::TempDir;
+use std::io::Write as _;
+
+fn assert_bit_identical(a: &Dataset, b: &Dataset) {
+    assert_eq!(a.operator, b.operator);
+    assert_eq!(a.configs, b.configs);
+    assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        assert_eq!(
+            a.behav[i].to_array().map(f64::to_bits),
+            b.behav[i].to_array().map(f64::to_bits),
+            "behav row {i}"
+        );
+        assert_eq!(
+            a.ppa[i].to_array().map(f64::to_bits),
+            b.ppa[i].to_array().map(f64::to_bits),
+            "ppa row {i}"
+        );
+    }
+}
+
+/// A store-enabled configuration rooted in a fresh temp dir.
+fn store_cfg(tmp: &TempDir) -> ExperimentConfig {
+    ExperimentConfig {
+        operator: "add8".into(),
+        train_samples: 60,
+        artifacts_dir: tmp.path().to_path_buf(),
+        charac: CharacConfig { shard_size: 16 },
+        store: StoreConfig { enabled: Some(true), dir: None },
+        ..Default::default()
+    }
+}
+
+fn seeded_key() -> (Operator, SampleSpec) {
+    (Operator::ADD8, SampleSpec::Seeded { seed: 5, n: 60 })
+}
+
+#[test]
+fn sharded_seeded_characterization_matches_sequential_bit_for_bit() {
+    // The engine's actual seeded path (sample → shard → merge) against a
+    // hand-rolled sequential characterization of the same sample.
+    let (op, spec) = seeded_key();
+    let SampleSpec::Seeded { seed, n } = spec else { unreachable!() };
+    let mut rng = Rng::seed_from_u64(seed);
+    let cfgs = AxoConfig::sample_unique(op.config_len(), n, &mut rng);
+    let inputs = InputSet::exhaustive(op);
+    let sequential = characterize(op, &cfgs, &inputs, &Backend::Native).unwrap();
+
+    for shard_size in [1, 7, 16, 60, 1000] {
+        let sharded = characterize_sharded(op, &cfgs, &inputs, shard_size).unwrap();
+        assert_bit_identical(&sharded, &sequential);
+    }
+
+    // And through the engine (store off → pure characterization).
+    let ctx = EngineContext::new(ExperimentConfig {
+        operator: "add8".into(),
+        charac: CharacConfig { shard_size: 16 },
+        ..Default::default()
+    });
+    let engine_ds = ctx.dataset_with(op, spec).unwrap();
+    assert_bit_identical(&engine_ds, &sequential);
+}
+
+#[test]
+fn warm_store_run_characterizes_nothing_and_is_bit_identical() {
+    let tmp = TempDir::new().unwrap();
+    let (op, spec) = seeded_key();
+
+    // Cold: characterizes and persists.
+    let cold = EngineContext::new(store_cfg(&tmp));
+    let ds_cold = cold.dataset_with(op, spec).unwrap();
+    let s = cold.cache_stats();
+    assert_eq!((s.characterized, s.store_hits), (1, 0));
+    let store_dir = tmp.path().join("datasets");
+    assert!(store_dir.join("manifest.json").exists());
+    let slug = key_slug(&DatasetKey { op, substrate: CharacSubstrate::Native, spec });
+    assert!(store_dir.join(format!("{slug}.json")).exists());
+
+    // Warm: a fresh process-equivalent context loads from disk only.
+    let warm = EngineContext::new(store_cfg(&tmp));
+    let ds_warm = warm.dataset_with(op, spec).unwrap();
+    let s = warm.cache_stats();
+    assert_eq!(s.characterized, 0, "warm run must not characterize");
+    assert_eq!(s.store_hits, 1);
+    assert_bit_identical(&ds_warm, &ds_cold);
+
+    // `--no-store` semantics: an explicitly disabled store ignores disk.
+    let off = EngineContext::new(ExperimentConfig {
+        store: StoreConfig { enabled: Some(false), dir: None },
+        ..store_cfg(&tmp)
+    });
+    off.dataset_with(op, spec).unwrap();
+    let s = off.cache_stats();
+    assert_eq!((s.characterized, s.store_hits), (1, 0));
+}
+
+#[test]
+fn corrupted_entry_falls_back_to_recompute_and_heals() {
+    let tmp = TempDir::new().unwrap();
+    let (op, spec) = seeded_key();
+    let cold = EngineContext::new(store_cfg(&tmp));
+    let ds_cold = cold.dataset_with(op, spec).unwrap();
+
+    // Truncate the payload: hash check must fail, characterization must
+    // rerun, and the save-back must heal the entry.
+    let slug = key_slug(&DatasetKey { op, substrate: CharacSubstrate::Native, spec });
+    let entry = tmp.path().join("datasets").join(format!("{slug}.json"));
+    let text = std::fs::read_to_string(&entry).unwrap();
+    std::fs::write(&entry, &text[..text.len() / 2]).unwrap();
+
+    let ctx = EngineContext::new(store_cfg(&tmp));
+    let ds = ctx.dataset_with(op, spec).unwrap();
+    let s = ctx.cache_stats();
+    assert_eq!((s.characterized, s.store_hits), (1, 0));
+    assert_bit_identical(&ds, &ds_cold);
+
+    let healed = EngineContext::new(store_cfg(&tmp));
+    healed.dataset_with(op, spec).unwrap();
+    assert_eq!(healed.cache_stats().store_hits, 1, "entry healed on save-back");
+}
+
+#[test]
+fn manifest_hash_mismatch_falls_back_to_recompute() {
+    let tmp = TempDir::new().unwrap();
+    let (op, spec) = seeded_key();
+    EngineContext::new(store_cfg(&tmp)).dataset_with(op, spec).unwrap();
+
+    // Corrupt the recorded hash (payload untouched).
+    let manifest = tmp.path().join("datasets").join("manifest.json");
+    let text = std::fs::read_to_string(&manifest).unwrap();
+    let start = text.find("\"hash\":\"").expect("manifest records a hash") + 8;
+    let mut bytes = text.into_bytes();
+    bytes[start] = if bytes[start] == b'0' { b'1' } else { b'0' };
+    let mut f = std::fs::File::create(&manifest).unwrap();
+    f.write_all(&bytes).unwrap();
+    drop(f);
+
+    let ctx = EngineContext::new(store_cfg(&tmp));
+    ctx.dataset_with(op, spec).unwrap();
+    let s = ctx.cache_stats();
+    assert_eq!((s.characterized, s.store_hits), (1, 0));
+}
+
+#[test]
+fn validate_reuses_cached_inputs_instead_of_rereading_disk() {
+    // Persist a tiny add12 input sample, validate once (reads the file),
+    // then delete the file: a second validate must produce bit-identical
+    // metrics — proof it reused the cached inputs rather than falling
+    // back to the (different) hermetic sample.
+    let tmp = TempDir::new().unwrap();
+    let path = tmp.path().join("inputs_add12.bin");
+    let a: Vec<u32> = vec![1, 2, 3, 4000];
+    let b: Vec<u32> = vec![7, 4095, 0, 9];
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(b"AXIN").unwrap();
+    f.write_all(&1u32.to_le_bytes()).unwrap();
+    f.write_all(&(a.len() as u32).to_le_bytes()).unwrap();
+    for v in a.iter().chain(&b) {
+        f.write_all(&v.to_le_bytes()).unwrap();
+    }
+    drop(f);
+
+    let ctx = EngineContext::new(ExperimentConfig {
+        artifacts_dir: tmp.path().to_path_buf(),
+        ..Default::default()
+    });
+    let cfgs =
+        vec![AxoConfig::accurate(12), AxoConfig::new(0b0111_1111_1111, 12).unwrap()];
+    let first = ctx.validate(Operator::ADD12, &cfgs).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let second = ctx.validate(Operator::ADD12, &cfgs).unwrap();
+    assert_bit_identical(&second, &first);
+    // 4 inputs, not the 65536-sample hermetic fallback.
+    assert_eq!(ctx.inputs(Operator::ADD12).unwrap().len(), 4);
+}
+
+#[test]
+fn store_entry_is_not_served_across_different_input_sets() {
+    // The 12-bit adder characterizes against artifacts/inputs_add12.bin
+    // when present but a seeded native fallback otherwise — the same
+    // DatasetKey can mean two different input sets across processes. The
+    // store records an input fingerprint and must refuse the stale entry.
+    let tmp = TempDir::new().unwrap();
+    let spec = SampleSpec::Seeded { seed: 9, n: 5 };
+    let cfg = ExperimentConfig {
+        operator: "add8".into(),
+        artifacts_dir: tmp.path().to_path_buf(),
+        store: StoreConfig { enabled: Some(true), dir: None },
+        ..Default::default()
+    };
+
+    // Cold, no persisted inputs: hermetic fallback sample.
+    let fallback = EngineContext::new(cfg.clone());
+    fallback.dataset_with(Operator::ADD12, spec).unwrap();
+    assert_eq!(fallback.cache_stats().characterized, 1);
+
+    // The persisted numpy-style sample appears (tiny stand-in here): a
+    // fresh context must re-characterize, not serve the fallback entry.
+    let path = tmp.path().join("inputs_add12.bin");
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(b"AXIN").unwrap();
+    f.write_all(&1u32.to_le_bytes()).unwrap();
+    f.write_all(&2u32.to_le_bytes()).unwrap();
+    for v in [1u32, 2, 3, 4] {
+        f.write_all(&v.to_le_bytes()).unwrap();
+    }
+    drop(f);
+    let persisted = EngineContext::new(cfg.clone());
+    let ds = persisted.dataset_with(Operator::ADD12, spec).unwrap();
+    let s = persisted.cache_stats();
+    assert_eq!((s.characterized, s.store_hits), (1, 0), "stale inputs must not hit");
+    assert_eq!(ds.len(), 5);
+
+    // Same inputs again: now it warm-starts.
+    let warm = EngineContext::new(cfg);
+    warm.dataset_with(Operator::ADD12, spec).unwrap();
+    assert_eq!(warm.cache_stats().store_hits, 1);
+}
+
+#[test]
+fn concurrent_misses_on_distinct_keys_both_complete() {
+    // Two different keys requested from two threads: with the per-key
+    // in-flight guard both characterize (the fine-grained concurrency
+    // proof lives in the engine's KeyedOnce unit tests — this exercises
+    // the real dataset path end to end).
+    let ctx = EngineContext::new(ExperimentConfig {
+        operator: "add8".into(),
+        ..Default::default()
+    });
+    let (a, b) = std::thread::scope(|s| {
+        let ha = s.spawn(|| ctx.dataset_with(Operator::ADD4, SampleSpec::Exhaustive));
+        let hb = s.spawn(|| ctx.dataset_with(Operator::MUL4, SampleSpec::Exhaustive));
+        (ha.join().unwrap().unwrap(), hb.join().unwrap().unwrap())
+    });
+    assert_eq!(a.len(), 15);
+    assert_eq!(b.len(), 1023);
+    let s = ctx.cache_stats();
+    assert_eq!((s.misses, s.entries, s.characterized), (2, 2, 2));
+}
