@@ -1,10 +1,13 @@
 //! Engine-layer benches: dataset cache (cold vs cached), the concurrent
-//! multi-factor DSE driver, and the characterization scaling story —
+//! multi-factor DSE driver, the characterization scaling story —
 //! cold-serial vs cold-sharded vs warm-from-disk on the paper's mul8
-//! `Seeded` spec (scaled down). CI's bench-smoke job runs this suite with
-//! `REPRO_BENCH_SMOKE=1` and uploads the stamps; the suite itself writes
-//! `BENCH_charac.json` so the characterization speedups are recorded in
-//! the perf trajectory alongside BENCH_engine.json.
+//! `Seeded` spec (scaled down) — and the serve-mode overhead case (the
+//! same jobs direct vs spooled through the file queue + JobRunner). CI's
+//! bench-smoke job runs this suite with `REPRO_BENCH_SMOKE=1` and uploads
+//! the stamps; the suite itself writes `BENCH_charac.json` and
+//! `BENCH_serve.json` so the characterization speedups and the queueing
+//! overhead are recorded in the perf trajectory alongside
+//! BENCH_engine.json.
 //!
 //! Run: `cargo bench --bench engine_benches`
 
@@ -14,6 +17,7 @@ use repro::expcfg::{
     CharacConfig, ConssConfig, ExperimentConfig, GaConfig, StoreConfig, SurrogateConfig,
 };
 use repro::operator::{AxoConfig, Operator};
+use repro::serve::{JobQueue, JobRunner, JobSpec, ServeOptions};
 use repro::surrogate::EstimatorBackend;
 use repro::util::bench::Bench;
 use repro::util::par;
@@ -102,5 +106,41 @@ fn main() {
     b.finish();
     let stamp = std::path::Path::new("BENCH_charac.json");
     b.write_json(stamp).expect("write BENCH_charac.json");
+    println!("wrote {}", stamp.display());
+
+    // Serve-mode overhead: the same three single-factor jobs run direct
+    // through a warm DsePrepared vs spooled through the file queue and
+    // drained by a two-worker JobRunner (spec JSON round-trip, claim
+    // renames, result writes, event log — everything but the search
+    // itself is the measured delta).
+    let mut bs =
+        Bench::new().with_budget(Duration::from_millis(100), Duration::from_millis(800));
+    let factors = [0.4, 0.6, 0.8];
+    let jobs3: Vec<DseJob> = factors.iter().map(|&f| DseJob::new(f)).collect();
+    bs.bench("serve/direct_3_jobs_warm", || prep.run_many(&jobs3).unwrap());
+
+    let qtmp = TempDir::new().expect("tempdir for serve bench");
+    let queue = JobQueue::open(qtmp.path().join("jobs")).expect("open job queue");
+    let serve_ctx = EngineContext::new(cfg());
+    let runner = JobRunner::new(
+        &serve_ctx,
+        &queue,
+        ServeOptions { workers: 2, ..Default::default() },
+    )
+    .expect("job runner");
+    let round = std::cell::Cell::new(0u64);
+    bs.bench("serve/queued_3_jobs_drain", || {
+        let r = round.get();
+        round.set(r + 1);
+        for (i, f) in factors.iter().enumerate() {
+            queue.submit(&JobSpec::new(format!("r{r}-j{i}"), vec![*f])).unwrap();
+        }
+        let summary = runner.run().unwrap();
+        assert_eq!(summary.done, 3, "queued jobs must all complete");
+        summary
+    });
+    bs.finish();
+    let stamp = std::path::Path::new("BENCH_serve.json");
+    bs.write_json(stamp).expect("write BENCH_serve.json");
     println!("wrote {}", stamp.display());
 }

@@ -25,6 +25,24 @@ pub enum SeedSelection {
     ConstraintFiltered,
 }
 
+impl SeedSelection {
+    /// Identifier used by serve-mode job specs and ablation configs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SeedSelection::All => "all",
+            SeedSelection::ParetoOnly => "pareto-only",
+            SeedSelection::ConstraintFiltered => "constraint-filtered",
+        }
+    }
+
+    /// Parse [`SeedSelection::name`] identifiers.
+    pub fn from_name(name: &str) -> Option<SeedSelection> {
+        [Self::All, Self::ParetoOnly, Self::ConstraintFiltered]
+            .into_iter()
+            .find(|s| s.name() == name)
+    }
+}
+
 /// Supersampling options.
 #[derive(Debug, Clone)]
 pub struct SupersampleOptions {

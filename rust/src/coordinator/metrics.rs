@@ -43,7 +43,7 @@ impl ServiceMetrics {
 }
 
 /// A point-in-time copy of the counters.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub configs: u64,
@@ -60,6 +60,31 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.configs as f64 / self.batches as f64
+        }
+    }
+
+    /// Configurations per wall-clock second. Zero-duration (or zero-work)
+    /// intervals report 0.0 rather than NaN/inf — an instant or
+    /// zero-request run must print a finite throughput.
+    pub fn configs_per_sec(&self, elapsed: std::time::Duration) -> f64 {
+        let secs = elapsed.as_secs_f64();
+        if secs > 0.0 && self.configs > 0 {
+            self.configs as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Pool-aware aggregation: counters sum, `max_batch_fill` takes the
+    /// max — so a fleet of per-operator services reports one snapshot.
+    pub fn merged(&self, other: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests + other.requests,
+            configs: self.configs + other.configs,
+            batches: self.batches + other.batches,
+            errors: self.errors + other.errors,
+            busy_micros: self.busy_micros + other.busy_micros,
+            max_batch_fill: self.max_batch_fill.max(other.max_batch_fill),
         }
     }
 }
@@ -83,5 +108,41 @@ mod tests {
         assert_eq!(s.busy_micros, 150);
         assert_eq!(s.max_batch_fill, 15);
         assert!((s.mean_batch_fill() - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_is_finite_for_degenerate_intervals() {
+        let m = ServiceMetrics::default();
+        let empty = m.snapshot();
+        // Zero requests and/or zero elapsed time: 0.0, never NaN or inf.
+        assert_eq!(empty.configs_per_sec(Duration::ZERO), 0.0);
+        assert_eq!(empty.configs_per_sec(Duration::from_secs(1)), 0.0);
+        m.record_request(10);
+        let s = m.snapshot();
+        assert_eq!(s.configs_per_sec(Duration::ZERO), 0.0);
+        assert!(s.configs_per_sec(Duration::ZERO).is_finite());
+        assert!((s.configs_per_sec(Duration::from_secs(2)) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merged_sums_counters_and_maxes_fill() {
+        let a = ServiceMetrics::default();
+        a.record_request(6);
+        a.record_batch(6, Duration::from_micros(10), true);
+        let b = ServiceMetrics::default();
+        b.record_request(2);
+        b.record_request(2);
+        b.record_batch(4, Duration::from_micros(30), false);
+        let m = a.snapshot().merged(&b.snapshot());
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.configs, 10);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.busy_micros, 40);
+        assert_eq!(m.max_batch_fill, 6);
+        // Identity under the default snapshot.
+        let d = MetricsSnapshot::default().merged(&m);
+        assert_eq!(d.requests, m.requests);
+        assert_eq!(d.max_batch_fill, m.max_batch_fill);
     }
 }

@@ -13,9 +13,12 @@
 //! * an optional **persistent [`DatasetStore`]** consulted on cache miss
 //!   and written on characterize, so repeated processes warm-start from
 //!   disk instead of re-paying H_CHAR;
-//! * a **lazily-spawned shared [`EstimatorService`]** fronting the
-//!   configured surrogate backend, so concurrent searches funnel fitness
-//!   queries through one batcher and their batches coalesce.
+//! * a keyed **estimator pool** ([`EstimatorKey`] = operator × surrogate
+//!   backend → lazily-spawned [`EstimatorService`]), so heterogeneous
+//!   workloads (an add12 job next to a mul8 job, as the serve-mode queue
+//!   produces) coexist in one process without evicting each other, while
+//!   every caller for the same key funnels fitness queries through one
+//!   batcher and their batches coalesce.
 //!
 //! `Seeded` characterizations are split into deterministic sub-range
 //! shards on the work-stealing pool
@@ -26,11 +29,11 @@ use super::store::DatasetStore;
 use crate::charac::{
     characterize, characterize_all, characterize_sharded, Backend, Dataset, InputSet,
 };
-use crate::coordinator::EstimatorService;
+use crate::coordinator::{EstimatorService, MetricsSnapshot};
 use crate::error::{Error, Result};
 use crate::expcfg::ExperimentConfig;
 use crate::operator::{AxoConfig, Operator};
-use crate::surrogate::build_backend;
+use crate::surrogate::{build_backend, EstimatorBackend};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::hash::Hash;
@@ -75,6 +78,27 @@ pub struct CacheStats {
     pub characterized: u64,
 }
 
+/// Estimator-pool key: which operator the service predicts for, under
+/// which surrogate backend. Distinct operators (add12 next to mul8 in a
+/// serve-mode queue) get distinct resident services; a second request for
+/// the same key reuses the already-spawned one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EstimatorKey {
+    pub op: Operator,
+    pub backend: EstimatorBackend,
+}
+
+/// Point-in-time estimator-pool counters.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolStats {
+    /// Requests served by an already-resident service.
+    pub hits: u64,
+    /// Services (backend build + batcher spawn) actually created.
+    pub spawned: u64,
+    /// Resident services right now.
+    pub services: usize,
+}
+
 /// The low-bit-width ConSS partner of an operator (paper Table II arrows).
 pub fn l_operator(h: Operator) -> Result<Operator> {
     Ok(match h {
@@ -93,20 +117,25 @@ pub fn l_operator(h: Operator) -> Result<Operator> {
 /// run in parallel; a second request for an in-flight key blocks on the
 /// cell and then observes the first result. A failed compute leaves the
 /// cell empty, so the next request retries.
+///
+/// Shared (crate-wide) by the dataset cache, the estimator pool, and the
+/// serve-mode per-operator `DsePrepared` pool — every "expensive resource,
+/// build at most once per key, misses on distinct keys proceed in
+/// parallel" need uses this one primitive.
 type Cell<V> = Arc<Mutex<Option<Arc<V>>>>;
 
-struct KeyedOnce<K, V> {
+pub(crate) struct KeyedOnce<K, V> {
     cells: Mutex<HashMap<K, Cell<V>>>,
 }
 
 impl<K: Eq + Hash + Copy, V> KeyedOnce<K, V> {
-    fn new() -> KeyedOnce<K, V> {
+    pub(crate) fn new() -> KeyedOnce<K, V> {
         KeyedOnce { cells: Mutex::new(HashMap::new()) }
     }
 
     /// Fetch `key`, running `compute` under the key's cell lock if absent.
     /// Returns the value and whether it was already present.
-    fn get_or_try_compute(
+    pub(crate) fn get_or_try_compute(
         &self,
         key: K,
         compute: impl FnOnce() -> Result<Arc<V>>,
@@ -129,30 +158,41 @@ impl<K: Eq + Hash + Copy, V> KeyedOnce<K, V> {
     /// locks), then counts via `try_lock`: a cell whose lock is contended
     /// is mid-compute, i.e. not yet filled — so a stats probe never blocks
     /// behind an in-flight characterization.
-    fn filled(&self) -> usize {
+    pub(crate) fn filled(&self) -> usize {
+        self.values().len()
+    }
+
+    /// Snapshot of every completed value, skipping in-flight cells by the
+    /// same non-blocking `try_lock` discipline as [`KeyedOnce::filled`].
+    pub(crate) fn values(&self) -> Vec<Arc<V>> {
         let cells: Vec<Cell<V>> = {
             let map = self.cells.lock().expect("keyed cache map poisoned");
             map.values().cloned().collect()
         };
         cells
             .iter()
-            .filter(|cell| matches!(cell.try_lock().as_deref(), Ok(Some(_))))
-            .count()
+            .filter_map(|cell| match cell.try_lock().as_deref() {
+                Ok(Some(v)) => Some(v.clone()),
+                _ => None,
+            })
+            .collect()
     }
 }
 
 /// Shared engine state: configuration, dataset cache, optional persistent
-/// store, estimator service.
+/// store, keyed estimator pool.
 pub struct EngineContext {
     cfg: ExperimentConfig,
     datasets: KeyedOnce<DatasetKey, Dataset>,
     inputs: KeyedOnce<Operator, InputSet>,
     store: Option<DatasetStore>,
-    estimator: Mutex<Option<EstimatorService>>,
+    estimators: KeyedOnce<EstimatorKey, EstimatorService>,
     hits: AtomicU64,
     misses: AtomicU64,
     store_hits: AtomicU64,
     characterized: AtomicU64,
+    pool_hits: AtomicU64,
+    pool_spawned: AtomicU64,
 }
 
 impl EngineContext {
@@ -166,11 +206,13 @@ impl EngineContext {
             datasets: KeyedOnce::new(),
             inputs: KeyedOnce::new(),
             store,
-            estimator: Mutex::new(None),
+            estimators: KeyedOnce::new(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             store_hits: AtomicU64::new(0),
             characterized: AtomicU64::new(0),
+            pool_hits: AtomicU64::new(0),
+            pool_spawned: AtomicU64::new(0),
         }
     }
 
@@ -279,25 +321,40 @@ impl EngineContext {
     }
 
     /// The shared estimator service for the configured operator, spawned on
-    /// first use. Every caller gets a clone of the same handle, so fitness
-    /// batches coalesce across concurrent searches; the batcher thread
-    /// exits when the context (and all clones) drop.
+    /// first use (see [`EngineContext::estimator_for`]).
     pub fn estimator(&self) -> Result<EstimatorService> {
-        let mut slot = self.estimator.lock().expect("engine estimator slot poisoned");
-        if let Some(svc) = slot.as_ref() {
-            return Ok(svc.clone());
+        self.estimator_for(Operator::from_name(&self.cfg.operator)?)
+    }
+
+    /// The pooled estimator service for `op` under the configured surrogate
+    /// backend, spawned on first use per [`EstimatorKey`]. Every caller for
+    /// the same key gets a clone of the same handle, so fitness batches
+    /// coalesce across concurrent searches; heterogeneous operators get
+    /// distinct resident services (nothing is evicted). The same per-key
+    /// in-flight guard as the dataset cache applies: two concurrent first
+    /// requests for one key build one backend, while first requests for
+    /// *different* keys build in parallel. Batcher threads exit when the
+    /// context (and all handle clones) drop.
+    pub fn estimator_for(&self, op: Operator) -> Result<EstimatorService> {
+        let key = EstimatorKey { op, backend: self.cfg.surrogate.backend };
+        let (svc, was_hit) = self.estimators.get_or_try_compute(key, || {
+            let backend = build_backend(
+                key.backend,
+                self.cfg.surrogate.gbt_stages,
+                &self.cfg.artifacts_dir,
+                op,
+                || self.dataset(op),
+            )?;
+            self.pool_spawned.fetch_add(1, Ordering::Relaxed);
+            Ok(Arc::new(EstimatorService::spawn(
+                backend,
+                self.cfg.service.to_batch_options(),
+            )))
+        })?;
+        if was_hit {
+            self.pool_hits.fetch_add(1, Ordering::Relaxed);
         }
-        let op = Operator::from_name(&self.cfg.operator)?;
-        let backend = build_backend(
-            self.cfg.surrogate.backend,
-            self.cfg.surrogate.gbt_stages,
-            &self.cfg.artifacts_dir,
-            op,
-            || self.dataset(op),
-        )?;
-        let svc = EstimatorService::spawn(backend, self.cfg.service.to_batch_options());
-        *slot = Some(svc.clone());
-        Ok(svc)
+        Ok((*svc).clone())
     }
 
     pub fn cache_stats(&self) -> CacheStats {
@@ -308,6 +365,25 @@ impl EngineContext {
             store_hits: self.store_hits.load(Ordering::Relaxed),
             characterized: self.characterized.load(Ordering::Relaxed),
         }
+    }
+
+    pub fn pool_stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.pool_hits.load(Ordering::Relaxed),
+            spawned: self.pool_spawned.load(Ordering::Relaxed),
+            services: self.estimators.filled(),
+        }
+    }
+
+    /// Pool-aware service metrics: one [`MetricsSnapshot`] aggregated over
+    /// every resident estimator service, so serve-mode reporting sees the
+    /// whole process's request path no matter how many operators are live.
+    pub fn pool_metrics(&self) -> MetricsSnapshot {
+        self.estimators
+            .values()
+            .iter()
+            .map(|svc| svc.metrics().snapshot())
+            .fold(MetricsSnapshot::default(), |acc, s| acc.merged(&s))
     }
 }
 
@@ -384,6 +460,29 @@ mod tests {
         assert!(std::ptr::eq(a.metrics(), b.metrics()));
         a.predict(vec![AxoConfig::new(3, 8).unwrap()]).unwrap();
         assert_eq!(b.metrics().snapshot().requests, 1);
+        let p = ctx.pool_stats();
+        assert_eq!((p.spawned, p.hits, p.services), (1, 1, 1));
+    }
+
+    #[test]
+    fn estimator_pool_keys_by_operator_without_eviction() {
+        let ctx = EngineContext::new(tiny_cfg());
+        let a = ctx.estimator_for(Operator::ADD4).unwrap();
+        let b = ctx.estimator_for(Operator::ADD8).unwrap();
+        let a2 = ctx.estimator_for(Operator::ADD4).unwrap();
+        // Same key → same resident service; distinct keys coexist.
+        assert!(std::ptr::eq(a.metrics(), a2.metrics()));
+        assert!(!std::ptr::eq(a.metrics(), b.metrics()));
+        let p = ctx.pool_stats();
+        assert_eq!((p.spawned, p.hits, p.services), (2, 1, 2));
+
+        // Pool-aware metrics aggregate every resident service.
+        a.predict(vec![AxoConfig::new(3, 4).unwrap()]).unwrap();
+        b.predict(vec![AxoConfig::new(3, 8).unwrap(), AxoConfig::new(5, 8).unwrap()])
+            .unwrap();
+        let merged = ctx.pool_metrics();
+        assert_eq!(merged.requests, 2);
+        assert_eq!(merged.configs, 3);
     }
 
     // -- KeyedOnce semantics -------------------------------------------------

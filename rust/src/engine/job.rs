@@ -94,15 +94,22 @@ pub struct DseOutcome {
 }
 
 impl EngineContext {
-    /// Build the shared DSE state for the configured operator pair:
-    /// characterize (or fetch cached) L/H datasets, train the ConSS
-    /// pipeline, and spawn/fetch the shared estimator service.
+    /// Build the shared DSE state for the configured operator pair
+    /// (see [`EngineContext::prepare_dse_for`]).
     pub fn prepare_dse(&self) -> Result<DsePrepared> {
-        let op = Operator::from_name(&self.cfg().operator)?;
+        self.prepare_dse_for(Operator::from_name(&self.cfg().operator)?)
+    }
+
+    /// Build the shared DSE state for `op`'s operator pair: characterize
+    /// (or fetch cached) L/H datasets, train the ConSS pipeline, and
+    /// spawn/fetch `op`'s pooled estimator service. Heterogeneous serve
+    /// jobs prepare each operator independently while still sharing the
+    /// process-wide dataset cache and estimator pool.
+    pub fn prepare_dse_for(&self, op: Operator) -> Result<DsePrepared> {
         let l_op = l_operator(op)?;
         let l_ds = self.dataset(l_op)?;
         let h_ds = self.dataset(op)?;
-        let service = self.estimator()?;
+        let service = self.estimator_for(op)?;
         let opts = SupersampleOptions {
             distance: self.cfg().conss.distance,
             noise_bits: self.cfg().conss.noise_bits,

@@ -12,8 +12,11 @@
 //!   guard so concurrent misses on distinct keys characterize in
 //!   parallel), an optional persistent [`DatasetStore`] under
 //!   `artifacts_dir/datasets/` that makes characterization once-*ever*
-//!   across processes, and a lazily-spawned shared
-//!   [`EstimatorService`](crate::coordinator::EstimatorService). `Seeded`
+//!   across processes, and a keyed **estimator pool** (operator ×
+//!   surrogate backend → lazily-spawned
+//!   [`EstimatorService`](crate::coordinator::EstimatorService)), so
+//!   heterogeneous jobs — add12 next to mul8 in the serve-mode queue —
+//!   coexist in one process without evicting each other. `Seeded`
 //!   characterizations run as deterministic sub-range shards on the
 //!   work-stealing pool, bit-identical to the sequential path.
 //! * [`DseJob`] / [`DsePrepared`] — a job describes one constraint-scaled
@@ -22,19 +25,22 @@
 //!   funneling fitness through the one batching service so batches
 //!   coalesce across searches.
 //!
-//! This is the seam future sharding/serving work builds on: a DSE job is
-//! already a self-contained description that could be queued, sharded, or
-//! served remotely (see ROADMAP "Open items").
+//! This is the seam the [`serve`](crate::serve) subsystem builds on: a DSE
+//! job is a self-contained description, so the serve-mode queue executes
+//! specs against one resident context — datasets characterized at most
+//! once per process, estimators spawned at most once per key.
 
 pub mod context;
 pub mod job;
 pub mod store;
 
 pub use context::{
-    l_operator, CacheStats, CharacSubstrate, DatasetKey, EngineContext, SampleSpec,
+    l_operator, CacheStats, CharacSubstrate, DatasetKey, EngineContext, EstimatorKey,
+    PoolStats, SampleSpec,
 };
+pub(crate) use context::KeyedOnce;
 pub use job::{vpf_candidates, DseJob, DseOutcome, DsePrepared};
 pub use store::{
-    inputs_fingerprint, key_slug, DatasetStore, StoreEntry, VerifyStatus,
+    inputs_fingerprint, key_slug, DatasetStore, GcReport, StoreEntry, VerifyStatus,
     STORE_FORMAT_VERSION,
 };

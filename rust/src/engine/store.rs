@@ -18,9 +18,13 @@
 //! faults (permissions, short reads) surface as errors so a real fault is
 //! never papered over by silent re-characterization.
 //!
-//! Manifest read-modify-write is serialized by one process-wide mutex
-//! (covering every store instance, whatever directory it points at);
-//! cross-process locking and eviction are ROADMAP follow-ons.
+//! Manifest read-modify-write is serialized twice over: one process-wide
+//! mutex (covering every store instance, whatever directory it points at)
+//! and an advisory cross-process lock file (`manifest.lock`, created with
+//! `create_new`, holder PID recorded, stale holders taken over) — so a
+//! `repro serve-dse` server and ad-hoc `repro dse` runs sharing one
+//! `artifacts/datasets/` never interleave manifest updates. Eviction is
+//! [`DatasetStore::gc`] (LRU by payload mtime, size-capped).
 
 use super::context::{CharacSubstrate, DatasetKey, SampleSpec};
 use crate::charac::Dataset;
@@ -29,6 +33,7 @@ use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
+use std::time::{Duration, Instant, SystemTime};
 
 /// Bump when the on-disk layout or the dataset JSON schema changes; a
 /// mismatching store is ignored (treated as empty) rather than misread.
@@ -95,6 +100,21 @@ pub struct StoreEntry {
     pub hash: u64,
     pub len: usize,
     pub path: PathBuf,
+    /// Payload size on disk (0 when the payload is missing).
+    pub bytes: u64,
+    /// Payload mtime — the GC's LRU clock (`UNIX_EPOCH` when missing).
+    pub modified: SystemTime,
+}
+
+/// Outcome of one [`DatasetStore::gc`] sweep.
+#[derive(Debug, Clone)]
+pub struct GcReport {
+    /// Slugs evicted, oldest payload first.
+    pub evicted: Vec<String>,
+    /// Entries still resident after the sweep.
+    pub kept: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
 }
 
 /// Integrity state of one entry, as reported by `repro store verify`.
@@ -122,6 +142,8 @@ impl std::fmt::Display for VerifyStatus {
 /// embeds a `-<substrate>-` marker (see [`key_slug`]), which is what
 /// keeps [`DatasetStore::clear`] from touching unrelated files when the
 /// configured store directory is shared with other artifacts.
+/// `manifest.lock` is deliberately *not* a store file: `clear` runs while
+/// holding it, and [`ManifestLock`]'s drop releases it.
 fn is_store_file(name: &str) -> bool {
     const SUBSTRATE_TAGS: [&str; 1] = ["native"];
     if name == "manifest.json" || name == ".manifest.tmp" {
@@ -138,8 +160,95 @@ fn is_store_file(name: &str) -> bool {
 /// Serializes manifest read-modify-write for every store instance in the
 /// process — two `DatasetStore`s opened on the same directory (e.g. a DSE
 /// engine plus a figure harness) must not interleave manifest updates.
-/// Cross-process locking is a ROADMAP follow-on.
+/// Cross-process writers are serialized by [`ManifestLock`] on top.
 static WRITE_LOCK: Mutex<()> = Mutex::new(());
+
+/// How long to wait behind a live lock holder before forcibly taking the
+/// lock over. A manifest read-modify-write is milliseconds of work, so a
+/// holder this old is stuck (or its PID was recycled); takeover is safe
+/// because manifest/payload writes are atomic renames and hash-verified —
+/// the worst interleaving loses a manifest entry, which the next miss
+/// re-characterizes.
+const LOCK_WAIT_MAX: Duration = Duration::from_secs(10);
+const LOCK_POLL: Duration = Duration::from_millis(5);
+
+/// Advisory cross-process lock on the store's manifest read-modify-write:
+/// `manifest.lock` created with `create_new` (the portable atomic
+/// test-and-set), holder PID recorded inside, removed on drop. A holder
+/// whose PID no longer runs is taken over immediately; a live-but-stuck
+/// holder is taken over after [`LOCK_WAIT_MAX`] with a warning.
+struct ManifestLock {
+    path: PathBuf,
+}
+
+impl ManifestLock {
+    fn acquire(dir: &Path) -> Result<ManifestLock> {
+        let path = dir.join("manifest.lock");
+        let deadline = Instant::now() + LOCK_WAIT_MAX;
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    use std::io::Write as _;
+                    let _ = write!(f, "{}", std::process::id());
+                    return Ok(ManifestLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if holder_is_stale(&path) {
+                        eprintln!(
+                            "warning: taking over stale dataset store lock {} \
+                             (holder no longer running)",
+                            path.display()
+                        );
+                        let _ = std::fs::remove_file(&path);
+                        continue;
+                    }
+                    if Instant::now() >= deadline {
+                        eprintln!(
+                            "warning: dataset store lock {} held for over {:?} — \
+                             taking it over",
+                            path.display(),
+                            LOCK_WAIT_MAX
+                        );
+                        let _ = std::fs::remove_file(&path);
+                        continue;
+                    }
+                    std::thread::sleep(LOCK_POLL);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+impl Drop for ManifestLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Whether the lock file records a PID that provably no longer runs. An
+/// empty or garbled record (holder crashed between create and write, or
+/// mid-write) is *not* provably stale — the wait-timeout takeover covers
+/// those.
+fn holder_is_stale(path: &Path) -> bool {
+    match std::fs::read_to_string(path) {
+        Ok(text) => match text.trim().parse::<u32>() {
+            Ok(pid) => pid_is_dead(pid),
+            Err(_) => false,
+        },
+        Err(_) => false, // already released, or unreadable: retry the create
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn pid_is_dead(pid: u32) -> bool {
+    !Path::new(&format!("/proc/{pid}")).exists()
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pid_is_dead(_pid: u32) -> bool {
+    false // no portable liveness probe; the wait-timeout takeover covers it
+}
 
 /// Disk-backed dataset store. Cheap to construct: the directory is only
 /// created on the first write.
@@ -255,10 +364,12 @@ impl DatasetStore {
 
     /// Persist `ds` under `key`: payload written to a temp file and
     /// renamed into place, then the manifest entry (content hash, input
-    /// fingerprint, length) updated the same way.
+    /// fingerprint, length) updated the same way — all under the
+    /// in-process write mutex *and* the cross-process [`ManifestLock`].
     pub fn save(&self, key: &DatasetKey, ds: &Dataset, inputs_fp: u64) -> Result<()> {
         let _guard = WRITE_LOCK.lock().expect("dataset store write lock poisoned");
         std::fs::create_dir_all(&self.dir)?;
+        let _lock = ManifestLock::acquire(&self.dir)?;
         let slug = key_slug(key);
         let text = ds.to_json().to_string();
         let hash = fnv1a64(text.as_bytes());
@@ -279,6 +390,12 @@ impl DatasetStore {
                 ("file", Json::Str(format!("{slug}.json"))),
             ]),
         );
+        self.write_manifest(entries)
+    }
+
+    /// Atomically replace the manifest with `entries` (temp + rename).
+    /// Callers must hold both write locks.
+    fn write_manifest(&self, entries: BTreeMap<String, Json>) -> Result<()> {
         let manifest = Json::obj(vec![
             ("version", Json::Num(STORE_FORMAT_VERSION as f64)),
             ("entries", Json::Obj(entries)),
@@ -289,12 +406,20 @@ impl DatasetStore {
         Ok(())
     }
 
-    /// Every manifest entry (`repro store ls`).
+    /// Every manifest entry (`repro store ls`), with on-disk payload size
+    /// and mtime (the GC's LRU clock).
     pub fn entries(&self) -> Result<Vec<StoreEntry>> {
         let Some(manifest) = self.read_manifest()? else { return Ok(Vec::new()) };
         let mut out = Vec::new();
         if let Some(map) = manifest.get("entries").and_then(Json::as_obj) {
             for (slug, e) in map {
+                let path = self.entry_path(slug);
+                let (bytes, modified) = match std::fs::metadata(&path) {
+                    Ok(md) => {
+                        (md.len(), md.modified().unwrap_or(SystemTime::UNIX_EPOCH))
+                    }
+                    Err(_) => (0, SystemTime::UNIX_EPOCH),
+                };
                 out.push(StoreEntry {
                     slug: slug.clone(),
                     hash: e
@@ -303,11 +428,72 @@ impl DatasetStore {
                         .and_then(parse_hash)
                         .unwrap_or(0),
                     len: e.get("len").and_then(Json::as_usize).unwrap_or(0),
-                    path: self.entry_path(slug),
+                    path,
+                    bytes,
+                    modified,
                 });
             }
         }
         Ok(out)
+    }
+
+    /// Total payload bytes across every manifest entry (`repro store ls`
+    /// footer and the GC budget).
+    pub fn total_bytes(&self) -> Result<u64> {
+        Ok(self.entries()?.iter().map(|e| e.bytes).sum())
+    }
+
+    /// Size-capped eviction: while total payload bytes exceed `max_bytes`,
+    /// evict the least-recently-written entry (LRU by payload mtime,
+    /// slug-tiebroken for determinism) — payload deleted, manifest entry
+    /// dropped, both under the write locks. `repro store gc --max-bytes N`
+    /// drives this.
+    pub fn gc(&self, max_bytes: u64) -> Result<GcReport> {
+        let _guard = WRITE_LOCK.lock().expect("dataset store write lock poisoned");
+        let empty =
+            GcReport { evicted: Vec::new(), kept: 0, bytes_before: 0, bytes_after: 0 };
+        if !self.dir.exists() {
+            return Ok(empty);
+        }
+        let _lock = ManifestLock::acquire(&self.dir)?;
+        let mut entries = self.entries()?;
+        if entries.is_empty() {
+            return Ok(empty);
+        }
+        entries.sort_by(|a, b| {
+            a.modified.cmp(&b.modified).then_with(|| a.slug.cmp(&b.slug))
+        });
+        let bytes_before: u64 = entries.iter().map(|e| e.bytes).sum();
+        let mut remaining = bytes_before;
+        let mut evicted = Vec::new();
+        for e in &entries {
+            if remaining <= max_bytes {
+                break;
+            }
+            match std::fs::remove_file(&e.path) {
+                Ok(()) => {}
+                Err(err) if err.kind() == std::io::ErrorKind::NotFound => {}
+                Err(err) => return Err(err.into()),
+            }
+            remaining -= e.bytes;
+            evicted.push(e.slug.clone());
+        }
+        if !evicted.is_empty() {
+            let kept: BTreeMap<String, Json> = self
+                .read_manifest()?
+                .and_then(|m| m.get("entries").and_then(Json::as_obj).cloned())
+                .unwrap_or_default()
+                .into_iter()
+                .filter(|(slug, _)| !evicted.contains(slug))
+                .collect();
+            self.write_manifest(kept)?;
+        }
+        Ok(GcReport {
+            kept: entries.len() - evicted.len(),
+            evicted,
+            bytes_before,
+            bytes_after: remaining,
+        })
     }
 
     /// Delete the manifest and every store-owned file in the directory —
@@ -324,6 +510,9 @@ impl DatasetStore {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
             Err(e) => return Err(e.into()),
         };
+        // `manifest.lock` is deliberately not a store file for the sweep
+        // below: the guard we hold IS that file, and Drop releases it.
+        let _lock = ManifestLock::acquire(&self.dir)?;
         let mut removed = 0usize;
         for entry in read_dir {
             let entry = entry?;
@@ -463,6 +652,101 @@ mod tests {
         assert!(foreign_json.exists());
         assert!(foreign_txt.exists());
         assert!(!store.manifest_path().exists());
+    }
+
+    fn key_for(op: Operator, seed: u64) -> DatasetKey {
+        DatasetKey {
+            op,
+            substrate: CharacSubstrate::Native,
+            spec: SampleSpec::Seeded { seed, n: 2 },
+        }
+    }
+
+    #[test]
+    fn gc_evicts_lru_by_mtime_until_under_cap() {
+        let dir = TempDir::new().unwrap();
+        let store = DatasetStore::open(dir.path().join("ds"));
+        // Three equally-sized entries, oldest payload first; the sleeps
+        // order the mtimes the GC sorts by.
+        for seed in [1u64, 2, 3] {
+            store.save(&key_for(Operator::ADD4, seed), &tiny_ds(), FP).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        let total = store.total_bytes().unwrap();
+        assert!(total > 0);
+        let per_entry = total / 3;
+        assert_eq!(store.entries().unwrap().len(), 3);
+
+        // Budget for two entries: exactly the oldest is evicted.
+        let report = store.gc(total - 1).unwrap();
+        assert_eq!(report.evicted, vec!["add4-native-seeded-s1-n2".to_string()]);
+        assert_eq!(report.kept, 2);
+        assert_eq!(report.bytes_before, total);
+        assert_eq!(report.bytes_after, total - per_entry);
+        assert_eq!(store.total_bytes().unwrap(), total - per_entry);
+        let slugs: Vec<String> =
+            store.entries().unwrap().into_iter().map(|e| e.slug).collect();
+        assert_eq!(slugs, vec!["add4-native-seeded-s2-n2", "add4-native-seeded-s3-n2"]);
+        assert!(store.load(&key_for(Operator::ADD4, 1), FP).unwrap().is_none());
+        assert!(store.load(&key_for(Operator::ADD4, 3), FP).unwrap().is_some());
+
+        // Zero budget sweeps everything; an idempotent re-run is a no-op.
+        let report = store.gc(0).unwrap();
+        assert_eq!(report.evicted.len(), 2);
+        assert_eq!(report.kept, 0);
+        assert_eq!(report.bytes_after, 0);
+        assert!(store.entries().unwrap().is_empty());
+        let report = store.gc(0).unwrap();
+        assert!(report.evicted.is_empty());
+
+        // A directory that never existed reports an empty sweep.
+        let ghost = DatasetStore::open(dir.path().join("never-created"));
+        assert!(ghost.gc(0).unwrap().evicted.is_empty());
+    }
+
+    #[test]
+    fn gc_under_budget_keeps_everything() {
+        let dir = TempDir::new().unwrap();
+        let store = DatasetStore::open(dir.path().join("ds"));
+        store.save(&key(), &tiny_ds(), FP).unwrap();
+        let total = store.total_bytes().unwrap();
+        let report = store.gc(total).unwrap();
+        assert!(report.evicted.is_empty());
+        assert_eq!(report.kept, 1);
+        assert_eq!(report.bytes_after, total);
+    }
+
+    #[test]
+    fn stale_pid_lock_is_taken_over_and_released() {
+        let dir = TempDir::new().unwrap();
+        let store = DatasetStore::open(dir.path().join("ds"));
+        std::fs::create_dir_all(store.dir()).unwrap();
+        let lock_path = store.dir().join("manifest.lock");
+        // u32::MAX is never a live PID (Linux caps pids well below it).
+        std::fs::write(&lock_path, format!("{}", u32::MAX)).unwrap();
+        store.save(&key(), &tiny_ds(), FP).unwrap();
+        assert!(
+            !lock_path.exists(),
+            "save must take over the stale lock and release it afterwards"
+        );
+        assert!(store.load(&key(), FP).unwrap().is_some());
+        // The lock file is transient, never part of the store sweep.
+        assert!(!is_store_file("manifest.lock"));
+    }
+
+    #[test]
+    fn lock_file_is_held_during_writes_and_dropped_after() {
+        let dir = TempDir::new().unwrap();
+        std::fs::create_dir_all(dir.path()).unwrap();
+        let lock = ManifestLock::acquire(dir.path()).unwrap();
+        let lock_path = dir.path().join("manifest.lock");
+        assert!(lock_path.exists());
+        let recorded = std::fs::read_to_string(&lock_path).unwrap();
+        assert_eq!(recorded.trim(), format!("{}", std::process::id()));
+        // Our own live PID is not stale.
+        assert!(!holder_is_stale(&lock_path));
+        drop(lock);
+        assert!(!lock_path.exists());
     }
 
     #[test]

@@ -64,6 +64,7 @@ pub struct ExperimentConfig {
     pub service: ServiceConfig,
     pub charac: CharacConfig,
     pub store: StoreConfig,
+    pub serve: ServeConfig,
     pub scaling_factors: Vec<f64>,
 }
 
@@ -171,6 +172,19 @@ impl ExperimentConfig {
                         Some(value.as_bool().ok_or_else(|| bad(key, "a boolean"))?)
                 }
                 "store.dir" => cfg.store.dir = Some(PathBuf::from(get_str(key, value)?)),
+                "serve.workers" => {
+                    cfg.serve.workers =
+                        value.as_usize().ok_or_else(|| bad(key, "an integer"))?
+                }
+                "serve.poll_ms" => {
+                    cfg.serve.poll_ms = value
+                        .as_i64()
+                        .and_then(|v| u64::try_from(v).ok())
+                        .ok_or_else(|| bad(key, "a non-negative integer"))?
+                }
+                "serve.jobs_dir" => {
+                    cfg.serve.jobs_dir = Some(PathBuf::from(get_str(key, value)?))
+                }
                 other => {
                     return Err(Error::Config(format!("unknown config key `{other}`")))
                 }
@@ -204,6 +218,9 @@ impl ExperimentConfig {
         if self.charac.shard_size == 0 {
             return Err(Error::Config("charac.shard_size must be > 0".into()));
         }
+        if self.serve.workers == 0 {
+            return Err(Error::Config("serve.workers must be > 0".into()));
+        }
         Ok(())
     }
 }
@@ -223,8 +240,37 @@ impl Default for ExperimentConfig {
             service: ServiceConfig::default(),
             charac: CharacConfig::default(),
             store: StoreConfig::default(),
+            serve: ServeConfig::default(),
             scaling_factors: default_factors(),
         }
+    }
+}
+
+/// Serve-mode job-server knobs (`repro serve-dse` / `repro submit`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Concurrent job-runner workers.
+    pub workers: usize,
+    /// Watch-mode `pending/` poll interval, milliseconds.
+    pub poll_ms: u64,
+    /// Spool directory; `None` = `artifacts_dir/jobs`.
+    pub jobs_dir: Option<PathBuf>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 2, poll_ms: 200, jobs_dir: None }
+    }
+}
+
+impl ServeConfig {
+    /// The resolved spool directory under `artifacts_dir`.
+    pub fn dir_under(&self, artifacts_dir: &Path) -> PathBuf {
+        self.jobs_dir.clone().unwrap_or_else(|| artifacts_dir.join("jobs"))
+    }
+
+    pub fn poll(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.poll_ms)
     }
 }
 
@@ -410,6 +456,11 @@ shard_size = 64
 [store]
 enabled = true
 dir = "/tmp/ds"
+
+[serve]
+workers = 4
+poll_ms = 50
+jobs_dir = "/tmp/jobs"
 "#,
         )
         .unwrap();
@@ -423,6 +474,25 @@ dir = "/tmp/ds"
         assert_eq!(c.store.enabled, Some(true));
         assert!(c.store.is_enabled());
         assert_eq!(c.store.dir_under(Path::new("a")), PathBuf::from("/tmp/ds"));
+        assert_eq!(c.serve.workers, 4);
+        assert_eq!(c.serve.poll().as_millis(), 50);
+        assert_eq!(c.serve.dir_under(Path::new("a")), PathBuf::from("/tmp/jobs"));
+    }
+
+    #[test]
+    fn serve_defaults_and_validation() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.serve.workers, 2);
+        assert_eq!(c.serve.poll_ms, 200);
+        assert_eq!(
+            c.serve.dir_under(Path::new("artifacts")),
+            PathBuf::from("artifacts").join("jobs")
+        );
+        let c = ExperimentConfig {
+            serve: ServeConfig { workers: 0, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
     }
 
     #[test]

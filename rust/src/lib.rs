@@ -59,7 +59,12 @@
 //!   metrics (this repo links no async runtime).
 //! * [`engine`] — job-oriented orchestration: per-key-guarded dataset
 //!   cache, persistent on-disk dataset store, sharded characterization,
-//!   shared estimator service, concurrent multi-factor DSE jobs.
+//!   keyed cross-operator estimator pool, concurrent multi-factor DSE
+//!   jobs.
+//! * [`serve`] — serve-mode DSE: a file-spool job queue
+//!   (`pending/running/done/failed`), JSON job specs/results, and a
+//!   bounded worker pool executing queued jobs against one resident
+//!   engine (`repro serve-dse` / `repro submit`).
 //! * [`runtime`] — artifact schemas (always) + PJRT client wrapper that
 //!   loads `artifacts/*.hlo.txt` (`pjrt` feature).
 //! * [`report`] — regenerates every paper figure/table (Figs 1–18, Tab II).
@@ -79,6 +84,7 @@ pub mod ml;
 pub mod operator;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod surrogate;
 pub mod synth;
@@ -97,6 +103,7 @@ pub mod prelude {
     pub use crate::matching::{DistanceKind, Matcher};
     pub use crate::ml::{forest::RandomForest, gbt::GradientBoostedTrees};
     pub use crate::operator::{AxoConfig, Operator, OperatorKind};
+    pub use crate::serve::{JobQueue, JobRunner, JobSpec, ServeOptions};
     pub use crate::stats::{kmeans::KMeans, scaling::MinMaxScaler};
     pub use crate::surrogate::{EstimatorBackend, Surrogate};
     pub use crate::synth::PpaMetrics;

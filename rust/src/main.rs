@@ -8,6 +8,7 @@
 
 use repro::charac::{characterize, characterize_all, Backend, Dataset, InputSet};
 use repro::cli::ParsedArgs;
+use repro::conss::SeedSelection;
 use repro::dse::{Constraints, NsgaRunner};
 use repro::engine::{vpf_candidates, DatasetStore, DseJob, EngineContext};
 use repro::error::{Error, Result};
@@ -15,6 +16,7 @@ use repro::expcfg::ExperimentConfig;
 use repro::matching::{DistanceKind, Matcher};
 use repro::operator::{AxoConfig, Operator};
 use repro::report::Harness;
+use repro::serve::{JobQueue, JobRunner, JobSpec, ServeOptions, LOG_FILE};
 use repro::surrogate::{EstimatorBackend, Surrogate, TableSurrogate};
 use repro::util::rng::Rng;
 use std::path::PathBuf;
@@ -36,11 +38,21 @@ COMMANDS:
                          shared batching estimator service.
   figures [ids...]     Regenerate paper figures/tables (fig1..fig18, tab2,
                          tab_est, or `all`)
+  submit [spec.json..] Enqueue DSE job specs for `serve-dse` (spool:
+                         artifacts/jobs/pending). With no files, builds a
+                         spec from flags: --id NAME --factors F1,F2,...
+                         [--operator OP] [--seed-selection all|pareto-only|
+                         constraint-filtered] [--ga-seed N]
+  serve-dse            Job server: run queued DSE jobs against one resident
+                         engine. --drain runs the queue to empty and exits;
+                         default watches pending/ forever.
+                         [--workers N] [--max-jobs N]
   serve                Batched estimator-service demo
                          [--clients N] [--requests-per-client N]
   store <action>       Persistent dataset store maintenance:
-                         ls (list entries), clear (delete all),
-                         verify (re-hash + re-parse every entry)
+                         ls (list entries + total size), clear (delete all),
+                         verify (re-hash + re-parse every entry),
+                         gc --max-bytes N (LRU-by-mtime eviction)
   verify               Cross-check the PJRT runtime against the native model
   quickstart           Tiny end-to-end tour of the API
 
@@ -71,6 +83,13 @@ const GLOBAL_OPTS: &[&str] = &[
     "backend",
     "clients",
     "requests-per-client",
+    "id",
+    "operator",
+    "seed-selection",
+    "ga-seed",
+    "workers",
+    "max-jobs",
+    "max-bytes",
 ];
 
 fn main() {
@@ -89,7 +108,8 @@ fn main() {
 }
 
 fn run(args: Vec<String>) -> Result<()> {
-    let parsed = ParsedArgs::parse(args, &["quick", "pjrt", "no-store"])?;
+    let parsed =
+        ParsedArgs::parse(args, &["quick", "pjrt", "no-store", "drain", "watch"])?;
     parsed.ensure_known(GLOBAL_OPTS)?;
     let cfg = load_config(&parsed)?;
     match parsed.command.as_str() {
@@ -97,6 +117,8 @@ fn run(args: Vec<String>) -> Result<()> {
         "match" => cmd_match(&cfg, &parsed),
         "dse" => cmd_dse(&cfg, &parsed),
         "store" => cmd_store(&cfg, &parsed),
+        "submit" => cmd_submit(&cfg, &parsed),
+        "serve-dse" => cmd_serve_dse(&cfg, &parsed),
         "figures" => {
             let harness = Harness::new(cfg);
             for s in harness.run(&parsed.positionals)? {
@@ -142,21 +164,48 @@ fn load_config(parsed: &ParsedArgs) -> Result<ExperimentConfig> {
 
 fn cmd_store(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     let store = DatasetStore::open(cfg.store.dir_under(&cfg.artifacts_dir));
-    match parsed.positional(0, "store action (ls|clear|verify)")? {
+    match parsed.positional(0, "store action (ls|clear|verify|gc)")? {
         "ls" => {
             let entries = store.entries()?;
             if entries.is_empty() {
                 println!("dataset store empty at {}", store.dir().display());
+                return Ok(());
             }
+            let mut total = 0u64;
             for e in &entries {
+                total += e.bytes;
                 println!(
-                    "{:<44} {:>8} designs  fnv1a64 {:016x}  {}",
+                    "{:<44} {:>8} designs {:>10} B  fnv1a64 {:016x}  {}",
                     e.slug,
                     e.len,
+                    e.bytes,
                     e.hash,
                     e.path.display()
                 );
             }
+            println!(
+                "{} entries, {total} bytes total at {}",
+                entries.len(),
+                store.dir().display()
+            );
+            Ok(())
+        }
+        "gc" => {
+            let max_bytes: u64 = parsed
+                .opt_parse("max-bytes")?
+                .ok_or_else(|| Error::Config("store gc needs --max-bytes N".into()))?;
+            let report = store.gc(max_bytes)?;
+            for slug in &report.evicted {
+                println!("evicted {slug}");
+            }
+            println!(
+                "store gc: {} evicted, {} kept; {} -> {} bytes (cap {max_bytes}) at {}",
+                report.evicted.len(),
+                report.kept,
+                report.bytes_before,
+                report.bytes_after,
+                store.dir().display()
+            );
             Ok(())
         }
         "clear" => {
@@ -187,9 +236,134 @@ fn cmd_store(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
             Ok(())
         }
         other => Err(Error::Config(format!(
-            "unknown store action `{other}` (expected ls|clear|verify)"
+            "unknown store action `{other}` (expected ls|clear|verify|gc)"
         ))),
     }
+}
+
+/// Enqueue job specs for `serve-dse`: positional `spec.json` files, or an
+/// inline spec built from `--id`/`--factors`/... flags when none given.
+fn cmd_submit(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
+    let queue = JobQueue::open(cfg.serve.dir_under(&cfg.artifacts_dir))?;
+    let mut specs: Vec<JobSpec> = Vec::new();
+    if parsed.positionals.is_empty() {
+        let factors: Vec<f64> = parsed
+            .opt_parse_list("factors")?
+            .ok_or_else(|| Error::Config("submit needs spec files or --factors".into()))?;
+        let id = parsed
+            .opt("id")
+            .ok_or_else(|| Error::Config("inline submit needs --id NAME".into()))?;
+        let mut spec = JobSpec::new(id, factors);
+        if let Some(op) = parsed.opt("operator") {
+            spec.operator = Some(Operator::from_name(op)?);
+        }
+        if let Some(sel) = parsed.opt("seed-selection") {
+            spec.seed_selection = SeedSelection::from_name(sel).ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown --seed-selection `{sel}` \
+                     (expected all|pareto-only|constraint-filtered)"
+                ))
+            })?;
+        }
+        spec.ga_seed = parsed.opt_parse("ga-seed")?;
+        specs.push(spec);
+    } else {
+        for file in &parsed.positionals {
+            let path = PathBuf::from(file);
+            let text = std::fs::read_to_string(&path)
+                .map_err(|_| Error::ArtifactMissing { path: path.clone() })?;
+            let mut spec = JobSpec::parse(&text)
+                .map_err(|e| Error::Config(format!("{file}: {e}")))?;
+            if spec.id.is_empty() {
+                spec.id = path
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_default();
+            }
+            specs.push(spec);
+        }
+    }
+    for spec in &specs {
+        let dest = queue.submit(spec)?;
+        println!(
+            "submitted job `{}` ({} factor(s)) -> {}",
+            spec.id,
+            spec.factors.len(),
+            dest.display()
+        );
+    }
+    let c = queue.counts()?;
+    println!(
+        "queue at {}: {} pending, {} running, {} done, {} failed",
+        queue.dir().display(),
+        c.pending,
+        c.running,
+        c.done,
+        c.failed
+    );
+    Ok(())
+}
+
+/// The job server: drain (or watch) the spool against one resident engine.
+fn cmd_serve_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
+    if parsed.flag("drain") && parsed.flag("watch") {
+        return Err(Error::Config("pass either --drain or --watch, not both".into()));
+    }
+    let queue = JobQueue::open(cfg.serve.dir_under(&cfg.artifacts_dir))?;
+    let opts = ServeOptions {
+        workers: parsed.opt_parse("workers")?.unwrap_or(cfg.serve.workers),
+        max_jobs: parsed.opt_parse("max-jobs")?,
+        drain: parsed.flag("drain"),
+        poll: cfg.serve.poll(),
+    };
+    if opts.workers == 0 {
+        return Err(Error::Config("--workers must be > 0".into()));
+    }
+    let engine = EngineContext::new(cfg.clone());
+    let runner = JobRunner::new(&engine, &queue, opts.clone())?;
+    println!(
+        "serve-dse: {} worker(s), {} mode, queue at {}",
+        opts.workers,
+        if opts.drain { "drain" } else { "watch" },
+        queue.dir().display()
+    );
+    let started = std::time::Instant::now();
+    let summary = runner.run()?;
+    let elapsed = started.elapsed();
+    let c = queue.counts()?;
+    println!(
+        "{} job(s) done, {} failed in {elapsed:.2?} — queue now: {} pending, \
+         {} running, {} done, {} failed",
+        summary.done, summary.failed, c.pending, c.running, c.done, c.failed
+    );
+    let snap = engine.pool_metrics();
+    println!(
+        "estimator pool: {} service(s) spawned ({} pool hits) — {} requests / \
+         {} configs in {} batches (mean fill {:.1}, max {}), {:.0} configs/s",
+        engine.pool_stats().spawned,
+        engine.pool_stats().hits,
+        snap.requests,
+        snap.configs,
+        snap.batches,
+        snap.mean_batch_fill(),
+        snap.max_batch_fill,
+        snap.configs_per_sec(elapsed)
+    );
+    let cache = engine.cache_stats();
+    println!(
+        "dataset cache: {} entries, {} hits, {} misses; characterizations: {}; \
+         store hits: {}",
+        cache.entries, cache.hits, cache.misses, cache.characterized, cache.store_hits
+    );
+    println!("event log: {}", queue.dir().join(LOG_FILE).display());
+    if summary.failed > 0 {
+        return Err(Error::Config(format!(
+            "{} job(s) failed — see {}/failed/",
+            summary.failed,
+            queue.dir().display()
+        )));
+    }
+    Ok(())
 }
 
 fn parse_distance(s: &str) -> Result<DistanceKind> {
@@ -412,11 +586,13 @@ fn cmd_serve(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     });
     let elapsed = started.elapsed();
     let snap = svc.metrics().snapshot();
+    // configs_per_sec clamps the zero-request / instant-run case to 0.0
+    // instead of printing `NaN configs/s`.
     println!(
         "{} requests / {} configs in {elapsed:.2?} — {:.0} configs/s",
         snap.requests,
         snap.configs,
-        snap.configs as f64 / elapsed.as_secs_f64()
+        snap.configs_per_sec(elapsed)
     );
     println!(
         "{} backend batches, mean fill {:.1}, max fill {}, backend busy {:.1} ms",

@@ -1,0 +1,44 @@
+//! Serve-mode DSE: queued jobs against one resident engine.
+//!
+//! Every `repro dse` invocation used to be a one-shot process — pay
+//! characterization, forest training, and estimator spawning, answer one
+//! question, exit. This subsystem turns the binary into the serving-shaped
+//! system the north star asks for (and autoAx/AxOSyn frame operator DSE
+//! as): a long-running `repro serve-dse` drains a queue of job specs
+//! against one resident [`EngineContext`](crate::engine::EngineContext),
+//! so characterized datasets, trained ConSS pipelines, and spawned
+//! estimator services amortize across every request — heterogeneous ones
+//! included, via the engine's keyed estimator pool.
+//!
+//! Three pieces:
+//!
+//! * [`spec`] — the [`JobSpec`]/[`JobResult`] schema: hand-rolled JSON
+//!   (the `util::json` idiom; no serde in the hermetic build) describing
+//!   one job (operator, constraint factors, ConSS seed selection, GA
+//!   overrides) and its per-factor hypervolume outcomes.
+//! * [`queue`] — the file-spool [`JobQueue`] under
+//!   `<jobs_dir>/{pending,running,done,failed}/`: `repro submit` drops
+//!   specs into `pending/`, workers *claim* by atomic rename into
+//!   `running/` (the portable cross-process test-and-set), results land
+//!   in `done/`, broken specs are quarantined in `failed/` with the error
+//!   recorded next to them.
+//! * [`runner`] — the [`JobRunner`]: a bounded pool of scoped worker
+//!   threads executing claimed jobs concurrently, sharing one per-operator
+//!   [`DsePrepared`](crate::engine::DsePrepared) pool on top of the
+//!   engine's dataset cache and estimator pool, and appending every
+//!   lifecycle event to `server.log.jsonl`. `--drain` runs the queue to
+//!   empty and exits (the CI-testable mode); watch mode polls `pending/`
+//!   forever.
+//!
+//! Results are bit-identical to direct [`DseJob`](crate::engine::DseJob)
+//! runs: a job spec resolves to the same prepared state and the same
+//! deterministic searches, so queueing changes *when* work happens, never
+//! *what* it computes.
+
+pub mod queue;
+pub mod runner;
+pub mod spec;
+
+pub use queue::{ClaimedJob, JobQueue, QueueCounts};
+pub use runner::{JobRunner, ServeOptions, ServeSummary, LOG_FILE};
+pub use spec::{FactorResult, JobResult, JobSpec};

@@ -1,0 +1,352 @@
+//! [`JobQueue`] — the file-spool job queue.
+//!
+//! Layout under the configured jobs directory (`artifacts/jobs` by
+//! default):
+//!
+//! ```text
+//! jobs/
+//!   pending/<id>.json          submitted specs, claimed oldest-id first
+//!   running/<id>.json          specs currently executing (crash evidence)
+//!   done/<id>.json             JobResult per completed job
+//!   failed/<id>.json           quarantined spec of a failed job
+//!   failed/<id>.error.json     {"id", "error"} recorded next to it
+//!   server.log.jsonl           append-only lifecycle event stream
+//! ```
+//!
+//! Claiming is an atomic `rename(pending/x, running/x)`: the filesystem is
+//! the arbiter, so any number of workers — across threads *and* processes
+//! — can race on one queue and every spec is claimed exactly once (the
+//! rename loser sees `NotFound` and moves to the next file). Submission is
+//! the same temp-write + rename discipline the dataset store uses, so a
+//! watcher never observes a half-written spec.
+
+use super::spec::{JobResult, JobSpec};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-local uniquifier for submit temp files: two threads racing on
+/// one id must not share a temp path (the PID alone can't tell them
+/// apart).
+static SUBMIT_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Spool subdirectories, in lifecycle order.
+pub const QUEUE_SUBDIRS: [&str; 4] = ["pending", "running", "done", "failed"];
+
+/// A claimed job: its queue id and the spec's `running/` path.
+#[derive(Debug, Clone)]
+pub struct ClaimedJob {
+    pub id: String,
+    pub path: PathBuf,
+}
+
+/// Point-in-time spool census (`pending` excludes in-flight temp files,
+/// `failed` excludes the `.error.json` records).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueCounts {
+    pub pending: usize,
+    pub running: usize,
+    pub done: usize,
+    pub failed: usize,
+}
+
+/// File-spool queue rooted at one directory (see module docs).
+pub struct JobQueue {
+    dir: PathBuf,
+}
+
+impl JobQueue {
+    /// Open (creating the spool layout if needed).
+    pub fn open(dir: PathBuf) -> Result<JobQueue> {
+        for sub in QUEUE_SUBDIRS {
+            std::fs::create_dir_all(dir.join(sub))?;
+        }
+        Ok(JobQueue { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn sub(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    fn spec_path(&self, state: &str, id: &str) -> PathBuf {
+        self.sub(state).join(format!("{id}.json"))
+    }
+
+    /// Validate and enqueue `spec` into `pending/`. The id must be new to
+    /// the whole spool — a duplicate in any lifecycle state is rejected so
+    /// results are never silently overwritten. The spec is written to a
+    /// submitter-unique temp file and *linked* (not renamed) into place:
+    /// `hard_link` refuses an existing destination, so two processes
+    /// racing on one id get exactly one winner — the loser errors instead
+    /// of silently replacing the winner's spec.
+    pub fn submit(&self, spec: &JobSpec) -> Result<PathBuf> {
+        spec.validate()?;
+        let duplicate = |state: &str| {
+            Error::Config(format!(
+                "job id `{}` already present in {state}/ — pick a fresh id",
+                spec.id
+            ))
+        };
+        for state in QUEUE_SUBDIRS {
+            if self.spec_path(state, &spec.id).exists() {
+                return Err(duplicate(state));
+            }
+        }
+        let dest = self.spec_path("pending", &spec.id);
+        let seq = SUBMIT_SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp = self
+            .sub("pending")
+            .join(format!(".{}.{}-{seq}.tmp", spec.id, std::process::id()));
+        std::fs::write(&tmp, spec.to_json().to_string())?;
+        let linked = std::fs::hard_link(&tmp, &dest);
+        let _ = std::fs::remove_file(&tmp);
+        match linked {
+            Ok(()) => Ok(dest),
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                Err(duplicate("pending"))
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Sorted ids of the real spec files in one spool state (temp files
+    /// and `.error.json` records excluded).
+    fn ids_in(&self, state: &str) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(self.sub(state))? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy().into_owned();
+            if name.starts_with('.') || name.ends_with(".error.json") {
+                continue;
+            }
+            if let Some(stem) = name.strip_suffix(".json") {
+                out.push(stem.to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Claim the oldest pending job (lexicographic id order) by renaming
+    /// its spec into `running/`. `Ok(None)` when the queue is empty; a
+    /// concurrently-claimed file is skipped, not an error.
+    pub fn claim(&self) -> Result<Option<ClaimedJob>> {
+        for id in self.ids_in("pending")? {
+            let from = self.spec_path("pending", &id);
+            let to = self.spec_path("running", &id);
+            match std::fs::rename(&from, &to) {
+                Ok(()) => return Ok(Some(ClaimedJob { id, path: to })),
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(None)
+    }
+
+    /// Record a completed job: result written to `done/<id>.json` (temp +
+    /// rename), the consumed spec removed from `running/`.
+    pub fn complete(&self, id: &str, result: &JobResult) -> Result<PathBuf> {
+        let dest = self.spec_path("done", id);
+        let tmp = self.sub("done").join(format!(".{id}.tmp"));
+        std::fs::write(&tmp, result.to_json().to_string())?;
+        std::fs::rename(&tmp, &dest)?;
+        // The consumed spec; a missing file (crash replay) is fine.
+        let _ = std::fs::remove_file(self.spec_path("running", id));
+        Ok(dest)
+    }
+
+    /// Quarantine a failed job: the spec moves `running/` → `failed/` and
+    /// the error is recorded next to it as `failed/<id>.error.json`.
+    pub fn fail(&self, id: &str, error: &str) -> Result<PathBuf> {
+        let spec_dest = self.spec_path("failed", id);
+        // The spec may be gone (e.g. it never parsed and was consumed by a
+        // crash); the error record is the part that must land.
+        let _ = std::fs::rename(self.spec_path("running", id), &spec_dest);
+        let record = Json::obj(vec![
+            ("id", Json::Str(id.to_string())),
+            ("error", Json::Str(error.to_string())),
+        ]);
+        let dest = self.sub("failed").join(format!("{id}.error.json"));
+        let tmp = self.sub("failed").join(format!(".{id}.error.tmp"));
+        std::fs::write(&tmp, record.to_string())?;
+        std::fs::rename(&tmp, &dest)?;
+        Ok(dest)
+    }
+
+    /// Parse the recorded result of a completed job.
+    pub fn result(&self, id: &str) -> Result<JobResult> {
+        JobResult::parse(&std::fs::read_to_string(self.spec_path("done", id))?)
+    }
+
+    /// The recorded error message of a failed job.
+    pub fn error(&self, id: &str) -> Result<String> {
+        let path = self.sub("failed").join(format!("{id}.error.json"));
+        let v = Json::parse(&std::fs::read_to_string(&path)?)?;
+        v.get("error")
+            .and_then(Json::as_str)
+            .map(String::from)
+            .ok_or_else(|| Error::Dataset(format!("{}: no error field", path.display())))
+    }
+
+    /// Sorted ids currently in `done/`.
+    pub fn done_ids(&self) -> Result<Vec<String>> {
+        self.ids_in("done")
+    }
+
+    /// Sorted ids currently in `failed/`.
+    pub fn failed_ids(&self) -> Result<Vec<String>> {
+        self.ids_in("failed")
+    }
+
+    pub fn counts(&self) -> Result<QueueCounts> {
+        Ok(QueueCounts {
+            pending: self.ids_in("pending")?.len(),
+            running: self.ids_in("running")?.len(),
+            done: self.ids_in("done")?.len(),
+            failed: self.ids_in("failed")?.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    fn queue() -> (TempDir, JobQueue) {
+        let dir = TempDir::new().unwrap();
+        let q = JobQueue::open(dir.path().join("jobs")).unwrap();
+        (dir, q)
+    }
+
+    #[test]
+    fn spool_layout_created_on_open() {
+        let (_dir, q) = queue();
+        for sub in QUEUE_SUBDIRS {
+            assert!(q.dir().join(sub).is_dir());
+        }
+        assert_eq!(
+            q.counts().unwrap(),
+            QueueCounts { pending: 0, running: 0, done: 0, failed: 0 }
+        );
+        assert!(q.claim().unwrap().is_none());
+    }
+
+    #[test]
+    fn submit_claim_order_and_duplicate_rejection() {
+        let (_dir, q) = queue();
+        q.submit(&JobSpec::new("b", vec![0.5])).unwrap();
+        q.submit(&JobSpec::new("a", vec![0.7])).unwrap();
+        assert_eq!(q.counts().unwrap().pending, 2);
+        assert!(q.submit(&JobSpec::new("a", vec![0.5])).is_err(), "duplicate id");
+        assert!(q.submit(&JobSpec::new("", vec![0.5])).is_err(), "invalid spec");
+
+        let first = q.claim().unwrap().unwrap();
+        assert_eq!(first.id, "a", "oldest id first");
+        assert!(first.path.ends_with("running/a.json"));
+        let parsed = JobSpec::parse(&std::fs::read_to_string(&first.path).unwrap());
+        assert_eq!(parsed.unwrap().factors, vec![0.7]);
+        // A claimed id still blocks resubmission (it lives in running/).
+        assert!(q.submit(&JobSpec::new("a", vec![0.5])).is_err());
+
+        let second = q.claim().unwrap().unwrap();
+        assert_eq!(second.id, "b");
+        assert!(q.claim().unwrap().is_none());
+        assert_eq!(
+            q.counts().unwrap(),
+            QueueCounts { pending: 0, running: 2, done: 0, failed: 0 }
+        );
+        // No temp-file debris survives a submission.
+        let stray: Vec<_> = std::fs::read_dir(q.sub("pending"))
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .collect();
+        assert!(stray.is_empty(), "leftover files: {stray:?}");
+    }
+
+    #[test]
+    fn racing_submissions_of_one_id_get_exactly_one_winner() {
+        let (_dir, q) = queue();
+        let outcomes: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|k| {
+                    let q = &q;
+                    s.spawn(move || {
+                        q.submit(&JobSpec::new("sweep", vec![0.1 * (k + 1) as f64]))
+                            .is_ok()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(
+            outcomes.iter().filter(|&&ok| ok).count(),
+            1,
+            "exactly one submitter wins; the rest see a duplicate error"
+        );
+        assert_eq!(q.counts().unwrap().pending, 1);
+        // The winner's spec is intact (not a torn interleaving).
+        let spec = JobSpec::parse(
+            &std::fs::read_to_string(q.spec_path("pending", "sweep")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec.factors.len(), 1);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn concurrent_claims_hand_out_each_job_exactly_once() {
+        let (_dir, q) = queue();
+        for i in 0..12 {
+            q.submit(&JobSpec::new(format!("j{i:02}"), vec![0.5])).unwrap();
+        }
+        let claimed = std::sync::Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    while let Some(job) = q.claim().unwrap() {
+                        claimed.lock().unwrap().push(job.id);
+                    }
+                });
+            }
+        });
+        let mut ids = claimed.into_inner().unwrap();
+        ids.sort();
+        let want: Vec<String> = (0..12).map(|i| format!("j{i:02}")).collect();
+        assert_eq!(ids, want, "every job claimed exactly once");
+    }
+
+    #[test]
+    fn complete_and_fail_move_specs_through_the_spool() {
+        let (_dir, q) = queue();
+        q.submit(&JobSpec::new("ok", vec![0.5])).unwrap();
+        q.submit(&JobSpec::new("sad", vec![0.5])).unwrap();
+        let ok = q.claim().unwrap().unwrap();
+        let sad = q.claim().unwrap().unwrap();
+
+        let result = JobResult {
+            id: ok.id.clone(),
+            operator: crate::operator::Operator::ADD8,
+            factors: Vec::new(),
+            wall_ms: 1,
+        };
+        q.complete(&ok.id, &result).unwrap();
+        assert_eq!(q.result("ok").unwrap(), result);
+
+        q.fail(&sad.id, "synthetic failure").unwrap();
+        assert_eq!(q.error("sad").unwrap(), "synthetic failure");
+        assert!(q.spec_path("failed", "sad").exists(), "spec quarantined");
+
+        assert_eq!(
+            q.counts().unwrap(),
+            QueueCounts { pending: 0, running: 0, done: 1, failed: 1 }
+        );
+        assert_eq!(q.done_ids().unwrap(), vec!["ok"]);
+        assert_eq!(q.failed_ids().unwrap(), vec!["sad"], "error record not counted");
+    }
+}

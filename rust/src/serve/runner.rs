@@ -1,0 +1,397 @@
+//! [`JobRunner`] — bounded worker pool draining the spool against one
+//! resident engine.
+//!
+//! Workers are scoped threads; each loops claim → execute → record.
+//! Execution funnels through shared state three layers deep, so a queue of
+//! heterogeneous jobs pays every expensive resource at most once per
+//! process:
+//!
+//! * a per-operator [`DsePrepared`] pool (this runner, `KeyedOnce`-guarded
+//!   like the dataset cache) — ConSS matching/forest training once per
+//!   operator, even when two workers race on the same operator's first
+//!   job;
+//! * the engine's dataset cache + persistent store — L_CHAR/H_CHAR
+//!   characterized at most once per process (at most once *ever* with the
+//!   store);
+//! * the engine's keyed estimator pool — one resident
+//!   [`EstimatorService`](crate::coordinator::EstimatorService) per
+//!   operator × backend, so concurrent same-operator jobs coalesce their
+//!   fitness batches and mixed-operator queues never evict each other.
+//!
+//! Every lifecycle event (`start`/`claim`/`done`/`fail`/`stop`) is
+//! appended to `server.log.jsonl` in the queue directory — one JSON object
+//! per line, the observable record CI uploads.
+
+use super::queue::{ClaimedJob, JobQueue};
+use super::spec::{JobResult, JobSpec};
+use crate::engine::{DsePrepared, EngineContext, KeyedOnce};
+use crate::error::Result;
+use crate::operator::Operator;
+use crate::util::json::Json;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// The append-only event stream's filename, inside the queue directory.
+pub const LOG_FILE: &str = "server.log.jsonl";
+
+/// Serve-mode knobs (CLI flags layered over the `[serve]` config section).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Concurrent worker threads.
+    pub workers: usize,
+    /// Stop after this many jobs have been claimed across all workers
+    /// (per [`JobRunner::run`] call — a re-run gets a fresh budget).
+    pub max_jobs: Option<usize>,
+    /// `true`: run the queue to empty, then exit (the CI-testable mode).
+    /// `false`: watch mode — poll `pending/` forever (or until
+    /// `max_jobs`).
+    pub drain: bool,
+    /// Watch-mode poll interval.
+    pub poll: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            workers: 2,
+            max_jobs: None,
+            drain: true,
+            poll: Duration::from_millis(200),
+        }
+    }
+}
+
+/// What one [`JobRunner::run`] call processed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeSummary {
+    pub done: usize,
+    pub failed: usize,
+}
+
+/// The serve-mode executor (see module docs).
+pub struct JobRunner<'a> {
+    ctx: &'a EngineContext,
+    queue: &'a JobQueue,
+    opts: ServeOptions,
+    prepared: KeyedOnce<Operator, DsePrepared>,
+    log: Mutex<std::fs::File>,
+    claimed: AtomicUsize,
+    done: AtomicUsize,
+    failed: AtomicUsize,
+}
+
+impl<'a> JobRunner<'a> {
+    pub fn new(
+        ctx: &'a EngineContext,
+        queue: &'a JobQueue,
+        opts: ServeOptions,
+    ) -> Result<JobRunner<'a>> {
+        let log = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(queue.dir().join(LOG_FILE))?;
+        Ok(JobRunner {
+            ctx,
+            queue,
+            opts,
+            prepared: KeyedOnce::new(),
+            log: Mutex::new(log),
+            claimed: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+        })
+    }
+
+    /// Run the worker pool until the stop condition (`drain` exhaustion or
+    /// `max_jobs`) and report what this call processed. The runner (and
+    /// its prepared pool) survives across calls, so a drain → submit →
+    /// drain sequence re-prepares nothing.
+    pub fn run(&self) -> Result<ServeSummary> {
+        let done0 = self.done.load(Ordering::SeqCst);
+        let failed0 = self.failed.load(Ordering::SeqCst);
+        // The max_jobs budget is per run() call, like the summary (no
+        // workers are live between calls, so a plain reset is safe).
+        self.claimed.store(0, Ordering::SeqCst);
+        let workers = self.opts.workers.max(1);
+        self.log_event("start", &[("workers", Json::Num(workers as f64))]);
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                s.spawn(move || self.worker_loop(w));
+            }
+        });
+        let summary = ServeSummary {
+            done: self.done.load(Ordering::SeqCst) - done0,
+            failed: self.failed.load(Ordering::SeqCst) - failed0,
+        };
+        self.log_event(
+            "stop",
+            &[
+                ("done", Json::Num(summary.done as f64)),
+                ("failed", Json::Num(summary.failed as f64)),
+            ],
+        );
+        Ok(summary)
+    }
+
+    /// One `max_jobs` slot, or `false` when the budget is spent.
+    fn try_reserve_slot(&self) -> bool {
+        match self.opts.max_jobs {
+            None => true,
+            Some(max) => self
+                .claimed
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                    (n < max).then_some(n + 1)
+                })
+                .is_ok(),
+        }
+    }
+
+    fn release_slot(&self) {
+        if self.opts.max_jobs.is_some() {
+            self.claimed.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    fn worker_loop(&self, worker: usize) {
+        loop {
+            if !self.try_reserve_slot() {
+                return; // max_jobs budget spent
+            }
+            match self.queue.claim() {
+                Ok(Some(job)) => self.process(worker, job),
+                Ok(None) => {
+                    self.release_slot();
+                    if self.opts.drain {
+                        return;
+                    }
+                    std::thread::sleep(self.opts.poll);
+                }
+                Err(e) => {
+                    // A queue I/O fault is not attributable to any one
+                    // job; record it and retire the worker.
+                    self.release_slot();
+                    self.log_event(
+                        "claim-error",
+                        &[
+                            ("worker", Json::Num(worker as f64)),
+                            ("error", Json::Str(e.to_string())),
+                        ],
+                    );
+                    return;
+                }
+            }
+        }
+    }
+
+    fn process(&self, worker: usize, job: ClaimedJob) {
+        self.log_event(
+            "claim",
+            &[
+                ("id", Json::Str(job.id.clone())),
+                ("worker", Json::Num(worker as f64)),
+            ],
+        );
+        match self.execute(&job) {
+            Ok(result) => match self.queue.complete(&job.id, &result) {
+                Ok(_) => {
+                    self.done.fetch_add(1, Ordering::SeqCst);
+                    self.log_event(
+                        "done",
+                        &[
+                            ("id", Json::Str(job.id.clone())),
+                            ("worker", Json::Num(worker as f64)),
+                            ("wall_ms", Json::Num(result.wall_ms as f64)),
+                            ("operator", Json::Str(result.operator.name())),
+                        ],
+                    );
+                }
+                Err(e) => self.record_failure(worker, &job.id, &e.to_string()),
+            },
+            Err(e) => self.record_failure(worker, &job.id, &e.to_string()),
+        }
+    }
+
+    fn record_failure(&self, worker: usize, id: &str, error: &str) {
+        if let Err(e) = self.queue.fail(id, error) {
+            eprintln!("warning: could not quarantine job {id}: {e}");
+        }
+        self.failed.fetch_add(1, Ordering::SeqCst);
+        self.log_event(
+            "fail",
+            &[
+                ("id", Json::Str(id.to_string())),
+                ("worker", Json::Num(worker as f64)),
+                ("error", Json::Str(error.to_string())),
+            ],
+        );
+    }
+
+    /// Parse and run one claimed spec: resolve the operator, fetch (or
+    /// build) its prepared DSE state, run the factor jobs in order.
+    fn execute(&self, job: &ClaimedJob) -> Result<JobResult> {
+        let mut spec = JobSpec::parse(&std::fs::read_to_string(&job.path)?)?;
+        if spec.id.is_empty() {
+            spec.id = job.id.clone();
+        }
+        spec.validate()?;
+        let op = match spec.operator {
+            Some(op) => op,
+            None => Operator::from_name(&self.ctx.cfg().operator)?,
+        };
+        let prep = self.prepared(op)?;
+        let started = Instant::now();
+        let mut outcomes = Vec::with_capacity(spec.factors.len());
+        for dse_job in spec.to_jobs() {
+            outcomes.push(prep.run_job(&dse_job)?);
+        }
+        Ok(JobResult::from_outcomes(&job.id, op, &outcomes, started.elapsed()))
+    }
+
+    /// The shared prepared-DSE state for `op`, built at most once per
+    /// runner (per-key in-flight guard: two workers racing on one
+    /// operator's first job train one pipeline; first jobs of *different*
+    /// operators prepare in parallel).
+    fn prepared(&self, op: Operator) -> Result<Arc<DsePrepared>> {
+        let (prep, _) = self
+            .prepared
+            .get_or_try_compute(op, || Ok(Arc::new(self.ctx.prepare_dse_for(op)?)))?;
+        Ok(prep)
+    }
+
+    /// Append one event line to `server.log.jsonl` (best-effort: logging
+    /// must never fail a job).
+    fn log_event(&self, event: &str, fields: &[(&str, Json)]) {
+        let ts = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap_or(Duration::ZERO)
+            .as_millis() as u64;
+        let mut pairs =
+            vec![("ts_ms", Json::Num(ts as f64)), ("event", Json::Str(event.into()))];
+        for (k, v) in fields {
+            pairs.push((*k, v.clone()));
+        }
+        let line = Json::obj(pairs).to_string();
+        if let Ok(mut f) = self.log.lock() {
+            let _ = writeln!(f, "{line}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expcfg::{ConssConfig, ExperimentConfig, GaConfig, SurrogateConfig};
+    use crate::surrogate::EstimatorBackend;
+    use crate::util::tempdir::TempDir;
+
+    /// Small add4 → add8 serve configuration (exhaustive spaces, exact
+    /// table surrogate, tiny GA) — fast enough for unit-level lifecycle
+    /// tests; the mixed-operator integration story lives in
+    /// `rust/tests/serve_jobs.rs`.
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            operator: "add8".into(),
+            surrogate: SurrogateConfig {
+                backend: EstimatorBackend::Table,
+                gbt_stages: None,
+            },
+            conss: ConssConfig {
+                forest_trees: Some(4),
+                noise_bits: 2,
+                ..Default::default()
+            },
+            ga: GaConfig { pop_size: 10, generations: 3, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn drain_mode_processes_the_queue_and_exits() {
+        let dir = TempDir::new().unwrap();
+        let queue = JobQueue::open(dir.path().join("jobs")).unwrap();
+        queue.submit(&JobSpec::new("a", vec![0.6])).unwrap();
+        queue.submit(&JobSpec::new("b", vec![0.9])).unwrap();
+        let ctx = EngineContext::new(tiny_cfg());
+        let runner =
+            JobRunner::new(&ctx, &queue, ServeOptions::default()).unwrap();
+        let summary = runner.run().unwrap();
+        assert_eq!(summary, ServeSummary { done: 2, failed: 0 });
+        assert_eq!(queue.done_ids().unwrap(), vec!["a", "b"]);
+        assert_eq!(queue.counts().unwrap().pending, 0);
+        assert_eq!(queue.counts().unwrap().running, 0);
+        let log = std::fs::read_to_string(queue.dir().join(LOG_FILE)).unwrap();
+        let events: Vec<Json> =
+            log.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert!(events.iter().any(|e| e.get("event").and_then(Json::as_str)
+            == Some("start")));
+        assert_eq!(
+            events
+                .iter()
+                .filter(|e| e.get("event").and_then(Json::as_str) == Some("done"))
+                .count(),
+            2
+        );
+
+        // Draining again is a no-op but keeps the prepared pool warm.
+        queue.submit(&JobSpec::new("c", vec![0.4])).unwrap();
+        let again = runner.run().unwrap();
+        assert_eq!(again, ServeSummary { done: 1, failed: 0 });
+        let s = ctx.cache_stats();
+        assert_eq!(s.characterized, 2, "datasets characterized once across runs");
+        assert_eq!(ctx.pool_stats().spawned, 1, "one estimator across runs");
+    }
+
+    #[test]
+    fn unparseable_spec_is_quarantined_with_the_error() {
+        let dir = TempDir::new().unwrap();
+        let queue = JobQueue::open(dir.path().join("jobs")).unwrap();
+        // Bypass submit() validation by dropping a raw file in pending/,
+        // as a foreign producer might.
+        std::fs::write(
+            queue.dir().join("pending").join("broken.json"),
+            r#"{"factors":[2.5]}"#,
+        )
+        .unwrap();
+        let ctx = EngineContext::new(tiny_cfg());
+        let runner =
+            JobRunner::new(&ctx, &queue, ServeOptions::default()).unwrap();
+        let summary = runner.run().unwrap();
+        assert_eq!(summary, ServeSummary { done: 0, failed: 1 });
+        assert_eq!(queue.failed_ids().unwrap(), vec!["broken"]);
+        let err = queue.error("broken").unwrap();
+        assert!(err.contains("outside (0, 1]"), "recorded error: {err}");
+        // The engine never paid for anything.
+        assert_eq!(ctx.cache_stats().characterized, 0);
+        assert_eq!(ctx.pool_stats().spawned, 0);
+    }
+
+    #[test]
+    fn max_jobs_caps_a_watch_mode_run() {
+        let dir = TempDir::new().unwrap();
+        let queue = JobQueue::open(dir.path().join("jobs")).unwrap();
+        for i in 0..3 {
+            queue.submit(&JobSpec::new(format!("j{i}"), vec![0.5])).unwrap();
+        }
+        let ctx = EngineContext::new(tiny_cfg());
+        let opts = ServeOptions {
+            drain: false,
+            max_jobs: Some(2),
+            workers: 2,
+            poll: Duration::from_millis(10),
+        };
+        let runner = JobRunner::new(&ctx, &queue, opts).unwrap();
+        let summary = runner.run().unwrap();
+        assert_eq!(summary.done, 2, "watch mode stops at max_jobs");
+        assert_eq!(queue.counts().unwrap().pending, 1);
+
+        // The budget is per run() call: topping the queue back up to the
+        // budget size, a second run on the same runner claims a fresh
+        // allowance (a stale counter would return done: 0 immediately).
+        queue.submit(&JobSpec::new("j3", vec![0.5])).unwrap();
+        let second = runner.run().unwrap();
+        assert_eq!(second.done, 2, "fresh max_jobs budget per run");
+        assert_eq!(queue.counts().unwrap().pending, 0);
+    }
+}

@@ -1,0 +1,468 @@
+//! [`JobSpec`] / [`JobResult`] — the serve-mode wire schema.
+//!
+//! Hand-rolled JSON over [`util::json`](crate::util::json), matching the
+//! rest of the repo (no serde in the hermetic build). A spec describes one
+//! queued job: which operator to search, which constraint scaling factors,
+//! how ConSS seeds are selected, and optional GA overrides — exactly the
+//! knobs of [`DseJob`], so a spec resolves losslessly to the jobs a direct
+//! library caller would run. Unknown keys are rejected (the same typo
+//! protection as `expcfg`).
+
+use crate::conss::SeedSelection;
+use crate::engine::{DseJob, DseOutcome};
+use crate::error::{Error, Result};
+use crate::expcfg::GaConfig;
+use crate::operator::Operator;
+use crate::util::json::Json;
+
+/// One queued DSE job: a factor sweep (one [`DseJob`] per factor) over one
+/// operator, with optional seed-selection / GA overrides.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Queue identity; becomes the spool filename (`<id>.json`), so it is
+    /// restricted to filesystem-safe characters.
+    pub id: String,
+    /// Operator under DSE; `None` = the server configuration's operator.
+    pub operator: Option<Operator>,
+    /// Constraint scaling factors, one sub-search each (paper §V-D).
+    pub factors: Vec<f64>,
+    /// Which L designs seed the supersampler (ablation knob).
+    pub seed_selection: SeedSelection,
+    /// GA overrides; `None` = the server configuration's `[ga]` section.
+    pub ga: Option<GaConfig>,
+    /// GA RNG seed override; `None` = the server configuration's seed.
+    pub ga_seed: Option<u64>,
+}
+
+impl JobSpec {
+    pub fn new(id: impl Into<String>, factors: Vec<f64>) -> JobSpec {
+        JobSpec {
+            id: id.into(),
+            operator: None,
+            factors,
+            seed_selection: SeedSelection::All,
+            ga: None,
+            ga_seed: None,
+        }
+    }
+
+    /// Spool-filename and search validity: a usable id, at least one
+    /// factor, every factor in (0, 1] (the same constraint scaling domain
+    /// `expcfg` enforces), a sane GA override.
+    pub fn validate(&self) -> Result<()> {
+        if self.id.is_empty() {
+            return Err(Error::Config("job spec needs a non-empty id".into()));
+        }
+        if !self
+            .id
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+        {
+            return Err(Error::Config(format!(
+                "job id `{}` has characters outside [A-Za-z0-9._-]",
+                self.id
+            )));
+        }
+        // Ids whose spool filename the queue itself hides (dot-prefixed
+        // temp files) or claims ("<id>.error.json" records) would submit
+        // fine and then never be claimable — reject them up front.
+        if self.id.starts_with('.') || self.id.ends_with(".error") {
+            return Err(Error::Config(format!(
+                "job id `{}` collides with spool-internal names \
+                 (no leading `.`, no trailing `.error`)",
+                self.id
+            )));
+        }
+        if self.factors.is_empty() {
+            return Err(Error::Config(format!(
+                "job `{}` needs at least one scaling factor",
+                self.id
+            )));
+        }
+        for &f in &self.factors {
+            if !(0.0 < f && f <= 1.0) {
+                return Err(Error::Config(format!(
+                    "job `{}`: scaling factor {f} outside (0, 1]",
+                    self.id
+                )));
+            }
+        }
+        if let Some(ga) = &self.ga {
+            if ga.pop_size < 2 {
+                return Err(Error::Config(format!(
+                    "job `{}`: ga.pop_size must be >= 2",
+                    self.id
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The [`DseJob`]s this spec resolves to, one per factor in order.
+    pub fn to_jobs(&self) -> Vec<DseJob> {
+        self.factors
+            .iter()
+            .map(|&f| {
+                let mut job = DseJob::new(f).seed_selection(self.seed_selection);
+                if let Some(ga) = &self.ga {
+                    job = job.ga(ga.clone());
+                }
+                if let Some(seed) = self.ga_seed {
+                    job = job.ga_seed(seed);
+                }
+                job
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("id", Json::Str(self.id.clone())),
+            ("factors", Json::arr_f64(&self.factors)),
+            ("seed_selection", Json::Str(self.seed_selection.name().into())),
+        ];
+        if let Some(op) = self.operator {
+            pairs.push(("operator", Json::Str(op.name())));
+        }
+        if let Some(ga) = &self.ga {
+            let mut g = vec![
+                ("pop_size", Json::Num(ga.pop_size as f64)),
+                ("generations", Json::Num(ga.generations as f64)),
+                ("crossover_prob", Json::Num(ga.crossover_prob)),
+                ("tournament_size", Json::Num(ga.tournament_size as f64)),
+            ];
+            if let Some(m) = ga.mutation_prob {
+                g.push(("mutation_prob", Json::Num(m)));
+            }
+            pairs.push(("ga", Json::obj(g)));
+        }
+        if let Some(seed) = self.ga_seed {
+            pairs.push(("ga_seed", Json::Num(seed as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse and validate a spec. `id` may be omitted in the JSON (the
+    /// submit path fills it from the spool filename before validation).
+    pub fn from_json(v: &Json) -> Result<JobSpec> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| Error::Config("job spec must be a JSON object".into()))?;
+        let bad = |key: &str, want: &str| {
+            Error::Config(format!("job spec key `{key}` must be {want}"))
+        };
+        let mut spec = JobSpec::new("", Vec::new());
+        for (key, value) in obj {
+            match key.as_str() {
+                "id" => {
+                    spec.id =
+                        value.as_str().ok_or_else(|| bad(key, "a string"))?.to_string()
+                }
+                "operator" => {
+                    let name = value.as_str().ok_or_else(|| bad(key, "a string"))?;
+                    spec.operator = Some(Operator::from_name(name)?);
+                }
+                "factors" => {
+                    spec.factors = value
+                        .as_arr()
+                        .and_then(|a| {
+                            a.iter().map(Json::as_f64).collect::<Option<Vec<f64>>>()
+                        })
+                        .ok_or_else(|| bad(key, "a number array"))?;
+                }
+                "seed_selection" => {
+                    let name = value.as_str().ok_or_else(|| bad(key, "a string"))?;
+                    spec.seed_selection = SeedSelection::from_name(name).ok_or_else(
+                        || bad(key, "all|pareto-only|constraint-filtered"),
+                    )?;
+                }
+                "ga" => spec.ga = Some(parse_ga(value)?),
+                "ga_seed" => {
+                    spec.ga_seed =
+                        Some(value.as_u64().ok_or_else(|| {
+                            bad(key, "a non-negative integer")
+                        })?)
+                }
+                other => {
+                    return Err(Error::Config(format!("unknown job spec key `{other}`")))
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// [`JobSpec::from_json`] over raw text.
+    pub fn parse(text: &str) -> Result<JobSpec> {
+        JobSpec::from_json(&Json::parse(text)?)
+    }
+}
+
+/// Parse a spec's `ga` override: the crate-default [`GaConfig`] with the
+/// given fields replaced (a spec overrides knobs relative to the paper
+/// defaults, not the server's — the server config is reachable by simply
+/// omitting the section).
+fn parse_ga(v: &Json) -> Result<GaConfig> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| Error::Config("job spec key `ga` must be an object".into()))?;
+    let bad = |key: &str, want: &str| {
+        Error::Config(format!("job spec key `ga.{key}` must be {want}"))
+    };
+    let mut ga = GaConfig::default();
+    for (key, value) in obj {
+        match key.as_str() {
+            "pop_size" => {
+                ga.pop_size = value.as_usize().ok_or_else(|| bad(key, "an integer"))?
+            }
+            "generations" => {
+                ga.generations =
+                    value.as_usize().ok_or_else(|| bad(key, "an integer"))? as u32
+            }
+            "crossover_prob" => {
+                ga.crossover_prob = value.as_f64().ok_or_else(|| bad(key, "a number"))?
+            }
+            "mutation_prob" => {
+                ga.mutation_prob =
+                    Some(value.as_f64().ok_or_else(|| bad(key, "a number"))?)
+            }
+            "tournament_size" => {
+                ga.tournament_size =
+                    value.as_usize().ok_or_else(|| bad(key, "an integer"))?
+            }
+            other => {
+                return Err(Error::Config(format!("unknown job spec key `ga.{other}`")))
+            }
+        }
+    }
+    Ok(ga)
+}
+
+/// One factor's outcome inside a [`JobResult`] — the paper's four-method
+/// comparison (TRAIN / GA / ConSS / ConSS+GA) reduced to hypervolumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FactorResult {
+    pub factor: f64,
+    pub hv_train: f64,
+    pub hv_ga: f64,
+    pub hv_conss: f64,
+    pub hv_conss_ga: f64,
+    pub evaluations_ga: usize,
+    pub evaluations_conss_ga: usize,
+    pub pool_size: usize,
+    pub n_seeds: usize,
+}
+
+/// What `done/<id>.json` records for a completed job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobResult {
+    pub id: String,
+    pub operator: Operator,
+    pub factors: Vec<FactorResult>,
+    pub wall_ms: u64,
+}
+
+impl JobResult {
+    pub fn from_outcomes(
+        id: &str,
+        operator: Operator,
+        outcomes: &[DseOutcome],
+        wall: std::time::Duration,
+    ) -> JobResult {
+        JobResult {
+            id: id.to_string(),
+            operator,
+            factors: outcomes
+                .iter()
+                .map(|o| FactorResult {
+                    factor: o.factor,
+                    hv_train: o.hv_train,
+                    hv_ga: o.ga.final_hypervolume(),
+                    hv_conss: o.hv_conss,
+                    hv_conss_ga: o.conss_ga.final_hypervolume(),
+                    evaluations_ga: o.ga.evaluations,
+                    evaluations_conss_ga: o.conss_ga.evaluations,
+                    pool_size: o.conss_pool.configs.len(),
+                    n_seeds: o.conss_pool.n_seeds,
+                })
+                .collect(),
+            wall_ms: wall.as_millis() as u64,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("operator", Json::Str(self.operator.name())),
+            ("wall_ms", Json::Num(self.wall_ms as f64)),
+            (
+                "factors",
+                Json::Arr(
+                    self.factors
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("factor", Json::Num(f.factor)),
+                                ("hv_train", Json::Num(f.hv_train)),
+                                ("hv_ga", Json::Num(f.hv_ga)),
+                                ("hv_conss", Json::Num(f.hv_conss)),
+                                ("hv_conss_ga", Json::Num(f.hv_conss_ga)),
+                                (
+                                    "evaluations_ga",
+                                    Json::Num(f.evaluations_ga as f64),
+                                ),
+                                (
+                                    "evaluations_conss_ga",
+                                    Json::Num(f.evaluations_conss_ga as f64),
+                                ),
+                                ("pool_size", Json::Num(f.pool_size as f64)),
+                                ("n_seeds", Json::Num(f.n_seeds as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobResult> {
+        let corrupt = |what: &str| Error::Dataset(format!("job result: {what}"));
+        let id = v
+            .get("id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| corrupt("missing id"))?
+            .to_string();
+        let operator = Operator::from_name(
+            v.get("operator")
+                .and_then(Json::as_str)
+                .ok_or_else(|| corrupt("missing operator"))?,
+        )?;
+        let wall_ms = v
+            .get("wall_ms")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| corrupt("missing wall_ms"))?;
+        let arr = v
+            .get("factors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| corrupt("missing factors array"))?;
+        let mut factors = Vec::with_capacity(arr.len());
+        for f in arr {
+            let num = |key: &str| {
+                f.get(key)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| corrupt(&format!("factor entry missing `{key}`")))
+            };
+            let count = |key: &str| {
+                f.get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| corrupt(&format!("factor entry missing `{key}`")))
+            };
+            factors.push(FactorResult {
+                factor: num("factor")?,
+                hv_train: num("hv_train")?,
+                hv_ga: num("hv_ga")?,
+                hv_conss: num("hv_conss")?,
+                hv_conss_ga: num("hv_conss_ga")?,
+                evaluations_ga: count("evaluations_ga")?,
+                evaluations_conss_ga: count("evaluations_conss_ga")?,
+                pool_size: count("pool_size")?,
+                n_seeds: count("n_seeds")?,
+            });
+        }
+        Ok(JobResult { id, operator, factors, wall_ms })
+    }
+
+    /// [`JobResult::from_json`] over raw text.
+    pub fn parse(text: &str) -> Result<JobResult> {
+        JobResult::from_json(&Json::parse(text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrip_with_all_fields() {
+        let spec = JobSpec {
+            id: "sweep-1".into(),
+            operator: Some(Operator::MUL8),
+            factors: vec![0.2, 0.5],
+            seed_selection: SeedSelection::ParetoOnly,
+            ga: Some(GaConfig { pop_size: 8, generations: 3, ..Default::default() }),
+            ga_seed: Some(11),
+        };
+        spec.validate().unwrap();
+        let back = JobSpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back.id, "sweep-1");
+        assert_eq!(back.operator, Some(Operator::MUL8));
+        assert_eq!(back.factors, vec![0.2, 0.5]);
+        assert_eq!(back.seed_selection, SeedSelection::ParetoOnly);
+        assert_eq!(back.ga.as_ref().unwrap().pop_size, 8);
+        assert_eq!(back.ga.as_ref().unwrap().generations, 3);
+        assert_eq!(back.ga_seed, Some(11));
+        let jobs = back.to_jobs();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].factor, 0.2);
+        assert_eq!(jobs[1].seed_selection, SeedSelection::ParetoOnly);
+        assert_eq!(jobs[1].ga_seed, Some(11));
+    }
+
+    #[test]
+    fn minimal_spec_defaults() {
+        let spec = JobSpec::parse(r#"{"factors":[0.5]}"#).unwrap();
+        assert!(spec.id.is_empty(), "id comes from the spool filename");
+        assert_eq!(spec.operator, None);
+        assert_eq!(spec.seed_selection, SeedSelection::All);
+        assert!(spec.ga.is_none());
+        // ...but an id-less spec is not submittable as-is.
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn spec_validation_rejects_bad_inputs() {
+        assert!(JobSpec::new("a/b", vec![0.5]).validate().is_err(), "unsafe id");
+        assert!(JobSpec::new("j", vec![]).validate().is_err(), "no factors");
+        assert!(JobSpec::new("j", vec![1.5]).validate().is_err(), "factor > 1");
+        assert!(JobSpec::new("j", vec![0.0]).validate().is_err(), "factor = 0");
+        let mut bad_ga = JobSpec::new("j", vec![0.5]);
+        bad_ga.ga = Some(GaConfig { pop_size: 1, ..Default::default() });
+        assert!(bad_ga.validate().is_err(), "degenerate ga");
+        // Spool-internal shapes: hidden by ids_in (leading dot) or
+        // claimed by the error records (trailing `.error`).
+        assert!(JobSpec::new(".hidden", vec![0.5]).validate().is_err());
+        assert!(JobSpec::new("x.error", vec![0.5]).validate().is_err());
+        JobSpec::new("ok-1_2.x", vec![0.5, 1.0]).validate().unwrap();
+    }
+
+    #[test]
+    fn spec_rejects_unknown_keys_and_operators() {
+        assert!(JobSpec::parse(r#"{"factrs":[0.5]}"#).is_err());
+        assert!(JobSpec::parse(r#"{"factors":[0.5],"ga":{"popsize":4}}"#).is_err());
+        assert!(JobSpec::parse(r#"{"factors":[0.5],"operator":"div9"}"#).is_err());
+        assert!(JobSpec::parse(r#"{"factors":[0.5],"seed_selection":"best"}"#).is_err());
+        assert!(JobSpec::parse("[1,2]").is_err(), "spec must be an object");
+    }
+
+    #[test]
+    fn result_roundtrip() {
+        let r = JobResult {
+            id: "j1".into(),
+            operator: Operator::ADD12,
+            factors: vec![FactorResult {
+                factor: 0.75,
+                hv_train: 0.123456789,
+                hv_ga: 0.2,
+                hv_conss: 0.3,
+                hv_conss_ga: 0.4000000001,
+                evaluations_ga: 120,
+                evaluations_conss_ga: 130,
+                pool_size: 512,
+                n_seeds: 40,
+            }],
+            wall_ms: 42,
+        };
+        let back = JobResult::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(back, r, "floats round-trip exactly (shortest-repr writer)");
+        assert!(JobResult::parse(r#"{"id":"x"}"#).is_err());
+    }
+}

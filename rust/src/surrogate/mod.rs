@@ -31,8 +31,9 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 
-/// Backend selector used by experiment configs / CLI.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Backend selector used by experiment configs / CLI. `Hash` because the
+/// engine's estimator pool keys resident services by operator × backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum EstimatorBackend {
     Table,
     Gbt,

@@ -1,0 +1,240 @@
+//! Serve-subsystem integration tests: the full job lifecycle (submit →
+//! pending → running → done/failed), bit-identical hypervolumes for a
+//! mixed add12+mul8 queue vs the equivalent direct `DseJob` runs, and the
+//! exactly-once resource story — each dataset characterized and each
+//! estimator backend spawned at most once per process, asserted via
+//! `CacheStats` + `PoolStats` while concurrent mixed-operator jobs drain.
+
+use repro::conss::SeedSelection;
+use repro::engine::{DseJob, EngineContext};
+use repro::expcfg::{ConssConfig, ExperimentConfig, GaConfig, SurrogateConfig};
+use repro::operator::Operator;
+use repro::serve::{
+    JobQueue, JobRunner, JobSpec, ServeOptions, ServeSummary, LOG_FILE,
+};
+use repro::surrogate::EstimatorBackend;
+use repro::util::json::Json;
+use repro::util::tempdir::TempDir;
+use std::path::Path;
+
+/// Write a tiny persisted add12 input sample (`AXIN` v1, 192 pairs) so the
+/// 12-bit adder characterizes over a small deterministic operand set
+/// instead of the 65,536-pair hermetic fallback — the mixed-operator tests
+/// stay fast while exercising the persisted-inputs path.
+fn write_add12_inputs(artifacts_dir: &Path) {
+    let n: u32 = 192;
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"AXIN");
+    buf.extend_from_slice(&1u32.to_le_bytes());
+    buf.extend_from_slice(&n.to_le_bytes());
+    for k in 0..n {
+        buf.extend_from_slice(&((k.wrapping_mul(131)) % 4096).to_le_bytes());
+    }
+    for k in 0..n {
+        let b = (k.wrapping_mul(197).wrapping_add(77)) % 4096;
+        buf.extend_from_slice(&b.to_le_bytes());
+    }
+    std::fs::create_dir_all(artifacts_dir).unwrap();
+    std::fs::write(artifacts_dir.join("inputs_add12.bin"), buf).unwrap();
+}
+
+/// Heterogeneous-queue configuration: GBT surrogate (total over any
+/// operator, unlike the exact table), tiny forests/GA, a 12-sample mul8
+/// H_CHAR draw.
+fn mixed_cfg(artifacts_dir: &Path) -> ExperimentConfig {
+    ExperimentConfig {
+        operator: "add12".into(),
+        artifacts_dir: artifacts_dir.to_path_buf(),
+        train_samples: 12,
+        surrogate: SurrogateConfig {
+            backend: EstimatorBackend::Gbt,
+            gbt_stages: Some(4),
+        },
+        conss: ConssConfig { forest_trees: Some(3), noise_bits: 2, ..Default::default() },
+        ga: GaConfig { pop_size: 8, generations: 3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Homogeneous fast configuration: exhaustive add8, exact-table surrogate.
+fn add8_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        operator: "add8".into(),
+        surrogate: SurrogateConfig { backend: EstimatorBackend::Table, gbt_stages: None },
+        conss: ConssConfig { forest_trees: Some(4), noise_bits: 2, ..Default::default() },
+        ga: GaConfig { pop_size: 10, generations: 3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn mixed_queue_matches_direct_runs_bit_for_bit_with_exactly_once_resources() {
+    let tmp = TempDir::new().unwrap();
+    let artifacts = tmp.path().join("artifacts");
+    write_add12_inputs(&artifacts);
+    let cfg = mixed_cfg(&artifacts);
+
+    // Direct ground truth: the equivalent library calls on a fresh engine.
+    let direct = EngineContext::new(cfg.clone());
+    let add12_prep = direct.prepare_dse_for(Operator::ADD12).unwrap();
+    let add12_runs =
+        add12_prep.run_many(&[DseJob::new(0.5), DseJob::new(0.8)]).unwrap();
+    let mul8_prep = direct.prepare_dse_for(Operator::MUL8).unwrap();
+    let mul8_all = mul8_prep.run_job(&DseJob::new(0.9)).unwrap();
+    let mul8_pareto = mul8_prep
+        .run_job(&DseJob::new(0.75).seed_selection(SeedSelection::ParetoOnly))
+        .unwrap();
+
+    // Served: the same three workloads as specs through the spool, two
+    // workers draining concurrently against a fresh engine.
+    let queue = JobQueue::open(tmp.path().join("jobs")).unwrap();
+    let mut sweep = JobSpec::new("add12-sweep", vec![0.5, 0.8]);
+    sweep.operator = Some(Operator::ADD12);
+    queue.submit(&sweep).unwrap();
+    let mut all = JobSpec::new("mul8-all", vec![0.9]);
+    all.operator = Some(Operator::MUL8);
+    queue.submit(&all).unwrap();
+    let mut pareto = JobSpec::new("mul8-pareto", vec![0.75]);
+    pareto.operator = Some(Operator::MUL8);
+    pareto.seed_selection = SeedSelection::ParetoOnly;
+    queue.submit(&pareto).unwrap();
+
+    let served = EngineContext::new(cfg);
+    let runner = JobRunner::new(
+        &served,
+        &queue,
+        ServeOptions { workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let summary = runner.run().unwrap();
+    assert_eq!(summary, ServeSummary { done: 3, failed: 0 });
+    assert_eq!(
+        queue.done_ids().unwrap(),
+        vec!["add12-sweep", "mul8-all", "mul8-pareto"]
+    );
+
+    // Recorded hypervolumes are bit-identical to the direct runs (the
+    // JSON writer emits shortest round-tripping float representations).
+    let r = queue.result("add12-sweep").unwrap();
+    assert_eq!(r.operator, Operator::ADD12);
+    assert_eq!(r.factors.len(), 2);
+    for (got, want) in r.factors.iter().zip(&add12_runs) {
+        assert_eq!(got.factor, want.factor);
+        assert_eq!(got.hv_train.to_bits(), want.hv_train.to_bits());
+        assert_eq!(got.hv_conss.to_bits(), want.hv_conss.to_bits());
+        assert_eq!(got.hv_ga.to_bits(), want.ga.final_hypervolume().to_bits());
+        assert_eq!(
+            got.hv_conss_ga.to_bits(),
+            want.conss_ga.final_hypervolume().to_bits()
+        );
+        assert_eq!(got.evaluations_ga, want.ga.evaluations);
+        assert_eq!(got.evaluations_conss_ga, want.conss_ga.evaluations);
+        assert_eq!(got.pool_size, want.conss_pool.configs.len());
+    }
+    let ra = queue.result("mul8-all").unwrap();
+    assert_eq!(
+        ra.factors[0].hv_conss_ga.to_bits(),
+        mul8_all.conss_ga.final_hypervolume().to_bits()
+    );
+    assert_eq!(ra.factors[0].hv_train.to_bits(), mul8_all.hv_train.to_bits());
+    assert!(ra.factors[0].hv_conss_ga > 0.0, "nonzero hypervolume");
+    let rp = queue.result("mul8-pareto").unwrap();
+    assert_eq!(
+        rp.factors[0].hv_conss_ga.to_bits(),
+        mul8_pareto.conss_ga.final_hypervolume().to_bits()
+    );
+
+    // Exactly-once resources on the serving engine: four datasets (add8
+    // L, add12 H, mul4 L, mul8 H) characterized once each, two estimator
+    // services (add12, mul8) spawned once each — concurrent mixed jobs
+    // never re-characterized or re-spawned anything.
+    let s = served.cache_stats();
+    assert_eq!(s.characterized, 4, "one characterization per dataset key");
+    assert_eq!(s.entries, 4);
+    assert_eq!(s.store_hits, 0, "store is off in hermetic tests");
+    let p = served.pool_stats();
+    assert_eq!(p.spawned, 2, "one estimator per operator key");
+    assert_eq!(p.services, 2);
+}
+
+#[test]
+fn job_failing_at_execution_is_quarantined_with_the_engine_error() {
+    let tmp = TempDir::new().unwrap();
+    let queue = JobQueue::open(tmp.path().join("jobs")).unwrap();
+    // add4 is a valid operator but has no smaller ConSS partner, so the
+    // job passes spec validation and fails inside the engine.
+    let mut spec = JobSpec::new("bad-op", vec![0.5]);
+    spec.operator = Some(Operator::ADD4);
+    queue.submit(&spec).unwrap();
+
+    let ctx = EngineContext::new(add8_cfg());
+    let runner = JobRunner::new(&ctx, &queue, ServeOptions::default()).unwrap();
+    let summary = runner.run().unwrap();
+    assert_eq!(summary, ServeSummary { done: 0, failed: 1 });
+    assert_eq!(queue.failed_ids().unwrap(), vec!["bad-op"]);
+    let err = queue.error("bad-op").unwrap();
+    assert!(err.contains("no smaller ConSS partner"), "recorded: {err}");
+    // The quarantined spec is intact for post-mortem resubmission.
+    let kept = JobSpec::parse(
+        &std::fs::read_to_string(tmp.path().join("jobs/failed/bad-op.json")).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(kept.operator, Some(Operator::ADD4));
+    // Nothing was paid for: no datasets, no estimators.
+    assert_eq!(ctx.cache_stats().characterized, 0);
+    assert_eq!(ctx.pool_stats().spawned, 0);
+}
+
+#[test]
+fn concurrent_same_operator_jobs_share_one_estimator_and_prepared_state() {
+    let tmp = TempDir::new().unwrap();
+    let queue = JobQueue::open(tmp.path().join("jobs")).unwrap();
+    for (i, f) in [0.4, 0.6, 0.8, 1.0].iter().enumerate() {
+        queue.submit(&JobSpec::new(format!("f{i}"), vec![*f])).unwrap();
+    }
+    let ctx = EngineContext::new(add8_cfg());
+    let runner = JobRunner::new(
+        &ctx,
+        &queue,
+        ServeOptions { workers: 4, ..Default::default() },
+    )
+    .unwrap();
+    let summary = runner.run().unwrap();
+    assert_eq!(summary, ServeSummary { done: 4, failed: 0 });
+
+    // Four concurrent same-operator jobs: two datasets (add4 L, add8 H),
+    // one estimator — the per-key in-flight guards held under the race.
+    let s = ctx.cache_stats();
+    assert_eq!(s.characterized, 2);
+    assert_eq!(s.entries, 2);
+    let p = ctx.pool_stats();
+    assert_eq!(p.spawned, 1);
+    assert_eq!(p.services, 1);
+
+    // The event stream recorded the whole lifecycle: one start/stop pair
+    // per run, a claim+done per job, no failures.
+    let log = std::fs::read_to_string(queue.dir().join(LOG_FILE)).unwrap();
+    let events: Vec<Json> = log.lines().map(|l| Json::parse(l).unwrap()).collect();
+    let count = |kind: &str| {
+        events
+            .iter()
+            .filter(|e| e.get("event").and_then(Json::as_str) == Some(kind))
+            .count()
+    };
+    assert_eq!(count("claim"), 4);
+    assert_eq!(count("done"), 4);
+    assert_eq!(count("fail"), 0);
+    assert_eq!(count("start"), 1);
+    assert_eq!(count("stop"), 1);
+    // Done events carry the operator and wall time.
+    let done = events
+        .iter()
+        .find(|e| e.get("event").and_then(Json::as_str) == Some("done"))
+        .unwrap();
+    assert_eq!(done.get("operator").and_then(Json::as_str), Some("add8"));
+    assert!(done.get("wall_ms").and_then(Json::as_u64).is_some());
+
+    // Drain-mode exit left a clean spool.
+    let c = queue.counts().unwrap();
+    assert_eq!((c.pending, c.running, c.done, c.failed), (0, 0, 4, 0));
+}
