@@ -1,0 +1,282 @@
+//! `loadgen` — closed-loop HTTP load generator for `repro serve-http`.
+//!
+//! Drives N connections of mixed add12/mul8 `POST /jobs` specs with a
+//! configurable duplicate ratio against either an in-process front-end
+//! (the default: hermetic, port 0, workers 0 — measures the submit path
+//! without paying DSE wall-clock) or an external `--addr`. Stamps
+//! `BENCH_http.json` with requests/s, p50/p99 submit latency, and the
+//! observed dedup hit rate — the HTTP leg of the CI perf trajectory,
+//! `REPRO_BENCH_SMOKE=1` shrinking it to a bit-rot probe like every other
+//! bench.
+//!
+//! ```text
+//! loadgen [--addr HOST:PORT] [--connections N] [--requests N]
+//!         [--dup-ratio F] [--out PATH]
+//! ```
+
+use repro::cli::ParsedArgs;
+use repro::engine::EngineContext;
+use repro::error::{Error, Result};
+use repro::expcfg::{ConssConfig, ExperimentConfig, GaConfig, SurrogateConfig};
+use repro::serve::{http_call, HttpOptions, HttpServer, JobQueue};
+use repro::surrogate::EstimatorBackend;
+use repro::util::bench::smoke_mode;
+use repro::util::json::Json;
+use repro::util::rng::Rng;
+use repro::util::tempdir::TempDir;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Globally-unique spec uniquifier: each fresh (non-duplicate) request
+/// gets its own `ga_seed`, so distinct requests never collide by accident.
+static NEXT_SEED: AtomicU64 = AtomicU64::new(0);
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!(
+            "loadgen — closed-loop HTTP load for `repro serve-http`\n\n\
+             USAGE: loadgen [--addr HOST:PORT] [--connections N] [--requests N]\n\
+             \x20                [--dup-ratio F] [--out PATH]\n\n\
+             Without --addr an in-process front-end is spawned on 127.0.0.1:0\n\
+             (hermetic; no engine work). REPRO_BENCH_SMOKE=1 shrinks the run\n\
+             to a bit-rot probe. Stamps BENCH_http.json."
+        );
+        return;
+    }
+    if let Err(e) = run(args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// One request's outcome, as the client saw it.
+struct Sample {
+    status: u16,
+    latency_ns: u64,
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let parsed = ParsedArgs::parse(args, &[])
+        .map_err(|e| Error::Config(e.to_string()))?;
+    parsed
+        .ensure_known(&["addr", "connections", "requests", "dup-ratio", "out"])
+        .map_err(|e| Error::Config(e.to_string()))?;
+    let smoke = smoke_mode();
+    let connections: usize = parsed
+        .opt_parse("connections")
+        .map_err(|e| Error::Config(e.to_string()))?
+        .unwrap_or(if smoke { 2 } else { 8 });
+    let requests: usize = parsed
+        .opt_parse("requests")
+        .map_err(|e| Error::Config(e.to_string()))?
+        .unwrap_or(if smoke { 8 } else { 48 });
+    let dup_ratio: f64 = parsed
+        .opt_parse("dup-ratio")
+        .map_err(|e| Error::Config(e.to_string()))?
+        .unwrap_or(0.5);
+    if !(0.0..=1.0).contains(&dup_ratio) {
+        return Err(Error::Config("--dup-ratio must be within [0, 1]".into()));
+    }
+    let out = parsed
+        .opt("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("BENCH_http.json"));
+
+    // Target: external server, or a hermetic in-process front-end.
+    let embedded = if parsed.opt("addr").is_none() {
+        Some(EmbeddedServer::start()?)
+    } else {
+        None
+    };
+    let addr = match (&embedded, parsed.opt("addr")) {
+        (Some(server), _) => server.addr.clone(),
+        (None, Some(addr)) => addr.to_string(),
+        (None, None) => unreachable!(),
+    };
+    println!(
+        "loadgen: {connections} connection(s) x {requests} request(s), \
+         dup ratio {dup_ratio}, target http://{addr}{}",
+        if embedded.is_some() { " (in-process)" } else { "" }
+    );
+
+    let started = Instant::now();
+    let samples: Vec<Sample> = {
+        let collected = Mutex::new(Vec::with_capacity(connections * requests));
+        std::thread::scope(|s| {
+            for conn in 0..connections {
+                let collected = &collected;
+                let addr = addr.as_str();
+                s.spawn(move || {
+                    let mine = drive_connection(addr, conn, requests, dup_ratio);
+                    collected.lock().unwrap().extend(mine);
+                });
+            }
+        });
+        collected.into_inner().unwrap()
+    };
+    let elapsed = started.elapsed();
+
+    if let Some(server) = embedded {
+        server.stop();
+    }
+
+    // Aggregate: throughput, latency percentiles, dedup split.
+    let total = samples.len();
+    let created = samples.iter().filter(|s| s.status == 201).count();
+    let shared = samples.iter().filter(|s| s.status == 200).count();
+    let errors = total - created - shared;
+    if errors > 0 {
+        return Err(Error::Coordinator(format!(
+            "{errors}/{total} requests failed (non-200/201 status)"
+        )));
+    }
+    let hit_rate = if created + shared == 0 {
+        0.0
+    } else {
+        shared as f64 / (created + shared) as f64
+    };
+    let mut lat: Vec<u64> = samples.iter().map(|s| s.latency_ns).collect();
+    lat.sort_unstable();
+    let pct = |p: usize| -> f64 {
+        if lat.is_empty() {
+            0.0
+        } else {
+            lat[(lat.len() * p / 100).min(lat.len() - 1)] as f64
+        }
+    };
+    let secs = elapsed.as_secs_f64();
+    let rps = if secs > 0.0 { total as f64 / secs } else { 0.0 };
+    println!(
+        "{total} request(s) in {elapsed:.2?} — {rps:.0} req/s; p50 {:.2} ms, \
+         p99 {:.2} ms; {created} created / {shared} shared (hit rate {:.2})",
+        pct(50) / 1e6,
+        pct(99) / 1e6,
+        hit_rate
+    );
+
+    // The BENCH_*.json stamp (same mode discipline as util::bench).
+    let stamp = Json::obj(vec![
+        (
+            "mode",
+            Json::Str(if smoke { "smoke".into() } else { "full".into() }),
+        ),
+        ("connections", Json::Num(connections as f64)),
+        ("requests", Json::Num(total as f64)),
+        ("duration_ms", Json::Num(elapsed.as_millis() as f64)),
+        ("requests_per_sec", Json::Num(rps)),
+        (
+            "latency_ms",
+            Json::obj(vec![
+                ("p50", Json::Num(pct(50) / 1e6)),
+                ("p99", Json::Num(pct(99) / 1e6)),
+            ]),
+        ),
+        (
+            "dedup",
+            Json::obj(vec![
+                ("created", Json::Num(created as f64)),
+                ("shared", Json::Num(shared as f64)),
+                ("hit_rate", Json::Num(hit_rate)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out, stamp.to_string())?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// One closed-loop connection: `requests` sequential submits, duplicating
+/// an earlier spec of this connection with probability `dup_ratio`.
+/// Deterministic per (connection, request) — only the wall-clock varies
+/// between runs.
+fn drive_connection(
+    addr: &str,
+    conn: usize,
+    requests: usize,
+    dup_ratio: f64,
+) -> Vec<Sample> {
+    let mut rng = Rng::seed_from_u64(0x10ad_6e4e + conn as u64);
+    let mut issued: Vec<String> = Vec::new();
+    let mut samples = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let body = if !issued.is_empty() && rng.gen_bool(dup_ratio) {
+            issued[rng.gen_index(issued.len())].clone()
+        } else {
+            let seed = NEXT_SEED.fetch_add(1, Ordering::Relaxed);
+            let op = if seed % 2 == 0 { "add12" } else { "mul8" };
+            let body = format!(
+                r#"{{"factors":[0.5],"operator":"{op}","ga_seed":{seed}}}"#
+            );
+            issued.push(body.clone());
+            body
+        };
+        let t0 = Instant::now();
+        let sample = match http_call(addr, "POST", "/jobs", Some(&body)) {
+            Ok(response) => Sample {
+                status: response.status,
+                latency_ns: t0.elapsed().as_nanos() as u64,
+            },
+            Err(_) => Sample { status: 0, latency_ns: t0.elapsed().as_nanos() as u64 },
+        };
+        samples.push(sample);
+    }
+    samples
+}
+
+/// The hermetic in-process target: a front-end-only server (workers 0 —
+/// specs spool but never execute, so the bench measures the HTTP + dedup
+/// + spool path, not DSE) over a temp queue, torn down on stop.
+struct EmbeddedServer {
+    addr: String,
+    server: Arc<HttpServer>,
+    handle: std::thread::JoinHandle<()>,
+    _dir: TempDir,
+}
+
+impl EmbeddedServer {
+    fn start() -> Result<EmbeddedServer> {
+        let dir = TempDir::new()?;
+        let cfg = ExperimentConfig {
+            operator: "add8".into(),
+            artifacts_dir: dir.path().join("artifacts"),
+            surrogate: SurrogateConfig {
+                backend: EstimatorBackend::Table,
+                gbt_stages: None,
+            },
+            conss: ConssConfig {
+                forest_trees: Some(4),
+                noise_bits: 2,
+                ..Default::default()
+            },
+            ga: GaConfig { pop_size: 10, generations: 3, ..Default::default() },
+            ..Default::default()
+        };
+        let queue = Arc::new(JobQueue::open(dir.path().join("jobs"))?);
+        let ctx = Arc::new(EngineContext::new(cfg));
+        let opts = HttpOptions {
+            workers: 0,
+            high_water: usize::MAX,
+            ..Default::default()
+        };
+        let server =
+            Arc::new(HttpServer::bind(ctx, queue, "127.0.0.1:0", opts)?);
+        let addr = server.local_addr().to_string();
+        let handle = {
+            let server = Arc::clone(&server);
+            std::thread::spawn(move || {
+                if let Err(e) = server.run() {
+                    eprintln!("warning: embedded server: {e}");
+                }
+            })
+        };
+        Ok(EmbeddedServer { addr, server, handle, _dir: dir })
+    }
+
+    fn stop(self) {
+        self.server.shutdown();
+        let _ = self.handle.join();
+    }
+}

@@ -75,6 +75,21 @@ impl MetricsSnapshot {
         }
     }
 
+    /// The snapshot as a JSON object (the `/metrics` wire shape; keys
+    /// match the field names, plus the derived mean batch fill).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("configs", Json::Num(self.configs as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("busy_micros", Json::Num(self.busy_micros as f64)),
+            ("max_batch_fill", Json::Num(self.max_batch_fill as f64)),
+            ("mean_batch_fill", Json::Num(self.mean_batch_fill())),
+        ])
+    }
+
     /// Pool-aware aggregation: counters sum, `max_batch_fill` takes the
     /// max — so a fleet of per-operator services reports one snapshot.
     pub fn merged(&self, other: &MetricsSnapshot) -> MetricsSnapshot {
@@ -122,6 +137,21 @@ mod tests {
         assert_eq!(s.configs_per_sec(Duration::ZERO), 0.0);
         assert!(s.configs_per_sec(Duration::ZERO).is_finite());
         assert!((s.configs_per_sec(Duration::from_secs(2)) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn to_json_carries_every_counter() {
+        let m = ServiceMetrics::default();
+        m.record_request(10);
+        m.record_batch(10, Duration::from_micros(100), true);
+        let v = m.snapshot().to_json();
+        assert_eq!(v.get("requests").and_then(|x| x.as_u64()), Some(1));
+        assert_eq!(v.get("configs").and_then(|x| x.as_u64()), Some(10));
+        assert_eq!(v.get("batches").and_then(|x| x.as_u64()), Some(1));
+        assert_eq!(v.get("errors").and_then(|x| x.as_u64()), Some(0));
+        assert_eq!(v.get("busy_micros").and_then(|x| x.as_u64()), Some(100));
+        assert_eq!(v.get("max_batch_fill").and_then(|x| x.as_u64()), Some(10));
+        assert_eq!(v.get("mean_batch_fill").and_then(|x| x.as_f64()), Some(10.0));
     }
 
     #[test]

@@ -240,13 +240,15 @@ fn holder_is_stale(path: &Path) -> bool {
     }
 }
 
+/// Whether `pid` provably no longer runs (the stale-holder probe shared
+/// with the serve queue's orphaned-claim sweep).
 #[cfg(target_os = "linux")]
-fn pid_is_dead(pid: u32) -> bool {
+pub(crate) fn pid_is_dead(pid: u32) -> bool {
     !Path::new(&format!("/proc/{pid}")).exists()
 }
 
 #[cfg(not(target_os = "linux"))]
-fn pid_is_dead(_pid: u32) -> bool {
+pub(crate) fn pid_is_dead(_pid: u32) -> bool {
     false // no portable liveness probe; the wait-timeout takeover covers it
 }
 

@@ -65,6 +65,7 @@ pub struct ExperimentConfig {
     pub charac: CharacConfig,
     pub store: StoreConfig,
     pub serve: ServeConfig,
+    pub http: HttpConfig,
     pub scaling_factors: Vec<f64>,
 }
 
@@ -185,6 +186,25 @@ impl ExperimentConfig {
                 "serve.jobs_dir" => {
                     cfg.serve.jobs_dir = Some(PathBuf::from(get_str(key, value)?))
                 }
+                "http.addr" => cfg.http.addr = get_str(key, value)?,
+                "http.threads" => {
+                    cfg.http.threads =
+                        value.as_usize().ok_or_else(|| bad(key, "an integer"))?
+                }
+                "http.high_water" => {
+                    cfg.http.high_water =
+                        value.as_usize().ok_or_else(|| bad(key, "an integer"))?
+                }
+                "http.retry_after_secs" => {
+                    cfg.http.retry_after_secs = value
+                        .as_i64()
+                        .and_then(|v| u64::try_from(v).ok())
+                        .ok_or_else(|| bad(key, "a non-negative integer"))?
+                }
+                "http.max_body_bytes" => {
+                    cfg.http.max_body_bytes =
+                        value.as_usize().ok_or_else(|| bad(key, "an integer"))?
+                }
                 other => {
                     return Err(Error::Config(format!("unknown config key `{other}`")))
                 }
@@ -221,6 +241,15 @@ impl ExperimentConfig {
         if self.serve.workers == 0 {
             return Err(Error::Config("serve.workers must be > 0".into()));
         }
+        if self.http.threads == 0 {
+            return Err(Error::Config("http.threads must be > 0".into()));
+        }
+        if self.http.high_water == 0 {
+            return Err(Error::Config("http.high_water must be > 0".into()));
+        }
+        if self.http.max_body_bytes == 0 {
+            return Err(Error::Config("http.max_body_bytes must be > 0".into()));
+        }
         Ok(())
     }
 }
@@ -241,7 +270,36 @@ impl Default for ExperimentConfig {
             charac: CharacConfig::default(),
             store: StoreConfig::default(),
             serve: ServeConfig::default(),
+            http: HttpConfig::default(),
             scaling_factors: default_factors(),
+        }
+    }
+}
+
+/// HTTP front-end knobs (`repro serve-http`).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address (`host:port`; port 0 = OS-assigned).
+    pub addr: String,
+    /// Concurrent acceptor threads.
+    pub threads: usize,
+    /// Admission control: reject `POST /jobs` with `429` once `pending/`
+    /// holds this many specs (dedup hits still answer `200`).
+    pub high_water: usize,
+    /// The `Retry-After` hint sent with a `429`, seconds.
+    pub retry_after_secs: u64,
+    /// Largest accepted request body, bytes.
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:7878".into(),
+            threads: 4,
+            high_water: 256,
+            retry_after_secs: 1,
+            max_body_bytes: 64 * 1024,
         }
     }
 }
@@ -461,6 +519,13 @@ dir = "/tmp/ds"
 workers = 4
 poll_ms = 50
 jobs_dir = "/tmp/jobs"
+
+[http]
+addr = "0.0.0.0:8080"
+threads = 8
+high_water = 32
+retry_after_secs = 2
+max_body_bytes = 4096
 "#,
         )
         .unwrap();
@@ -477,6 +542,37 @@ jobs_dir = "/tmp/jobs"
         assert_eq!(c.serve.workers, 4);
         assert_eq!(c.serve.poll().as_millis(), 50);
         assert_eq!(c.serve.dir_under(Path::new("a")), PathBuf::from("/tmp/jobs"));
+        assert_eq!(c.http.addr, "0.0.0.0:8080");
+        assert_eq!(c.http.threads, 8);
+        assert_eq!(c.http.high_water, 32);
+        assert_eq!(c.http.retry_after_secs, 2);
+        assert_eq!(c.http.max_body_bytes, 4096);
+    }
+
+    #[test]
+    fn http_defaults_and_validation() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.http.addr, "127.0.0.1:7878");
+        assert_eq!(c.http.threads, 4);
+        assert_eq!(c.http.high_water, 256);
+        assert_eq!(c.http.retry_after_secs, 1);
+        assert_eq!(c.http.max_body_bytes, 64 * 1024);
+        for broken in [
+            ExperimentConfig {
+                http: HttpConfig { threads: 0, ..Default::default() },
+                ..Default::default()
+            },
+            ExperimentConfig {
+                http: HttpConfig { high_water: 0, ..Default::default() },
+                ..Default::default()
+            },
+            ExperimentConfig {
+                http: HttpConfig { max_body_bytes: 0, ..Default::default() },
+                ..Default::default()
+            },
+        ] {
+            assert!(broken.validate().is_err());
+        }
     }
 
     #[test]

@@ -16,7 +16,9 @@ use repro::expcfg::ExperimentConfig;
 use repro::matching::{DistanceKind, Matcher};
 use repro::operator::{AxoConfig, Operator};
 use repro::report::Harness;
-use repro::serve::{JobQueue, JobRunner, JobSpec, ServeOptions, LOG_FILE};
+use repro::serve::{
+    HttpOptions, HttpServer, JobQueue, JobRunner, JobSpec, ServeOptions, LOG_FILE,
+};
 use repro::surrogate::{EstimatorBackend, Surrogate, TableSurrogate};
 use repro::util::rng::Rng;
 use std::path::PathBuf;
@@ -47,6 +49,12 @@ COMMANDS:
                          engine. --drain runs the queue to empty and exits;
                          default watches pending/ forever.
                          [--workers N] [--max-jobs N]
+  serve-http           HTTP front-end over the job spool: POST /jobs,
+                         GET /jobs/<id>[/result], /healthz, /metrics.
+                         Identical specs dedupe onto one content-addressed
+                         job; a full queue answers 429 + Retry-After.
+                         [--addr HOST:PORT] [--http-threads N]
+                         [--workers N (0 = front-end only)] [--high-water N]
   serve                Batched estimator-service demo
                          [--clients N] [--requests-per-client N]
   store <action>       Persistent dataset store maintenance:
@@ -90,6 +98,9 @@ const GLOBAL_OPTS: &[&str] = &[
     "workers",
     "max-jobs",
     "max-bytes",
+    "addr",
+    "http-threads",
+    "high-water",
 ];
 
 fn main() {
@@ -119,6 +130,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "store" => cmd_store(&cfg, &parsed),
         "submit" => cmd_submit(&cfg, &parsed),
         "serve-dse" => cmd_serve_dse(&cfg, &parsed),
+        "serve-http" => cmd_serve_http(&cfg, &parsed),
         "figures" => {
             let harness = Harness::new(cfg);
             for s in harness.run(&parsed.positionals)? {
@@ -310,6 +322,9 @@ fn cmd_serve_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
         return Err(Error::Config("pass either --drain or --watch, not both".into()));
     }
     let queue = JobQueue::open(cfg.serve.dir_under(&cfg.artifacts_dir))?;
+    for id in queue.requeue_stale()? {
+        println!("requeued orphaned job `{id}` (claiming process is gone)");
+    }
     let opts = ServeOptions {
         workers: parsed.opt_parse("workers")?.unwrap_or(cfg.serve.workers),
         max_jobs: parsed.opt_parse("max-jobs")?,
@@ -364,6 +379,40 @@ fn cmd_serve_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
         )));
     }
     Ok(())
+}
+
+/// The HTTP front-end: bind, sweep orphaned claims, serve until killed.
+fn cmd_serve_http(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
+    let queue =
+        std::sync::Arc::new(JobQueue::open(cfg.serve.dir_under(&cfg.artifacts_dir))?);
+    for id in queue.requeue_stale()? {
+        println!("requeued orphaned job `{id}` (claiming process is gone)");
+    }
+    let opts = HttpOptions {
+        threads: parsed.opt_parse("http-threads")?.unwrap_or(cfg.http.threads),
+        workers: parsed.opt_parse("workers")?.unwrap_or(cfg.serve.workers),
+        high_water: parsed.opt_parse("high-water")?.unwrap_or(cfg.http.high_water),
+        retry_after_secs: cfg.http.retry_after_secs,
+        max_body_bytes: cfg.http.max_body_bytes,
+        poll: cfg.serve.poll(),
+    };
+    if opts.threads == 0 {
+        return Err(Error::Config("--http-threads must be > 0".into()));
+    }
+    let addr = parsed.opt("addr").unwrap_or(&cfg.http.addr);
+    let engine = std::sync::Arc::new(EngineContext::new(cfg.clone()));
+    let server = HttpServer::bind(engine, queue.clone(), addr, opts.clone())?;
+    println!(
+        "serve-http: listening on http://{} — {} acceptor(s), {} exec worker(s), \
+         high-water {}, queue at {}",
+        server.local_addr(),
+        opts.threads,
+        opts.workers,
+        opts.high_water,
+        queue.dir().display()
+    );
+    println!("event log: {}", queue.dir().join(LOG_FILE).display());
+    server.run()
 }
 
 fn parse_distance(s: &str) -> Result<DistanceKind> {

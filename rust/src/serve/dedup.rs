@@ -1,0 +1,169 @@
+//! Canonical-hash request dedup — content-addressed job identity.
+//!
+//! The HTTP front-end names every submitted job after *what it computes*,
+//! not who asked: the spec's canonical JSON (sorted keys, shortest-repr
+//! floats — `util::json`'s writer is already canonical), with the client
+//! `id` field stripped, hashed with the dataset store's FNV-1a 64. Two
+//! clients posting byte-different JSON for the same work ("0.50" vs
+//! "0.5", shuffled keys, a cosmetic id) collapse onto one spool id
+//! `h<hash:016x>`, and the [`JobQueue`]'s exactly-one-winner submission
+//! makes the queue itself the dedup arbiter — no in-memory table to race
+//! on or lose across restarts. Jobs are deterministic, so a hit in *any*
+//! lifecycle state is shareable: a `done/` hit is a fully-amortized cache
+//! hit, a `pending/`/`running/` hit is one spooled job with many waiters.
+
+use super::queue::{JobQueue, JobState, Submission};
+use super::spec::JobSpec;
+use crate::engine::store::fnv1a64;
+use crate::error::Result;
+use crate::util::json::Json;
+
+/// FNV-1a 64 of the spec's canonical JSON with the `id` key stripped —
+/// equal exactly when two specs resolve to the same work.
+pub fn canonical_hash(spec: &JobSpec) -> u64 {
+    let mut v = spec.to_json();
+    if let Json::Obj(map) = &mut v {
+        map.remove("id");
+    }
+    fnv1a64(v.to_string().as_bytes())
+}
+
+/// The content-addressed spool id for a canonical hash (`h` + 16 hex
+/// digits — always a valid queue id).
+pub fn hash_id(hash: u64) -> String {
+    format!("h{hash:016x}")
+}
+
+/// What admitting one request did (maps to `201 Created` / `200 OK`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Admission {
+    /// This request spooled a new job.
+    Created { id: String },
+    /// An identical job is already in the spool (in `state`); the caller
+    /// shares its id and, eventually, its result.
+    Shared { id: String, state: JobState },
+}
+
+impl Admission {
+    pub fn id(&self) -> &str {
+        match self {
+            Admission::Created { id } | Admission::Shared { id, .. } => id,
+        }
+    }
+}
+
+/// Admit one deduped request: rewrite the spec onto its content-addressed
+/// id and submit, reporting a spool hit as [`Admission::Shared`]. Races
+/// between identical concurrent requests are settled by the queue's
+/// hard-link submission — exactly one caller sees `Created`.
+pub fn admit(queue: &JobQueue, spec: &JobSpec) -> Result<Admission> {
+    let id = hash_id(canonical_hash(spec));
+    let mut spooled = spec.clone();
+    spooled.id = id.clone();
+    match queue.try_submit(&spooled)? {
+        Submission::Submitted(_) => Ok(Admission::Created { id }),
+        Submission::Duplicate(state) => Ok(Admission::Shared { id, state }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conss::SeedSelection;
+    use crate::operator::Operator;
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn hash_ignores_client_ids_but_not_work() {
+        let a = JobSpec::new("client-a", vec![0.5]);
+        let b = JobSpec::new("client-b", vec![0.5]);
+        assert_eq!(canonical_hash(&a), canonical_hash(&b), "id is cosmetic");
+
+        let mut c = JobSpec::new("client-a", vec![0.5]);
+        c.factors = vec![0.6];
+        assert_ne!(canonical_hash(&a), canonical_hash(&c), "factors matter");
+
+        let mut d = JobSpec::new("", vec![0.5]);
+        d.operator = Some(Operator::MUL8);
+        assert_ne!(canonical_hash(&a), canonical_hash(&d), "operator matters");
+
+        let mut e = JobSpec::new("", vec![0.5]);
+        e.seed_selection = SeedSelection::ParetoOnly;
+        assert_ne!(canonical_hash(&a), canonical_hash(&e));
+
+        let mut f = JobSpec::new("", vec![0.5]);
+        f.ga_seed = Some(7);
+        assert_ne!(canonical_hash(&a), canonical_hash(&f));
+    }
+
+    #[test]
+    fn hash_is_stable_across_textual_variants() {
+        // Two textual spellings of one spec (key order, float formatting,
+        // client id) must meet at one spool id.
+        let v1 = JobSpec::parse(r#"{"id":"x","factors":[0.5],"ga_seed":3}"#).unwrap();
+        let v2 = JobSpec::parse(r#"{"ga_seed":3,"factors":[0.50],"id":"y"}"#).unwrap();
+        assert_eq!(canonical_hash(&v1), canonical_hash(&v2));
+    }
+
+    #[test]
+    fn hash_id_is_a_valid_queue_id() {
+        let id = hash_id(canonical_hash(&JobSpec::new("", vec![0.5])));
+        assert_eq!(id.len(), 17);
+        assert!(id.starts_with('h'));
+        let mut spec = JobSpec::new(id, vec![0.5]);
+        spec.validate().unwrap();
+        spec.id = hash_id(0);
+        assert_eq!(spec.id, "h0000000000000000", "zero-padded");
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn admit_creates_once_then_shares() {
+        let dir = TempDir::new().unwrap();
+        let queue = JobQueue::open(dir.path().join("jobs")).unwrap();
+        let spec = JobSpec::new("mine", vec![0.5]);
+        let first = admit(&queue, &spec).unwrap();
+        let id = match &first {
+            Admission::Created { id } => id.clone(),
+            other => panic!("expected Created, got {other:?}"),
+        };
+        // A different client, different cosmetic id, same work.
+        let again = admit(&queue, &JobSpec::new("yours", vec![0.5])).unwrap();
+        assert_eq!(
+            again,
+            Admission::Shared { id: id.clone(), state: JobState::Pending }
+        );
+        assert_eq!(queue.counts().unwrap().pending, 1, "one spooled job");
+
+        // The hit follows the job through its lifecycle.
+        queue.claim().unwrap().unwrap();
+        let running = admit(&queue, &spec).unwrap();
+        assert_eq!(running, Admission::Shared { id, state: JobState::Running });
+    }
+
+    #[test]
+    fn concurrent_identical_admissions_create_exactly_once() {
+        let dir = TempDir::new().unwrap();
+        let queue = JobQueue::open(dir.path().join("jobs")).unwrap();
+        let outcomes: Vec<Admission> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|k| {
+                    let queue = &queue;
+                    s.spawn(move || {
+                        admit(queue, &JobSpec::new(format!("c{k}"), vec![0.5]))
+                            .unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let created = outcomes
+            .iter()
+            .filter(|a| matches!(a, Admission::Created { .. }))
+            .count();
+        assert_eq!(created, 1, "exactly one creator; the rest share");
+        let id = outcomes[0].id();
+        assert!(outcomes.iter().all(|a| a.id() == id));
+        assert_eq!(queue.counts().unwrap().pending, 1);
+    }
+}

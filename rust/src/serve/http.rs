@@ -1,0 +1,975 @@
+//! [`HttpServer`] — the std-only HTTP/1.1 front-end over the job spool.
+//!
+//! A hand-rolled `TcpListener` server (no hyper, no tokio — the repo
+//! links nothing outside std) that parses *just enough* HTTP to run a job
+//! API: the request line, `Content-Length`, and a hard rejection of
+//! chunked transfer encoding. Every connection is one request
+//! (`Connection: close`); keep-alive reuse is a tracked follow-on.
+//!
+//! Routes:
+//!
+//! | route                  | behavior                                        |
+//! |------------------------|-------------------------------------------------|
+//! | `POST /jobs`           | spec JSON → dedup → spool; `201`/`200`/`400`/`429` |
+//! | `GET /jobs/<id>`       | lifecycle state, `404` when unknown             |
+//! | `GET /jobs/<id>/result`| `done/` bytes verbatim; `202` in flight, `500` failed |
+//! | `GET /healthz`         | liveness probe                                  |
+//! | `GET /metrics`         | queue depths + HTTP counters + engine metrics   |
+//!
+//! Two properties make the front-end safe under real traffic:
+//!
+//! * **Dedup** ([`dedup`](super::dedup)): submitted specs are renamed to
+//!   their canonical-hash id, so identical concurrent requests collapse
+//!   into one spooled job with many waiters — the first submitter gets
+//!   `201 Created`, everyone else `200 OK` with the shared id. Client ids
+//!   are rejected (`400`): job identity is content-addressed.
+//! * **Backpressure**: once `pending/` reaches the configured high-water
+//!   mark, *new* work is refused with `429` + `Retry-After`. Dedup is
+//!   checked first, so duplicates of in-flight jobs still answer `200`
+//!   under full load — a hit costs no queue space.
+//!
+//! With `workers > 0` the server also embeds an exec loop: a resident
+//! [`JobRunner`] drains the spool in bounded bursts between shutdown
+//! checks, sharing the engine's caches with every burst. `workers = 0`
+//! runs a pure front-end against a spool drained by separate
+//! `repro serve-dse` processes (the queue is multi-process-safe).
+
+use super::dedup::{admit, canonical_hash, hash_id, Admission};
+use super::queue::{JobQueue, JobState};
+use super::runner::{JobRunner, ServeOptions, LOG_FILE};
+use super::spec::JobSpec;
+use crate::engine::EngineContext;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Largest accepted request head (request line + headers).
+const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// Per-connection socket timeout: a stalled client must not pin an
+/// acceptor thread forever.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// HTTP front-end knobs (the `[http]` config section layered with the
+/// serve-mode worker settings).
+#[derive(Debug, Clone)]
+pub struct HttpOptions {
+    /// Concurrent acceptor threads (each serves one connection at a time).
+    pub threads: usize,
+    /// Embedded exec-loop workers; `0` = front-end only (no engine work
+    /// in this process).
+    pub workers: usize,
+    /// Refuse new `POST /jobs` with `429` once `pending/` holds this many.
+    pub high_water: usize,
+    /// The `Retry-After` hint sent with a `429`, seconds.
+    pub retry_after_secs: u64,
+    /// Largest accepted request body, bytes.
+    pub max_body_bytes: usize,
+    /// Exec-loop idle poll interval.
+    pub poll: Duration,
+}
+
+impl Default for HttpOptions {
+    fn default() -> Self {
+        let http = crate::expcfg::HttpConfig::default();
+        HttpOptions {
+            threads: http.threads,
+            workers: 2,
+            high_water: http.high_water,
+            retry_after_secs: http.retry_after_secs,
+            max_body_bytes: http.max_body_bytes,
+            poll: Duration::from_millis(200),
+        }
+    }
+}
+
+/// Lock-free front-end counters (the `http` object in `/metrics`).
+#[derive(Debug, Default)]
+struct HttpStats {
+    requests: AtomicU64,
+    created: AtomicU64,
+    shared: AtomicU64,
+    rejected: AtomicU64,
+    bad_requests: AtomicU64,
+}
+
+impl HttpStats {
+    fn to_json(&self) -> Json {
+        let created = self.created.load(Ordering::Relaxed);
+        let shared = self.shared.load(Ordering::Relaxed);
+        let admitted = created + shared;
+        let hit_rate =
+            if admitted == 0 { 0.0 } else { shared as f64 / admitted as f64 };
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("created", Json::Num(created as f64)),
+            ("shared", Json::Num(shared as f64)),
+            ("dedup_hit_rate", Json::Num(hit_rate)),
+            ("rejected", Json::Num(self.rejected.load(Ordering::Relaxed) as f64)),
+            (
+                "bad_requests",
+                Json::Num(self.bad_requests.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+}
+
+/// The bound front-end (see module docs). [`HttpServer::run`] blocks;
+/// share the server in an [`Arc`] and call [`HttpServer::shutdown`] from
+/// another thread (or a signal handler) to stop it.
+pub struct HttpServer {
+    ctx: Arc<EngineContext>,
+    queue: Arc<JobQueue>,
+    opts: HttpOptions,
+    listener: TcpListener,
+    local_addr: SocketAddr,
+    started: Instant,
+    stop: AtomicBool,
+    active_acceptors: AtomicUsize,
+    stats: HttpStats,
+    log: Mutex<std::fs::File>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (port 0 = OS-assigned; read it back via
+    /// [`HttpServer::local_addr`]).
+    pub fn bind(
+        ctx: Arc<EngineContext>,
+        queue: Arc<JobQueue>,
+        addr: &str,
+        opts: HttpOptions,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).map_err(|e| {
+            Error::Coordinator(format!("cannot bind http listener on {addr}: {e}"))
+        })?;
+        let local_addr = listener.local_addr()?;
+        let log = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(queue.dir().join(LOG_FILE))?;
+        Ok(HttpServer {
+            ctx,
+            queue,
+            opts,
+            listener,
+            local_addr,
+            started: Instant::now(),
+            stop: AtomicBool::new(false),
+            active_acceptors: AtomicUsize::new(0),
+            stats: HttpStats::default(),
+            log: Mutex::new(log),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Serve until [`HttpServer::shutdown`]: `threads` acceptor loops,
+    /// plus the embedded exec loop when `workers > 0`. Returns once every
+    /// loop has retired.
+    pub fn run(&self) -> Result<()> {
+        self.log_event(
+            "http-start",
+            &[
+                ("addr", Json::Str(self.local_addr.to_string())),
+                ("threads", Json::Num(self.opts.threads.max(1) as f64)),
+                ("workers", Json::Num(self.opts.workers as f64)),
+            ],
+        );
+        std::thread::scope(|s| {
+            for _ in 0..self.opts.threads.max(1) {
+                let listener = self.listener.try_clone();
+                s.spawn(move || match listener {
+                    Ok(l) => self.accept_loop(&l),
+                    Err(e) => eprintln!("warning: acceptor clone failed: {e}"),
+                });
+            }
+            if self.opts.workers > 0 {
+                s.spawn(|| self.exec_loop());
+            }
+        });
+        self.log_event("http-stop", &[]);
+        Ok(())
+    }
+
+    /// Ask every loop to stop, then wake blocked acceptors by connecting
+    /// to our own listener until they have all retired. Safe to call more
+    /// than once and from any thread.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        while self.active_acceptors.load(Ordering::SeqCst) > 0 {
+            // Each wake-up connection unblocks at most one accept().
+            let _ = TcpStream::connect_timeout(
+                &self.local_addr,
+                Duration::from_millis(100),
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// One acceptor: blocking `accept()`, one request per connection. The
+    /// stop flag is checked after every accept — [`HttpServer::shutdown`]
+    /// wakes us with throwaway connections.
+    fn accept_loop(&self, listener: &TcpListener) {
+        self.active_acceptors.fetch_add(1, Ordering::SeqCst);
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if self.stopping() {
+                        break; // a shutdown wake-up, not a client
+                    }
+                    self.stats.requests.fetch_add(1, Ordering::Relaxed);
+                    let response = self.serve_one(&stream);
+                    let _ = response.write_to(&stream);
+                    let _ = stream.shutdown(std::net::Shutdown::Both);
+                }
+                Err(_) => {
+                    if self.stopping() {
+                        break;
+                    }
+                    // Transient accept fault (e.g. EMFILE); back off.
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+        self.active_acceptors.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Embedded executor: drain the spool in bursts of at most `workers`
+    /// jobs, re-checking the stop flag between bursts so a deep queue
+    /// never blocks shutdown. One [`JobRunner`] lives for the whole loop,
+    /// keeping its prepared-DSE pool warm across bursts.
+    fn exec_loop(&self) {
+        let opts = ServeOptions {
+            workers: self.opts.workers,
+            max_jobs: Some(self.opts.workers.max(1)),
+            drain: true,
+            poll: self.opts.poll,
+        };
+        let runner = match JobRunner::new(&self.ctx, &self.queue, opts) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("warning: exec loop failed to start: {e}");
+                return;
+            }
+        };
+        while !self.stopping() {
+            let busy = match self.queue.counts() {
+                Ok(c) if c.pending > 0 => match runner.run() {
+                    Ok(summary) => summary.done + summary.failed > 0,
+                    Err(e) => {
+                        eprintln!("warning: exec burst failed: {e}");
+                        false
+                    }
+                },
+                _ => false,
+            };
+            if !busy {
+                std::thread::sleep(self.opts.poll);
+            }
+        }
+    }
+
+    /// Parse and route one request; never panics a connection — every
+    /// outcome is a response.
+    fn serve_one(&self, mut stream: &TcpStream) -> Response {
+        let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+        let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+        let request = match read_request(&mut stream, self.opts.max_body_bytes) {
+            Ok(r) => r,
+            Err(response) => {
+                self.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                return response;
+            }
+        };
+        let path = request.path.split('?').next().unwrap_or("");
+        let segments: Vec<&str> =
+            path.trim_matches('/').split('/').filter(|s| !s.is_empty()).collect();
+        let response = match (request.method.as_str(), segments.as_slice()) {
+            ("POST", ["jobs"]) => self.handle_submit(&request.body),
+            ("GET", ["jobs", id]) => self.handle_status(id),
+            ("GET", ["jobs", id, "result"]) => self.handle_result(id),
+            ("GET", ["healthz"]) => {
+                Response::json(200, Json::obj(vec![("status", Json::Str("ok".into()))]))
+            }
+            ("GET", ["metrics"]) => self.handle_metrics(),
+            ("GET" | "POST", _) => Response::error(404, "no such route"),
+            _ => Response::error(405, "method not allowed (GET and POST only)"),
+        };
+        if response.status == 400 {
+            self.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+        }
+        response
+    }
+
+    /// `POST /jobs`: parse → validate (`400`) → dedup (`200`) →
+    /// backpressure (`429`) → spool (`201`). Dedup is checked before the
+    /// high-water mark on purpose — a duplicate of an in-flight job costs
+    /// no queue space, so it is answered even under full load.
+    fn handle_submit(&self, body: &[u8]) -> Response {
+        let spec = match parse_spec(body) {
+            Ok(spec) => spec,
+            Err(message) => return Response::error(400, &message),
+        };
+        let id = hash_id(canonical_hash(&spec));
+        if let Some(state) = self.queue.state_of(&id) {
+            return self.respond_shared(&id, state);
+        }
+        let pending = match self.queue.counts() {
+            Ok(c) => c.pending,
+            Err(e) => return Response::error(500, &e.to_string()),
+        };
+        if pending >= self.opts.high_water {
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            self.log_event("http-reject", &[("pending", Json::Num(pending as f64))]);
+            let mut response = Response::json(
+                429,
+                Json::obj(vec![
+                    (
+                        "error",
+                        Json::Str(format!(
+                            "queue full: {pending} pending >= high-water {}",
+                            self.opts.high_water
+                        )),
+                    ),
+                    (
+                        "retry_after_secs",
+                        Json::Num(self.opts.retry_after_secs as f64),
+                    ),
+                ]),
+            );
+            response
+                .headers
+                .push(("Retry-After".into(), self.opts.retry_after_secs.to_string()));
+            return response;
+        }
+        match admit(&self.queue, &spec) {
+            Ok(Admission::Created { id }) => {
+                self.stats.created.fetch_add(1, Ordering::Relaxed);
+                self.log_event("http-created", &[("id", Json::Str(id.clone()))]);
+                Response::json(
+                    201,
+                    Json::obj(vec![
+                        ("id", Json::Str(id)),
+                        ("state", Json::Str("pending".into())),
+                        ("created", Json::Bool(true)),
+                    ]),
+                )
+            }
+            // Lost the spool race to an identical concurrent request.
+            Ok(Admission::Shared { id, state }) => self.respond_shared(&id, state),
+            Err(e) => Response::error(400, &e.to_string()),
+        }
+    }
+
+    /// The dedup-hit response: `200 OK`, the shared content-addressed id,
+    /// and where the job currently is in its lifecycle.
+    fn respond_shared(&self, id: &str, state: JobState) -> Response {
+        self.stats.shared.fetch_add(1, Ordering::Relaxed);
+        self.log_event(
+            "http-shared",
+            &[
+                ("id", Json::Str(id.to_string())),
+                ("state", Json::Str(state.as_str().into())),
+            ],
+        );
+        Response::json(
+            200,
+            Json::obj(vec![
+                ("id", Json::Str(id.to_string())),
+                ("state", Json::Str(state.as_str().into())),
+                ("created", Json::Bool(false)),
+            ]),
+        )
+    }
+
+    fn handle_status(&self, id: &str) -> Response {
+        match self.queue.state_of(id) {
+            None => Response::error(404, "unknown job id"),
+            Some(state) => {
+                let mut pairs = vec![
+                    ("id", Json::Str(id.to_string())),
+                    ("state", Json::Str(state.as_str().into())),
+                ];
+                if state == JobState::Failed {
+                    if let Ok(message) = self.queue.error(id) {
+                        pairs.push(("error", Json::Str(message)));
+                    }
+                }
+                Response::json(200, Json::obj(pairs))
+            }
+        }
+    }
+
+    /// `GET /jobs/<id>/result`: the `done/` record verbatim (the bytes a
+    /// direct spool reader would see), `202` while in flight, `500` with
+    /// the recorded error for failed jobs.
+    fn handle_result(&self, id: &str) -> Response {
+        match self.queue.state_of(id) {
+            None => Response::error(404, "unknown job id"),
+            Some(JobState::Done) => match self.queue.result_text(id) {
+                Ok(text) => Response::raw_json(200, text.into_bytes()),
+                Err(e) => Response::error(500, &e.to_string()),
+            },
+            Some(JobState::Failed) => {
+                let message = self
+                    .queue
+                    .error(id)
+                    .unwrap_or_else(|_| "job failed (no error record)".into());
+                Response::json(
+                    500,
+                    Json::obj(vec![
+                        ("id", Json::Str(id.to_string())),
+                        ("error", Json::Str(message)),
+                    ]),
+                )
+            }
+            Some(state) => Response::json(
+                202,
+                Json::obj(vec![
+                    ("id", Json::Str(id.to_string())),
+                    ("state", Json::Str(state.as_str().into())),
+                ]),
+            ),
+        }
+    }
+
+    /// `GET /metrics`: queue depths, front-end counters, and the engine's
+    /// merged estimator/cache/pool statistics — one JSON document.
+    fn handle_metrics(&self) -> Response {
+        let counts = match self.queue.counts() {
+            Ok(c) => c,
+            Err(e) => return Response::error(500, &e.to_string()),
+        };
+        let uptime = self.started.elapsed();
+        let metrics = self.ctx.pool_metrics();
+        let mut estimator = metrics.to_json();
+        if let Json::Obj(obj) = &mut estimator {
+            obj.insert(
+                "configs_per_sec".into(),
+                Json::Num(metrics.configs_per_sec(uptime)),
+            );
+        }
+        let cache = self.ctx.cache_stats();
+        let pool = self.ctx.pool_stats();
+        Response::json(
+            200,
+            Json::obj(vec![
+                ("uptime_ms", Json::Num(uptime.as_millis() as f64)),
+                (
+                    "queue",
+                    Json::obj(vec![
+                        ("pending", Json::Num(counts.pending as f64)),
+                        ("running", Json::Num(counts.running as f64)),
+                        ("done", Json::Num(counts.done as f64)),
+                        ("failed", Json::Num(counts.failed as f64)),
+                    ]),
+                ),
+                ("http", self.stats.to_json()),
+                ("estimator", estimator),
+                (
+                    "cache",
+                    Json::obj(vec![
+                        ("hits", Json::Num(cache.hits as f64)),
+                        ("misses", Json::Num(cache.misses as f64)),
+                        ("entries", Json::Num(cache.entries as f64)),
+                        ("store_hits", Json::Num(cache.store_hits as f64)),
+                        ("characterized", Json::Num(cache.characterized as f64)),
+                    ]),
+                ),
+                (
+                    "pool",
+                    Json::obj(vec![
+                        ("hits", Json::Num(pool.hits as f64)),
+                        ("spawned", Json::Num(pool.spawned as f64)),
+                        ("services", Json::Num(pool.services as f64)),
+                    ]),
+                ),
+            ]),
+        )
+    }
+
+    /// Append one event line to `server.log.jsonl` (best-effort, like the
+    /// runner's — observability must never fail a request).
+    fn log_event(&self, event: &str, fields: &[(&str, Json)]) {
+        let ts = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or(Duration::ZERO)
+            .as_millis() as u64;
+        let mut pairs =
+            vec![("ts_ms", Json::Num(ts as f64)), ("event", Json::Str(event.into()))];
+        for (k, v) in fields {
+            pairs.push((*k, v.clone()));
+        }
+        let line = Json::obj(pairs).to_string();
+        if let Ok(mut f) = self.log.lock() {
+            let _ = writeln!(f, "{line}");
+        }
+    }
+}
+
+/// Parse a `POST /jobs` body into a submittable spec: UTF-8 → JSON →
+/// [`JobSpec`] (unknown keys rejected by `from_json`), with client ids
+/// refused — identity is content-addressed on the server.
+fn parse_spec(body: &[u8]) -> std::result::Result<JobSpec, String> {
+    let text =
+        std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let value = Json::parse(text).map_err(|e| e.to_string())?;
+    let spec = JobSpec::from_json(&value).map_err(|e| e.to_string())?;
+    if !spec.id.is_empty() {
+        return Err(
+            "job ids are server-assigned (content-addressed); omit `id`".into()
+        );
+    }
+    // Validation needs an id; the placeholder never reaches the spool.
+    let mut candidate = spec.clone();
+    candidate.id = "candidate".into();
+    candidate.validate().map_err(|e| {
+        e.to_string().replace("job `candidate`", "job spec")
+    })?;
+    Ok(spec)
+}
+
+/// One parsed request (the subset of HTTP/1.1 this server understands).
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+/// Read one request from `stream`. Any protocol violation maps to the
+/// error response the caller should send (`400` for everything malformed,
+/// oversized, or chunked — this API has no patience for exotic clients).
+fn read_request(
+    stream: &mut &TcpStream,
+    max_body_bytes: usize,
+) -> std::result::Result<Request, Response> {
+    let bad = |message: &str| Err(Response::error(400, message));
+
+    // Head: everything up to the blank line, hard-capped.
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let head_len = loop {
+        if let Some(pos) = find_blank_line(&buf) {
+            break pos;
+        }
+        if buf.len() >= MAX_HEAD_BYTES {
+            return bad("request head exceeds 8 KiB");
+        }
+        let mut chunk = [0u8; 1024];
+        match stream.read(&mut chunk) {
+            Ok(0) => return bad("connection closed mid-request"),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) => return bad("read failed or timed out"),
+        }
+    };
+    let head = match std::str::from_utf8(&buf[..head_len]) {
+        Ok(h) => h.to_string(),
+        Err(_) => return bad("request head is not UTF-8"),
+    };
+    let mut lines = head.split("\r\n");
+
+    // Request line: METHOD SP PATH SP HTTP/1.x
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if parts.next().is_none() && !m.is_empty() => {
+            (m.to_string(), p.to_string(), v)
+        }
+        _ => return bad("malformed request line"),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return bad("only HTTP/1.x is supported");
+    }
+
+    // Headers: only Content-Length and Transfer-Encoding matter.
+    let mut content_length: Option<usize> = None;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return bad("malformed header line");
+        };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("transfer-encoding") {
+            return bad("chunked transfer encoding is not supported");
+        }
+        if name.eq_ignore_ascii_case("content-length") {
+            match value.parse::<usize>() {
+                Ok(n) => content_length = Some(n),
+                Err(_) => return bad("unparseable Content-Length"),
+            }
+        }
+    }
+
+    // Body: exactly Content-Length bytes (some may sit in the head read).
+    let body_len = match (method.as_str(), content_length) {
+        ("POST", None) => return bad("POST requires Content-Length"),
+        ("POST", Some(n)) if n > max_body_bytes => {
+            return bad(&format!("body exceeds {max_body_bytes} bytes"));
+        }
+        (_, n) => n.unwrap_or(0),
+    };
+    let mut body = buf[head_len + 4..].to_vec();
+    while body.len() < body_len {
+        let mut chunk = vec![0u8; (body_len - body.len()).min(4096)];
+        match stream.read(&mut chunk) {
+            Ok(0) => return bad("connection closed mid-body"),
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(_) => return bad("body read failed or timed out"),
+        }
+    }
+    body.truncate(body_len);
+    Ok(Request { method, path, body })
+}
+
+/// The head/body boundary (`\r\n\r\n`) position, if fully buffered.
+fn find_blank_line(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// An outgoing response (always `Connection: close`).
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON document response.
+    fn json(status: u16, value: Json) -> Response {
+        Response::raw_json(status, value.to_string().into_bytes())
+    }
+
+    /// Pre-serialized JSON bytes (the verbatim result pass-through).
+    fn raw_json(status: u16, body: Vec<u8>) -> Response {
+        Response { status, headers: Vec::new(), body }
+    }
+
+    /// The uniform error shape: `{"error": message}`.
+    fn error(status: u16, message: &str) -> Response {
+        Response::json(
+            status,
+            Json::obj(vec![("error", Json::Str(message.to_string()))]),
+        )
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            201 => "Created",
+            202 => "Accepted",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            429 => "Too Many Requests",
+            _ => "Internal Server Error",
+        }
+    }
+
+    fn write_to(&self, mut stream: &TcpStream) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\n\
+             content-length: {}\r\nconnection: close\r\n",
+            self.status,
+            self.reason(),
+            self.body.len()
+        );
+        for (name, value) in &self.headers {
+            head.push_str(&format!("{name}: {value}\r\n"));
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+/// A client-side response (the test/loadgen counterpart of [`Response`]).
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The body parsed as JSON.
+    pub fn json(&self) -> Result<Json> {
+        Ok(Json::parse(&self.body)?)
+    }
+}
+
+/// Minimal one-shot HTTP client over std sockets — what the integration
+/// tests, the load generator, and the CI smoke scripts (via curl) all
+/// exercise the server with. One request per connection, mirroring the
+/// server's `Connection: close`.
+pub fn http_call(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<HttpResponse> {
+    let fail = |what: &str, e: &dyn std::fmt::Display| {
+        Error::Coordinator(format!("http {method} {path}: {what}: {e}"))
+    };
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| fail("connect", &e))?;
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let payload = body.unwrap_or("");
+    let request = format!(
+        "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {}\r\n\
+         connection: close\r\n\r\n{payload}",
+        payload.len()
+    );
+    stream
+        .write_all(request.as_bytes())
+        .map_err(|e| fail("write", &e))?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).map_err(|e| fail("read", &e))?;
+    let text = String::from_utf8(raw)
+        .map_err(|e| fail("decode", &e))?;
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| fail("parse", &"no header/body boundary"))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| fail("parse", &format!("bad status line `{status_line}`")))?;
+    let headers = lines
+        .filter_map(|line| {
+            line.split_once(':')
+                .map(|(n, v)| (n.trim().to_string(), v.trim().to_string()))
+        })
+        .collect();
+    Ok(HttpResponse { status, headers, body: body.to_string() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expcfg::{ConssConfig, ExperimentConfig, SurrogateConfig};
+    use crate::surrogate::EstimatorBackend;
+    use crate::util::tempdir::TempDir;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            operator: "add8".into(),
+            surrogate: SurrogateConfig {
+                backend: EstimatorBackend::Table,
+                gbt_stages: None,
+            },
+            conss: ConssConfig {
+                forest_trees: Some(4),
+                noise_bits: 2,
+                ..Default::default()
+            },
+            ga: crate::expcfg::GaConfig {
+                pop_size: 10,
+                generations: 3,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    /// A front-end-only server on an OS-assigned port, plus its serving
+    /// thread. The heavyweight end-to-end suite lives in
+    /// `rust/tests/http_serve.rs`; these unit tests only exercise the
+    /// protocol layer, so no engine work runs.
+    fn frontend(
+        opts: HttpOptions,
+    ) -> (TempDir, Arc<HttpServer>, std::thread::JoinHandle<()>) {
+        let dir = TempDir::new().unwrap();
+        let queue = Arc::new(JobQueue::open(dir.path().join("jobs")).unwrap());
+        let ctx = Arc::new(EngineContext::new(tiny_cfg()));
+        let server = Arc::new(
+            HttpServer::bind(
+                ctx,
+                queue,
+                "127.0.0.1:0",
+                HttpOptions { workers: 0, ..opts },
+            )
+            .unwrap(),
+        );
+        let handle = {
+            let server = Arc::clone(&server);
+            std::thread::spawn(move || server.run().unwrap())
+        };
+        (dir, server, handle)
+    }
+
+    #[test]
+    fn protocol_surface_without_engine_work() {
+        let (_dir, server, handle) = frontend(HttpOptions::default());
+        let addr = server.local_addr().to_string();
+
+        let health = http_call(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(health.status, 200);
+        assert_eq!(
+            health.json().unwrap().get("status").and_then(Json::as_str),
+            Some("ok")
+        );
+        assert_eq!(health.header("connection"), Some("close"));
+
+        // Submit: created, then shared (dedup), each with the hash id.
+        let spec = r#"{"factors":[0.5],"ga":{"pop_size":4,"generations":2}}"#;
+        let created = http_call(&addr, "POST", "/jobs", Some(spec)).unwrap();
+        assert_eq!(created.status, 201, "{}", created.body);
+        let id = created
+            .json()
+            .unwrap()
+            .get("id")
+            .and_then(Json::as_str)
+            .unwrap()
+            .to_string();
+        assert!(id.starts_with('h') && id.len() == 17);
+        let shared = http_call(&addr, "POST", "/jobs", Some(spec)).unwrap();
+        assert_eq!(shared.status, 200);
+        assert_eq!(
+            shared.json().unwrap().get("id").and_then(Json::as_str),
+            Some(id.as_str())
+        );
+
+        // Status + result of the (unexecuted: workers = 0) job.
+        let status =
+            http_call(&addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+        assert_eq!(status.status, 200);
+        assert_eq!(
+            status.json().unwrap().get("state").and_then(Json::as_str),
+            Some("pending")
+        );
+        let result =
+            http_call(&addr, "GET", &format!("/jobs/{id}/result"), None).unwrap();
+        assert_eq!(result.status, 202, "in flight, not an error");
+
+        // Malformed bodies: 400, nothing spooled beyond our one job.
+        for bad in [
+            "not json",
+            r#"{"factrs":[0.5]}"#,
+            r#"{"factors":[2.5]}"#,
+            r#"{"factors":[]}"#,
+            r#"{"id":"mine","factors":[0.5]}"#,
+        ] {
+            let r = http_call(&addr, "POST", "/jobs", Some(bad)).unwrap();
+            assert_eq!(r.status, 400, "body {bad:?} → {}", r.body);
+        }
+
+        // Unknown routes and methods.
+        assert_eq!(http_call(&addr, "GET", "/nope", None).unwrap().status, 404);
+        assert_eq!(
+            http_call(&addr, "GET", "/jobs/unknown", None).unwrap().status,
+            404
+        );
+        assert_eq!(http_call(&addr, "DELETE", "/jobs", None).unwrap().status, 405);
+
+        // Metrics reflect what happened.
+        let metrics = http_call(&addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(metrics.status, 200);
+        let m = metrics.json().unwrap();
+        let http = m.get("http").unwrap();
+        assert_eq!(http.get("created").and_then(Json::as_u64), Some(1));
+        assert_eq!(http.get("shared").and_then(Json::as_u64), Some(1));
+        assert_eq!(http.get("dedup_hit_rate").and_then(Json::as_f64), Some(0.5));
+        assert!(http.get("bad_requests").and_then(Json::as_u64).unwrap() >= 5);
+        assert_eq!(
+            m.get("queue").and_then(|q| q.get("pending")).and_then(Json::as_u64),
+            Some(1)
+        );
+
+        server.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn backpressure_rejects_new_work_but_answers_duplicates() {
+        let (_dir, server, handle) =
+            frontend(HttpOptions { high_water: 1, ..Default::default() });
+        let addr = server.local_addr().to_string();
+
+        let first = r#"{"factors":[0.4]}"#;
+        assert_eq!(http_call(&addr, "POST", "/jobs", Some(first)).unwrap().status, 201);
+
+        // The queue is now at the high-water mark: new work bounces...
+        let second = http_call(&addr, "POST", "/jobs", Some(r#"{"factors":[0.9]}"#))
+            .unwrap();
+        assert_eq!(second.status, 429);
+        assert_eq!(second.header("retry-after"), Some("1"));
+        assert!(second
+            .json()
+            .unwrap()
+            .get("retry_after_secs")
+            .and_then(Json::as_u64)
+            .is_some());
+
+        // ...but a duplicate of the spooled job still shares (200), and
+        // the rejected spec was never spooled.
+        let dup = http_call(&addr, "POST", "/jobs", Some(first)).unwrap();
+        assert_eq!(dup.status, 200);
+        let m = http_call(&addr, "GET", "/metrics", None).unwrap().json().unwrap();
+        assert_eq!(
+            m.get("queue").and_then(|q| q.get("pending")).and_then(Json::as_u64),
+            Some(1),
+            "429 left the queue untouched"
+        );
+        assert_eq!(
+            m.get("http").and_then(|h| h.get("rejected")).and_then(Json::as_u64),
+            Some(1)
+        );
+
+        server.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn wire_level_protocol_rejections() {
+        let (_dir, server, handle) =
+            frontend(HttpOptions { max_body_bytes: 64, ..Default::default() });
+        let addr = server.local_addr().to_string();
+        let raw = |request: &str| -> u16 {
+            let mut stream = TcpStream::connect(&addr).unwrap();
+            stream.write_all(request.as_bytes()).unwrap();
+            let mut text = String::new();
+            stream.read_to_string(&mut text).unwrap();
+            text.split(' ').nth(1).unwrap().parse().unwrap()
+        };
+
+        // Chunked transfer encoding is refused outright.
+        assert_eq!(
+            raw("POST /jobs HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n"),
+            400
+        );
+        // POST without a Content-Length.
+        assert_eq!(raw("POST /jobs HTTP/1.1\r\n\r\n"), 400);
+        // Oversized body (declared 65 > cap 64): rejected before reading.
+        assert_eq!(
+            raw("POST /jobs HTTP/1.1\r\ncontent-length: 65\r\n\r\n"),
+            400
+        );
+        // Garbage request line and unsupported version.
+        assert_eq!(raw("ONE-FIELD\r\n\r\n"), 400);
+        assert_eq!(raw("GET /healthz HTTP/2.0\r\n\r\n"), 400);
+
+        server.shutdown();
+        handle.join().unwrap();
+    }
+}

@@ -29,16 +29,30 @@
 //!   lifecycle event to `server.log.jsonl`. `--drain` runs the queue to
 //!   empty and exits (the CI-testable mode); watch mode polls `pending/`
 //!   forever.
+//! * [`http`] — the [`HttpServer`]: a std-only `TcpListener` HTTP/1.1
+//!   front-end (`repro serve-http`) exposing the spool as a job API —
+//!   `POST /jobs`, `GET /jobs/<id>[/result]`, `/healthz`, `/metrics` —
+//!   with high-water-mark backpressure (`429` + `Retry-After`) and an
+//!   optional embedded exec loop.
+//! * [`dedup`] — content-addressed job identity: specs hash to
+//!   `h<fnv1a64>` ids (client ids stripped), so identical concurrent
+//!   requests collapse into one spooled job with many waiters and the
+//!   queue itself arbitrates the dedup race.
 //!
 //! Results are bit-identical to direct [`DseJob`](crate::engine::DseJob)
 //! runs: a job spec resolves to the same prepared state and the same
 //! deterministic searches, so queueing changes *when* work happens, never
-//! *what* it computes.
+//! *what* it computes — and a deduped HTTP result is byte-for-byte the
+//! record any direct spool reader sees.
 
+pub mod dedup;
+pub mod http;
 pub mod queue;
 pub mod runner;
 pub mod spec;
 
-pub use queue::{ClaimedJob, JobQueue, QueueCounts};
+pub use dedup::{canonical_hash, hash_id, Admission};
+pub use http::{http_call, HttpOptions, HttpResponse, HttpServer};
+pub use queue::{ClaimedJob, JobQueue, JobState, QueueCounts, Submission};
 pub use runner::{JobRunner, ServeOptions, ServeSummary, LOG_FILE};
 pub use spec::{FactorResult, JobResult, JobSpec};

@@ -41,6 +41,35 @@ pub struct ClaimedJob {
     pub path: PathBuf,
 }
 
+/// Lifecycle state of a spooled job (one per spool subdirectory).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    /// The spool subdirectory this state lives in.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Pending => "pending",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+/// Outcome of a [`JobQueue::try_submit`]: either the spec landed in
+/// `pending/`, or an identical id already lives somewhere in the spool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Submission {
+    Submitted(PathBuf),
+    Duplicate(JobState),
+}
+
 /// Point-in-time spool census (`pending` excludes in-flight temp files,
 /// `failed` excludes the `.error.json` records).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -77,6 +106,21 @@ impl JobQueue {
         self.sub(state).join(format!("{id}.json"))
     }
 
+    /// The most-advanced lifecycle state holding a spec (or result) for
+    /// `id`, if any. Checked newest-state first so a job observed mid
+    /// transition (briefly present in two directories) reports the state
+    /// it is moving *into*.
+    pub fn state_of(&self, id: &str) -> Option<JobState> {
+        for state in
+            [JobState::Done, JobState::Failed, JobState::Running, JobState::Pending]
+        {
+            if self.spec_path(state.as_str(), id).exists() {
+                return Some(state);
+            }
+        }
+        None
+    }
+
     /// Validate and enqueue `spec` into `pending/`. The id must be new to
     /// the whole spool — a duplicate in any lifecycle state is rejected so
     /// results are never silently overwritten. The spec is written to a
@@ -85,17 +129,24 @@ impl JobQueue {
     /// racing on one id get exactly one winner — the loser errors instead
     /// of silently replacing the winner's spec.
     pub fn submit(&self, spec: &JobSpec) -> Result<PathBuf> {
+        match self.try_submit(spec)? {
+            Submission::Submitted(path) => Ok(path),
+            Submission::Duplicate(state) => Err(Error::Config(format!(
+                "job id `{}` already present in {}/ — pick a fresh id",
+                spec.id,
+                state.as_str()
+            ))),
+        }
+    }
+
+    /// [`JobQueue::submit`] with the duplicate case reported as data
+    /// instead of an error — the HTTP dedup path treats "already spooled"
+    /// as a cache hit, not a failure. Same atomicity guarantee: when many
+    /// submitters race on one id, exactly one sees `Submitted`.
+    pub fn try_submit(&self, spec: &JobSpec) -> Result<Submission> {
         spec.validate()?;
-        let duplicate = |state: &str| {
-            Error::Config(format!(
-                "job id `{}` already present in {state}/ — pick a fresh id",
-                spec.id
-            ))
-        };
-        for state in QUEUE_SUBDIRS {
-            if self.spec_path(state, &spec.id).exists() {
-                return Err(duplicate(state));
-            }
+        if let Some(state) = self.state_of(&spec.id) {
+            return Ok(Submission::Duplicate(state));
         }
         let dest = self.spec_path("pending", &spec.id);
         let seq = SUBMIT_SEQ.fetch_add(1, Ordering::Relaxed);
@@ -106,9 +157,13 @@ impl JobQueue {
         let linked = std::fs::hard_link(&tmp, &dest);
         let _ = std::fs::remove_file(&tmp);
         match linked {
-            Ok(()) => Ok(dest),
+            Ok(()) => Ok(Submission::Submitted(dest)),
             Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                Err(duplicate("pending"))
+                // Lost the link race: the winner's spec may already be
+                // claimed, so report wherever it landed.
+                Ok(Submission::Duplicate(
+                    self.state_of(&spec.id).unwrap_or(JobState::Pending),
+                ))
             }
             Err(e) => Err(e.into()),
         }
@@ -132,20 +187,69 @@ impl JobQueue {
         Ok(out)
     }
 
+    /// Path of the claim sidecar recording which process holds a
+    /// `running/` spec (dot-prefixed, so spool listings skip it).
+    fn pid_path(&self, id: &str) -> PathBuf {
+        self.sub("running").join(format!(".{id}.pid"))
+    }
+
     /// Claim the oldest pending job (lexicographic id order) by renaming
     /// its spec into `running/`. `Ok(None)` when the queue is empty; a
-    /// concurrently-claimed file is skipped, not an error.
+    /// concurrently-claimed file is skipped, not an error. The winner
+    /// records its PID in a sidecar so [`JobQueue::requeue_stale`] can
+    /// prove a claim orphaned after a crash. The sidecar is written
+    /// *after* the rename — a crash in between leaks a sidecar-less claim,
+    /// which the sweep conservatively leaves alone.
     pub fn claim(&self) -> Result<Option<ClaimedJob>> {
         for id in self.ids_in("pending")? {
             let from = self.spec_path("pending", &id);
             let to = self.spec_path("running", &id);
             match std::fs::rename(&from, &to) {
-                Ok(()) => return Ok(Some(ClaimedJob { id, path: to })),
+                Ok(()) => {
+                    let _ = std::fs::write(
+                        self.pid_path(&id),
+                        std::process::id().to_string(),
+                    );
+                    return Ok(Some(ClaimedJob { id, path: to }));
+                }
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
                 Err(e) => return Err(e.into()),
             }
         }
         Ok(None)
+    }
+
+    /// Sweep `running/` for claims whose recorded holder PID provably no
+    /// longer runs (the dataset store's stale-lock probe applied to job
+    /// claims) and move those specs back into `pending/` for re-execution.
+    /// Missing or garbled sidecars are *not* provably stale and are left
+    /// alone. Returns the requeued ids. Meant for server start, before any
+    /// worker claims — jobs are deterministic, so re-running a half-done
+    /// job yields the same result the dead claimer would have recorded.
+    pub fn requeue_stale(&self) -> Result<Vec<String>> {
+        let mut requeued = Vec::new();
+        for id in self.ids_in("running")? {
+            let pid_path = self.pid_path(&id);
+            let dead = std::fs::read_to_string(&pid_path)
+                .ok()
+                .and_then(|text| text.trim().parse::<u32>().ok())
+                .is_some_and(crate::engine::store::pid_is_dead);
+            if !dead {
+                continue;
+            }
+            let from = self.spec_path("running", &id);
+            let to = self.spec_path("pending", &id);
+            match std::fs::rename(&from, &to) {
+                Ok(()) => {
+                    let _ = std::fs::remove_file(&pid_path);
+                    requeued.push(id);
+                }
+                // Another sweeper (or the job finishing late) beat us.
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(requeued)
     }
 
     /// Record a completed job: result written to `done/<id>.json` (temp +
@@ -157,6 +261,7 @@ impl JobQueue {
         std::fs::rename(&tmp, &dest)?;
         // The consumed spec; a missing file (crash replay) is fine.
         let _ = std::fs::remove_file(self.spec_path("running", id));
+        let _ = std::fs::remove_file(self.pid_path(id));
         Ok(dest)
     }
 
@@ -167,6 +272,7 @@ impl JobQueue {
         // The spec may be gone (e.g. it never parsed and was consumed by a
         // crash); the error record is the part that must land.
         let _ = std::fs::rename(self.spec_path("running", id), &spec_dest);
+        let _ = std::fs::remove_file(self.pid_path(id));
         let record = Json::obj(vec![
             ("id", Json::Str(id.to_string())),
             ("error", Json::Str(error.to_string())),
@@ -180,7 +286,14 @@ impl JobQueue {
 
     /// Parse the recorded result of a completed job.
     pub fn result(&self, id: &str) -> Result<JobResult> {
-        JobResult::parse(&std::fs::read_to_string(self.spec_path("done", id))?)
+        JobResult::parse(&self.result_text(id)?)
+    }
+
+    /// The recorded result exactly as written to `done/<id>.json` — the
+    /// HTTP result endpoint serves this pass-through, so a network client
+    /// reads bit-identical bytes to a direct spool reader.
+    pub fn result_text(&self, id: &str) -> Result<String> {
+        Ok(std::fs::read_to_string(self.spec_path("done", id))?)
     }
 
     /// The recorded error message of a failed job.
@@ -348,5 +461,105 @@ mod tests {
         );
         assert_eq!(q.done_ids().unwrap(), vec!["ok"]);
         assert_eq!(q.failed_ids().unwrap(), vec!["sad"], "error record not counted");
+    }
+
+    #[test]
+    fn state_of_tracks_the_lifecycle() {
+        let (_dir, q) = queue();
+        assert_eq!(q.state_of("j"), None);
+        q.submit(&JobSpec::new("j", vec![0.5])).unwrap();
+        assert_eq!(q.state_of("j"), Some(JobState::Pending));
+        let job = q.claim().unwrap().unwrap();
+        assert_eq!(q.state_of("j"), Some(JobState::Running));
+        let result = JobResult {
+            id: job.id.clone(),
+            operator: crate::operator::Operator::ADD8,
+            factors: Vec::new(),
+            wall_ms: 1,
+        };
+        q.complete(&job.id, &result).unwrap();
+        assert_eq!(q.state_of("j"), Some(JobState::Done));
+    }
+
+    #[test]
+    fn try_submit_reports_duplicates_as_data() {
+        let (_dir, q) = queue();
+        let spec = JobSpec::new("dup", vec![0.5]);
+        match q.try_submit(&spec).unwrap() {
+            Submission::Submitted(path) => assert!(path.ends_with("pending/dup.json")),
+            other => panic!("expected Submitted, got {other:?}"),
+        }
+        assert_eq!(
+            q.try_submit(&spec).unwrap(),
+            Submission::Duplicate(JobState::Pending)
+        );
+        q.claim().unwrap().unwrap();
+        assert_eq!(
+            q.try_submit(&spec).unwrap(),
+            Submission::Duplicate(JobState::Running)
+        );
+        // An invalid spec is still an error, not a Duplicate.
+        assert!(q.try_submit(&JobSpec::new("", vec![0.5])).is_err());
+    }
+
+    #[test]
+    fn requeue_stale_revives_only_provably_dead_claims() {
+        let (_dir, q) = queue();
+        for id in ["dead", "live", "bare"] {
+            q.submit(&JobSpec::new(id, vec![0.5])).unwrap();
+        }
+        while q.claim().unwrap().is_some() {}
+        assert_eq!(q.counts().unwrap().running, 3);
+        // Fake a crashed claimer: PID u32::MAX can't exist (PID_MAX_LIMIT
+        // is 2^22 on Linux). "live" keeps our real PID; "bare" loses its
+        // sidecar, as a claimer crashing mid-claim would leave it.
+        std::fs::write(q.pid_path("dead"), u32::MAX.to_string()).unwrap();
+        std::fs::remove_file(q.pid_path("bare")).unwrap();
+
+        let requeued = q.requeue_stale().unwrap();
+        if cfg!(target_os = "linux") {
+            assert_eq!(requeued, vec!["dead"]);
+            assert_eq!(q.state_of("dead"), Some(JobState::Pending));
+            assert!(!q.pid_path("dead").exists(), "sidecar cleaned up");
+        } else {
+            assert!(requeued.is_empty(), "no liveness probe off-linux");
+        }
+        assert_eq!(q.state_of("live"), Some(JobState::Running));
+        assert_eq!(q.state_of("bare"), Some(JobState::Running));
+
+        // The revived spec is claimable again and completes normally.
+        if cfg!(target_os = "linux") {
+            let job = q.claim().unwrap().unwrap();
+            assert_eq!(job.id, "dead");
+            let result = JobResult {
+                id: job.id.clone(),
+                operator: crate::operator::Operator::ADD8,
+                factors: Vec::new(),
+                wall_ms: 1,
+            };
+            q.complete(&job.id, &result).unwrap();
+            assert_eq!(q.state_of("dead"), Some(JobState::Done));
+        }
+    }
+
+    #[test]
+    fn completed_jobs_leave_no_pid_sidecars() {
+        let (_dir, q) = queue();
+        q.submit(&JobSpec::new("a", vec![0.5])).unwrap();
+        let job = q.claim().unwrap().unwrap();
+        assert!(q.pid_path("a").exists(), "claim records its holder");
+        let result = JobResult {
+            id: job.id.clone(),
+            operator: crate::operator::Operator::ADD8,
+            factors: Vec::new(),
+            wall_ms: 1,
+        };
+        q.complete(&job.id, &result).unwrap();
+        assert!(!q.pid_path("a").exists());
+
+        q.submit(&JobSpec::new("b", vec![0.5])).unwrap();
+        let job = q.claim().unwrap().unwrap();
+        q.fail(&job.id, "synthetic").unwrap();
+        assert!(!q.pid_path("b").exists());
     }
 }

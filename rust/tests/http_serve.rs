@@ -1,0 +1,285 @@
+//! HTTP front-end integration tests: loopback end-to-end submit → drain →
+//! result round trips that are bit-identical to direct `DseJob` runs,
+//! concurrent duplicate submissions collapsing onto one spooled job with
+//! many waiters, protocol rejections (`400`) that never spool, and
+//! backpressure (`429`) that leaves the queue untouched.
+
+use repro::engine::{DseJob, EngineContext};
+use repro::expcfg::{ConssConfig, ExperimentConfig, GaConfig, SurrogateConfig};
+use repro::serve::{
+    http_call, HttpOptions, HttpServer, JobQueue, JobResult, LOG_FILE,
+};
+use repro::surrogate::EstimatorBackend;
+use repro::util::json::Json;
+use repro::util::tempdir::TempDir;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Homogeneous fast configuration: exhaustive add8, exact-table surrogate
+/// (the `serve_jobs` idiom — small enough for end-to-end execution).
+fn add8_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        operator: "add8".into(),
+        surrogate: SurrogateConfig { backend: EstimatorBackend::Table, gbt_stages: None },
+        conss: ConssConfig { forest_trees: Some(4), noise_bits: 2, ..Default::default() },
+        ga: GaConfig { pop_size: 10, generations: 3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// A running server over a fresh spool: queue handle, bound address, and
+/// the serving thread (joined via `stop`).
+struct Harness {
+    _dir: TempDir,
+    queue: Arc<JobQueue>,
+    server: Arc<HttpServer>,
+    addr: String,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl Harness {
+    fn start(opts: HttpOptions) -> Harness {
+        let dir = TempDir::new().unwrap();
+        let queue = Arc::new(JobQueue::open(dir.path().join("jobs")).unwrap());
+        let ctx = Arc::new(EngineContext::new(add8_cfg()));
+        let server = Arc::new(
+            HttpServer::bind(ctx, Arc::clone(&queue), "127.0.0.1:0", opts).unwrap(),
+        );
+        let addr = server.local_addr().to_string();
+        let handle = {
+            let server = Arc::clone(&server);
+            std::thread::spawn(move || server.run().unwrap())
+        };
+        Harness { _dir: dir, queue, server, addr, handle }
+    }
+
+    /// Poll `GET /jobs/<id>` until the job reaches `done` (panicking on
+    /// `failed` or timeout — both mean the pipeline is broken).
+    fn wait_done(&self, id: &str) {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            let status =
+                http_call(&self.addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+            assert_eq!(status.status, 200, "{}", status.body);
+            let state = status
+                .json()
+                .unwrap()
+                .get("state")
+                .and_then(Json::as_str)
+                .unwrap()
+                .to_string();
+            match state.as_str() {
+                "done" => return,
+                "failed" => panic!(
+                    "job {id} failed: {}",
+                    http_call(&self.addr, "GET", &format!("/jobs/{id}/result"), None)
+                        .map(|r| r.body)
+                        .unwrap_or_default()
+                ),
+                _ if Instant::now() > deadline => {
+                    panic!("job {id} stuck in `{state}`")
+                }
+                _ => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+
+    fn stop(self) {
+        self.server.shutdown();
+        self.handle.join().unwrap();
+    }
+}
+
+#[test]
+fn http_round_trip_is_bit_identical_to_direct_runs() {
+    // Direct ground truth: the same two factor jobs on a fresh engine.
+    let direct = EngineContext::new(add8_cfg());
+    let prep = direct.prepare_dse_for(repro::operator::Operator::ADD8).unwrap();
+    let want = prep.run_many(&[DseJob::new(0.6), DseJob::new(0.9)]).unwrap();
+
+    // Served: the equivalent spec over HTTP, drained by the embedded
+    // exec loop, result fetched back over HTTP.
+    let h = Harness::start(HttpOptions { workers: 2, ..Default::default() });
+    let spec = r#"{"factors":[0.6,0.9],"operator":"add8"}"#;
+    let created = http_call(&h.addr, "POST", "/jobs", Some(spec)).unwrap();
+    assert_eq!(created.status, 201, "{}", created.body);
+    let id = created
+        .json()
+        .unwrap()
+        .get("id")
+        .and_then(Json::as_str)
+        .unwrap()
+        .to_string();
+    h.wait_done(&id);
+
+    let fetched =
+        http_call(&h.addr, "GET", &format!("/jobs/{id}/result"), None).unwrap();
+    assert_eq!(fetched.status, 200);
+    // The HTTP body is the done/ record verbatim...
+    assert_eq!(fetched.body, h.queue.result_text(&id).unwrap());
+    // ...and its hypervolumes are bit-identical to the direct runs.
+    let result = JobResult::parse(&fetched.body).unwrap();
+    assert_eq!(result.id, id);
+    assert_eq!(result.factors.len(), 2);
+    for (got, direct) in result.factors.iter().zip(&want) {
+        assert_eq!(got.factor, direct.factor);
+        assert_eq!(got.hv_train.to_bits(), direct.hv_train.to_bits());
+        assert_eq!(got.hv_conss.to_bits(), direct.hv_conss.to_bits());
+        assert_eq!(got.hv_ga.to_bits(), direct.ga.final_hypervolume().to_bits());
+        assert_eq!(
+            got.hv_conss_ga.to_bits(),
+            direct.conss_ga.final_hypervolume().to_bits()
+        );
+        assert_eq!(got.evaluations_ga, direct.ga.evaluations);
+        assert_eq!(got.evaluations_conss_ga, direct.conss_ga.evaluations);
+        assert!(got.hv_conss_ga > 0.0, "nonzero hypervolume");
+    }
+
+    // A resubmission after completion is a pure cache hit: 200, shared
+    // id, state done, no new queue entry.
+    let replay = http_call(&h.addr, "POST", "/jobs", Some(spec)).unwrap();
+    assert_eq!(replay.status, 200);
+    let replay = replay.json().unwrap();
+    assert_eq!(replay.get("id").and_then(Json::as_str), Some(id.as_str()));
+    assert_eq!(replay.get("state").and_then(Json::as_str), Some("done"));
+    assert_eq!(h.queue.done_ids().unwrap(), vec![id]);
+
+    h.stop();
+}
+
+#[test]
+fn concurrent_duplicates_spool_one_job_with_many_waiters() {
+    let h = Harness::start(HttpOptions { workers: 2, ..Default::default() });
+    // Eight clients race byte-different spellings of identical work
+    // (key order and float formatting vary; canonical hashing unifies).
+    let spellings = [
+        r#"{"factors":[0.7],"operator":"add8","ga_seed":5}"#,
+        r#"{"ga_seed":5,"operator":"add8","factors":[0.70]}"#,
+    ];
+    let responses: Vec<(u16, String)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|k| {
+                let addr = h.addr.as_str();
+                let body = spellings[k % 2];
+                s.spawn(move || {
+                    let r = http_call(addr, "POST", "/jobs", Some(body)).unwrap();
+                    let id = r
+                        .json()
+                        .unwrap()
+                        .get("id")
+                        .and_then(Json::as_str)
+                        .unwrap()
+                        .to_string();
+                    (r.status, id)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|t| t.join().unwrap()).collect()
+    });
+
+    let created = responses.iter().filter(|(s, _)| *s == 201).count();
+    let shared = responses.iter().filter(|(s, _)| *s == 200).count();
+    assert_eq!(created, 1, "exactly one creator: {responses:?}");
+    assert_eq!(shared, 7, "everyone else shares");
+    let id = responses[0].1.clone();
+    assert!(responses.iter().all(|(_, i)| *i == id), "one shared id");
+
+    // One spooled job, executed once.
+    h.wait_done(&id);
+    assert_eq!(h.queue.done_ids().unwrap(), vec![id.clone()]);
+    let log = std::fs::read_to_string(h.queue.dir().join(LOG_FILE)).unwrap();
+    let claims = log
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .filter(|e| {
+            e.get("event").and_then(Json::as_str) == Some("claim")
+                && e.get("id").and_then(Json::as_str) == Some(id.as_str())
+        })
+        .count();
+    assert_eq!(claims, 1, "deduped job claimed exactly once");
+
+    // Every waiter reads the same result bytes.
+    let a = http_call(&h.addr, "GET", &format!("/jobs/{id}/result"), None).unwrap();
+    let b = http_call(&h.addr, "GET", &format!("/jobs/{id}/result"), None).unwrap();
+    assert_eq!(a.status, 200);
+    assert_eq!(a.body, b.body);
+
+    h.stop();
+}
+
+#[test]
+fn protocol_rejections_never_spool() {
+    let h = Harness::start(HttpOptions {
+        workers: 0,
+        max_body_bytes: 256,
+        ..Default::default()
+    });
+    let cases: Vec<(String, &str)> = vec![
+        ("{not json".into(), "malformed JSON"),
+        (r#"{"factrs":[0.5]}"#.into(), "unknown key"),
+        (r#"{"factors":[0.5],"ga":{"popsize":4}}"#.into(), "unknown nested key"),
+        (r#"{"factors":[1.5]}"#.into(), "factor out of range"),
+        (r#"{"factors":[]}"#.into(), "no factors"),
+        (r#"{"id":"mine","factors":[0.5]}"#.into(), "client-supplied id"),
+        (
+            // Oversized: a valid spec bloated past max_body_bytes.
+            format!(r#"{{"factors":[0.5],"ga_seed":1{}}}"#, " ".repeat(300)),
+            "oversized body",
+        ),
+    ];
+    for (body, what) in &cases {
+        let r = http_call(&h.addr, "POST", "/jobs", Some(body)).unwrap();
+        assert_eq!(r.status, 400, "{what}: {}", r.body);
+    }
+    let counts = h.queue.counts().unwrap();
+    assert_eq!(counts.pending, 0, "no rejected body reached the spool");
+    assert_eq!(counts.running + counts.done + counts.failed, 0);
+
+    let m = http_call(&h.addr, "GET", "/metrics", None).unwrap().json().unwrap();
+    assert_eq!(
+        m.get("http").and_then(|x| x.get("bad_requests")).and_then(Json::as_u64),
+        Some(cases.len() as u64)
+    );
+
+    h.stop();
+}
+
+#[test]
+fn backpressure_rejects_without_touching_the_queue() {
+    let h = Harness::start(HttpOptions {
+        workers: 0, // nothing drains: pending depth is fully controlled
+        high_water: 2,
+        retry_after_secs: 3,
+        ..Default::default()
+    });
+    let specs = [
+        r#"{"factors":[0.2],"ga_seed":1}"#,
+        r#"{"factors":[0.4],"ga_seed":2}"#,
+        r#"{"factors":[0.6],"ga_seed":3}"#,
+    ];
+    assert_eq!(http_call(&h.addr, "POST", "/jobs", Some(specs[0])).unwrap().status, 201);
+    assert_eq!(http_call(&h.addr, "POST", "/jobs", Some(specs[1])).unwrap().status, 201);
+
+    // At the high-water mark: new work bounces with the retry hint...
+    let rejected = http_call(&h.addr, "POST", "/jobs", Some(specs[2])).unwrap();
+    assert_eq!(rejected.status, 429);
+    assert_eq!(rejected.header("retry-after"), Some("3"));
+    assert_eq!(
+        rejected.json().unwrap().get("retry_after_secs").and_then(Json::as_u64),
+        Some(3)
+    );
+    // ...repeatably (the rejected spec was not spooled on the way out).
+    assert_eq!(http_call(&h.addr, "POST", "/jobs", Some(specs[2])).unwrap().status, 429);
+    assert_eq!(h.queue.counts().unwrap().pending, 2, "queue untouched by 429s");
+
+    // Duplicates of spooled jobs are still served under full load.
+    let dup = http_call(&h.addr, "POST", "/jobs", Some(specs[0])).unwrap();
+    assert_eq!(dup.status, 200);
+    assert_eq!(
+        dup.json().unwrap().get("state").and_then(Json::as_str),
+        Some("pending")
+    );
+    assert_eq!(h.queue.counts().unwrap().pending, 2);
+
+    h.stop();
+}
