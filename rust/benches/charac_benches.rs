@@ -1,12 +1,46 @@
 //! Characterization throughput benches (feeds EXPERIMENTS.md §Perf L3 and
 //! the Table II reproduction cost numbers).
 //!
+//! The BEHAV cases run every batch twice — scalar oracle vs the bit-sliced
+//! default — and the suite stamps `BENCH_charac.json` with a `speedup`
+//! object (scalar mean / bitslice mean per pair) so the bit-slicing win is
+//! recorded in the perf trajectory. CI's bench-smoke job uploads the stamp.
+//!
 //! Run: `cargo bench --bench charac_benches`
 
-use repro::charac::{behav, characterize, Backend, InputSet};
+use repro::charac::behav::{adder_behav_with, mult_behav, mult_behav_bitslice};
+use repro::charac::{
+    characterize, characterize_sharded_as, Backend, BehavBackend, InputSet,
+};
 use repro::operator::{adder, multiplier, AxoConfig, Operator};
 use repro::util::bench::Bench;
+use repro::util::json::Json;
 use repro::util::rng::Rng;
+
+/// (stamp key, scalar bench, bitslice bench) — the pairs the `speedup`
+/// object is computed from.
+const SPEEDUP_PAIRS: [(&str, &str, &str); 4] = [
+    (
+        "adder8_behav",
+        "adder8/behav_scalar_64cfg_x65536",
+        "adder8/behav_bitslice_64cfg_x65536",
+    ),
+    (
+        "mul8_behav",
+        "mul8/behav_scalar_64cfg_x65536",
+        "mul8/behav_bitslice_64cfg_x65536",
+    ),
+    (
+        "add8_sharded",
+        "charac/add8_sharded64_scalar",
+        "charac/add8_sharded64_bitslice",
+    ),
+    (
+        "mul8_sharded",
+        "charac/mul8_sharded64_scalar",
+        "charac/mul8_sharded64_bitslice",
+    ),
+];
 
 fn main() {
     let mut b = Bench::new();
@@ -21,7 +55,8 @@ fn main() {
     let (a4, b4) = multiplier::exhaustive_inputs(4);
     b.bench("mul4/term_matrix_256", || multiplier::term_matrix(4, &a4, &b4));
 
-    // Batched native BEHAV characterization.
+    // Batched native BEHAV characterization, scalar oracle vs bit-sliced
+    // default over identical batches (cold: no pipeline, no estimator).
     let inputs8 = InputSet::exhaustive(Operator::ADD8);
     let a8: Vec<u32> = inputs8.a.iter().map(|&v| v as u32).collect();
     let b8: Vec<u32> = inputs8.b.iter().map(|&v| v as u32).collect();
@@ -29,7 +64,12 @@ fn main() {
         let mut rng = Rng::seed_from_u64(1);
         AxoConfig::sample_unique(8, 64, &mut rng)
     };
-    b.bench("adder8/behav_64cfg_x65536", || behav::adder_behav(&cfgs64, &a8, &b8));
+    b.bench("adder8/behav_scalar_64cfg_x65536", || {
+        adder_behav_with(&cfgs64, &a8, &b8, BehavBackend::Scalar)
+    });
+    b.bench("adder8/behav_bitslice_64cfg_x65536", || {
+        adder_behav_with(&cfgs64, &a8, &b8, BehavBackend::Bitslice)
+    });
 
     let inputs_m8 = InputSet::exhaustive(Operator::MUL8);
     let terms = multiplier::term_matrix(8, &inputs_m8.a, &inputs_m8.b);
@@ -37,7 +77,55 @@ fn main() {
         let mut rng = Rng::seed_from_u64(2);
         AxoConfig::sample_unique(36, 64, &mut rng)
     };
-    b.bench("mul8/behav_64cfg_x65536", || behav::mult_behav(&mcfgs, &terms, 36));
+    b.bench("mul8/behav_scalar_64cfg_x65536", || {
+        mult_behav(&mcfgs, &terms, 36)
+    });
+    b.bench("mul8/behav_bitslice_64cfg_x65536", || {
+        mult_behav_bitslice(8, &mcfgs, &inputs_m8.a, &inputs_m8.b)
+    });
+
+    // The same comparison through the sharded pipeline (BEHAV + synthesis
+    // estimator + dataset assembly), the path the engine cache pays.
+    b.bench("charac/add8_sharded64_scalar", || {
+        characterize_sharded_as(
+            Operator::ADD8,
+            &cfgs64,
+            &inputs8,
+            16,
+            BehavBackend::Scalar,
+        )
+        .unwrap()
+    });
+    b.bench("charac/add8_sharded64_bitslice", || {
+        characterize_sharded_as(
+            Operator::ADD8,
+            &cfgs64,
+            &inputs8,
+            16,
+            BehavBackend::Bitslice,
+        )
+        .unwrap()
+    });
+    b.bench("charac/mul8_sharded64_scalar", || {
+        characterize_sharded_as(
+            Operator::MUL8,
+            &mcfgs,
+            &inputs_m8,
+            16,
+            BehavBackend::Scalar,
+        )
+        .unwrap()
+    });
+    b.bench("charac/mul8_sharded64_bitslice", || {
+        characterize_sharded_as(
+            Operator::MUL8,
+            &mcfgs,
+            &inputs_m8,
+            16,
+            BehavBackend::Bitslice,
+        )
+        .unwrap()
+    });
 
     // Full pipeline (BEHAV + synthesis estimator) per Table II row.
     let inputs4 = InputSet::exhaustive(Operator::ADD4);
@@ -78,4 +166,26 @@ fn main() {
     println!("(built without the `pjrt` feature — skipping PJRT benches)");
 
     b.finish();
+
+    // Stamp the results plus the scalar/bitslice speedups.
+    let mean = |name: &str| {
+        b.results().iter().find(|r| r.name == name).map(|r| r.mean_ns)
+    };
+    let mut speedup = std::collections::BTreeMap::new();
+    for (key, scalar, bitslice) in SPEEDUP_PAIRS {
+        if let (Some(s), Some(v)) = (mean(scalar), mean(bitslice)) {
+            if v > 0.0 {
+                let ratio = s / v;
+                println!("speedup {key:<14} {ratio:.2}x (scalar/bitslice)");
+                speedup.insert(key.to_string(), Json::Num(ratio));
+            }
+        }
+    }
+    let mut stamp = b.to_json();
+    if let Json::Obj(map) = &mut stamp {
+        map.insert("speedup".into(), Json::Obj(speedup));
+    }
+    let path = std::path::Path::new("BENCH_charac.json");
+    std::fs::write(path, stamp.to_string()).expect("write BENCH_charac.json");
+    println!("wrote {}", path.display());
 }

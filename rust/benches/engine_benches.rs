@@ -4,10 +4,11 @@
 //! `Seeded` spec (scaled down) — and the serve-mode overhead case (the
 //! same jobs direct vs spooled through the file queue + JobRunner). CI's
 //! bench-smoke job runs this suite with `REPRO_BENCH_SMOKE=1` and uploads
-//! the stamps; the suite itself writes `BENCH_charac.json` and
-//! `BENCH_serve.json` so the characterization speedups and the queueing
+//! the stamps; the suite itself writes `BENCH_store.json` and
+//! `BENCH_serve.json` so the store-path timings and the queueing
 //! overhead are recorded in the perf trajectory alongside
-//! BENCH_engine.json.
+//! BENCH_engine.json (the scalar-vs-bitslice characterization speedups
+//! land in `BENCH_charac.json`, stamped by `charac_benches`).
 //!
 //! Run: `cargo bench --bench engine_benches`
 
@@ -89,8 +90,8 @@ fn main() {
         operator: "mul8".into(),
         train_samples: MUL8_SAMPLES,
         artifacts_dir: tmp.path().to_path_buf(),
-        charac: CharacConfig { shard_size: SHARD },
-        store: StoreConfig { enabled: Some(true), dir: None },
+        charac: CharacConfig { shard_size: SHARD, ..Default::default() },
+        store: StoreConfig { enabled: Some(true), ..Default::default() },
         ..cfg()
     };
     EngineContext::new(store_cfg.clone())
@@ -104,8 +105,8 @@ fn main() {
     });
 
     b.finish();
-    let stamp = std::path::Path::new("BENCH_charac.json");
-    b.write_json(stamp).expect("write BENCH_charac.json");
+    let stamp = std::path::Path::new("BENCH_store.json");
+    b.write_json(stamp).expect("write BENCH_store.json");
     println!("wrote {}", stamp.display());
 
     // Serve-mode overhead: the same three single-factor jobs run direct

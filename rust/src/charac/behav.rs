@@ -4,7 +4,24 @@
 //! `avg_abs_rel_err` divides by `max(|exact|, 1)` to avoid the zero-output
 //! singularity. Column order is shared with the Pallas kernel and the
 //! golden fixtures.
+//!
+//! Two native backends compute the same metrics bit-for-bit
+//! ([`BehavBackend`]): the per-vector *scalar* path (the verification
+//! oracle) and the default *bit-sliced* path, which evaluates 64 test
+//! vectors per operation in `u64` lanes via [`crate::operator::bitslice`]
+//! and never materializes the per-vector output plane — for the 8×8
+//! multiplier it also skips the ~19 MB i32 term-matrix stream entirely,
+//! reconstructing `exact − approx` as the signed sum of the *removed*
+//! partial-product planes. Equivalence rests on three invariants, asserted
+//! by `rust/tests/behav_bitslice.rs`:
+//! - absolute-error sums are exact integers in f64, so a per-block popcount
+//!   sum lands on the identical float as per-vector accumulation;
+//! - zero-error vectors contribute `+0.0` to the (non-negative) relative
+//!   sum — the additive identity — so only nonzero lanes are folded;
+//! - [`MetricAccumulator`] stripes its float sums by `index % STRIPES`, so
+//!   both backends perform the identical rounding sequence per stripe.
 
+use crate::operator::bitslice::{self, BitMatrix};
 use crate::operator::{adder, multiplier, AxoConfig, Operator, OperatorKind};
 use crate::util::par::parallel_map_dynamic;
 
@@ -46,12 +63,63 @@ impl BehavMetrics {
     }
 }
 
+/// Which native implementation computes BEHAV metrics. Both produce
+/// bit-identical [`BehavMetrics`]; the scalar path is the oracle the
+/// bit-sliced default is verified against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BehavBackend {
+    /// Per-vector evaluation (`adder::eval_one`, i32 term-matrix scan).
+    Scalar,
+    /// 64 vectors per operation in u64 lanes (`operator::bitslice`).
+    Bitslice,
+}
+
+impl BehavBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            BehavBackend::Scalar => "scalar",
+            BehavBackend::Bitslice => "bitslice",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<BehavBackend> {
+        match s {
+            "scalar" => Some(BehavBackend::Scalar),
+            "bitslice" => Some(BehavBackend::Bitslice),
+            _ => None,
+        }
+    }
+
+    /// Resolution order: the `REPRO_BEHAV` escape hatch, then the caller's
+    /// preference (typically `[charac] behav` from expcfg), then the
+    /// bit-sliced default.
+    pub fn resolve(preferred: Option<BehavBackend>) -> BehavBackend {
+        if let Ok(v) = std::env::var("REPRO_BEHAV") {
+            match BehavBackend::from_name(v.trim()) {
+                Some(b) => return b,
+                None => eprintln!(
+                    "warning: ignoring invalid REPRO_BEHAV={v:?} \
+                     (expected `scalar` or `bitslice`)"
+                ),
+            }
+        }
+        preferred.unwrap_or(BehavBackend::Bitslice)
+    }
+}
+
+/// Independent accumulation lanes inside [`MetricAccumulator`]: vector `t`
+/// folds into stripe `t % STRIPES`, and `finalize` reduces the stripes in a
+/// fixed tree. Striping breaks the serial f64-add latency chain that would
+/// otherwise bound the scalar hot loop *and* pins an accumulation order
+/// both backends reproduce exactly (see the module docs).
+const STRIPES: usize = 4;
+
 /// Streaming accumulator — lets backends fold (exact, approx) pairs without
 /// materializing the (B, T) output plane.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct MetricAccumulator {
-    sum_abs: f64,
-    sum_rel: f64,
+    sum_abs: [f64; STRIPES],
+    sum_rel: [f64; STRIPES],
     max_abs: f64,
     n_err: u64,
     n: u64,
@@ -61,8 +129,9 @@ impl MetricAccumulator {
     #[inline]
     pub fn push(&mut self, exact: i64, approx: i64) {
         let err = (exact - approx).abs() as f64;
-        self.sum_abs += err;
-        self.sum_rel += err / (exact.abs().max(1) as f64);
+        let k = (self.n as usize) & (STRIPES - 1);
+        self.sum_abs[k] += err;
+        self.sum_rel[k] += err / (exact.abs().max(1) as f64);
         if err > self.max_abs {
             self.max_abs = err;
         }
@@ -74,8 +143,9 @@ impl MetricAccumulator {
     /// reciprocal of `max(|exact|, 1)` (§Perf L3-2).
     #[inline]
     pub fn push_with_recip(&mut self, err: f64, recip: f64) {
-        self.sum_abs += err;
-        self.sum_rel += err * recip;
+        let k = (self.n as usize) & (STRIPES - 1);
+        self.sum_abs[k] += err;
+        self.sum_rel[k] += err * recip;
         if err > self.max_abs {
             self.max_abs = err;
         }
@@ -83,26 +153,106 @@ impl MetricAccumulator {
         self.n += 1;
     }
 
+    /// Bit-sliced fold of one 64-lane block of integer |err| magnitudes.
+    ///
+    /// `errs[t]` carries the magnitude of lane `t` in bits
+    /// `shift..shift + MAG_BITS`; `nonzero` masks the lanes with any error
+    /// (never a padding lane). Bit-identical to `lanes` ordered
+    /// [`push_with_recip`] calls: the integer block sum is folded whole
+    /// (exact in f64), zero lanes are skipped (`+0.0` is the identity on
+    /// these non-negative sums), and nonzero lanes land in the same stripe,
+    /// in the same order, as the scalar path.
+    #[inline]
+    pub(crate) fn push_block(
+        &mut self,
+        errs: &[u64; 64],
+        shift: u32,
+        mut nonzero: u64,
+        lanes: usize,
+        recip: &[f64],
+    ) {
+        debug_assert_eq!(recip.len(), lanes);
+        let base = self.n as usize;
+        let mut block_sum = 0u64;
+        let mut block_max = 0u64;
+        while nonzero != 0 {
+            let t = nonzero.trailing_zeros() as usize;
+            nonzero &= nonzero - 1;
+            let e = (errs[t] >> shift) & 0xFFFF;
+            block_sum += e;
+            if e > block_max {
+                block_max = e;
+            }
+            self.sum_rel[(base + t) & (STRIPES - 1)] += e as f64 * recip[t];
+            self.n_err += 1;
+        }
+        self.sum_abs[0] += block_sum as f64;
+        let m = block_max as f64;
+        if m > self.max_abs {
+            self.max_abs = m;
+        }
+        self.n += lanes as u64;
+    }
+
+    /// Bit-sliced fold of a block with no erring lanes.
+    #[inline]
+    pub(crate) fn push_zero_block(&mut self, lanes: usize) {
+        self.n += lanes as u64;
+    }
+
     pub fn finalize(&self) -> BehavMetrics {
         let n = self.n.max(1) as f64;
+        let sum_abs =
+            (self.sum_abs[0] + self.sum_abs[1]) + (self.sum_abs[2] + self.sum_abs[3]);
+        let sum_rel =
+            (self.sum_rel[0] + self.sum_rel[1]) + (self.sum_rel[2] + self.sum_rel[3]);
         BehavMetrics {
-            avg_abs_err: self.sum_abs / n,
-            avg_abs_rel_err: self.sum_rel / n,
+            avg_abs_err: sum_abs / n,
+            avg_abs_rel_err: sum_rel / n,
             max_abs_err: self.max_abs,
             err_prob: self.n_err as f64 / n,
         }
     }
 }
 
-/// Native BEHAV metrics for a batch of adder configurations.
-///
 /// §Perf L3-3: exact sums and relative-error reciprocals depend only on
 /// the shared input set — computed once per batch instead of per config.
+fn adder_exact_recip(a: &[u32], b: &[u32]) -> (Vec<i64>, Vec<f64>) {
+    let exact: Vec<i64> =
+        a.iter().zip(b).map(|(&x, &y)| (x as i64) + (y as i64)).collect();
+    let recip: Vec<f64> = exact.iter().map(|&e| 1.0 / (e.max(1) as f64)).collect();
+    (exact, recip)
+}
+
+/// Native BEHAV metrics for a batch of adder configurations, on the backend
+/// chosen by [`BehavBackend::resolve`] (bit-sliced unless overridden).
+pub fn adder_behav(configs: &[AxoConfig], a: &[u32], b: &[u32]) -> Vec<BehavMetrics> {
+    adder_behav_with(configs, a, b, BehavBackend::resolve(None))
+}
+
+/// [`adder_behav`] with an explicit backend.
+pub fn adder_behav_with(
+    configs: &[AxoConfig],
+    a: &[u32],
+    b: &[u32],
+    backend: BehavBackend,
+) -> Vec<BehavMetrics> {
+    match backend {
+        BehavBackend::Scalar => adder_behav_scalar(configs, a, b),
+        BehavBackend::Bitslice => adder_behav_bitslice(configs, a, b),
+    }
+}
+
+/// Scalar oracle: per-vector `adder::eval_one` scan.
+///
 /// Grain 1: each config scans the whole input set, so per-chunk cursor
 /// overhead is negligible and work-stealing rebalances stragglers.
-pub fn adder_behav(configs: &[AxoConfig], a: &[u32], b: &[u32]) -> Vec<BehavMetrics> {
-    let exact: Vec<i64> = a.iter().zip(b).map(|(&x, &y)| (x as i64) + (y as i64)).collect();
-    let recip: Vec<f64> = exact.iter().map(|&e| 1.0 / (e.max(1) as f64)).collect();
+pub fn adder_behav_scalar(
+    configs: &[AxoConfig],
+    a: &[u32],
+    b: &[u32],
+) -> Vec<BehavMetrics> {
+    let (exact, recip) = adder_exact_recip(a, b);
     parallel_map_dynamic(configs, 1, |_, cfg| {
         let mut acc = MetricAccumulator::default();
         for (((&ai, &bi), &ex), &r) in a.iter().zip(b).zip(&exact).zip(&recip) {
@@ -113,8 +263,90 @@ pub fn adder_behav(configs: &[AxoConfig], a: &[u32], b: &[u32]) -> Vec<BehavMetr
     })
 }
 
+/// Bit-sliced adder path: operands are packed once per batch; per config,
+/// the MUXCY recurrence, the exact/approx borrow-subtract and the |err|
+/// fold all run on whole 64-lane planes. Magnitude planes of
+/// `GROUP_BLOCKS` blocks share one unpack transpose.
+pub fn adder_behav_bitslice(
+    configs: &[AxoConfig],
+    a: &[u32],
+    b: &[u32],
+) -> Vec<BehavMetrics> {
+    assert_eq!(a.len(), b.len());
+    let n_bits = configs.first().map_or(0, |c| c.len() as usize);
+    let w = n_bits + 1;
+    assert!(
+        w <= bitslice::MAG_BITS,
+        "bitsliced adder caps at {} bits",
+        bitslice::MAG_BITS - 1
+    );
+    let (_, recip) = adder_exact_recip(a, b);
+    let am = BitMatrix::pack(a.len(), n_bits, |t| a[t] as u64);
+    let bm = BitMatrix::pack(b.len(), n_bits, |t| b[t] as u64);
+    let n_blocks = am.n_blocks();
+    // Exact-sum planes are config-independent: one ripple per block, shared
+    // by the whole batch.
+    let mut xplanes = vec![0u64; n_blocks * w];
+    for (blk, x) in xplanes.chunks_exact_mut(w).enumerate() {
+        bitslice::exact_sum_planes(am.block(blk), bm.block(blk), x);
+    }
+    parallel_map_dynamic(configs, 1, |_, cfg| {
+        assert_eq!(cfg.len() as usize, n_bits, "mixed config widths in one batch");
+        let mut keep = [0u64; bitslice::MAG_BITS];
+        for (i, k) in keep.iter_mut().enumerate().take(n_bits) {
+            *k = if cfg.keeps(i as u32) { !0u64 } else { 0 };
+        }
+        let mut acc = MetricAccumulator::default();
+        let mut approx = [0u64; bitslice::MAG_BITS];
+        let mut group = [0u64; 64];
+        let mut errs = [0u64; 64];
+        let mut nzs = [0u64; bitslice::GROUP_BLOCKS];
+        let mut blk = 0usize;
+        while blk < n_blocks {
+            let gn = (n_blocks - blk).min(bitslice::GROUP_BLOCKS);
+            let mut any = 0u64;
+            for g in 0..gn {
+                let bi = blk + g;
+                bitslice::approx_sum_planes(
+                    am.block(bi),
+                    bm.block(bi),
+                    &keep[..n_bits],
+                    &mut approx[..w],
+                );
+                nzs[g] = bitslice::abs_diff_into(
+                    &xplanes[bi * w..(bi + 1) * w],
+                    &approx[..w],
+                    &mut group[g * bitslice::MAG_BITS..(g + 1) * bitslice::MAG_BITS],
+                );
+                any |= nzs[g];
+            }
+            if any != 0 {
+                bitslice::unpack64(&group, &mut errs);
+            }
+            for g in 0..gn {
+                let bi = blk + g;
+                let lanes = am.lanes_in(bi);
+                if nzs[g] == 0 {
+                    acc.push_zero_block(lanes);
+                } else {
+                    acc.push_block(
+                        &errs,
+                        (g * bitslice::MAG_BITS) as u32,
+                        nzs[g],
+                        lanes,
+                        &recip[bi * 64..bi * 64 + lanes],
+                    );
+                }
+            }
+            blk += gn;
+        }
+        acc.finalize()
+    })
+}
+
 /// Native BEHAV metrics for a batch of multiplier configurations, given the
-/// precomputed `(T, L)` term matrix (shared across the batch).
+/// precomputed `(T, L)` term matrix (shared across the batch). This is the
+/// scalar oracle path; [`mult_behav_bitslice`] is the default.
 ///
 /// Perf (EXPERIMENTS.md §Perf L3-1): the straightforward i64 scan streams
 /// ~19 MB of term matrix per configuration. Narrowing to i32 (every term
@@ -150,23 +382,138 @@ pub fn mult_behav(configs: &[AxoConfig], terms: &[i64], l: usize) -> Vec<BehavMe
     accs.iter().map(|a| a.finalize()).collect()
 }
 
-/// Dispatch over operator kind with the operator's default input set.
+/// Two's-complement plane accumulator width for the multiplier's removed
+/// terms: |any partial sum| ≤ (2^M − 1)² < 2^16, so 17 signed bits suffice
+/// — one spare plane keeps the top strictly sign-extended.
+const ACC_PLANES: usize = bitslice::MAG_BITS + 2;
+
+/// Bit-sliced multiplier path, straight from the operands — the term
+/// matrix is never built. Since `Σ all terms == a·b` exactly, the error of
+/// a config is the signed sum of its *removed* terms; each removed LUT
+/// `(i, j)` contributes its `a_i·b_j` AND plane(s) at weight ±2^(i+j) into
+/// a per-block plane accumulator, whose |·| feeds the shared metric fold.
+pub fn mult_behav_bitslice(
+    m_bits: u32,
+    configs: &[AxoConfig],
+    a: &[i64],
+    b: &[i64],
+) -> Vec<BehavMetrics> {
+    assert_eq!(a.len(), b.len());
+    assert!(
+        m_bits <= 8,
+        "bitsliced multiplier magnitudes must fit {} planes",
+        bitslice::MAG_BITS
+    );
+    let m = m_bits as usize;
+    let l = m * (m + 1) / 2;
+    let opmask = (1u64 << m_bits) - 1;
+    let exact: Vec<i64> = a.iter().zip(b).map(|(&x, &y)| x * y).collect();
+    let recip: Vec<f64> = exact.iter().map(|&e| 1.0 / (e.abs().max(1) as f64)).collect();
+    // Low m bits of the two's-complement operands — same `au`/`bu` as
+    // `multiplier::terms_one`.
+    let am = BitMatrix::pack(a.len(), m, |t| (a[t] as u64) & opmask);
+    let bm = BitMatrix::pack(b.len(), m, |t| (b[t] as u64) & opmask);
+    let pairs = multiplier::pairs(m_bits);
+    let n_blocks = am.n_blocks();
+    parallel_map_dynamic(configs, 1, |_, cfg| {
+        assert_eq!(cfg.len() as usize, l, "config length != L for mul{m_bits}");
+        // (shift, i, j, negative) of every term this config removes.
+        let removed: Vec<(usize, usize, usize, bool)> = pairs
+            .iter()
+            .enumerate()
+            .filter(|&(k, _)| !cfg.keeps(k as u32))
+            .map(|(_, &(i, j))| {
+                let neg = (i == m_bits - 1) != (j == m_bits - 1);
+                (i as usize + j as usize, i as usize, j as usize, neg)
+            })
+            .collect();
+        let mut acc = MetricAccumulator::default();
+        let mut group = [0u64; 64];
+        let mut errs = [0u64; 64];
+        let mut nzs = [0u64; bitslice::GROUP_BLOCKS];
+        let mut blk = 0usize;
+        while blk < n_blocks {
+            let gn = (n_blocks - blk).min(bitslice::GROUP_BLOCKS);
+            let mut any = 0u64;
+            for g in 0..gn {
+                let (ap, bp) = (am.block(blk + g), bm.block(blk + g));
+                let mut w_acc = [0u64; ACC_PLANES];
+                for &(shift, i, j, neg) in &removed {
+                    if neg {
+                        bitslice::acc_sub(&mut w_acc, ap[i] & bp[j], shift);
+                        if i != j {
+                            bitslice::acc_sub(&mut w_acc, ap[j] & bp[i], shift);
+                        }
+                    } else {
+                        bitslice::acc_add(&mut w_acc, ap[i] & bp[j], shift);
+                        if i != j {
+                            bitslice::acc_add(&mut w_acc, ap[j] & bp[i], shift);
+                        }
+                    }
+                }
+                nzs[g] = bitslice::abs_acc_into(
+                    &w_acc,
+                    &mut group[g * bitslice::MAG_BITS..(g + 1) * bitslice::MAG_BITS],
+                );
+                any |= nzs[g];
+            }
+            if any != 0 {
+                bitslice::unpack64(&group, &mut errs);
+            }
+            for g in 0..gn {
+                let bi = blk + g;
+                let lanes = am.lanes_in(bi);
+                if nzs[g] == 0 {
+                    acc.push_zero_block(lanes);
+                } else {
+                    acc.push_block(
+                        &errs,
+                        (g * bitslice::MAG_BITS) as u32,
+                        nzs[g],
+                        lanes,
+                        &recip[bi * 64..bi * 64 + lanes],
+                    );
+                }
+            }
+            blk += gn;
+        }
+        acc.finalize()
+    })
+}
+
+/// Dispatch over operator kind with the operator's default input set, on
+/// the backend chosen by [`BehavBackend::resolve`].
 pub fn native_behav(
     op: Operator,
     configs: &[AxoConfig],
     inputs: &super::InputSet,
 ) -> Vec<BehavMetrics> {
+    native_behav_with(op, configs, inputs, BehavBackend::resolve(None))
+}
+
+/// [`native_behav`] with an explicit backend.
+pub fn native_behav_with(
+    op: Operator,
+    configs: &[AxoConfig],
+    inputs: &super::InputSet,
+    backend: BehavBackend,
+) -> Vec<BehavMetrics> {
     match op.kind {
         OperatorKind::UnsignedAdder => {
             let a: Vec<u32> = inputs.a.iter().map(|&v| v as u32).collect();
             let b: Vec<u32> = inputs.b.iter().map(|&v| v as u32).collect();
-            adder_behav(configs, &a, &b)
+            adder_behav_with(configs, &a, &b, backend)
         }
-        OperatorKind::SignedMultiplier => {
-            let l = op.config_len() as usize;
-            let terms = multiplier::term_matrix(op.bits, &inputs.a, &inputs.b);
-            mult_behav(configs, &terms, l)
-        }
+        OperatorKind::SignedMultiplier => match backend {
+            BehavBackend::Scalar => {
+                let l = op.config_len() as usize;
+                let terms = multiplier::term_matrix(op.bits, &inputs.a, &inputs.b);
+                mult_behav(configs, &terms, l)
+            }
+            BehavBackend::Bitslice => {
+                mult_behav_bitslice(op.bits, configs, &inputs.a, &inputs.b)
+            }
+        },
     }
 }
 
@@ -178,12 +525,26 @@ mod tests {
     #[test]
     fn accurate_configs_have_zero_error() {
         let inputs = InputSet::exhaustive(Operator::ADD4);
-        let m = native_behav(Operator::ADD4, &[AxoConfig::accurate(4)], &inputs);
-        assert_eq!(m[0], BehavMetrics::ZERO);
+        for backend in [BehavBackend::Scalar, BehavBackend::Bitslice] {
+            let m = native_behav_with(
+                Operator::ADD4,
+                &[AxoConfig::accurate(4)],
+                &inputs,
+                backend,
+            );
+            assert_eq!(m[0], BehavMetrics::ZERO, "{}", backend.name());
+        }
 
         let inputs = InputSet::exhaustive(Operator::MUL4);
-        let m = native_behav(Operator::MUL4, &[AxoConfig::accurate(10)], &inputs);
-        assert_eq!(m[0], BehavMetrics::ZERO);
+        for backend in [BehavBackend::Scalar, BehavBackend::Bitslice] {
+            let m = native_behav_with(
+                Operator::MUL4,
+                &[AxoConfig::accurate(10)],
+                &inputs,
+                backend,
+            );
+            assert_eq!(m[0], BehavMetrics::ZERO, "{}", backend.name());
+        }
     }
 
     #[test]
@@ -209,9 +570,11 @@ mod tests {
             .iter()
             .map(|&k| AxoConfig::accurate(8).flipped(k).unwrap())
             .collect();
-        let m = adder_behav(&cfgs, &a, &b);
-        assert!(m[0].avg_abs_err < m[1].avg_abs_err);
-        assert!(m[1].avg_abs_err < m[2].avg_abs_err);
+        for backend in [BehavBackend::Scalar, BehavBackend::Bitslice] {
+            let m = adder_behav_with(&cfgs, &a, &b, backend);
+            assert!(m[0].avg_abs_err < m[1].avg_abs_err, "{}", backend.name());
+            assert!(m[1].avg_abs_err < m[2].avg_abs_err, "{}", backend.name());
+        }
     }
 
     #[test]
@@ -225,5 +588,22 @@ mod tests {
             acc.push(a * b, multiplier::eval_one(4, &cfg, a, b));
         }
         assert_eq!(fast, acc.finalize());
+    }
+
+    #[test]
+    fn backend_names_round_trip() {
+        for b in [BehavBackend::Scalar, BehavBackend::Bitslice] {
+            assert_eq!(BehavBackend::from_name(b.name()), Some(b));
+        }
+        assert_eq!(BehavBackend::from_name("pallas"), None);
+        // The env escape hatch outranks the preference, which outranks the
+        // bit-sliced default — only assertable when the env is not set.
+        if std::env::var_os("REPRO_BEHAV").is_none() {
+            assert_eq!(BehavBackend::resolve(None), BehavBackend::Bitslice);
+            assert_eq!(
+                BehavBackend::resolve(Some(BehavBackend::Scalar)),
+                BehavBackend::Scalar
+            );
+        }
     }
 }

@@ -14,9 +14,10 @@ pub mod dataset;
 pub mod inputs;
 pub mod pipeline;
 
-pub use behav::BehavMetrics;
+pub use behav::{BehavBackend, BehavMetrics};
 pub use dataset::Dataset;
 pub use inputs::InputSet;
 pub use pipeline::{
-    characterize, characterize_all, characterize_sharded, shard_ranges, Backend,
+    characterize, characterize_all, characterize_all_as, characterize_as,
+    characterize_sharded, characterize_sharded_as, shard_ranges, Backend,
 };

@@ -6,6 +6,7 @@
 //! pipeline does not depend on the runtime module (and tests can inject
 //! failing/fake evaluators).
 
+use super::behav::BehavBackend;
 use super::{behav, BehavMetrics, Dataset, InputSet};
 use crate::error::Result;
 use crate::operator::{AxoConfig, Operator};
@@ -86,6 +87,19 @@ pub fn characterize(
     Dataset::new(op, configs.to_vec(), behav, ppa)
 }
 
+/// [`characterize`] on the native backend with an explicit BEHAV
+/// implementation (bit-sliced vs the scalar oracle).
+pub fn characterize_as(
+    op: Operator,
+    configs: &[AxoConfig],
+    inputs: &InputSet,
+    behav: BehavBackend,
+) -> Result<Dataset> {
+    let behav = behav::native_behav_with(op, configs, inputs, behav);
+    let ppa = synth::ppa_batch(op, configs);
+    Dataset::new(op, configs.to_vec(), behav, ppa)
+}
+
 /// Characterize the operator's *entire* design space (exhaustive operators
 /// only — panics for the 8×8 multiplier, which must be sampled).
 pub fn characterize_all(
@@ -96,6 +110,18 @@ pub fn characterize_all(
     assert!(op.exhaustive(), "{op} design space must be sampled, not enumerated");
     let configs: Vec<AxoConfig> = AxoConfig::enumerate(op.config_len()).collect();
     characterize(op, &configs, inputs, backend)
+}
+
+/// [`characterize_all`] on the native backend with an explicit BEHAV
+/// implementation.
+pub fn characterize_all_as(
+    op: Operator,
+    inputs: &InputSet,
+    behav: BehavBackend,
+) -> Result<Dataset> {
+    assert!(op.exhaustive(), "{op} design space must be sampled, not enumerated");
+    let configs: Vec<AxoConfig> = AxoConfig::enumerate(op.config_len()).collect();
+    characterize_as(op, &configs, inputs, behav)
 }
 
 /// Deterministic contiguous shard ranges covering `0..n`: every shard but
@@ -126,12 +152,24 @@ pub fn characterize_sharded(
     inputs: &InputSet,
     shard_size: usize,
 ) -> Result<Dataset> {
+    characterize_sharded_as(op, configs, inputs, shard_size, BehavBackend::resolve(None))
+}
+
+/// [`characterize_sharded`] with an explicit BEHAV implementation (the
+/// engine threads `[charac] behav` through here).
+pub fn characterize_sharded_as(
+    op: Operator,
+    configs: &[AxoConfig],
+    inputs: &InputSet,
+    shard_size: usize,
+    behav: BehavBackend,
+) -> Result<Dataset> {
     let ranges = shard_ranges(configs.len(), shard_size);
     if ranges.len() <= 1 {
-        return characterize(op, configs, inputs, &Backend::Native);
+        return characterize_as(op, configs, inputs, behav);
     }
     let shards = crate::util::par::parallel_map_dynamic(&ranges, 1, |_, r| {
-        characterize(op, &configs[r.clone()], inputs, &Backend::Native)
+        characterize_as(op, &configs[r.clone()], inputs, behav)
     });
     let mut all = Vec::with_capacity(configs.len());
     let mut behav = Vec::with_capacity(configs.len());

@@ -27,7 +27,8 @@
 
 use super::store::DatasetStore;
 use crate::charac::{
-    characterize, characterize_all, characterize_sharded, Backend, Dataset, InputSet,
+    characterize_all_as, characterize_as, characterize_sharded_as, BehavBackend, Dataset,
+    InputSet,
 };
 use crate::coordinator::{EstimatorService, MetricsSnapshot};
 use crate::error::{Error, Result};
@@ -225,6 +226,14 @@ impl EngineContext {
         self.store.as_ref()
     }
 
+    /// The resolved native BEHAV implementation this context characterizes
+    /// with (`REPRO_BEHAV` env > `[charac] behav` > bit-sliced default).
+    /// Both implementations are bit-identical, so the choice never keys
+    /// the dataset cache or the persistent store.
+    pub fn behav_backend(&self) -> BehavBackend {
+        BehavBackend::resolve(self.cfg.charac.behav)
+    }
+
     /// The default sample spec for `op` under this configuration:
     /// exhaustive where enumerable, else the seeded `train_samples` draw
     /// (paper §V-B — only the 8×8 multiplier space needs sampling).
@@ -302,12 +311,19 @@ impl EngineContext {
         spec: SampleSpec,
         inputs: &InputSet,
     ) -> Result<Dataset> {
+        let behav = self.behav_backend();
         match spec {
-            SampleSpec::Exhaustive => characterize_all(op, inputs, &Backend::Native),
+            SampleSpec::Exhaustive => characterize_all_as(op, inputs, behav),
             SampleSpec::Seeded { seed, n } => {
                 let mut rng = Rng::seed_from_u64(seed);
                 let cfgs = AxoConfig::sample_unique(op.config_len(), n, &mut rng);
-                characterize_sharded(op, &cfgs, inputs, self.cfg.charac.shard_size)
+                characterize_sharded_as(
+                    op,
+                    &cfgs,
+                    inputs,
+                    self.cfg.charac.shard_size,
+                    behav,
+                )
             }
         }
     }
@@ -317,7 +333,7 @@ impl EngineContext {
     /// (the inputs they share *are* cached per operator).
     pub fn validate(&self, op: Operator, configs: &[AxoConfig]) -> Result<Dataset> {
         let inputs = self.inputs(op)?;
-        characterize(op, configs, &inputs, &Backend::Native)
+        characterize_as(op, configs, &inputs, self.behav_backend())
     }
 
     /// The shared estimator service for the configured operator, spawned on

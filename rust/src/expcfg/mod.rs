@@ -168,11 +168,26 @@ impl ExperimentConfig {
                     cfg.charac.shard_size =
                         value.as_usize().ok_or_else(|| bad(key, "an integer"))?
                 }
+                "charac.behav" => {
+                    let s = get_str(key, value)?;
+                    cfg.charac.behav = Some(
+                        crate::charac::BehavBackend::from_name(&s)
+                            .ok_or_else(|| bad(key, "scalar|bitslice"))?,
+                    );
+                }
                 "store.enabled" => {
                     cfg.store.enabled =
                         Some(value.as_bool().ok_or_else(|| bad(key, "a boolean"))?)
                 }
                 "store.dir" => cfg.store.dir = Some(PathBuf::from(get_str(key, value)?)),
+                "store.max_bytes" => {
+                    cfg.store.max_bytes = Some(
+                        value
+                            .as_i64()
+                            .and_then(|v| u64::try_from(v).ok())
+                            .ok_or_else(|| bad(key, "a non-negative integer"))?,
+                    )
+                }
                 "serve.workers" => {
                     cfg.serve.workers =
                         value.as_usize().ok_or_else(|| bad(key, "an integer"))?
@@ -237,6 +252,9 @@ impl ExperimentConfig {
         }
         if self.charac.shard_size == 0 {
             return Err(Error::Config("charac.shard_size must be > 0".into()));
+        }
+        if self.store.max_bytes == Some(0) {
+            return Err(Error::Config("store.max_bytes must be > 0".into()));
         }
         if self.serve.workers == 0 {
             return Err(Error::Config("serve.workers must be > 0".into()));
@@ -339,11 +357,16 @@ pub struct CharacConfig {
     /// split across the worker pool. The shard plan is a pure function of
     /// `(n, shard_size)`, so results are bit-identical for any value.
     pub shard_size: usize,
+    /// Native BEHAV implementation preference (`scalar` | `bitslice`).
+    /// `None` = the resolved default (bit-sliced); the `REPRO_BEHAV` env
+    /// escape hatch outranks this either way. Both produce bit-identical
+    /// metrics, so this is a perf/debug knob, not a semantic one.
+    pub behav: Option<crate::charac::BehavBackend>,
 }
 
 impl Default for CharacConfig {
     fn default() -> Self {
-        CharacConfig { shard_size: 512 }
+        CharacConfig { shard_size: 512, behav: None }
     }
 }
 
@@ -358,6 +381,10 @@ pub struct StoreConfig {
     pub enabled: Option<bool>,
     /// Store directory; `None` = `artifacts_dir/datasets`.
     pub dir: Option<PathBuf>,
+    /// Byte budget for LRU eviction: `repro store gc` falls back to it,
+    /// and the serve loops (`serve-dse --watch`, `serve-http`) garbage
+    /// collect against it periodically while idle. `None` = unbounded.
+    pub max_bytes: Option<u64>,
 }
 
 impl StoreConfig {
@@ -510,10 +537,12 @@ max_wait_us = 500
 
 [charac]
 shard_size = 64
+behav = "scalar"
 
 [store]
 enabled = true
 dir = "/tmp/ds"
+max_bytes = 1000000
 
 [serve]
 workers = 4
@@ -536,9 +565,11 @@ max_body_bytes = 4096
         assert_eq!(c.service.max_batch, 128);
         assert_eq!(c.service.to_batch_options().max_wait.as_micros(), 500);
         assert_eq!(c.charac.shard_size, 64);
+        assert_eq!(c.charac.behav, Some(crate::charac::BehavBackend::Scalar));
         assert_eq!(c.store.enabled, Some(true));
         assert!(c.store.is_enabled());
         assert_eq!(c.store.dir_under(Path::new("a")), PathBuf::from("/tmp/ds"));
+        assert_eq!(c.store.max_bytes, Some(1_000_000));
         assert_eq!(c.serve.workers, 4);
         assert_eq!(c.serve.poll().as_millis(), 50);
         assert_eq!(c.serve.dir_under(Path::new("a")), PathBuf::from("/tmp/jobs"));
@@ -601,8 +632,15 @@ max_body_bytes = 4096
             PathBuf::from("artifacts").join("datasets")
         );
         assert_eq!(c.charac.shard_size, 512);
+        assert_eq!(c.charac.behav, None, "backend choice is resolved, not baked in");
+        assert_eq!(c.store.max_bytes, None, "store is unbounded unless budgeted");
         let c = ExperimentConfig {
-            charac: CharacConfig { shard_size: 0 },
+            charac: CharacConfig { shard_size: 0, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+        let c = ExperimentConfig {
+            store: StoreConfig { max_bytes: Some(0), ..Default::default() },
             ..Default::default()
         };
         assert!(c.validate().is_err());

@@ -17,7 +17,8 @@ use repro::matching::{DistanceKind, Matcher};
 use repro::operator::{AxoConfig, Operator};
 use repro::report::Harness;
 use repro::serve::{
-    HttpOptions, HttpServer, JobQueue, JobRunner, JobSpec, ServeOptions, LOG_FILE,
+    HttpOptions, HttpServer, JobQueue, JobRunner, JobSpec, RequeueReport, ServeOptions,
+    LOG_FILE, MAX_REVIVALS,
 };
 use repro::surrogate::{EstimatorBackend, Surrogate, TableSurrogate};
 use repro::util::rng::Rng;
@@ -60,7 +61,9 @@ COMMANDS:
   store <action>       Persistent dataset store maintenance:
                          ls (list entries + total size), clear (delete all),
                          verify (re-hash + re-parse every entry),
-                         gc --max-bytes N (LRU-by-mtime eviction)
+                         gc [--max-bytes N] (LRU-by-mtime eviction; defaults
+                         to [store] max_bytes, which serve-dse --watch and
+                         serve-http also GC against while idle)
   verify               Cross-check the PJRT runtime against the native model
   quickstart           Tiny end-to-end tour of the API
 
@@ -205,7 +208,14 @@ fn cmd_store(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
         "gc" => {
             let max_bytes: u64 = parsed
                 .opt_parse("max-bytes")?
-                .ok_or_else(|| Error::Config("store gc needs --max-bytes N".into()))?;
+                .or(cfg.store.max_bytes)
+                .ok_or_else(|| {
+                    Error::Config(
+                        "store gc needs --max-bytes N (or [store] max_bytes in the \
+                         config)"
+                            .into(),
+                    )
+                })?;
             let report = store.gc(max_bytes)?;
             for slug in &report.evicted {
                 println!("evicted {slug}");
@@ -322,9 +332,7 @@ fn cmd_serve_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
         return Err(Error::Config("pass either --drain or --watch, not both".into()));
     }
     let queue = JobQueue::open(cfg.serve.dir_under(&cfg.artifacts_dir))?;
-    for id in queue.requeue_stale()? {
-        println!("requeued orphaned job `{id}` (claiming process is gone)");
-    }
+    print_requeue_report(&queue.requeue_stale()?);
     let opts = ServeOptions {
         workers: parsed.opt_parse("workers")?.unwrap_or(cfg.serve.workers),
         max_jobs: parsed.opt_parse("max-jobs")?,
@@ -381,13 +389,24 @@ fn cmd_serve_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     Ok(())
 }
 
+/// Narrate one start-of-server stale-claim sweep.
+fn print_requeue_report(report: &RequeueReport) {
+    for id in &report.requeued {
+        println!("requeued orphaned job `{id}` (claiming process is gone)");
+    }
+    for id in &report.quarantined {
+        println!(
+            "quarantined crash-looping job `{id}` after {MAX_REVIVALS} revivals \
+             — see failed/"
+        );
+    }
+}
+
 /// The HTTP front-end: bind, sweep orphaned claims, serve until killed.
 fn cmd_serve_http(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     let queue =
         std::sync::Arc::new(JobQueue::open(cfg.serve.dir_under(&cfg.artifacts_dir))?);
-    for id in queue.requeue_stale()? {
-        println!("requeued orphaned job `{id}` (claiming process is gone)");
-    }
+    print_requeue_report(&queue.requeue_stale()?);
     let opts = HttpOptions {
         threads: parsed.opt_parse("http-threads")?.unwrap_or(cfg.http.threads),
         workers: parsed.opt_parse("workers")?.unwrap_or(cfg.serve.workers),

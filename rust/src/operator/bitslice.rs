@@ -1,0 +1,410 @@
+//! Bit-sliced (64-lane) evaluation primitives for the operator models.
+//!
+//! The approximate adder and Baugh-Wooley multiplier are gate-level boolean
+//! circuits, so the classic bit-slicing transform applies: transpose the
+//! input set so that *plane* `i` is a `u64` whose bit `t` is bit `i` of test
+//! vector `t`, then run the circuit's boolean recurrences on whole planes —
+//! one pass evaluates 64 vectors. [`BitMatrix`] holds the packed planes in
+//! 64-lane blocks; the plane-level evaluators below mirror
+//! [`adder::eval_one`](super::adder::eval_one) and the removed-term algebra
+//! of [`multiplier::terms_one`](super::multiplier::terms_one) exactly, and
+//! `charac::behav` folds the resulting |err| planes into metrics.
+//!
+//! Layout invariants shared with `charac::behav`:
+//! - blocks are 64 consecutive vectors; the tail block is zero-padded, and
+//!   padding lanes always evaluate to zero error (0 ⊕ 0 under any config);
+//! - error magnitudes fit [`MAG_BITS`] planes (asserted), so the magnitude
+//!   planes of [`GROUP_BLOCKS`] blocks tile one 64×64 transpose, amortizing
+//!   the unpack cost across four blocks.
+
+/// Bit-planes per error magnitude: adders up to 15 bits (`n + 1` sum
+/// planes) and multipliers up to 8×8 (|err| ≤ 255² < 2¹⁶) fit 16 planes.
+pub const MAG_BITS: usize = 16;
+
+/// Blocks whose magnitude planes share one 64×64 unpack transpose.
+pub const GROUP_BLOCKS: usize = 64 / MAG_BITS;
+
+/// In-place 64×64 bit-matrix transpose (Hacker's Delight §7-3 delta swap):
+/// bit `63 - c` of output word `r` is bit `63 - r` of input word `c`.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j = 32usize;
+    let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+    while j != 0 {
+        let mut k = 0usize;
+        while k < 64 {
+            let t = (a[k] ^ (a[k + j] >> j)) & m;
+            a[k] ^= t;
+            a[k + j] ^= t << j;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+/// One operand column of an input set, transposed into bit planes.
+///
+/// Block-major layout: `block(blk)[i]` is plane `i` (weight 2^i) of vectors
+/// `blk*64 .. blk*64+64`; bit `t` of that plane is bit `i` of vector
+/// `blk*64 + t`. Lanes past `len()` in the tail block are packed as zero.
+#[derive(Debug, Clone)]
+pub struct BitMatrix {
+    n: usize,
+    n_bits: usize,
+    planes: Vec<u64>,
+}
+
+impl BitMatrix {
+    /// Pack `value(0..n)` (low `n_bits` significant) into planes.
+    pub fn pack(n: usize, n_bits: usize, value: impl Fn(usize) -> u64) -> BitMatrix {
+        assert!(n_bits <= 64);
+        let n_blocks = n.div_ceil(64);
+        let mut planes = vec![0u64; n_blocks * n_bits];
+        let mut buf = [0u64; 64];
+        for blk in 0..n_blocks {
+            let base = blk * 64;
+            let lanes = (n - base).min(64);
+            buf.fill(0);
+            // transpose64 is MSB-first on both axes — fill and read reversed
+            // so that plane p bit t == value(base + t) bit p.
+            for (t, slot) in buf.iter_mut().rev().enumerate().take(lanes) {
+                *slot = value(base + t);
+            }
+            transpose64(&mut buf);
+            let row = &mut planes[blk * n_bits..(blk + 1) * n_bits];
+            for (i, p) in row.iter_mut().enumerate() {
+                *p = buf[63 - i];
+            }
+        }
+        BitMatrix { n, n_bits, planes }
+    }
+
+    /// Number of packed vectors.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Planes per vector.
+    pub fn n_bits(&self) -> usize {
+        self.n_bits
+    }
+
+    /// Number of 64-lane blocks (tail block possibly partial).
+    pub fn n_blocks(&self) -> usize {
+        self.n.div_ceil(64)
+    }
+
+    /// Live lanes in `blk` — 64 for all but possibly the tail block.
+    pub fn lanes_in(&self, blk: usize) -> usize {
+        (self.n - blk * 64).min(64)
+    }
+
+    /// The `n_bits` planes of `blk`.
+    pub fn block(&self, blk: usize) -> &[u64] {
+        &self.planes[blk * self.n_bits..(blk + 1) * self.n_bits]
+    }
+}
+
+/// Scatter planes back to per-lane values: `out[t] = Σ_p ((planes[p]>>t)&1)
+/// << p`. Inverse of [`BitMatrix::pack`] for one block (`planes.len() ≤ 64`,
+/// missing high planes read as zero).
+pub fn unpack64(planes: &[u64], out: &mut [u64; 64]) {
+    debug_assert!(planes.len() <= 64);
+    let mut buf = [0u64; 64];
+    for (p, &w) in planes.iter().enumerate() {
+        buf[63 - p] = w;
+    }
+    transpose64(&mut buf);
+    for (t, o) in out.iter_mut().enumerate() {
+        *o = buf[63 - t];
+    }
+}
+
+/// Exact-sum planes of one block: `out[0..=n] = a + b` via lane-parallel
+/// ripple carry (`out.len() == a.len() + 1`).
+pub fn exact_sum_planes(a: &[u64], b: &[u64], out: &mut [u64]) {
+    let n = a.len();
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(out.len(), n + 1);
+    let mut carry = 0u64;
+    for ((&ai, &bi), o) in a.iter().zip(b).zip(out.iter_mut()) {
+        let p = ai ^ bi;
+        *o = p ^ carry;
+        carry = (ai & bi) | (carry & p);
+    }
+    out[n] = carry;
+}
+
+/// Approximate-sum planes of one block under per-bit `keep` masks (`!0`
+/// keeps LUT *i*, `0` removes it) — the lane-wide form of the MUXCY
+/// recurrence in [`adder::eval_one`](super::adder::eval_one): a removed LUT
+/// forces `p_i = 0`, so the sum bit passes the carry through and the chain
+/// re-seeds from `b_i`.
+pub fn approx_sum_planes(a: &[u64], b: &[u64], keep: &[u64], out: &mut [u64]) {
+    let n = a.len();
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(keep.len(), n);
+    debug_assert_eq!(out.len(), n + 1);
+    let mut carry = 0u64;
+    for (((&ai, &bi), &ki), o) in a.iter().zip(b).zip(keep).zip(out.iter_mut()) {
+        let p = (ai ^ bi) & ki;
+        *o = p ^ carry;
+        carry = (carry & p) | (bi & !p);
+    }
+    out[n] = carry;
+}
+
+/// `mag[0..MAG_BITS] = |x − y|` planes of two equal-width unsigned plane
+/// vectors (`x.len() == y.len() ≤ MAG_BITS`; planes past the width are
+/// zeroed). Returns the mask of lanes with a nonzero difference.
+///
+/// Lane-parallel borrow subtract, then a conditional two's-complement
+/// negate steered by the borrow-out (the per-lane sign).
+pub fn abs_diff_into(x: &[u64], y: &[u64], mag: &mut [u64]) -> u64 {
+    let w = x.len();
+    debug_assert_eq!(y.len(), w);
+    debug_assert!(w <= MAG_BITS);
+    debug_assert_eq!(mag.len(), MAG_BITS);
+    let mut borrow = 0u64;
+    for ((&xi, &yi), m) in x.iter().zip(y).zip(mag.iter_mut()) {
+        *m = xi ^ yi ^ borrow;
+        borrow = (!xi & (yi | borrow)) | (yi & borrow);
+    }
+    let sign = borrow;
+    let mut carry = sign;
+    let mut nonzero = 0u64;
+    for m in mag.iter_mut().take(w) {
+        let t = *m ^ sign;
+        *m = t ^ carry;
+        carry = t & carry;
+        nonzero |= *m;
+    }
+    for m in mag.iter_mut().skip(w) {
+        *m = 0;
+    }
+    nonzero
+}
+
+/// Add a ±2^shift-weighted boolean plane into a two's-complement plane
+/// accumulator (lane-parallel ripple with early exit; a carry off the top
+/// is the usual modular wrap).
+#[inline]
+pub fn acc_add(acc: &mut [u64], mut carry: u64, shift: usize) {
+    let mut i = shift;
+    while carry != 0 && i < acc.len() {
+        let t = acc[i];
+        acc[i] = t ^ carry;
+        carry = t & carry;
+        i += 1;
+    }
+}
+
+/// Subtract counterpart of [`acc_add`].
+#[inline]
+pub fn acc_sub(acc: &mut [u64], mut borrow: u64, shift: usize) {
+    let mut i = shift;
+    while borrow != 0 && i < acc.len() {
+        let t = acc[i];
+        acc[i] = t ^ borrow;
+        borrow = !t & borrow;
+        i += 1;
+    }
+}
+
+/// `mag[0..MAG_BITS] = |acc|` of a two's-complement plane accumulator whose
+/// lane values are known to fit `MAG_BITS` magnitude bits
+/// (`acc.len() > MAG_BITS`; the top planes must equal the sign — checked in
+/// debug builds). Returns the mask of nonzero lanes.
+pub fn abs_acc_into(acc: &[u64], mag: &mut [u64]) -> u64 {
+    debug_assert!(acc.len() > MAG_BITS);
+    debug_assert_eq!(mag.len(), MAG_BITS);
+    let sign = acc[acc.len() - 1];
+    let mut carry = sign;
+    let mut nonzero = 0u64;
+    for (&aq, m) in acc.iter().zip(mag.iter_mut()) {
+        let t = aq ^ sign;
+        *m = t ^ carry;
+        carry = t & carry;
+        nonzero |= *m;
+    }
+    debug_assert_eq!(carry, 0, "lane magnitude exceeded {MAG_BITS} planes");
+    #[cfg(debug_assertions)]
+    for &aq in &acc[MAG_BITS..] {
+        debug_assert_eq!(aq, sign, "lane magnitude exceeded {MAG_BITS} planes");
+    }
+    nonzero
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operator::{adder, multiplier, AxoConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn transpose_is_self_inverse_and_oriented() {
+        let mut rng = Rng::seed_from_u64(7);
+        let vals: Vec<u64> = (0..64).map(|_| rng.next_u64()).collect();
+        let m = BitMatrix::pack(64, 64, |t| vals[t]);
+        for p in [0usize, 1, 31, 63] {
+            for t in [0usize, 5, 63] {
+                let got = (m.block(0)[p] >> t) & 1;
+                assert_eq!(got, (vals[t] >> p) & 1, "plane {p} lane {t}");
+            }
+        }
+        let mut back = [0u64; 64];
+        unpack64(m.block(0), &mut back);
+        assert_eq!(back.to_vec(), vals);
+    }
+
+    #[test]
+    fn pack_pads_tail_block_with_zero() {
+        let m = BitMatrix::pack(70, 8, |t| t as u64 + 1);
+        assert_eq!(m.n_blocks(), 2);
+        assert_eq!(m.lanes_in(0), 64);
+        assert_eq!(m.lanes_in(1), 6);
+        let mut back = [0u64; 64];
+        unpack64(m.block(1), &mut back);
+        assert_eq!(back[5], 70);
+        assert!(back[6..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn sum_planes_match_scalar_adder() {
+        let mut rng = Rng::seed_from_u64(11);
+        let n_bits = 8usize;
+        let a: Vec<u64> = (0..100).map(|_| rng.next_u64() & 0xFF).collect();
+        let b: Vec<u64> = (0..100).map(|_| rng.next_u64() & 0xFF).collect();
+        let am = BitMatrix::pack(a.len(), n_bits, |t| a[t]);
+        let bm = BitMatrix::pack(b.len(), n_bits, |t| b[t]);
+        let cfg = AxoConfig::new(0b1011_0101, 8).unwrap();
+        let keep: Vec<u64> =
+            (0..8u32).map(|i| if cfg.keeps(i) { !0 } else { 0 }).collect();
+        let mut exact = [0u64; 9];
+        let mut approx = [0u64; 9];
+        let mut lanes = [0u64; 64];
+        for blk in 0..am.n_blocks() {
+            exact_sum_planes(am.block(blk), bm.block(blk), &mut exact);
+            unpack64(&exact, &mut lanes);
+            for t in 0..am.lanes_in(blk) {
+                let v = blk * 64 + t;
+                assert_eq!(lanes[t], a[v] + b[v], "exact vector {v}");
+            }
+            approx_sum_planes(am.block(blk), bm.block(blk), &keep, &mut approx);
+            unpack64(&approx, &mut lanes);
+            for t in 0..am.lanes_in(blk) {
+                let v = blk * 64 + t;
+                assert_eq!(
+                    lanes[t],
+                    adder::eval_one(&cfg, a[v], b[v]),
+                    "approx vector {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn abs_diff_matches_scalar() {
+        let mut rng = Rng::seed_from_u64(13);
+        let w = 9usize;
+        let x: Vec<u64> = (0..64).map(|_| rng.next_u64() & 0x1FF).collect();
+        let y: Vec<u64> = (0..64).map(|_| rng.next_u64() & 0x1FF).collect();
+        let xm = BitMatrix::pack(64, w, |t| x[t]);
+        let ym = BitMatrix::pack(64, w, |t| y[t]);
+        let mut mag = [0u64; MAG_BITS];
+        let nz = abs_diff_into(xm.block(0), ym.block(0), &mut mag);
+        let mut lanes = [0u64; 64];
+        unpack64(&mag, &mut lanes);
+        for t in 0..64 {
+            let want = x[t].abs_diff(y[t]);
+            assert_eq!(lanes[t], want, "lane {t}");
+            assert_eq!((nz >> t) & 1, (want != 0) as u64, "nz lane {t}");
+        }
+    }
+
+    #[test]
+    fn plane_accumulator_matches_signed_sums() {
+        // Random ±2^shift plane add/sub programs vs per-lane i64 arithmetic.
+        let mut rng = Rng::seed_from_u64(17);
+        for _ in 0..20 {
+            let mut acc = [0u64; MAG_BITS + 2];
+            let mut want = [0i64; 64];
+            for _ in 0..12 {
+                let plane = rng.next_u64();
+                let shift = rng.gen_index(10);
+                let neg = rng.next_u64() & 1 == 1;
+                if neg {
+                    acc_sub(&mut acc, plane, shift);
+                } else {
+                    acc_add(&mut acc, plane, shift);
+                }
+                for (t, w) in want.iter_mut().enumerate() {
+                    let bit = ((plane >> t) & 1) as i64;
+                    *w += if neg { -(bit << shift) } else { bit << shift };
+                }
+                // Keep |value| within the MAG_BITS magnitude bound so
+                // abs_acc_into below stays in its contract.
+                if want.iter().any(|w| w.abs() > 30_000) {
+                    break;
+                }
+            }
+            let mut mag = [0u64; MAG_BITS];
+            let nz = abs_acc_into(&acc, &mut mag);
+            let mut lanes = [0u64; 64];
+            unpack64(&mag, &mut lanes);
+            for (t, &w) in want.iter().enumerate() {
+                assert_eq!(lanes[t], w.unsigned_abs(), "lane {t}");
+                assert_eq!((nz >> t) & 1, (w != 0) as u64, "nz lane {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn removed_term_planes_match_multiplier_error() {
+        // exact − approx == Σ removed terms, evaluated as ± AND planes.
+        let m_bits = 4u32;
+        let (a, b) = multiplier::exhaustive_inputs(m_bits);
+        let cfg = AxoConfig::new(0b1010101011, 10).unwrap();
+        let mask = (1u64 << m_bits) - 1;
+        let am = BitMatrix::pack(a.len(), m_bits as usize, |t| (a[t] as u64) & mask);
+        let bm = BitMatrix::pack(b.len(), m_bits as usize, |t| (b[t] as u64) & mask);
+        let pairs = multiplier::pairs(m_bits);
+        let mut lanes = [0u64; 64];
+        for blk in 0..am.n_blocks() {
+            let (ap, bp) = (am.block(blk), bm.block(blk));
+            let mut acc = [0u64; MAG_BITS + 2];
+            for (k, &(i, j)) in pairs.iter().enumerate() {
+                if cfg.keeps(k as u32) {
+                    continue;
+                }
+                let (i, j) = (i as usize, j as usize);
+                let shift = i + j;
+                let neg = (i == m_bits as usize - 1) != (j == m_bits as usize - 1);
+                if neg {
+                    acc_sub(&mut acc, ap[i] & bp[j], shift);
+                    if i != j {
+                        acc_sub(&mut acc, ap[j] & bp[i], shift);
+                    }
+                } else {
+                    acc_add(&mut acc, ap[i] & bp[j], shift);
+                    if i != j {
+                        acc_add(&mut acc, ap[j] & bp[i], shift);
+                    }
+                }
+            }
+            let mut mag = [0u64; MAG_BITS];
+            let nz = abs_acc_into(&acc, &mut mag);
+            unpack64(&mag, &mut lanes);
+            for t in 0..am.lanes_in(blk) {
+                let v = blk * 64 + t;
+                let err = a[v] * b[v] - multiplier::eval_one(m_bits, &cfg, a[v], b[v]);
+                assert_eq!(lanes[t], err.unsigned_abs(), "vector {v}");
+                assert_eq!((nz >> t) & 1, (err != 0) as u64, "nz vector {v}");
+            }
+        }
+    }
+}

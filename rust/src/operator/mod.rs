@@ -15,6 +15,7 @@
 //!   (`L = M(M+1)/2`: 10 for 4×4, 36 for 8×8 — Table II).
 
 pub mod adder;
+pub mod bitslice;
 pub mod config;
 pub mod multiplier;
 

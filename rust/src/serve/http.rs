@@ -36,7 +36,7 @@
 
 use super::dedup::{admit, canonical_hash, hash_id, Admission};
 use super::queue::{JobQueue, JobState};
-use super::runner::{JobRunner, ServeOptions, LOG_FILE};
+use super::runner::{gc_event_fields, JobRunner, ServeOptions, StoreGc, LOG_FILE};
 use super::spec::JobSpec;
 use crate::engine::EngineContext;
 use crate::error::{Error, Result};
@@ -256,6 +256,7 @@ impl HttpServer {
             drain: true,
             poll: self.opts.poll,
         };
+        let gc = StoreGc::for_ctx(&self.ctx);
         let runner = match JobRunner::new(&self.ctx, &self.queue, opts) {
             Ok(r) => r,
             Err(e) => {
@@ -275,6 +276,11 @@ impl HttpServer {
                 _ => false,
             };
             if !busy {
+                // Idle lull: keep the persistent store inside its byte
+                // budget before going back to sleep.
+                if let Some(report) = gc.run_if_due(&self.ctx) {
+                    self.log_event("store-gc", &gc_event_fields(&report));
+                }
                 std::thread::sleep(self.opts.poll);
             }
         }
@@ -485,6 +491,10 @@ impl HttpServer {
                         ("entries", Json::Num(cache.entries as f64)),
                         ("store_hits", Json::Num(cache.store_hits as f64)),
                         ("characterized", Json::Num(cache.characterized as f64)),
+                        (
+                            "behav_backend",
+                            Json::Str(self.ctx.behav_backend().name().into()),
+                        ),
                     ]),
                 ),
                 (

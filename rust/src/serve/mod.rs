@@ -53,6 +53,8 @@ pub mod spec;
 
 pub use dedup::{canonical_hash, hash_id, Admission};
 pub use http::{http_call, HttpOptions, HttpResponse, HttpServer};
-pub use queue::{ClaimedJob, JobQueue, JobState, QueueCounts, Submission};
+pub use queue::{
+    ClaimedJob, JobQueue, JobState, QueueCounts, RequeueReport, Submission, MAX_REVIVALS,
+};
 pub use runner::{JobRunner, ServeOptions, ServeSummary, LOG_FILE};
 pub use spec::{FactorResult, JobResult, JobSpec};

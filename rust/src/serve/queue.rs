@@ -7,6 +7,8 @@
 //! jobs/
 //!   pending/<id>.json          submitted specs, claimed oldest-id first
 //!   running/<id>.json          specs currently executing (crash evidence)
+//!   running/.<id>.pid          claim sidecar: the holder's PID
+//!   running/.<id>.revivals     retry ledger: times the id was revived
 //!   done/<id>.json             JobResult per completed job
 //!   failed/<id>.json           quarantined spec of a failed job
 //!   failed/<id>.error.json     {"id", "error"} recorded next to it
@@ -33,6 +35,27 @@ static SUBMIT_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Spool subdirectories, in lifecycle order.
 pub const QUEUE_SUBDIRS: [&str; 4] = ["pending", "running", "done", "failed"];
+
+/// Retry budget for crash revival: an orphaned `running/` spec is swept
+/// back into `pending/` at most this many times before the sweep judges
+/// it a crash loop (the job itself is what kills its claimers) and
+/// quarantines it to `failed/` with a recorded error.
+pub const MAX_REVIVALS: u32 = 3;
+
+/// What one [`JobQueue::requeue_stale`] sweep did: ids revived into
+/// `pending/`, and ids that burned their [`MAX_REVIVALS`] budget and were
+/// quarantined to `failed/` instead.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RequeueReport {
+    pub requeued: Vec<String>,
+    pub quarantined: Vec<String>,
+}
+
+impl RequeueReport {
+    pub fn is_empty(&self) -> bool {
+        self.requeued.is_empty() && self.quarantined.is_empty()
+    }
+}
 
 /// A claimed job: its queue id and the spec's `running/` path.
 #[derive(Debug, Clone)]
@@ -193,6 +216,22 @@ impl JobQueue {
         self.sub("running").join(format!(".{id}.pid"))
     }
 
+    /// Path of the dot-prefixed revival ledger for `id`. It lives in
+    /// `running/` next to the claim sidecar but — unlike the PID file —
+    /// survives re-queue and re-claim cycles, so the count accumulates
+    /// across a crash loop. Removed on `complete`/`fail`.
+    fn revivals_path(&self, id: &str) -> PathBuf {
+        self.sub("running").join(format!(".{id}.revivals"))
+    }
+
+    /// Times `id` has been revived so far (missing or garbled ledger = 0).
+    pub fn revivals_of(&self, id: &str) -> u32 {
+        std::fs::read_to_string(self.revivals_path(id))
+            .ok()
+            .and_then(|text| text.trim().parse().ok())
+            .unwrap_or(0)
+    }
+
     /// Claim the oldest pending job (lexicographic id order) by renaming
     /// its spec into `running/`. `Ok(None)` when the queue is empty; a
     /// concurrently-claimed file is skipped, not an error. The winner
@@ -223,11 +262,14 @@ impl JobQueue {
     /// longer runs (the dataset store's stale-lock probe applied to job
     /// claims) and move those specs back into `pending/` for re-execution.
     /// Missing or garbled sidecars are *not* provably stale and are left
-    /// alone. Returns the requeued ids. Meant for server start, before any
-    /// worker claims — jobs are deterministic, so re-running a half-done
-    /// job yields the same result the dead claimer would have recorded.
-    pub fn requeue_stale(&self) -> Result<Vec<String>> {
-        let mut requeued = Vec::new();
+    /// alone. Each revival is tallied in a per-id ledger; once an id has
+    /// burned [`MAX_REVIVALS`] revivals, the sweep quarantines it to
+    /// `failed/` with a recorded crash-loop error instead of cycling it
+    /// forever. Meant for server start, before any worker claims — jobs
+    /// are deterministic, so re-running a half-done job yields the same
+    /// result the dead claimer would have recorded.
+    pub fn requeue_stale(&self) -> Result<RequeueReport> {
+        let mut report = RequeueReport::default();
         for id in self.ids_in("running")? {
             let pid_path = self.pid_path(&id);
             let dead = std::fs::read_to_string(&pid_path)
@@ -237,19 +279,33 @@ impl JobQueue {
             if !dead {
                 continue;
             }
+            let revivals = self.revivals_of(&id);
+            if revivals >= MAX_REVIVALS {
+                self.fail(
+                    &id,
+                    &format!(
+                        "crash loop: claiming process died again after \
+                         {revivals} revivals (budget {MAX_REVIVALS})"
+                    ),
+                )?;
+                report.quarantined.push(id);
+                continue;
+            }
             let from = self.spec_path("running", &id);
             let to = self.spec_path("pending", &id);
             match std::fs::rename(&from, &to) {
                 Ok(()) => {
+                    let ledger = self.revivals_path(&id);
+                    let _ = std::fs::write(ledger, (revivals + 1).to_string());
                     let _ = std::fs::remove_file(&pid_path);
-                    requeued.push(id);
+                    report.requeued.push(id);
                 }
                 // Another sweeper (or the job finishing late) beat us.
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
                 Err(e) => return Err(e.into()),
             }
         }
-        Ok(requeued)
+        Ok(report)
     }
 
     /// Record a completed job: result written to `done/<id>.json` (temp +
@@ -262,6 +318,7 @@ impl JobQueue {
         // The consumed spec; a missing file (crash replay) is fine.
         let _ = std::fs::remove_file(self.spec_path("running", id));
         let _ = std::fs::remove_file(self.pid_path(id));
+        let _ = std::fs::remove_file(self.revivals_path(id));
         Ok(dest)
     }
 
@@ -273,6 +330,7 @@ impl JobQueue {
         // crash); the error record is the part that must land.
         let _ = std::fs::rename(self.spec_path("running", id), &spec_dest);
         let _ = std::fs::remove_file(self.pid_path(id));
+        let _ = std::fs::remove_file(self.revivals_path(id));
         let record = Json::obj(vec![
             ("id", Json::Str(id.to_string())),
             ("error", Json::Str(error.to_string())),
@@ -516,13 +574,15 @@ mod tests {
         std::fs::write(q.pid_path("dead"), u32::MAX.to_string()).unwrap();
         std::fs::remove_file(q.pid_path("bare")).unwrap();
 
-        let requeued = q.requeue_stale().unwrap();
+        let report = q.requeue_stale().unwrap();
         if cfg!(target_os = "linux") {
-            assert_eq!(requeued, vec!["dead"]);
+            assert_eq!(report.requeued, vec!["dead"]);
+            assert!(report.quarantined.is_empty());
             assert_eq!(q.state_of("dead"), Some(JobState::Pending));
             assert!(!q.pid_path("dead").exists(), "sidecar cleaned up");
+            assert_eq!(q.revivals_of("dead"), 1, "revival tallied in the ledger");
         } else {
-            assert!(requeued.is_empty(), "no liveness probe off-linux");
+            assert!(report.is_empty(), "no liveness probe off-linux");
         }
         assert_eq!(q.state_of("live"), Some(JobState::Running));
         assert_eq!(q.state_of("bare"), Some(JobState::Running));
@@ -540,6 +600,38 @@ mod tests {
             q.complete(&job.id, &result).unwrap();
             assert_eq!(q.state_of("dead"), Some(JobState::Done));
         }
+    }
+
+    #[test]
+    fn crash_looping_job_is_quarantined_after_revival_budget() {
+        if !cfg!(target_os = "linux") {
+            return; // revival needs the PID liveness probe
+        }
+        let (_dir, q) = queue();
+        q.submit(&JobSpec::new("loopy", vec![0.5])).unwrap();
+        for round in 0..MAX_REVIVALS {
+            let job = q.claim().unwrap().unwrap();
+            assert_eq!(job.id, "loopy");
+            // The claimer "crashes": its recorded PID can never exist
+            // (PID_MAX_LIMIT is 2^22 on Linux).
+            std::fs::write(q.pid_path("loopy"), u32::MAX.to_string()).unwrap();
+            let report = q.requeue_stale().unwrap();
+            assert_eq!(report.requeued, vec!["loopy"], "round {round}");
+            assert_eq!(q.revivals_of("loopy"), round + 1);
+            assert_eq!(q.state_of("loopy"), Some(JobState::Pending));
+        }
+        // Budget burned: the next crash quarantines instead of reviving.
+        q.claim().unwrap().unwrap();
+        std::fs::write(q.pid_path("loopy"), u32::MAX.to_string()).unwrap();
+        let report = q.requeue_stale().unwrap();
+        assert!(report.requeued.is_empty());
+        assert_eq!(report.quarantined, vec!["loopy"]);
+        assert_eq!(q.state_of("loopy"), Some(JobState::Failed));
+        assert!(q.error("loopy").unwrap().contains("crash loop"));
+        assert!(!q.pid_path("loopy").exists());
+        assert!(!q.revivals_path("loopy").exists(), "ledger cleaned up");
+        // A quarantined id stays quarantined across further sweeps.
+        assert!(q.requeue_stale().unwrap().is_empty());
     }
 
     #[test]

@@ -36,6 +36,54 @@ use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 /// The append-only event stream's filename, inside the queue directory.
 pub const LOG_FILE: &str = "server.log.jsonl";
 
+/// Minimum spacing between store-GC sweeps on a serve loop. Sweeps run
+/// from idle branches only, so a busy server defers GC to its next lull.
+pub(crate) const STORE_GC_INTERVAL: Duration = Duration::from_secs(60);
+
+/// Periodic [`DatasetStore::gc`](crate::engine::DatasetStore::gc) driver
+/// for long-lived serve loops: armed only when the config both enables
+/// the store and sets a `[store] max_bytes` budget, and rate-limited to
+/// one sweep per [`STORE_GC_INTERVAL`] across however many workers poll
+/// it. Shared by the spool runner's watch loop and the HTTP exec loop.
+pub(crate) struct StoreGc {
+    budget: Option<u64>,
+    last: Mutex<Option<Instant>>,
+}
+
+impl StoreGc {
+    /// Arm from a context: the budget is `[store] max_bytes`, and only
+    /// matters when the context actually has a store open.
+    pub(crate) fn for_ctx(ctx: &EngineContext) -> StoreGc {
+        let budget =
+            ctx.store().is_some().then_some(ctx.cfg().store.max_bytes).flatten();
+        StoreGc { budget, last: Mutex::new(None) }
+    }
+
+    /// Run one sweep when armed and due; `None` when disarmed, not yet
+    /// due, or the sweep failed (reported to stderr — GC must never take
+    /// down a server).
+    pub(crate) fn run_if_due(
+        &self,
+        ctx: &EngineContext,
+    ) -> Option<crate::engine::GcReport> {
+        let budget = self.budget?;
+        {
+            let mut last = self.last.lock().ok()?;
+            if last.is_some_and(|t| t.elapsed() < STORE_GC_INTERVAL) {
+                return None;
+            }
+            *last = Some(Instant::now());
+        }
+        match ctx.store()?.gc(budget) {
+            Ok(report) => Some(report),
+            Err(e) => {
+                eprintln!("warning: store gc failed: {e}");
+                None
+            }
+        }
+    }
+}
+
 /// Serve-mode knobs (CLI flags layered over the `[serve]` config section).
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
@@ -70,6 +118,18 @@ pub struct ServeSummary {
     pub failed: usize,
 }
 
+/// Event-log fields for one GC sweep (shared with the HTTP exec loop).
+pub(crate) fn gc_event_fields(
+    report: &crate::engine::GcReport,
+) -> Vec<(&'static str, Json)> {
+    vec![
+        ("evicted", Json::Num(report.evicted.len() as f64)),
+        ("kept", Json::Num(report.kept as f64)),
+        ("bytes_before", Json::Num(report.bytes_before as f64)),
+        ("bytes_after", Json::Num(report.bytes_after as f64)),
+    ]
+}
+
 /// The serve-mode executor (see module docs).
 pub struct JobRunner<'a> {
     ctx: &'a EngineContext,
@@ -77,6 +137,7 @@ pub struct JobRunner<'a> {
     opts: ServeOptions,
     prepared: KeyedOnce<Operator, DsePrepared>,
     log: Mutex<std::fs::File>,
+    gc: StoreGc,
     claimed: AtomicUsize,
     done: AtomicUsize,
     failed: AtomicUsize,
@@ -98,6 +159,7 @@ impl<'a> JobRunner<'a> {
             opts,
             prepared: KeyedOnce::new(),
             log: Mutex::new(log),
+            gc: StoreGc::for_ctx(ctx),
             claimed: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
             failed: AtomicUsize::new(0),
@@ -165,6 +227,11 @@ impl<'a> JobRunner<'a> {
                     self.release_slot();
                     if self.opts.drain {
                         return;
+                    }
+                    // Watch-mode lull: a good moment to keep the
+                    // persistent store inside its byte budget.
+                    if let Some(report) = self.gc.run_if_due(self.ctx) {
+                        self.log_event("store-gc", &gc_event_fields(&report));
                     }
                     std::thread::sleep(self.opts.poll);
                 }
@@ -282,7 +349,9 @@ impl<'a> JobRunner<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::expcfg::{ConssConfig, ExperimentConfig, GaConfig, SurrogateConfig};
+    use crate::expcfg::{
+        ConssConfig, ExperimentConfig, GaConfig, StoreConfig, SurrogateConfig,
+    };
     use crate::surrogate::EstimatorBackend;
     use crate::util::tempdir::TempDir;
 
@@ -365,6 +434,45 @@ mod tests {
         // The engine never paid for anything.
         assert_eq!(ctx.cache_stats().characterized, 0);
         assert_eq!(ctx.pool_stats().spawned, 0);
+    }
+
+    #[test]
+    fn store_gc_sweeps_when_armed_and_rate_limits() {
+        let dir = TempDir::new().unwrap();
+        let cfg = ExperimentConfig {
+            store: StoreConfig {
+                enabled: Some(true),
+                dir: Some(dir.path().join("ds")),
+                max_bytes: Some(1),
+            },
+            ..tiny_cfg()
+        };
+        let ctx = EngineContext::new(cfg);
+        ctx.dataset(Operator::ADD4).unwrap(); // populate the store
+        assert!(ctx.store().unwrap().total_bytes().unwrap() > 1);
+
+        let gc = StoreGc::for_ctx(&ctx);
+        let report = gc.run_if_due(&ctx).expect("armed GC sweeps on first poll");
+        assert_eq!(report.evicted.len(), 1);
+        assert_eq!(ctx.store().unwrap().total_bytes().unwrap(), 0);
+        assert!(gc.run_if_due(&ctx).is_none(), "one sweep per interval");
+
+        // No store → disarmed, whatever the budget says.
+        let ctx = EngineContext::new(tiny_cfg());
+        assert!(ctx.store().is_none());
+        assert!(StoreGc::for_ctx(&ctx).run_if_due(&ctx).is_none());
+
+        // Store without a byte budget → disarmed.
+        let cfg = ExperimentConfig {
+            store: StoreConfig {
+                enabled: Some(true),
+                dir: Some(dir.path().join("ds2")),
+                max_bytes: None,
+            },
+            ..tiny_cfg()
+        };
+        let ctx = EngineContext::new(cfg);
+        assert!(StoreGc::for_ctx(&ctx).run_if_due(&ctx).is_none());
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Bit-identity of the two native BEHAV backends.
+//!
+//! The bit-sliced path (`operator/bitslice.rs`, 64 input vectors per u64
+//! operation) is the default; the per-vector scalar path is its oracle.
+//! "Equivalent" here means *bit-identical* `BehavMetrics` — every f64
+//! compared by `to_bits`, never by tolerance — across operator kinds,
+//! exhaustive and random config sets, and ragged input lengths that
+//! exercise the tail-lane zero padding.
+
+use repro::charac::behav::{
+    adder_behav_with, mult_behav, mult_behav_bitslice, native_behav_with,
+};
+use repro::charac::{characterize_sharded_as, BehavBackend, BehavMetrics, InputSet};
+use repro::operator::{multiplier, AxoConfig, Operator};
+use repro::util::rng::Rng;
+
+fn assert_bit_identical(scalar: &[BehavMetrics], bitslice: &[BehavMetrics], what: &str) {
+    assert_eq!(scalar.len(), bitslice.len(), "{what}: row count");
+    for (i, (s, b)) in scalar.iter().zip(bitslice).enumerate() {
+        assert_eq!(
+            s.to_array().map(f64::to_bits),
+            b.to_array().map(f64::to_bits),
+            "{what}: config row {i} ({s:?} vs {b:?})"
+        );
+    }
+}
+
+/// Both backends over one operator/config/input triple.
+fn both(
+    op: Operator,
+    configs: &[AxoConfig],
+    inputs: &InputSet,
+) -> (Vec<BehavMetrics>, Vec<BehavMetrics>) {
+    (
+        native_behav_with(op, configs, inputs, BehavBackend::Scalar),
+        native_behav_with(op, configs, inputs, BehavBackend::Bitslice),
+    )
+}
+
+#[test]
+fn add4_exhaustive_space_is_bit_identical() {
+    let inputs = InputSet::exhaustive(Operator::ADD4);
+    let configs: Vec<AxoConfig> = AxoConfig::enumerate(4).collect();
+    assert_eq!(configs.len(), 15);
+    let (scalar, bitslice) = both(Operator::ADD4, &configs, &inputs);
+    assert_bit_identical(&scalar, &bitslice, "add4 exhaustive");
+}
+
+#[test]
+fn mul4_exhaustive_space_is_bit_identical() {
+    let inputs = InputSet::exhaustive(Operator::MUL4);
+    let configs: Vec<AxoConfig> = AxoConfig::enumerate(10).collect();
+    assert_eq!(configs.len(), 1023);
+    let (scalar, bitslice) = both(Operator::MUL4, &configs, &inputs);
+    assert_bit_identical(&scalar, &bitslice, "mul4 exhaustive");
+}
+
+#[test]
+fn add8_random_configs_are_bit_identical() {
+    let inputs = InputSet::exhaustive(Operator::ADD8);
+    let mut rng = Rng::seed_from_u64(11);
+    let configs = AxoConfig::sample_unique(8, 24, &mut rng);
+    let (scalar, bitslice) = both(Operator::ADD8, &configs, &inputs);
+    assert_bit_identical(&scalar, &bitslice, "add8 random configs");
+}
+
+#[test]
+fn add12_sampled_inputs_are_bit_identical() {
+    // 12-bit operands exercise magnitude planes past the 8-bit cases, and
+    // 5000 vectors leave a 8-lane tail in the last block.
+    let inputs = InputSet::sampled_adder(12, 5000, 7);
+    let mut rng = Rng::seed_from_u64(13);
+    let configs = AxoConfig::sample_unique(12, 16, &mut rng);
+    let (scalar, bitslice) = both(Operator::ADD12, &configs, &inputs);
+    assert_bit_identical(&scalar, &bitslice, "add12 sampled inputs");
+}
+
+#[test]
+fn mul8_random_configs_are_bit_identical() {
+    let inputs = InputSet::exhaustive(Operator::MUL8);
+    let mut rng = Rng::seed_from_u64(17);
+    let configs = AxoConfig::sample_unique(36, 12, &mut rng);
+    let (scalar, bitslice) = both(Operator::MUL8, &configs, &inputs);
+    assert_bit_identical(&scalar, &bitslice, "mul8 random configs");
+}
+
+#[test]
+fn ragged_adder_lengths_mask_tail_lanes_identically() {
+    let full = InputSet::sampled_adder(8, 300, 23);
+    let a: Vec<u32> = full.a.iter().map(|&v| v as u32).collect();
+    let b: Vec<u32> = full.b.iter().map(|&v| v as u32).collect();
+    let mut rng = Rng::seed_from_u64(29);
+    let configs = AxoConfig::sample_unique(8, 8, &mut rng);
+    for len in [1usize, 63, 64, 65, 130, 256, 300] {
+        let scalar =
+            adder_behav_with(&configs, &a[..len], &b[..len], BehavBackend::Scalar);
+        let bitslice =
+            adder_behav_with(&configs, &a[..len], &b[..len], BehavBackend::Bitslice);
+        assert_bit_identical(&scalar, &bitslice, &format!("adder len {len}"));
+    }
+}
+
+#[test]
+fn ragged_multiplier_lengths_mask_tail_lanes_identically() {
+    let full = InputSet::exhaustive(Operator::MUL4);
+    let mut rng = Rng::seed_from_u64(31);
+    let configs = AxoConfig::sample_unique(10, 8, &mut rng);
+    for len in [1usize, 63, 64, 65, 130] {
+        let (a, b) = (&full.a[..len], &full.b[..len]);
+        let terms = multiplier::term_matrix(4, a, b);
+        let scalar = mult_behav(&configs, &terms, 10);
+        let bitslice = mult_behav_bitslice(4, &configs, a, b);
+        assert_bit_identical(&scalar, &bitslice, &format!("multiplier len {len}"));
+    }
+}
+
+#[test]
+fn sharded_pipeline_is_bit_identical_across_backends() {
+    // The backend choice must be invisible end to end: whole datasets out
+    // of the sharded pipeline match bit-for-bit, so cache and store
+    // entries never depend on which backend characterized them.
+    let inputs = InputSet::exhaustive(Operator::MUL4);
+    let mut rng = Rng::seed_from_u64(37);
+    let configs = AxoConfig::sample_unique(10, 101, &mut rng);
+    let scalar = characterize_sharded_as(
+        Operator::MUL4,
+        &configs,
+        &inputs,
+        32,
+        BehavBackend::Scalar,
+    )
+    .unwrap();
+    let bitslice = characterize_sharded_as(
+        Operator::MUL4,
+        &configs,
+        &inputs,
+        32,
+        BehavBackend::Bitslice,
+    )
+    .unwrap();
+    assert_eq!(scalar.configs, bitslice.configs);
+    assert_bit_identical(&scalar.behav, &bitslice.behav, "sharded mul4 dataset");
+}

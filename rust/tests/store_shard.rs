@@ -37,8 +37,8 @@ fn store_cfg(tmp: &TempDir) -> ExperimentConfig {
         operator: "add8".into(),
         train_samples: 60,
         artifacts_dir: tmp.path().to_path_buf(),
-        charac: CharacConfig { shard_size: 16 },
-        store: StoreConfig { enabled: Some(true), dir: None },
+        charac: CharacConfig { shard_size: 16, ..Default::default() },
+        store: StoreConfig { enabled: Some(true), dir: None, max_bytes: None },
         ..Default::default()
     }
 }
@@ -66,7 +66,7 @@ fn sharded_seeded_characterization_matches_sequential_bit_for_bit() {
     // And through the engine (store off → pure characterization).
     let ctx = EngineContext::new(ExperimentConfig {
         operator: "add8".into(),
-        charac: CharacConfig { shard_size: 16 },
+        charac: CharacConfig { shard_size: 16, ..Default::default() },
         ..Default::default()
     });
     let engine_ds = ctx.dataset_with(op, spec).unwrap();
@@ -98,7 +98,7 @@ fn warm_store_run_characterizes_nothing_and_is_bit_identical() {
 
     // `--no-store` semantics: an explicitly disabled store ignores disk.
     let off = EngineContext::new(ExperimentConfig {
-        store: StoreConfig { enabled: Some(false), dir: None },
+        store: StoreConfig { enabled: Some(false), dir: None, max_bytes: None },
         ..store_cfg(&tmp)
     });
     off.dataset_with(op, spec).unwrap();
@@ -197,7 +197,7 @@ fn store_entry_is_not_served_across_different_input_sets() {
     let cfg = ExperimentConfig {
         operator: "add8".into(),
         artifacts_dir: tmp.path().to_path_buf(),
-        store: StoreConfig { enabled: Some(true), dir: None },
+        store: StoreConfig { enabled: Some(true), dir: None, max_bytes: None },
         ..Default::default()
     };
 
