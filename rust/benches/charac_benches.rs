@@ -4,15 +4,22 @@
 //! The BEHAV cases run every batch twice — scalar oracle vs the bit-sliced
 //! default — and the suite stamps `BENCH_charac.json` with a `speedup`
 //! object (scalar mean / bitslice mean per pair) so the bit-slicing win is
-//! recorded in the perf trajectory. CI's bench-smoke job uploads the stamp.
+//! recorded in the perf trajectory. The PPA cases do the same for the
+//! config-parallel plane estimator (`ppa_speedup`: scalar mean / plane
+//! mean, plus the fused single-pass pipeline vs an inline two-pass
+//! rebuild). CI's bench-smoke job uploads the stamp.
 //!
 //! Run: `cargo bench --bench charac_benches`
 
-use repro::charac::behav::{adder_behav_with, mult_behav, mult_behav_bitslice};
+use repro::charac::behav::{
+    adder_behav_with, mult_behav, mult_behav_bitslice, native_behav_with,
+};
 use repro::charac::{
-    characterize, characterize_sharded_as, Backend, BehavBackend, InputSet,
+    characterize, characterize_sharded_as, characterize_timed, Backend,
+    BehavBackend, Dataset, InputSet, PpaBackend,
 };
 use repro::operator::{adder, multiplier, AxoConfig, Operator};
+use repro::synth::ppa_batch_with;
 use repro::util::bench::Bench;
 use repro::util::json::Json;
 use repro::util::rng::Rng;
@@ -39,6 +46,28 @@ const SPEEDUP_PAIRS: [(&str, &str, &str); 4] = [
         "mul8_sharded",
         "charac/mul8_sharded64_scalar",
         "charac/mul8_sharded64_bitslice",
+    ),
+];
+
+/// (stamp key, baseline bench, optimized bench) — the pairs the
+/// `ppa_speedup` object is computed from: per-config scalar estimation vs
+/// the 64-lane plane path, and the fused single-pass pipeline vs an
+/// inline BEHAV-then-PPA two-pass over the same batch.
+const PPA_SPEEDUP_PAIRS: [(&str, &str, &str); 3] = [
+    (
+        "add12_ppa",
+        "synth/add12_ppa_scalar_1024cfg",
+        "synth/add12_ppa_plane_1024cfg",
+    ),
+    (
+        "mul8_ppa",
+        "synth/mul8_ppa_scalar_1024cfg",
+        "synth/mul8_ppa_plane_1024cfg",
+    ),
+    (
+        "mul8_fused",
+        "pipeline/mul8_two_pass_64cfg",
+        "pipeline/mul8_fused_64cfg",
     ),
 ];
 
@@ -127,6 +156,53 @@ fn main() {
         .unwrap()
     });
 
+    // Pure synthesis estimation: per-config scalar oracle vs the 64-lane
+    // config-parallel plane path (the `ppa_speedup` stamp inputs).
+    let ppa_adds: Vec<AxoConfig> = {
+        let mut rng = Rng::seed_from_u64(3);
+        AxoConfig::sample_unique(12, 1024, &mut rng)
+    };
+    b.bench("synth/add12_ppa_scalar_1024cfg", || {
+        ppa_batch_with(Operator::ADD12, &ppa_adds, PpaBackend::Scalar)
+    });
+    b.bench("synth/add12_ppa_plane_1024cfg", || {
+        ppa_batch_with(Operator::ADD12, &ppa_adds, PpaBackend::Plane)
+    });
+    let ppa_muls: Vec<AxoConfig> = {
+        let mut rng = Rng::seed_from_u64(4);
+        AxoConfig::sample_unique(36, 1024, &mut rng)
+    };
+    b.bench("synth/mul8_ppa_scalar_1024cfg", || {
+        ppa_batch_with(Operator::MUL8, &ppa_muls, PpaBackend::Scalar)
+    });
+    b.bench("synth/mul8_ppa_plane_1024cfg", || {
+        ppa_batch_with(Operator::MUL8, &ppa_muls, PpaBackend::Plane)
+    });
+
+    // Fused single-pass characterization vs an inline two-pass rebuild of
+    // the same dataset (a whole-batch BEHAV fan-out, then a second
+    // whole-batch PPA fan-out) — what the pipeline did before fusion.
+    b.bench("pipeline/mul8_two_pass_64cfg", || {
+        let behav = native_behav_with(
+            Operator::MUL8,
+            &mcfgs,
+            &inputs_m8,
+            BehavBackend::Bitslice,
+        );
+        let ppa = ppa_batch_with(Operator::MUL8, &mcfgs, PpaBackend::Plane);
+        Dataset::new(Operator::MUL8, mcfgs.clone(), behav, ppa).unwrap()
+    });
+    b.bench("pipeline/mul8_fused_64cfg", || {
+        characterize_timed(
+            Operator::MUL8,
+            &mcfgs,
+            &inputs_m8,
+            BehavBackend::Bitslice,
+            PpaBackend::Plane,
+        )
+        .unwrap()
+    });
+
     // Full pipeline (BEHAV + synthesis estimator) per Table II row.
     let inputs4 = InputSet::exhaustive(Operator::ADD4);
     b.bench("pipeline/add4_exhaustive(15)", || {
@@ -181,9 +257,20 @@ fn main() {
             }
         }
     }
+    let mut ppa_speedup = std::collections::BTreeMap::new();
+    for (key, baseline, optimized) in PPA_SPEEDUP_PAIRS {
+        if let (Some(s), Some(v)) = (mean(baseline), mean(optimized)) {
+            if v > 0.0 {
+                let ratio = s / v;
+                println!("ppa_speedup {key:<14} {ratio:.2}x (baseline/optimized)");
+                ppa_speedup.insert(key.to_string(), Json::Num(ratio));
+            }
+        }
+    }
     let mut stamp = b.to_json();
     if let Json::Obj(map) = &mut stamp {
         map.insert("speedup".into(), Json::Obj(speedup));
+        map.insert("ppa_speedup".into(), Json::Obj(ppa_speedup));
     }
     let path = std::path::Path::new("BENCH_charac.json");
     std::fs::write(path, stamp.to_string()).expect("write BENCH_charac.json");

@@ -9,16 +9,21 @@
 //! `REPRO_BENCH_SMOKE=1` shrinking it to a bit-rot probe like every other
 //! bench.
 //!
+//! `--keep-alive` runs a second pass where every connection reuses one
+//! persistent socket ([`HttpClient`]) instead of a fresh
+//! connect-per-request, and stamps the p50/p99 latency deltas
+//! (close − keep-alive, ms) alongside the close-mode numbers.
+//!
 //! ```text
 //! loadgen [--addr HOST:PORT] [--connections N] [--requests N]
-//!         [--dup-ratio F] [--out PATH]
+//!         [--dup-ratio F] [--keep-alive] [--out PATH]
 //! ```
 
 use repro::cli::ParsedArgs;
 use repro::engine::EngineContext;
 use repro::error::{Error, Result};
 use repro::expcfg::{ConssConfig, ExperimentConfig, GaConfig, SurrogateConfig};
-use repro::serve::{http_call, HttpOptions, HttpServer, JobQueue};
+use repro::serve::{http_call, HttpClient, HttpOptions, HttpServer, JobQueue};
 use repro::surrogate::EstimatorBackend;
 use repro::util::bench::smoke_mode;
 use repro::util::json::Json;
@@ -39,10 +44,12 @@ fn main() {
         println!(
             "loadgen — closed-loop HTTP load for `repro serve-http`\n\n\
              USAGE: loadgen [--addr HOST:PORT] [--connections N] [--requests N]\n\
-             \x20                [--dup-ratio F] [--out PATH]\n\n\
+             \x20                [--dup-ratio F] [--keep-alive] [--out PATH]\n\n\
              Without --addr an in-process front-end is spawned on 127.0.0.1:0\n\
-             (hermetic; no engine work). REPRO_BENCH_SMOKE=1 shrinks the run\n\
-             to a bit-rot probe. Stamps BENCH_http.json."
+             (hermetic; no engine work). --keep-alive adds a second pass on\n\
+             persistent connections and stamps the latency delta.\n\
+             REPRO_BENCH_SMOKE=1 shrinks the run to a bit-rot probe.\n\
+             Stamps BENCH_http.json."
         );
         return;
     }
@@ -59,11 +66,12 @@ struct Sample {
 }
 
 fn run(args: Vec<String>) -> Result<()> {
-    let parsed = ParsedArgs::parse(args, &[])
+    let parsed = ParsedArgs::parse(args, &["keep-alive"])
         .map_err(|e| Error::Config(e.to_string()))?;
     parsed
         .ensure_known(&["addr", "connections", "requests", "dup-ratio", "out"])
         .map_err(|e| Error::Config(e.to_string()))?;
+    let keep_alive = parsed.flag("keep-alive");
     let smoke = smoke_mode();
     let connections: usize = parsed
         .opt_parse("connections")
@@ -102,103 +110,188 @@ fn run(args: Vec<String>) -> Result<()> {
         if embedded.is_some() { " (in-process)" } else { "" }
     );
 
-    let started = Instant::now();
-    let samples: Vec<Sample> = {
-        let collected = Mutex::new(Vec::with_capacity(connections * requests));
-        std::thread::scope(|s| {
-            for conn in 0..connections {
-                let collected = &collected;
-                let addr = addr.as_str();
-                s.spawn(move || {
-                    let mine = drive_connection(addr, conn, requests, dup_ratio);
-                    collected.lock().unwrap().extend(mine);
-                });
-            }
-        });
-        collected.into_inner().unwrap()
+    let close = PassStats::aggregate(
+        "close",
+        &drive(&addr, connections, requests, dup_ratio, false),
+    )?;
+    close.print();
+    let reused = if keep_alive {
+        let stats = PassStats::aggregate(
+            "keep-alive",
+            &drive(&addr, connections, requests, dup_ratio, true),
+        )?;
+        stats.print();
+        Some(stats)
+    } else {
+        None
     };
-    let elapsed = started.elapsed();
 
     if let Some(server) = embedded {
         server.stop();
     }
 
-    // Aggregate: throughput, latency percentiles, dedup split.
-    let total = samples.len();
-    let created = samples.iter().filter(|s| s.status == 201).count();
-    let shared = samples.iter().filter(|s| s.status == 200).count();
-    let errors = total - created - shared;
-    if errors > 0 {
-        return Err(Error::Coordinator(format!(
-            "{errors}/{total} requests failed (non-200/201 status)"
-        )));
-    }
-    let hit_rate = if created + shared == 0 {
-        0.0
-    } else {
-        shared as f64 / (created + shared) as f64
-    };
-    let mut lat: Vec<u64> = samples.iter().map(|s| s.latency_ns).collect();
-    lat.sort_unstable();
-    let pct = |p: usize| -> f64 {
-        if lat.is_empty() {
-            0.0
-        } else {
-            lat[(lat.len() * p / 100).min(lat.len() - 1)] as f64
-        }
-    };
-    let secs = elapsed.as_secs_f64();
-    let rps = if secs > 0.0 { total as f64 / secs } else { 0.0 };
-    println!(
-        "{total} request(s) in {elapsed:.2?} — {rps:.0} req/s; p50 {:.2} ms, \
-         p99 {:.2} ms; {created} created / {shared} shared (hit rate {:.2})",
-        pct(50) / 1e6,
-        pct(99) / 1e6,
-        hit_rate
-    );
-
-    // The BENCH_*.json stamp (same mode discipline as util::bench).
-    let stamp = Json::obj(vec![
+    // The BENCH_*.json stamp (same mode discipline as util::bench). The
+    // top-level numbers stay the close-mode pass for cross-PR
+    // comparability; `keep_alive` carries the reuse pass and the deltas.
+    let mut pairs = vec![
         (
             "mode",
             Json::Str(if smoke { "smoke".into() } else { "full".into() }),
         ),
         ("connections", Json::Num(connections as f64)),
-        ("requests", Json::Num(total as f64)),
-        ("duration_ms", Json::Num(elapsed.as_millis() as f64)),
-        ("requests_per_sec", Json::Num(rps)),
+        ("requests", Json::Num(close.total as f64)),
+        ("duration_ms", Json::Num(close.duration_ms)),
+        ("requests_per_sec", Json::Num(close.rps)),
         (
             "latency_ms",
             Json::obj(vec![
-                ("p50", Json::Num(pct(50) / 1e6)),
-                ("p99", Json::Num(pct(99) / 1e6)),
+                ("p50", Json::Num(close.p50_ms)),
+                ("p99", Json::Num(close.p99_ms)),
             ]),
         ),
         (
             "dedup",
             Json::obj(vec![
-                ("created", Json::Num(created as f64)),
-                ("shared", Json::Num(shared as f64)),
-                ("hit_rate", Json::Num(hit_rate)),
+                ("created", Json::Num(close.created as f64)),
+                ("shared", Json::Num(close.shared as f64)),
+                ("hit_rate", Json::Num(close.hit_rate)),
             ]),
         ),
-    ]);
-    std::fs::write(&out, stamp.to_string())?;
+    ];
+    if let Some(ka) = &reused {
+        pairs.push((
+            "keep_alive",
+            Json::obj(vec![
+                ("requests_per_sec", Json::Num(ka.rps)),
+                (
+                    "latency_ms",
+                    Json::obj(vec![
+                        ("p50", Json::Num(ka.p50_ms)),
+                        ("p99", Json::Num(ka.p99_ms)),
+                    ]),
+                ),
+                // close − keep-alive: positive = connection reuse saved.
+                ("p50_delta_ms", Json::Num(close.p50_ms - ka.p50_ms)),
+                ("p99_delta_ms", Json::Num(close.p99_ms - ka.p99_ms)),
+            ]),
+        ));
+    }
+    std::fs::write(&out, Json::obj(pairs).to_string())?;
     println!("wrote {}", out.display());
     Ok(())
+}
+
+/// One pass's aggregates: throughput, latency percentiles, dedup split.
+struct PassStats {
+    label: &'static str,
+    total: usize,
+    created: usize,
+    shared: usize,
+    hit_rate: f64,
+    duration_ms: f64,
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+impl PassStats {
+    fn aggregate(label: &'static str, pass: &Pass) -> Result<PassStats> {
+        let (samples, elapsed) = pass;
+        let total = samples.len();
+        let created = samples.iter().filter(|s| s.status == 201).count();
+        let shared = samples.iter().filter(|s| s.status == 200).count();
+        let errors = total - created - shared;
+        if errors > 0 {
+            return Err(Error::Coordinator(format!(
+                "{label}: {errors}/{total} requests failed (non-200/201 status)"
+            )));
+        }
+        let hit_rate = if created + shared == 0 {
+            0.0
+        } else {
+            shared as f64 / (created + shared) as f64
+        };
+        let mut lat: Vec<u64> = samples.iter().map(|s| s.latency_ns).collect();
+        lat.sort_unstable();
+        let pct = |p: usize| -> f64 {
+            if lat.is_empty() {
+                0.0
+            } else {
+                lat[(lat.len() * p / 100).min(lat.len() - 1)] as f64
+            }
+        };
+        let secs = elapsed.as_secs_f64();
+        Ok(PassStats {
+            label,
+            total,
+            created,
+            shared,
+            hit_rate,
+            duration_ms: elapsed.as_millis() as f64,
+            rps: if secs > 0.0 { total as f64 / secs } else { 0.0 },
+            p50_ms: pct(50) / 1e6,
+            p99_ms: pct(99) / 1e6,
+        })
+    }
+
+    fn print(&self) {
+        println!(
+            "{}: {} request(s) in {:.0} ms — {:.0} req/s; p50 {:.2} ms, \
+             p99 {:.2} ms; {} created / {} shared (hit rate {:.2})",
+            self.label,
+            self.total,
+            self.duration_ms,
+            self.rps,
+            self.p50_ms,
+            self.p99_ms,
+            self.created,
+            self.shared,
+            self.hit_rate
+        );
+    }
+}
+
+type Pass = (Vec<Sample>, std::time::Duration);
+
+/// One full pass: every connection drives its requests concurrently, in
+/// close (connect-per-request) or keep-alive (persistent socket) mode.
+fn drive(
+    addr: &str,
+    connections: usize,
+    requests: usize,
+    dup_ratio: f64,
+    keep_alive: bool,
+) -> Pass {
+    let started = Instant::now();
+    let collected = Mutex::new(Vec::with_capacity(connections * requests));
+    std::thread::scope(|s| {
+        for conn in 0..connections {
+            let collected = &collected;
+            s.spawn(move || {
+                let mine =
+                    drive_connection(addr, conn, requests, dup_ratio, keep_alive);
+                collected.lock().unwrap().extend(mine);
+            });
+        }
+    });
+    (collected.into_inner().unwrap(), started.elapsed())
 }
 
 /// One closed-loop connection: `requests` sequential submits, duplicating
 /// an earlier spec of this connection with probability `dup_ratio`.
 /// Deterministic per (connection, request) — only the wall-clock varies
-/// between runs.
+/// between runs. In keep-alive mode every submit reuses one persistent
+/// socket, reconnecting once per request at most (the server may idle a
+/// quiet connection out).
 fn drive_connection(
     addr: &str,
     conn: usize,
     requests: usize,
     dup_ratio: f64,
+    keep_alive: bool,
 ) -> Vec<Sample> {
     let mut rng = Rng::seed_from_u64(0x10ad_6e4e + conn as u64);
+    let mut client = if keep_alive { HttpClient::connect(addr).ok() } else { None };
     let mut issued: Vec<String> = Vec::new();
     let mut samples = Vec::with_capacity(requests);
     for _ in 0..requests {
@@ -214,14 +307,22 @@ fn drive_connection(
             body
         };
         let t0 = Instant::now();
-        let sample = match http_call(addr, "POST", "/jobs", Some(&body)) {
-            Ok(response) => Sample {
-                status: response.status,
-                latency_ns: t0.elapsed().as_nanos() as u64,
-            },
-            Err(_) => Sample { status: 0, latency_ns: t0.elapsed().as_nanos() as u64 },
+        let status = if keep_alive {
+            match client.as_mut().and_then(|c| c.call("POST", "/jobs", Some(&body)).ok())
+            {
+                Some(r) => r.status,
+                None => {
+                    client = HttpClient::connect(addr).ok();
+                    client
+                        .as_mut()
+                        .and_then(|c| c.call("POST", "/jobs", Some(&body)).ok())
+                        .map_or(0, |r| r.status)
+                }
+            }
+        } else {
+            http_call(addr, "POST", "/jobs", Some(&body)).map_or(0, |r| r.status)
         };
-        samples.push(sample);
+        samples.push(Sample { status, latency_ns: t0.elapsed().as_nanos() as u64 });
     }
     samples
 }

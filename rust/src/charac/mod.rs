@@ -19,5 +19,7 @@ pub use dataset::Dataset;
 pub use inputs::InputSet;
 pub use pipeline::{
     characterize, characterize_all, characterize_all_as, characterize_as,
-    characterize_sharded, characterize_sharded_as, shard_ranges, Backend,
+    characterize_sharded, characterize_sharded_as, characterize_sharded_timed,
+    characterize_timed, shard_ranges, Backend, PhaseTiming,
 };
+pub use crate::synth::PpaBackend;

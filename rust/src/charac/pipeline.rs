@@ -5,12 +5,22 @@
 //! The PJRT backend is injected as a [`BehavEvaluator`] trait object so the
 //! pipeline does not depend on the runtime module (and tests can inject
 //! failing/fake evaluators).
+//!
+//! The native path is **fused**: instead of one parallel fan-out for BEHAV
+//! followed by a barrier and a second fan-out for PPA, each work-stealing
+//! task computes *both* metric sets for its config sub-range in one pass
+//! (nested parallel maps run serially inside pool workers, so the fused
+//! task is the only fan-out). Per-config metrics are independent, so the
+//! fused partition is bit-identical to the two-pass sweep; each task also
+//! clocks its two phases, and the summed [`PhaseTiming`] flows through
+//! `engine::CacheStats` into `/metrics`.
 
 use super::behav::BehavBackend;
 use super::{behav, BehavMetrics, Dataset, InputSet};
 use crate::error::Result;
 use crate::operator::{AxoConfig, Operator};
-use crate::synth;
+use crate::synth::{self, PpaBackend, PpaMetrics};
+use std::time::Instant;
 
 /// Behavioral evaluation backend interface (implemented by
 /// `runtime::AxoEvalExec` for the AOT/PJRT path). Deliberately not
@@ -72,6 +82,78 @@ fn pjrt_backend_linked() -> bool {
     false
 }
 
+/// Aggregate per-phase wall time of one characterization, summed across
+/// its work-stealing tasks (CPU-seconds-style totals, not elapsed time —
+/// concurrent shards each contribute their own clock).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseTiming {
+    /// Nanoseconds spent computing BEHAV metrics.
+    pub behav_ns: u64,
+    /// Nanoseconds spent computing PPA metrics.
+    pub ppa_ns: u64,
+}
+
+impl PhaseTiming {
+    fn add(&mut self, other: PhaseTiming) {
+        self.behav_ns += other.behav_ns;
+        self.ppa_ns += other.ppa_ns;
+    }
+}
+
+/// Config sub-range per fused task when the caller did not shard
+/// explicitly: a multiple of the 64-lane plane block, coarse enough that
+/// per-task setup amortizes.
+const FUSED_GRAIN: usize = 256;
+
+/// Both metric sets for one config slice in one pass, each phase clocked.
+/// Called from inside pool workers, where the nested BEHAV/PPA parallel
+/// maps run serially inline — so one task computes everything its slice
+/// needs with no intermediate barrier.
+fn fused_slice(
+    op: Operator,
+    configs: &[AxoConfig],
+    inputs: &InputSet,
+    behav: BehavBackend,
+    ppa: PpaBackend,
+) -> (Vec<BehavMetrics>, Vec<PpaMetrics>, PhaseTiming) {
+    let t0 = Instant::now();
+    let behav_rows = behav::native_behav_with(op, configs, inputs, behav);
+    let behav_ns = t0.elapsed().as_nanos() as u64;
+    let t1 = Instant::now();
+    let ppa_rows = synth::ppa_batch_with(op, configs, ppa);
+    let ppa_ns = t1.elapsed().as_nanos() as u64;
+    (behav_rows, ppa_rows, PhaseTiming { behav_ns, ppa_ns })
+}
+
+/// Fused native characterization with explicit backends and a phase-time
+/// readout: one work-stealing fan-out whose tasks each compute BEHAV
+/// *and* PPA for a [`FUSED_GRAIN`]-sized sub-range, merged order-stably.
+pub fn characterize_timed(
+    op: Operator,
+    configs: &[AxoConfig],
+    inputs: &InputSet,
+    behav: BehavBackend,
+    ppa: PpaBackend,
+) -> Result<(Dataset, PhaseTiming)> {
+    let ranges = shard_ranges(configs.len(), FUSED_GRAIN);
+    if ranges.len() <= 1 {
+        let (b, p, timing) = fused_slice(op, configs, inputs, behav, ppa);
+        return Ok((Dataset::new(op, configs.to_vec(), b, p)?, timing));
+    }
+    let parts = crate::util::par::parallel_map_dynamic(&ranges, 1, |_, r| {
+        fused_slice(op, &configs[r.clone()], inputs, behav, ppa)
+    });
+    let mut behav_rows = Vec::with_capacity(configs.len());
+    let mut ppa_rows = Vec::with_capacity(configs.len());
+    let mut timing = PhaseTiming::default();
+    for (b, p, t) in parts {
+        behav_rows.extend(b);
+        ppa_rows.extend(p);
+        timing.add(t);
+    }
+    Ok((Dataset::new(op, configs.to_vec(), behav_rows, ppa_rows)?, timing))
+}
+
 /// Characterize `configs` of `op` over `inputs`.
 pub fn characterize(
     op: Operator,
@@ -79,25 +161,27 @@ pub fn characterize(
     inputs: &InputSet,
     backend: &Backend<'_>,
 ) -> Result<Dataset> {
-    let behav = match backend {
-        Backend::Native => behav::native_behav(op, configs, inputs),
-        Backend::Evaluator(e) => e.eval(op, configs, inputs)?,
-    };
-    let ppa = synth::ppa_batch(op, configs);
-    Dataset::new(op, configs.to_vec(), behav, ppa)
+    match backend {
+        Backend::Native => characterize_as(op, configs, inputs, BehavBackend::resolve(None)),
+        Backend::Evaluator(e) => {
+            let behav = e.eval(op, configs, inputs)?;
+            let ppa = synth::ppa_batch(op, configs);
+            Dataset::new(op, configs.to_vec(), behav, ppa)
+        }
+    }
 }
 
 /// [`characterize`] on the native backend with an explicit BEHAV
-/// implementation (bit-sliced vs the scalar oracle).
+/// implementation (bit-sliced vs the scalar oracle); the PPA backend is
+/// resolved from the environment/default.
 pub fn characterize_as(
     op: Operator,
     configs: &[AxoConfig],
     inputs: &InputSet,
     behav: BehavBackend,
 ) -> Result<Dataset> {
-    let behav = behav::native_behav_with(op, configs, inputs, behav);
-    let ppa = synth::ppa_batch(op, configs);
-    Dataset::new(op, configs.to_vec(), behav, ppa)
+    characterize_timed(op, configs, inputs, behav, PpaBackend::resolve(None))
+        .map(|(ds, _)| ds)
 }
 
 /// Characterize the operator's *entire* design space (exhaustive operators
@@ -156,7 +240,8 @@ pub fn characterize_sharded(
 }
 
 /// [`characterize_sharded`] with an explicit BEHAV implementation (the
-/// engine threads `[charac] behav` through here).
+/// engine threads `[charac] behav` through here); the PPA backend is
+/// resolved from the environment/default.
 pub fn characterize_sharded_as(
     op: Operator,
     configs: &[AxoConfig],
@@ -164,23 +249,45 @@ pub fn characterize_sharded_as(
     shard_size: usize,
     behav: BehavBackend,
 ) -> Result<Dataset> {
+    characterize_sharded_timed(
+        op,
+        configs,
+        inputs,
+        shard_size,
+        behav,
+        PpaBackend::resolve(None),
+    )
+    .map(|(ds, _)| ds)
+}
+
+/// The fused sharded pipeline with explicit backends and a phase-time
+/// readout: every shard is one work-stealing task computing both metric
+/// sets for its sub-range (no barrier between a BEHAV sweep and a PPA
+/// sweep), merged order-stably — bit-identical to the whole-slice path.
+pub fn characterize_sharded_timed(
+    op: Operator,
+    configs: &[AxoConfig],
+    inputs: &InputSet,
+    shard_size: usize,
+    behav: BehavBackend,
+    ppa: PpaBackend,
+) -> Result<(Dataset, PhaseTiming)> {
     let ranges = shard_ranges(configs.len(), shard_size);
     if ranges.len() <= 1 {
-        return characterize_as(op, configs, inputs, behav);
+        return characterize_timed(op, configs, inputs, behav, ppa);
     }
     let shards = crate::util::par::parallel_map_dynamic(&ranges, 1, |_, r| {
-        characterize_as(op, &configs[r.clone()], inputs, behav)
+        fused_slice(op, &configs[r.clone()], inputs, behav, ppa)
     });
-    let mut all = Vec::with_capacity(configs.len());
-    let mut behav = Vec::with_capacity(configs.len());
-    let mut ppa = Vec::with_capacity(configs.len());
-    for shard in shards {
-        let shard = shard?;
-        all.extend(shard.configs);
-        behav.extend(shard.behav);
-        ppa.extend(shard.ppa);
+    let mut behav_rows = Vec::with_capacity(configs.len());
+    let mut ppa_rows = Vec::with_capacity(configs.len());
+    let mut timing = PhaseTiming::default();
+    for (b, p, t) in shards {
+        behav_rows.extend(b);
+        ppa_rows.extend(p);
+        timing.add(t);
     }
-    Dataset::new(op, all, behav, ppa)
+    Ok((Dataset::new(op, configs.to_vec(), behav_rows, ppa_rows)?, timing))
 }
 
 #[cfg(test)]

@@ -27,8 +27,8 @@
 
 use super::store::DatasetStore;
 use crate::charac::{
-    characterize_all_as, characterize_as, characterize_sharded_as, BehavBackend, Dataset,
-    InputSet,
+    characterize_sharded_timed, characterize_timed, BehavBackend, Dataset, InputSet,
+    PhaseTiming, PpaBackend,
 };
 use crate::coordinator::{EstimatorService, MetricsSnapshot};
 use crate::error::{Error, Result};
@@ -77,6 +77,12 @@ pub struct CacheStats {
     pub store_hits: u64,
     /// Cache misses that ran an actual characterization.
     pub characterized: u64,
+    /// Aggregate nanoseconds the fused pipeline spent on BEHAV metrics
+    /// (summed across work-stealing tasks, so concurrent shards each
+    /// contribute their own clock).
+    pub behav_ns: u64,
+    /// Aggregate nanoseconds spent on PPA metrics (same accounting).
+    pub ppa_ns: u64,
 }
 
 /// Estimator-pool key: which operator the service predicts for, under
@@ -192,6 +198,8 @@ pub struct EngineContext {
     misses: AtomicU64,
     store_hits: AtomicU64,
     characterized: AtomicU64,
+    behav_ns: AtomicU64,
+    ppa_ns: AtomicU64,
     pool_hits: AtomicU64,
     pool_spawned: AtomicU64,
 }
@@ -212,6 +220,8 @@ impl EngineContext {
             misses: AtomicU64::new(0),
             store_hits: AtomicU64::new(0),
             characterized: AtomicU64::new(0),
+            behav_ns: AtomicU64::new(0),
+            ppa_ns: AtomicU64::new(0),
             pool_hits: AtomicU64::new(0),
             pool_spawned: AtomicU64::new(0),
         }
@@ -232,6 +242,21 @@ impl EngineContext {
     /// the dataset cache or the persistent store.
     pub fn behav_backend(&self) -> BehavBackend {
         BehavBackend::resolve(self.cfg.charac.behav)
+    }
+
+    /// The resolved PPA implementation this context characterizes with
+    /// (`REPRO_PPA` env > `[charac] ppa` > plane default). Like the BEHAV
+    /// choice, both implementations are bit-identical, so the backend
+    /// never keys the dataset cache or the persistent store.
+    pub fn ppa_backend(&self) -> PpaBackend {
+        PpaBackend::resolve(self.cfg.charac.ppa)
+    }
+
+    /// Fold one characterization's phase clocks into the running totals
+    /// surfaced by [`EngineContext::cache_stats`] and `/metrics`.
+    fn record_timing(&self, timing: PhaseTiming) {
+        self.behav_ns.fetch_add(timing.behav_ns, Ordering::Relaxed);
+        self.ppa_ns.fetch_add(timing.ppa_ns, Ordering::Relaxed);
     }
 
     /// The default sample spec for `op` under this configuration:
@@ -312,20 +337,32 @@ impl EngineContext {
         inputs: &InputSet,
     ) -> Result<Dataset> {
         let behav = self.behav_backend();
-        match spec {
-            SampleSpec::Exhaustive => characterize_all_as(op, inputs, behav),
+        let ppa = self.ppa_backend();
+        let (ds, timing) = match spec {
+            SampleSpec::Exhaustive => {
+                assert!(
+                    op.exhaustive(),
+                    "{op} design space must be sampled, not enumerated"
+                );
+                let cfgs: Vec<AxoConfig> =
+                    AxoConfig::enumerate(op.config_len()).collect();
+                characterize_timed(op, &cfgs, inputs, behav, ppa)?
+            }
             SampleSpec::Seeded { seed, n } => {
                 let mut rng = Rng::seed_from_u64(seed);
                 let cfgs = AxoConfig::sample_unique(op.config_len(), n, &mut rng);
-                characterize_sharded_as(
+                characterize_sharded_timed(
                     op,
                     &cfgs,
                     inputs,
                     self.cfg.charac.shard_size,
                     behav,
-                )
+                    ppa,
+                )?
             }
-        }
+        };
+        self.record_timing(timing);
+        Ok(ds)
     }
 
     /// Characterize arbitrary configs of `op` natively (PPF → VPF
@@ -333,7 +370,15 @@ impl EngineContext {
     /// (the inputs they share *are* cached per operator).
     pub fn validate(&self, op: Operator, configs: &[AxoConfig]) -> Result<Dataset> {
         let inputs = self.inputs(op)?;
-        characterize_as(op, configs, &inputs, self.behav_backend())
+        let (ds, timing) = characterize_timed(
+            op,
+            configs,
+            &inputs,
+            self.behav_backend(),
+            self.ppa_backend(),
+        )?;
+        self.record_timing(timing);
+        Ok(ds)
     }
 
     /// The shared estimator service for the configured operator, spawned on
@@ -380,6 +425,8 @@ impl EngineContext {
             entries: self.datasets.filled(),
             store_hits: self.store_hits.load(Ordering::Relaxed),
             characterized: self.characterized.load(Ordering::Relaxed),
+            behav_ns: self.behav_ns.load(Ordering::Relaxed),
+            ppa_ns: self.ppa_ns.load(Ordering::Relaxed),
         }
     }
 

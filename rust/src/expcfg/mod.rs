@@ -175,6 +175,13 @@ impl ExperimentConfig {
                             .ok_or_else(|| bad(key, "scalar|bitslice"))?,
                     );
                 }
+                "charac.ppa" => {
+                    let s = get_str(key, value)?;
+                    cfg.charac.ppa = Some(
+                        crate::charac::PpaBackend::from_name(&s)
+                            .ok_or_else(|| bad(key, "scalar|plane"))?,
+                    );
+                }
                 "store.enabled" => {
                     cfg.store.enabled =
                         Some(value.as_bool().ok_or_else(|| bad(key, "a boolean"))?)
@@ -362,11 +369,16 @@ pub struct CharacConfig {
     /// escape hatch outranks this either way. Both produce bit-identical
     /// metrics, so this is a perf/debug knob, not a semantic one.
     pub behav: Option<crate::charac::BehavBackend>,
+    /// PPA implementation preference (`scalar` | `plane`). `None` = the
+    /// resolved default (config-parallel plane); the `REPRO_PPA` env
+    /// escape hatch outranks this either way. Bit-identical like the
+    /// BEHAV pair — a perf/debug knob, not a semantic one.
+    pub ppa: Option<crate::charac::PpaBackend>,
 }
 
 impl Default for CharacConfig {
     fn default() -> Self {
-        CharacConfig { shard_size: 512, behav: None }
+        CharacConfig { shard_size: 512, behav: None, ppa: None }
     }
 }
 
@@ -538,6 +550,7 @@ max_wait_us = 500
 [charac]
 shard_size = 64
 behav = "scalar"
+ppa = "scalar"
 
 [store]
 enabled = true
@@ -566,6 +579,7 @@ max_body_bytes = 4096
         assert_eq!(c.service.to_batch_options().max_wait.as_micros(), 500);
         assert_eq!(c.charac.shard_size, 64);
         assert_eq!(c.charac.behav, Some(crate::charac::BehavBackend::Scalar));
+        assert_eq!(c.charac.ppa, Some(crate::charac::PpaBackend::Scalar));
         assert_eq!(c.store.enabled, Some(true));
         assert!(c.store.is_enabled());
         assert_eq!(c.store.dir_under(Path::new("a")), PathBuf::from("/tmp/ds"));
@@ -633,6 +647,7 @@ max_body_bytes = 4096
         );
         assert_eq!(c.charac.shard_size, 512);
         assert_eq!(c.charac.behav, None, "backend choice is resolved, not baked in");
+        assert_eq!(c.charac.ppa, None, "PPA backend choice is resolved, not baked in");
         assert_eq!(c.store.max_bytes, None, "store is unbounded unless budgeted");
         let c = ExperimentConfig {
             charac: CharacConfig { shard_size: 0, ..Default::default() },

@@ -375,8 +375,14 @@ fn cmd_serve_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     let cache = engine.cache_stats();
     println!(
         "dataset cache: {} entries, {} hits, {} misses; characterizations: {}; \
-         store hits: {}",
-        cache.entries, cache.hits, cache.misses, cache.characterized, cache.store_hits
+         store hits: {}; phase time: behav {:.1} ms, ppa {:.1} ms",
+        cache.entries,
+        cache.hits,
+        cache.misses,
+        cache.characterized,
+        cache.store_hits,
+        cache.behav_ns as f64 / 1e6,
+        cache.ppa_ns as f64 / 1e6
     );
     println!("event log: {}", queue.dir().join(LOG_FILE).display());
     if summary.failed > 0 {
@@ -617,7 +623,7 @@ fn cmd_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     let cache = engine.cache_stats();
     println!(
         "dataset cache: {} entries, {} hits, {} misses; characterizations: {}; \
-         store hits: {}{}",
+         store hits: {}{}; phase time: behav {:.1} ms, ppa {:.1} ms",
         cache.entries,
         cache.hits,
         cache.misses,
@@ -626,7 +632,9 @@ fn cmd_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
         match engine.store() {
             Some(s) => format!(" ({})", s.dir().display()),
             None => " (store off)".to_string(),
-        }
+        },
+        cache.behav_ns as f64 / 1e6,
+        cache.ppa_ns as f64 / 1e6
     );
     Ok(())
 }

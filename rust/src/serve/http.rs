@@ -2,9 +2,14 @@
 //!
 //! A hand-rolled `TcpListener` server (no hyper, no tokio — the repo
 //! links nothing outside std) that parses *just enough* HTTP to run a job
-//! API: the request line, `Content-Length`, and a hard rejection of
-//! chunked transfer encoding. Every connection is one request
-//! (`Connection: close`); keep-alive reuse is a tracked follow-on.
+//! API: the request line, `Content-Length`, `Connection`, and a hard
+//! rejection of chunked transfer encoding. Connections are **keep-alive**
+//! by default: each acceptor serves a per-connection request loop until
+//! the client closes, sends `Connection: close`, goes idle past
+//! [`KEEPALIVE_IDLE`], or triggers an error response (errors always
+//! close — a client that sent garbage gets no second chance to desync
+//! the framing). [`HttpClient`] is the matching persistent client;
+//! [`http_call`] stays the one-shot `Connection: close` path.
 //!
 //! Routes:
 //!
@@ -53,6 +58,12 @@ const MAX_HEAD_BYTES: usize = 8 * 1024;
 /// Per-connection socket timeout: a stalled client must not pin an
 /// acceptor thread forever.
 const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// How long a keep-alive connection may sit idle between requests before
+/// the server closes it. Shorter than [`IO_TIMEOUT`]: waiting for a
+/// request that may never come should release the acceptor sooner than a
+/// read that is mid-request.
+const KEEPALIVE_IDLE: Duration = Duration::from_secs(5);
 
 /// HTTP front-end knobs (the `[http]` config section layered with the
 /// serve-mode worker settings).
@@ -217,9 +228,10 @@ impl HttpServer {
         self.stop.load(Ordering::SeqCst)
     }
 
-    /// One acceptor: blocking `accept()`, one request per connection. The
-    /// stop flag is checked after every accept — [`HttpServer::shutdown`]
-    /// wakes us with throwaway connections.
+    /// One acceptor: blocking `accept()`, then a keep-alive request loop
+    /// on the accepted connection. The stop flag is checked after every
+    /// accept — [`HttpServer::shutdown`] wakes us with throwaway
+    /// connections.
     fn accept_loop(&self, listener: &TcpListener) {
         self.active_acceptors.fetch_add(1, Ordering::SeqCst);
         loop {
@@ -228,9 +240,7 @@ impl HttpServer {
                     if self.stopping() {
                         break; // a shutdown wake-up, not a client
                     }
-                    self.stats.requests.fetch_add(1, Ordering::Relaxed);
-                    let response = self.serve_one(&stream);
-                    let _ = response.write_to(&stream);
+                    self.serve_connection(&stream);
                     let _ = stream.shutdown(std::net::Shutdown::Both);
                 }
                 Err(_) => {
@@ -243,6 +253,41 @@ impl HttpServer {
             }
         }
         self.active_acceptors.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// The per-connection request loop: serve until the client closes or
+    /// goes idle (a quiet break — no response, no `bad_requests` count),
+    /// asks for `Connection: close`, desyncs the protocol (errors always
+    /// close), or the server is stopping. Each served request — good or
+    /// bad — counts toward `http.requests`.
+    fn serve_connection(&self, mut stream: &TcpStream) {
+        let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+        loop {
+            let _ = stream.set_read_timeout(Some(KEEPALIVE_IDLE));
+            match read_request(&mut stream, self.opts.max_body_bytes) {
+                ReadOutcome::Idle => break,
+                ReadOutcome::Bad(mut response) => {
+                    self.stats.requests.fetch_add(1, Ordering::Relaxed);
+                    self.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    response.close = true;
+                    let _ = response.write_to(stream);
+                    break;
+                }
+                ReadOutcome::Request(request) => {
+                    self.stats.requests.fetch_add(1, Ordering::Relaxed);
+                    let mut response = self.route(&request);
+                    if response.status == 400 {
+                        self.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    }
+                    response.close =
+                        request.close || response.status >= 400 || self.stopping();
+                    let close = response.close;
+                    if response.write_to(stream).is_err() || close {
+                        break;
+                    }
+                }
+            }
+        }
     }
 
     /// Embedded executor: drain the spool in bursts of at most `workers`
@@ -286,22 +331,13 @@ impl HttpServer {
         }
     }
 
-    /// Parse and route one request; never panics a connection — every
+    /// Route one parsed request; never panics a connection — every
     /// outcome is a response.
-    fn serve_one(&self, mut stream: &TcpStream) -> Response {
-        let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
-        let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
-        let request = match read_request(&mut stream, self.opts.max_body_bytes) {
-            Ok(r) => r,
-            Err(response) => {
-                self.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
-                return response;
-            }
-        };
+    fn route(&self, request: &Request) -> Response {
         let path = request.path.split('?').next().unwrap_or("");
         let segments: Vec<&str> =
             path.trim_matches('/').split('/').filter(|s| !s.is_empty()).collect();
-        let response = match (request.method.as_str(), segments.as_slice()) {
+        match (request.method.as_str(), segments.as_slice()) {
             ("POST", ["jobs"]) => self.handle_submit(&request.body),
             ("GET", ["jobs", id]) => self.handle_status(id),
             ("GET", ["jobs", id, "result"]) => self.handle_result(id),
@@ -311,11 +347,7 @@ impl HttpServer {
             ("GET", ["metrics"]) => self.handle_metrics(),
             ("GET" | "POST", _) => Response::error(404, "no such route"),
             _ => Response::error(405, "method not allowed (GET and POST only)"),
-        };
-        if response.status == 400 {
-            self.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
         }
-        response
     }
 
     /// `POST /jobs`: parse → validate (`400`) → dedup (`200`) →
@@ -495,6 +527,14 @@ impl HttpServer {
                             "behav_backend",
                             Json::Str(self.ctx.behav_backend().name().into()),
                         ),
+                        (
+                            "ppa_backend",
+                            Json::Str(self.ctx.ppa_backend().name().into()),
+                        ),
+                        // Fused-pipeline phase clocks, aggregate ms summed
+                        // across work-stealing tasks.
+                        ("behav_ms", Json::Num(cache.behav_ns as f64 / 1e6)),
+                        ("ppa_ms", Json::Num(cache.ppa_ns as f64 / 1e6)),
                     ]),
                 ),
                 (
@@ -555,16 +595,27 @@ struct Request {
     method: String,
     path: String,
     body: Vec<u8>,
+    /// The client asked for `Connection: close` — answer, then hang up.
+    close: bool,
+}
+
+/// What reading one request off a keep-alive connection produced.
+enum ReadOutcome {
+    /// A well-formed request to route.
+    Request(Request),
+    /// The connection ended *between* requests — the client closed it or
+    /// sat silent past the idle timeout. Not an error: close quietly.
+    Idle,
+    /// A protocol violation mid-request; send the `400` and close.
+    Bad(Response),
 }
 
 /// Read one request from `stream`. Any protocol violation maps to the
 /// error response the caller should send (`400` for everything malformed,
-/// oversized, or chunked — this API has no patience for exotic clients).
-fn read_request(
-    stream: &mut &TcpStream,
-    max_body_bytes: usize,
-) -> std::result::Result<Request, Response> {
-    let bad = |message: &str| Err(Response::error(400, message));
+/// oversized, or chunked — this API has no patience for exotic clients);
+/// EOF or a read timeout *before the first byte* is [`ReadOutcome::Idle`].
+fn read_request(stream: &mut &TcpStream, max_body_bytes: usize) -> ReadOutcome {
+    let bad = |message: &str| ReadOutcome::Bad(Response::error(400, message));
 
     // Head: everything up to the blank line, hard-capped.
     let mut buf: Vec<u8> = Vec::with_capacity(1024);
@@ -577,8 +628,10 @@ fn read_request(
         }
         let mut chunk = [0u8; 1024];
         match stream.read(&mut chunk) {
+            Ok(0) if buf.is_empty() => return ReadOutcome::Idle,
             Ok(0) => return bad("connection closed mid-request"),
             Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) if buf.is_empty() => return ReadOutcome::Idle,
             Err(_) => return bad("read failed or timed out"),
         }
     };
@@ -601,8 +654,10 @@ fn read_request(
         return bad("only HTTP/1.x is supported");
     }
 
-    // Headers: only Content-Length and Transfer-Encoding matter.
+    // Headers: only Content-Length, Connection, and Transfer-Encoding
+    // matter.
     let mut content_length: Option<usize> = None;
+    let mut close = false;
     for line in lines {
         let Some((name, value)) = line.split_once(':') else {
             return bad("malformed header line");
@@ -616,6 +671,9 @@ fn read_request(
                 Ok(n) => content_length = Some(n),
                 Err(_) => return bad("unparseable Content-Length"),
             }
+        }
+        if name.eq_ignore_ascii_case("connection") {
+            close = value.to_ascii_lowercase().contains("close");
         }
     }
 
@@ -637,7 +695,7 @@ fn read_request(
         }
     }
     body.truncate(body_len);
-    Ok(Request { method, path, body })
+    ReadOutcome::Request(Request { method, path, body, close })
 }
 
 /// The head/body boundary (`\r\n\r\n`) position, if fully buffered.
@@ -645,11 +703,15 @@ fn find_blank_line(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-/// An outgoing response (always `Connection: close`).
+/// An outgoing response. `close` decides the `Connection:` header (and
+/// whether the per-connection loop hangs up after writing); the request
+/// loop sets it from the client's wish, the response status, and the
+/// server's stop flag.
 pub struct Response {
     pub status: u16,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    close: bool,
 }
 
 impl Response {
@@ -660,7 +722,7 @@ impl Response {
 
     /// Pre-serialized JSON bytes (the verbatim result pass-through).
     fn raw_json(status: u16, body: Vec<u8>) -> Response {
-        Response { status, headers: Vec::new(), body }
+        Response { status, headers: Vec::new(), body, close: false }
     }
 
     /// The uniform error shape: `{"error": message}`.
@@ -685,9 +747,10 @@ impl Response {
     }
 
     fn write_to(&self, mut stream: &TcpStream) -> std::io::Result<()> {
+        let connection = if self.close { "close" } else { "keep-alive" };
         let mut head = format!(
             "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\n\
-             content-length: {}\r\nconnection: close\r\n",
+             content-length: {}\r\nconnection: {connection}\r\n",
             self.status,
             self.reason(),
             self.body.len()
@@ -758,20 +821,104 @@ pub fn http_call(
     let (head, body) = text
         .split_once("\r\n\r\n")
         .ok_or_else(|| fail("parse", &"no header/body boundary"))?;
+    let (status, headers) = parse_response_head(head)
+        .ok_or_else(|| fail("parse", &format!("bad response head `{head}`")))?;
+    Ok(HttpResponse { status, headers, body: body.to_string() })
+}
+
+/// Parse a response head (status line + headers) the lenient way both
+/// clients share.
+fn parse_response_head(head: &str) -> Option<(u16, Vec<(String, String)>)> {
     let mut lines = head.split("\r\n");
     let status_line = lines.next().unwrap_or("");
-    let status = status_line
-        .split(' ')
-        .nth(1)
-        .and_then(|s| s.parse::<u16>().ok())
-        .ok_or_else(|| fail("parse", &format!("bad status line `{status_line}`")))?;
+    let status = status_line.split(' ').nth(1)?.parse::<u16>().ok()?;
     let headers = lines
         .filter_map(|line| {
             line.split_once(':')
                 .map(|(n, v)| (n.trim().to_string(), v.trim().to_string()))
         })
         .collect();
-    Ok(HttpResponse { status, headers, body: body.to_string() })
+    Some((status, headers))
+}
+
+/// A persistent keep-alive client: one TCP connection, many requests.
+/// Responses are framed by their `content-length` (this server always
+/// sends one), so the connection stays usable for the next call — the
+/// client-side half of the server's per-connection request loop, used by
+/// `loadgen --keep-alive` and the keep-alive tests.
+pub struct HttpClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> Result<HttpClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Coordinator(format!("http connect {addr}: {e}")))?;
+        let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+        let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+        Ok(HttpClient { stream, buf: Vec::new() })
+    }
+
+    /// One request/response exchange on the persistent connection. Fails
+    /// if the server closed it (e.g. after an error response or the idle
+    /// timeout) — reconnect and retry at the caller's discretion.
+    pub fn call(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<HttpResponse> {
+        let fail = |what: &str, e: &dyn std::fmt::Display| {
+            Error::Coordinator(format!("http {method} {path}: {what}: {e}"))
+        };
+        let payload = body.unwrap_or("");
+        let request = format!(
+            "{method} {path} HTTP/1.1\r\nhost: keep-alive\r\ncontent-length: {}\r\n\
+             connection: keep-alive\r\n\r\n{payload}",
+            payload.len()
+        );
+        self.stream
+            .write_all(request.as_bytes())
+            .map_err(|e| fail("write", &e))?;
+
+        // Head, framed by the blank line.
+        let head_len = loop {
+            if let Some(pos) = find_blank_line(&self.buf) {
+                break pos;
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err(fail("read", &"connection closed mid-response")),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) => return Err(fail("read", &e)),
+            }
+        };
+        let head = std::str::from_utf8(&self.buf[..head_len])
+            .map_err(|e| fail("decode", &e))?;
+        let (status, headers) = parse_response_head(head)
+            .ok_or_else(|| fail("parse", &format!("bad response head `{head}`")))?;
+
+        // Body, framed by content-length (keep-alive requires it).
+        let length: usize = headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case("content-length"))
+            .and_then(|(_, v)| v.parse().ok())
+            .ok_or_else(|| fail("parse", &"response has no content-length"))?;
+        let body_start = head_len + 4;
+        while self.buf.len() < body_start + length {
+            let mut chunk = vec![0u8; (body_start + length - self.buf.len()).min(4096)];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err(fail("read", &"connection closed mid-body")),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) => return Err(fail("read", &e)),
+            }
+        }
+        let body = String::from_utf8(self.buf[body_start..body_start + length].to_vec())
+            .map_err(|e| fail("decode", &e))?;
+        self.buf.drain(..body_start + length);
+        Ok(HttpResponse { status, headers, body })
+    }
 }
 
 #[cfg(test)]
@@ -904,6 +1051,40 @@ mod tests {
         assert_eq!(
             m.get("queue").and_then(|q| q.get("pending")).and_then(Json::as_u64),
             Some(1)
+        );
+
+        server.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn keep_alive_serves_many_requests_per_connection() {
+        let (_dir, server, handle) = frontend(HttpOptions::default());
+        let addr = server.local_addr().to_string();
+
+        let mut client = HttpClient::connect(&addr).unwrap();
+        for _ in 0..3 {
+            let r = client.call("GET", "/healthz", None).unwrap();
+            assert_eq!(r.status, 200);
+            assert_eq!(r.header("connection"), Some("keep-alive"));
+        }
+        // POSTs ride the same connection.
+        let spec = r#"{"factors":[0.5]}"#;
+        let created = client.call("POST", "/jobs", Some(spec)).unwrap();
+        assert_eq!(created.status, 201, "{}", created.body);
+        assert_eq!(created.header("connection"), Some("keep-alive"));
+        // An error response closes the connection after answering.
+        let bad = client.call("POST", "/jobs", Some("not json")).unwrap();
+        assert_eq!(bad.status, 400);
+        assert_eq!(bad.header("connection"), Some("close"));
+        drop(client);
+
+        // All five keep-alive requests counted individually; this metrics
+        // probe is the sixth.
+        let m = http_call(&addr, "GET", "/metrics", None).unwrap().json().unwrap();
+        assert_eq!(
+            m.get("http").and_then(|h| h.get("requests")).and_then(Json::as_u64),
+            Some(6)
         );
 
         server.shutdown();

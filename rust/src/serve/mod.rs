@@ -52,7 +52,7 @@ pub mod runner;
 pub mod spec;
 
 pub use dedup::{canonical_hash, hash_id, Admission};
-pub use http::{http_call, HttpOptions, HttpResponse, HttpServer};
+pub use http::{http_call, HttpClient, HttpOptions, HttpResponse, HttpServer};
 pub use queue::{
     ClaimedJob, JobQueue, JobState, QueueCounts, RequeueReport, Submission, MAX_REVIVALS,
 };

@@ -8,9 +8,13 @@
 //! `python/compile/synth_model.py` exactly; `golden_behav.json` pins both.
 
 pub mod device;
+pub mod plane;
 
 use crate::operator::{multiplier, AxoConfig, Operator, OperatorKind};
 use device::*;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
 
 /// The PPA metric bundle the paper characterizes per design (Eq. 2).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -42,6 +46,117 @@ impl PpaMetrics {
     pub fn from_array(a: [f64; 5]) -> Self {
         PpaMetrics { luts: a[0], cpd_ns: a[1], power_mw: a[2], pdp: a[3], pdplut: a[4] }
     }
+}
+
+/// Which implementation computes PPA metrics. Both produce bit-identical
+/// [`PpaMetrics`]; the scalar path is the oracle the config-parallel
+/// plane default is verified against (`rust/tests/ppa_plane.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PpaBackend {
+    /// Per-config evaluation (the `longest_run` / column-height walks).
+    Scalar,
+    /// 64 configs per operation in u64 keep-mask planes ([`plane`]).
+    Plane,
+}
+
+impl PpaBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            PpaBackend::Scalar => "scalar",
+            PpaBackend::Plane => "plane",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PpaBackend> {
+        match s {
+            "scalar" => Some(PpaBackend::Scalar),
+            "plane" => Some(PpaBackend::Plane),
+            _ => None,
+        }
+    }
+
+    /// Resolution order: the `REPRO_PPA` escape hatch, then the caller's
+    /// preference (typically `[charac] ppa` from expcfg), then the
+    /// plane default — mirroring
+    /// [`BehavBackend::resolve`](crate::charac::BehavBackend::resolve).
+    pub fn resolve(preferred: Option<PpaBackend>) -> PpaBackend {
+        if let Ok(v) = std::env::var("REPRO_PPA") {
+            match PpaBackend::from_name(v.trim()) {
+                Some(b) => return b,
+                None => eprintln!(
+                    "warning: ignoring invalid REPRO_PPA={v:?} \
+                     (expected `scalar` or `plane`)"
+                ),
+            }
+        }
+        preferred.unwrap_or(PpaBackend::Plane)
+    }
+}
+
+/// Immutable per-`m_bits` multiplier geometry, built once per process and
+/// shared by the scalar and plane backends: the Baugh-Wooley pair list
+/// with each pair's target column, weight, and precomputed activity
+/// contribution, plus the `ceil(log_1.5 h)` compressor-depth lookup.
+/// Hoisting this out of `mult_ppa` removes a `Vec` allocation per config
+/// from the batch hot loop without changing any accumulation order (the
+/// cached `act_w` values are the identical pure-function f64s the scalar
+/// loop recomputed per config).
+pub(crate) struct PairTable {
+    /// Lexicographic `(i, j)` pairs, `i ≤ j` — `multiplier::pairs` order.
+    pub pairs: Vec<(u32, u32)>,
+    /// `col[k] = i + j`, the partial-product column of pair `k`.
+    pub col: Vec<u32>,
+    /// `weight[k]` — 2 bits land in the column when `i < j`, 1 when `i == j`.
+    pub weight: Vec<u32>,
+    /// `weight · (0.3 + 0.4 (i+j)/(2M−2))`, pair `k`'s activity term.
+    pub act_w: Vec<f64>,
+    /// Number of partial-product columns, `2M − 1`.
+    pub n_cols: usize,
+    /// `depth[h]` for integer column heights `0 ..= M`.
+    pub depth: Vec<f64>,
+}
+
+impl PairTable {
+    fn build(m_bits: u32) -> PairTable {
+        let pairs = multiplier::pairs(m_bits);
+        let col: Vec<u32> = pairs.iter().map(|&(i, j)| i + j).collect();
+        let weight: Vec<u32> =
+            pairs.iter().map(|&(i, j)| if i < j { 2 } else { 1 }).collect();
+        let act_w: Vec<f64> = pairs
+            .iter()
+            .zip(&weight)
+            .map(|(&(i, j), &w)| {
+                w as f64 * (0.3 + 0.4 * (i + j) as f64 / (2 * m_bits - 2) as f64)
+            })
+            .collect();
+        // A column holds at most M partial-product bits (the middle
+        // column of the accurate design), so the depth lookup is tiny.
+        let depth: Vec<f64> = (0..=m_bits)
+            .map(|h| {
+                let hmax = h as f64;
+                if hmax > 1.0 { (hmax.ln() / 1.5f64.ln()).ceil() } else { 0.0 }
+            })
+            .collect();
+        PairTable {
+            pairs,
+            col,
+            weight,
+            act_w,
+            n_cols: (2 * m_bits - 1) as usize,
+            depth,
+        }
+    }
+}
+
+/// The process-wide [`PairTable`] for `m_bits`, built on first use.
+/// Leaked on purpose: the set of multiplier widths is tiny and fixed.
+pub(crate) fn pair_table(m_bits: u32) -> &'static PairTable {
+    static TABLES: OnceLock<Mutex<HashMap<u32, &'static PairTable>>> = OnceLock::new();
+    let mut map = TABLES
+        .get_or_init(|| Mutex::new(HashMap::new()))
+        .lock()
+        .expect("pair table cache poisoned");
+    *map.entry(m_bits).or_insert_with(|| Box::leak(Box::new(PairTable::build(m_bits))))
 }
 
 /// Longest run of consecutive retained LUTs — the surviving ripple length.
@@ -85,33 +200,41 @@ pub fn adder_ppa(config: &AxoConfig) -> PpaMetrics {
 /// adder ripples across the active-column span. Activity of LUT `(i,j)` is
 /// `(2 if i<j else 1) × (0.3 + 0.4 (i+j)/(2M-2))`.
 pub fn mult_ppa(m_bits: u32, config: &AxoConfig) -> PpaMetrics {
-    let prs = multiplier::pairs(m_bits);
-    debug_assert_eq!(prs.len() as u32, config.len());
-    let n_cols = (2 * m_bits - 1) as usize;
-    let mut heights = vec![0u32; n_cols];
-    let mut act_sum = 0.0;
-    for (k, &(i, j)) in prs.iter().enumerate() {
-        if config.keeps(k as u32) {
-            let w = if i < j { 2 } else { 1 };
-            heights[(i + j) as usize] += w;
-            act_sum +=
-                w as f64 * (0.3 + 0.4 * (i + j) as f64 / (2 * m_bits - 2) as f64);
-        }
+    // The pair geometry is cached per m_bits and the heights scratch is
+    // per-thread, so the batch hot loop performs zero allocations. The
+    // cached act_w values are the identical f64s the old per-config
+    // recomputation produced, added in the identical order.
+    thread_local! {
+        static HEIGHTS: RefCell<Vec<u32>> = const { RefCell::new(Vec::new()) };
     }
-    let luts = config.count_kept() as f64 + m_bits as f64;
-    let hmax = *heights.iter().max().unwrap() as f64;
-    let depth = if hmax > 1.0 { (hmax.ln() / 1.5f64.ln()).ceil() } else { 0.0 };
-    let first = heights.iter().position(|&h| h > 0);
-    let span = match first {
-        Some(f) => {
-            let l = heights.iter().rposition(|&h| h > 0).unwrap();
-            (l - f + 1) as f64
+    let table = pair_table(m_bits);
+    debug_assert_eq!(table.pairs.len() as u32, config.len());
+    HEIGHTS.with(|cell| {
+        let mut heights = cell.borrow_mut();
+        heights.clear();
+        heights.resize(table.n_cols, 0);
+        let mut act_sum = 0.0;
+        for k in 0..table.pairs.len() {
+            if config.keeps(k as u32) {
+                heights[table.col[k] as usize] += table.weight[k];
+                act_sum += table.act_w[k];
+            }
         }
-        None => 0.0,
-    };
-    let cpd = T_NET_NS + T_LUT_NS * (1.0 + depth) + T_CARRY_NS * span;
-    let power = P_BASE_MW + P_LUT_MW * act_sum;
-    PpaMetrics::from_parts(luts, cpd, power)
+        let luts = config.count_kept() as f64 + m_bits as f64;
+        let hmax = *heights.iter().max().unwrap() as usize;
+        let depth = table.depth[hmax];
+        let first = heights.iter().position(|&h| h > 0);
+        let span = match first {
+            Some(f) => {
+                let l = heights.iter().rposition(|&h| h > 0).unwrap();
+                (l - f + 1) as f64
+            }
+            None => 0.0,
+        };
+        let cpd = T_NET_NS + T_LUT_NS * (1.0 + depth) + T_CARRY_NS * span;
+        let power = P_BASE_MW + P_LUT_MW * act_sum;
+        PpaMetrics::from_parts(luts, cpd, power)
+    })
 }
 
 /// Dispatch on operator kind.
@@ -122,12 +245,29 @@ pub fn ppa(op: Operator, config: &AxoConfig) -> PpaMetrics {
     }
 }
 
-/// Batch characterization on the work-stealing pool. Per-config cost is
-/// tiny (a few hundred ops), so the grain is coarse: small batches stay
-/// on the calling thread, large ones split into a handful of chunks.
+/// Batch characterization under an explicit backend. The scalar path
+/// fans per-config on the work-stealing pool (coarse grain — per-config
+/// cost is a few hundred ops); the plane path fans 64-config blocks
+/// ([`plane::ppa_batch_plane`]). Both orders are stable and the rows
+/// bit-identical.
+pub fn ppa_batch_with(
+    op: Operator,
+    configs: &[AxoConfig],
+    backend: PpaBackend,
+) -> Vec<PpaMetrics> {
+    match backend {
+        PpaBackend::Scalar => {
+            let grain = crate::util::par::default_grain(configs.len()).max(256);
+            crate::util::par::parallel_map_dynamic(configs, grain, |_, c| ppa(op, c))
+        }
+        PpaBackend::Plane => plane::ppa_batch_plane(op, configs),
+    }
+}
+
+/// [`ppa_batch_with`] under the resolved default backend
+/// (`REPRO_PPA` env > plane).
 pub fn ppa_batch(op: Operator, configs: &[AxoConfig]) -> Vec<PpaMetrics> {
-    let grain = crate::util::par::default_grain(configs.len()).max(256);
-    crate::util::par::parallel_map_dynamic(configs, grain, |_, c| ppa(op, c))
+    ppa_batch_with(op, configs, PpaBackend::resolve(None))
 }
 
 #[cfg(test)]

@@ -1,0 +1,264 @@
+//! Config-parallel bit-sliced PPA estimation — 64 configurations per op.
+//!
+//! PR 6 bit-sliced the BEHAV half of characterization across *input
+//! vectors*; this module applies the same transform to the analytical PPA
+//! estimator across *configurations*: [`BitMatrix`](bitslice::BitMatrix)
+//! transposes 64 keep-masks so plane `i` is a `u64` whose bit `t` is
+//! keep-bit `i` of configuration `t`, and the per-config walks of
+//! [`super::adder_ppa`]/[`super::mult_ppa`] become plane recurrences:
+//!
+//! * the adder's longest retained run is a lane-parallel saturating
+//!   counter — `cur = keep ? cur + 1 : 0` as a ripple increment whose
+//!   carry-in *is* the keep plane, with `best = max(best, cur)` by
+//!   borrow-compare + plane mux;
+//! * multiplier column heights accumulate through the same ±2^shift plane
+//!   adder the BEHAV path uses ([`bitslice::acc_add`]), over the cached
+//!   pair table shared with the scalar oracle; `hmax` is a plane
+//!   compare-select across columns and the active-column span comes from
+//!   first/last-nonzero scans that OR column-index bits under a
+//!   not-yet-found mask;
+//! * activity sums are weight-indexed masked broadcasts
+//!   (`act[t] += w_i · keep_bit`), bit-identical to the scalar
+//!   conditional add because every weight is positive, `w·1 == w`,
+//!   `w·0 == +0.0`, and `x + 0.0 == x` for the non-negative partial sums —
+//!   the same accumulation order per config, so results match the scalar
+//!   oracle by `f64::to_bits`, never by tolerance
+//!   (`rust/tests/ppa_plane.rs` asserts this end to end).
+//!
+//! Integer-valued quantities (`count_kept`, run lengths, heights, spans)
+//! are exact in f64 no matter how they are counted, and the multiplier's
+//! `ceil(log_1.5 h)` depth is a pure function of the integer `hmax`, so it
+//! is read from a per-table lookup evaluated with the identical scalar
+//! expression.
+
+use super::device::*;
+use super::{PairTable, PpaMetrics};
+use crate::operator::bitslice::{self, BitMatrix};
+use crate::operator::{AxoConfig, Operator, OperatorKind};
+
+/// Counter planes for the adder's run recurrence: runs are at most the
+/// config length (≤ 36 for mul8-sized masks, ≤ 16 for adders) < 2^6.
+const RUN_PLANES: usize = 6;
+
+/// Counter planes per multiplier column: heights are at most `m_bits`
+/// (≤ 8) < 2^4.
+const HEIGHT_PLANES: usize = 4;
+
+/// Planes holding a column index (≤ 14 for mul8) < 2^4.
+const COL_PLANES: usize = 4;
+
+/// `best = max(best, cur)` lane-parallel: borrow-compare (`borrow` lane
+/// bits are 1 where `cur < best`), then mux-select the winner's planes.
+#[inline]
+fn plane_max(best: &mut [u64], cur: &[u64]) {
+    let mut borrow = 0u64;
+    for (&c, &b) in cur.iter().zip(best.iter()) {
+        borrow = (!c & (b | borrow)) | (b & borrow);
+    }
+    let take = !borrow;
+    for (b, &c) in best.iter_mut().zip(cur) {
+        *b = (c & take) | (*b & !take);
+    }
+}
+
+/// Add `w · keep_bit` into every live lane's activity sum, in the same
+/// per-config order as the scalar loop (ascending plane index). An
+/// all-zero plane contributes `+0.0` everywhere — the additive identity —
+/// so it is skipped outright.
+#[inline]
+fn masked_broadcast(act: &mut [f64; 64], lanes: usize, plane: u64, w: f64) {
+    if plane == 0 {
+        return;
+    }
+    for (t, a) in act.iter_mut().enumerate().take(lanes) {
+        *a += w * ((plane >> t) & 1) as f64;
+    }
+}
+
+/// One ≤64-config block of adder PPA (tail lanes of a ragged batch are
+/// zero-padded by `pack` and never read back).
+fn adder_block(cfgs: &[AxoConfig], out: &mut Vec<PpaMetrics>) {
+    let lanes = cfgs.len();
+    debug_assert!(0 < lanes && lanes <= 64);
+    let n = cfgs[0].len();
+    let keep = BitMatrix::pack(lanes, n as usize, |t| cfgs[t].as_uint());
+    let keep = keep.block(0);
+
+    // Longest run: per-plane `cur = keep ? cur + 1 : 0` (ripple increment
+    // with carry-in = keep plane, then reset-where-removed), folded into a
+    // running lane-parallel max.
+    let mut cur = [0u64; RUN_PLANES];
+    let mut best = [0u64; RUN_PLANES];
+    let mut act = [0.0f64; 64];
+    for (i, &k) in keep.iter().enumerate() {
+        let mut carry = k;
+        for c in cur.iter_mut() {
+            let t = *c;
+            *c = (t ^ carry) & k;
+            carry = t & carry;
+        }
+        plane_max(&mut best, &cur);
+        masked_broadcast(&mut act, lanes, k, 0.5 + (i as f64 + 1.0) / (4.0 * n as f64));
+    }
+    let mut runs = [0u64; 64];
+    bitslice::unpack64(&best, &mut runs);
+
+    for (t, cfg) in cfgs.iter().enumerate() {
+        // count_kept is the keep-mask popcount — exact as f64 either way.
+        let luts = cfg.count_kept() as f64;
+        let cpd = T_NET_NS + T_LUT_NS + T_CARRY_NS * runs[t] as f64;
+        let power = P_BASE_MW + P_LUT_MW * act[t];
+        out.push(PpaMetrics::from_parts(luts, cpd, power));
+    }
+}
+
+/// One ≤64-config block of multiplier PPA over the cached pair table.
+fn mult_block(m_bits: u32, table: &PairTable, cfgs: &[AxoConfig], out: &mut Vec<PpaMetrics>) {
+    let lanes = cfgs.len();
+    debug_assert!(0 < lanes && lanes <= 64);
+    let l = table.pairs.len();
+    debug_assert_eq!(l as u32, cfgs[0].len());
+    let keep = BitMatrix::pack(lanes, l, |t| cfgs[t].as_uint());
+    let keep = keep.block(0);
+
+    // Column heights as per-column counter planes: a kept pair adds its
+    // weight (1 or 2 → shift 0 or 1) into column i+j, 64 configs at once.
+    let mut heights = vec![[0u64; HEIGHT_PLANES]; table.n_cols];
+    let mut act = [0.0f64; 64];
+    for (k, &kp) in keep.iter().enumerate() {
+        let shift = (table.weight[k] == 2) as usize;
+        bitslice::acc_add(&mut heights[table.col[k] as usize], kp, shift);
+        masked_broadcast(&mut act, lanes, kp, table.act_w[k]);
+    }
+
+    // hmax: lane-parallel compare-select across columns.
+    let mut hmax = heights[0];
+    for col in &heights[1..] {
+        plane_max(&mut hmax, col);
+    }
+    let mut hmax_lanes = [0u64; 64];
+    bitslice::unpack64(&hmax, &mut hmax_lanes);
+
+    // Active-column span: ascending and descending first-nonzero scans.
+    // A column's nonzero mask is the OR of its counter planes; where a
+    // lane first turns nonzero, the column index's bits are OR-ed into
+    // the first/last planes under the not-yet-found mask.
+    let nz: Vec<u64> = heights.iter().map(|h| h.iter().fold(0, |a, &p| a | p)).collect();
+    let mut pending = !0u64;
+    let mut first = [0u64; COL_PLANES];
+    for (ci, &m) in nz.iter().enumerate() {
+        let newly = m & pending;
+        for (b, f) in first.iter_mut().enumerate() {
+            if (ci >> b) & 1 == 1 {
+                *f |= newly;
+            }
+        }
+        pending &= !m;
+    }
+    let found = !pending;
+    let mut pending = !0u64;
+    let mut last = [0u64; COL_PLANES];
+    for (ci, &m) in nz.iter().enumerate().rev() {
+        let newly = m & pending;
+        for (b, f) in last.iter_mut().enumerate() {
+            if (ci >> b) & 1 == 1 {
+                *f |= newly;
+            }
+        }
+        pending &= !m;
+    }
+    let (mut first_l, mut last_l) = ([0u64; 64], [0u64; 64]);
+    bitslice::unpack64(&first, &mut first_l);
+    bitslice::unpack64(&last, &mut last_l);
+
+    for (t, cfg) in cfgs.iter().enumerate() {
+        let luts = cfg.count_kept() as f64 + m_bits as f64;
+        let depth = table.depth[hmax_lanes[t] as usize];
+        let span = if (found >> t) & 1 == 1 {
+            (last_l[t] - first_l[t] + 1) as f64
+        } else {
+            0.0
+        };
+        let cpd = T_NET_NS + T_LUT_NS * (1.0 + depth) + T_CARRY_NS * span;
+        let power = P_BASE_MW + P_LUT_MW * act[t];
+        out.push(PpaMetrics::from_parts(luts, cpd, power));
+    }
+}
+
+/// Batch PPA on the plane backend: 64-config blocks on the work-stealing
+/// pool, merged order-stably. Block boundaries never affect values (each
+/// lane's metrics are a function of its own keep-mask only), so results
+/// are partition-independent and bit-identical to the scalar oracle.
+pub fn ppa_batch_plane(op: Operator, configs: &[AxoConfig]) -> Vec<PpaMetrics> {
+    if configs.is_empty() {
+        return Vec::new();
+    }
+    let chunks: Vec<&[AxoConfig]> = configs.chunks(64).collect();
+    let grain = crate::util::par::default_grain(chunks.len());
+    let table = match op.kind {
+        OperatorKind::UnsignedAdder => None,
+        OperatorKind::SignedMultiplier => Some(super::pair_table(op.bits)),
+    };
+    let blocks = crate::util::par::parallel_map_dynamic(&chunks, grain, |_, chunk| {
+        let mut out = Vec::with_capacity(chunk.len());
+        match table {
+            None => adder_block(chunk, &mut out),
+            Some(table) => mult_block(op.bits, table, chunk, &mut out),
+        }
+        out
+    });
+    let mut out = Vec::with_capacity(configs.len());
+    for block in blocks {
+        out.extend(block);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::{ppa_batch_with, PpaBackend};
+    use crate::util::rng::Rng;
+
+    fn assert_bits(op: Operator, cfgs: &[AxoConfig], what: &str) {
+        let scalar = ppa_batch_with(op, cfgs, PpaBackend::Scalar);
+        let plane = ppa_batch_with(op, cfgs, PpaBackend::Plane);
+        assert_eq!(scalar.len(), plane.len());
+        for (i, (s, p)) in scalar.iter().zip(&plane).enumerate() {
+            assert_eq!(
+                s.to_array().map(f64::to_bits),
+                p.to_array().map(f64::to_bits),
+                "{what}: config {i} ({s:?} vs {p:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn adder_exhaustive_add4_is_bit_identical() {
+        let cfgs: Vec<AxoConfig> = AxoConfig::enumerate(4).collect();
+        assert_bits(Operator::ADD4, &cfgs, "add4 exhaustive");
+    }
+
+    #[test]
+    fn mult_exhaustive_mul4_is_bit_identical() {
+        let cfgs: Vec<AxoConfig> = AxoConfig::enumerate(10).collect();
+        assert_bits(Operator::MUL4, &cfgs, "mul4 exhaustive");
+    }
+
+    #[test]
+    fn ragged_tails_are_bit_identical() {
+        let mut rng = Rng::seed_from_u64(3);
+        for n in [1usize, 63, 64, 65, 130] {
+            let cfgs = AxoConfig::sample_unique(12, n, &mut rng);
+            assert_bits(Operator::ADD12, &cfgs, &format!("add12 n={n}"));
+        }
+    }
+
+    #[test]
+    fn plane_is_the_default_backend() {
+        assert_eq!(PpaBackend::resolve(None), PpaBackend::Plane);
+        assert_eq!(PpaBackend::from_name("scalar"), Some(PpaBackend::Scalar));
+        assert_eq!(PpaBackend::from_name("plane"), Some(PpaBackend::Plane));
+        assert_eq!(PpaBackend::from_name("bitslice"), None);
+    }
+}

@@ -1,0 +1,139 @@
+//! Bit-identity of the two PPA backends.
+//!
+//! The config-parallel plane path (`synth/plane.rs`, 64 configurations
+//! per u64 operation) is the default; the per-config scalar path is its
+//! oracle. "Equivalent" means *bit-identical* [`PpaMetrics`] — every f64
+//! compared by `to_bits`, never by tolerance — across operator kinds,
+//! exhaustive and random config sets, ragged non-×64 batch tails, and
+//! whole datasets out of the fused sharded pipeline under either BEHAV
+//! backend (so cache and store entries never depend on which backends
+//! characterized them).
+
+use repro::charac::{
+    characterize_sharded_timed, BehavBackend, Dataset, InputSet, PpaBackend,
+};
+use repro::operator::{AxoConfig, Operator};
+use repro::synth::{ppa_batch_with, PpaMetrics};
+use repro::util::rng::Rng;
+
+fn assert_bit_identical(scalar: &[PpaMetrics], plane: &[PpaMetrics], what: &str) {
+    assert_eq!(scalar.len(), plane.len(), "{what}: row count");
+    for (i, (s, p)) in scalar.iter().zip(plane).enumerate() {
+        assert_eq!(
+            s.to_array().map(f64::to_bits),
+            p.to_array().map(f64::to_bits),
+            "{what}: config row {i} ({s:?} vs {p:?})"
+        );
+    }
+}
+
+/// Both backends over one operator/config pair.
+fn both(op: Operator, configs: &[AxoConfig]) -> (Vec<PpaMetrics>, Vec<PpaMetrics>) {
+    (
+        ppa_batch_with(op, configs, PpaBackend::Scalar),
+        ppa_batch_with(op, configs, PpaBackend::Plane),
+    )
+}
+
+#[test]
+fn add8_exhaustive_space_is_bit_identical() {
+    // 255 configs: three full 64-lane blocks plus a 63-lane tail.
+    let configs: Vec<AxoConfig> = AxoConfig::enumerate(8).collect();
+    assert_eq!(configs.len(), 255);
+    let (scalar, plane) = both(Operator::ADD8, &configs);
+    assert_bit_identical(&scalar, &plane, "add8 exhaustive");
+}
+
+#[test]
+fn mul4_exhaustive_space_is_bit_identical() {
+    let configs: Vec<AxoConfig> = AxoConfig::enumerate(10).collect();
+    assert_eq!(configs.len(), 1023);
+    let (scalar, plane) = both(Operator::MUL4, &configs);
+    assert_bit_identical(&scalar, &plane, "mul4 exhaustive");
+}
+
+#[test]
+fn add12_random_configs_are_bit_identical() {
+    let mut rng = Rng::seed_from_u64(41);
+    let configs = AxoConfig::sample_unique(12, 200, &mut rng);
+    let (scalar, plane) = both(Operator::ADD12, &configs);
+    assert_bit_identical(&scalar, &plane, "add12 random configs");
+}
+
+#[test]
+fn mul8_random_configs_are_bit_identical() {
+    let mut rng = Rng::seed_from_u64(43);
+    let configs = AxoConfig::sample_unique(36, 300, &mut rng);
+    let (scalar, plane) = both(Operator::MUL8, &configs);
+    assert_bit_identical(&scalar, &plane, "mul8 random configs");
+}
+
+#[test]
+fn ragged_batch_tails_are_bit_identical() {
+    // Block boundaries must be invisible: a lane's metrics depend only on
+    // its own keep-mask, so partial tail blocks change nothing.
+    let mut rng = Rng::seed_from_u64(47);
+    let adds = AxoConfig::sample_unique(12, 130, &mut rng);
+    let muls = AxoConfig::sample_unique(36, 130, &mut rng);
+    for n in [1usize, 63, 64, 65, 130] {
+        let (scalar, plane) = both(Operator::ADD12, &adds[..n]);
+        assert_bit_identical(&scalar, &plane, &format!("add12 len {n}"));
+        let (scalar, plane) = both(Operator::MUL8, &muls[..n]);
+        assert_bit_identical(&scalar, &plane, &format!("mul8 len {n}"));
+    }
+}
+
+fn assert_datasets_identical(a: &Dataset, b: &Dataset, what: &str) {
+    assert_eq!(a.configs, b.configs, "{what}: config column");
+    for i in 0..a.len() {
+        assert_eq!(
+            a.behav[i].to_array().map(f64::to_bits),
+            b.behav[i].to_array().map(f64::to_bits),
+            "{what}: behav row {i}"
+        );
+        assert_eq!(
+            a.ppa[i].to_array().map(f64::to_bits),
+            b.ppa[i].to_array().map(f64::to_bits),
+            "{what}: ppa row {i}"
+        );
+    }
+}
+
+#[test]
+fn fused_sharded_datasets_are_bit_identical_across_backend_corners() {
+    // The backend pair must be invisible end to end: whole datasets out
+    // of the fused sharded pipeline match bit-for-bit across all four
+    // (BEHAV, PPA) backend corners, and each run reports its phase
+    // clocks.
+    let inputs = InputSet::exhaustive(Operator::MUL4);
+    let mut rng = Rng::seed_from_u64(53);
+    let configs = AxoConfig::sample_unique(10, 101, &mut rng);
+    let (reference, timing) = characterize_sharded_timed(
+        Operator::MUL4,
+        &configs,
+        &inputs,
+        32,
+        BehavBackend::Bitslice,
+        PpaBackend::Plane,
+    )
+    .unwrap();
+    assert!(timing.behav_ns > 0, "fused pipeline must clock its BEHAV phase");
+    assert!(timing.ppa_ns > 0, "fused pipeline must clock its PPA phase");
+    for (behav, ppa) in [
+        (BehavBackend::Bitslice, PpaBackend::Scalar),
+        (BehavBackend::Scalar, PpaBackend::Plane),
+        (BehavBackend::Scalar, PpaBackend::Scalar),
+    ] {
+        let (ds, _) = characterize_sharded_timed(
+            Operator::MUL4,
+            &configs,
+            &inputs,
+            32,
+            behav,
+            ppa,
+        )
+        .unwrap();
+        let what = format!("mul4 dataset ({}, {})", behav.name(), ppa.name());
+        assert_datasets_identical(&reference, &ds, &what);
+    }
+}
