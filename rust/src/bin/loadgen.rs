@@ -3,26 +3,34 @@
 //! Drives N connections of mixed add12/mul8 `POST /jobs` specs with a
 //! configurable duplicate ratio against either an in-process front-end
 //! (the default: hermetic, port 0, workers 0 — measures the submit path
-//! without paying DSE wall-clock) or an external `--addr`. Stamps
-//! `BENCH_http.json` with requests/s, p50/p99 submit latency, and the
-//! observed dedup hit rate — the HTTP leg of the CI perf trajectory,
-//! `REPRO_BENCH_SMOKE=1` shrinking it to a bit-rot probe like every other
-//! bench.
+//! without paying DSE wall-clock) or an external `--addr`. Latencies
+//! aggregate through the shared [`obs::Histogram`](repro::obs::Histogram)
+//! — the same fixed log-bucketed edges `/metrics` reports — so stamped
+//! percentiles are deterministic for a given latency multiset. Stamps
+//! `BENCH_http.json` with requests/s, p50/p99 submit latency, the full
+//! bucket layout, and the observed dedup hit rate — the HTTP leg of the
+//! CI perf trajectory, `REPRO_BENCH_SMOKE=1` shrinking it to a bit-rot
+//! probe like every other bench.
 //!
 //! `--keep-alive` runs a second pass where every connection reuses one
 //! persistent socket ([`HttpClient`]) instead of a fresh
 //! connect-per-request, and stamps the p50/p99 latency deltas
 //! (close − keep-alive, ms) alongside the close-mode numbers.
 //!
+//! `--trace-out PATH` force-enables span tracing and writes the run's
+//! Chrome trace-event JSON — with the default in-process target that
+//! captures the server's request spans (Perfetto-loadable).
+//!
 //! ```text
 //! loadgen [--addr HOST:PORT] [--connections N] [--requests N]
-//!         [--dup-ratio F] [--keep-alive] [--out PATH]
+//!         [--dup-ratio F] [--keep-alive] [--out PATH] [--trace-out PATH]
 //! ```
 
 use repro::cli::ParsedArgs;
 use repro::engine::EngineContext;
 use repro::error::{Error, Result};
 use repro::expcfg::{ConssConfig, ExperimentConfig, GaConfig, SurrogateConfig};
+use repro::obs::{HistSnapshot, Histogram};
 use repro::serve::{http_call, HttpClient, HttpOptions, HttpServer, JobQueue};
 use repro::surrogate::EstimatorBackend;
 use repro::util::bench::smoke_mode;
@@ -44,10 +52,12 @@ fn main() {
         println!(
             "loadgen — closed-loop HTTP load for `repro serve-http`\n\n\
              USAGE: loadgen [--addr HOST:PORT] [--connections N] [--requests N]\n\
-             \x20                [--dup-ratio F] [--keep-alive] [--out PATH]\n\n\
+             \x20                [--dup-ratio F] [--keep-alive] [--out PATH]\n\
+             \x20                [--trace-out PATH]\n\n\
              Without --addr an in-process front-end is spawned on 127.0.0.1:0\n\
              (hermetic; no engine work). --keep-alive adds a second pass on\n\
-             persistent connections and stamps the latency delta.\n\
+             persistent connections and stamps the latency delta. --trace-out\n\
+             force-enables span tracing and writes Chrome trace-event JSON.\n\
              REPRO_BENCH_SMOKE=1 shrinks the run to a bit-rot probe.\n\
              Stamps BENCH_http.json."
         );
@@ -69,7 +79,9 @@ fn run(args: Vec<String>) -> Result<()> {
     let parsed = ParsedArgs::parse(args, &["keep-alive"])
         .map_err(|e| Error::Config(e.to_string()))?;
     parsed
-        .ensure_known(&["addr", "connections", "requests", "dup-ratio", "out"])
+        .ensure_known(&[
+            "addr", "connections", "requests", "dup-ratio", "out", "trace-out",
+        ])
         .map_err(|e| Error::Config(e.to_string()))?;
     let keep_alive = parsed.flag("keep-alive");
     let smoke = smoke_mode();
@@ -92,6 +104,10 @@ fn run(args: Vec<String>) -> Result<()> {
         .opt("out")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("BENCH_http.json"));
+    let trace_out = parsed.opt("trace-out").map(PathBuf::from);
+    if trace_out.is_some() {
+        repro::obs::force_enable();
+    }
 
     // Target: external server, or a hermetic in-process front-end.
     let embedded = if parsed.opt("addr").is_none() {
@@ -149,6 +165,7 @@ fn run(args: Vec<String>) -> Result<()> {
                 ("p99", Json::Num(close.p99_ms)),
             ]),
         ),
+        ("latency_buckets", close.snap.to_json_buckets()),
         (
             "dedup",
             Json::obj(vec![
@@ -170,6 +187,7 @@ fn run(args: Vec<String>) -> Result<()> {
                         ("p99", Json::Num(ka.p99_ms)),
                     ]),
                 ),
+                ("latency_buckets", ka.snap.to_json_buckets()),
                 // close − keep-alive: positive = connection reuse saved.
                 ("p50_delta_ms", Json::Num(close.p50_ms - ka.p50_ms)),
                 ("p99_delta_ms", Json::Num(close.p99_ms - ka.p99_ms)),
@@ -178,6 +196,10 @@ fn run(args: Vec<String>) -> Result<()> {
     }
     std::fs::write(&out, Json::obj(pairs).to_string())?;
     println!("wrote {}", out.display());
+    if let Some(path) = &trace_out {
+        std::fs::write(path, repro::obs::export_chrome().to_string())?;
+        println!("wrote trace to {}", path.display());
+    }
     Ok(())
 }
 
@@ -192,6 +214,7 @@ struct PassStats {
     rps: f64,
     p50_ms: f64,
     p99_ms: f64,
+    snap: HistSnapshot,
 }
 
 impl PassStats {
@@ -211,15 +234,13 @@ impl PassStats {
         } else {
             shared as f64 / (created + shared) as f64
         };
-        let mut lat: Vec<u64> = samples.iter().map(|s| s.latency_ns).collect();
-        lat.sort_unstable();
-        let pct = |p: usize| -> f64 {
-            if lat.is_empty() {
-                0.0
-            } else {
-                lat[(lat.len() * p / 100).min(lat.len() - 1)] as f64
-            }
-        };
+        // Same log-bucketed histogram `/metrics` exposes: percentiles are
+        // bucket upper edges, deterministic for a given latency multiset.
+        let hist = Histogram::new();
+        for s in samples {
+            hist.record(s.latency_ns);
+        }
+        let snap = hist.snapshot();
         let secs = elapsed.as_secs_f64();
         Ok(PassStats {
             label,
@@ -229,8 +250,9 @@ impl PassStats {
             hit_rate,
             duration_ms: elapsed.as_millis() as f64,
             rps: if secs > 0.0 { total as f64 / secs } else { 0.0 },
-            p50_ms: pct(50) / 1e6,
-            p99_ms: pct(99) / 1e6,
+            p50_ms: snap.percentile(50.0) as f64 / 1e6,
+            p99_ms: snap.percentile(99.0) as f64 / 1e6,
+            snap,
         })
     }
 

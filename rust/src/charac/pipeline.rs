@@ -18,6 +18,7 @@
 use super::behav::BehavBackend;
 use super::{behav, BehavMetrics, Dataset, InputSet};
 use crate::error::Result;
+use crate::obs;
 use crate::operator::{AxoConfig, Operator};
 use crate::synth::{self, PpaBackend, PpaMetrics};
 use std::time::Instant;
@@ -108,20 +109,31 @@ const FUSED_GRAIN: usize = 256;
 /// Both metric sets for one config slice in one pass, each phase clocked.
 /// Called from inside pool workers, where the nested BEHAV/PPA parallel
 /// maps run serially inline — so one task computes everything its slice
-/// needs with no intermediate barrier.
+/// needs with no intermediate barrier. `ctx` parents the per-phase spans
+/// under the caller's span across the pool-thread boundary; both phase
+/// times also land in the process-global shard histograms.
 fn fused_slice(
     op: Operator,
     configs: &[AxoConfig],
     inputs: &InputSet,
     behav: BehavBackend,
     ppa: PpaBackend,
+    ctx: obs::SpanCtx,
 ) -> (Vec<BehavMetrics>, Vec<PpaMetrics>, PhaseTiming) {
+    let mut sp = obs::span_under(ctx, obs::n::CHARAC_BEHAV);
+    sp.set_arg(configs.len() as u64);
     let t0 = Instant::now();
     let behav_rows = behav::native_behav_with(op, configs, inputs, behav);
     let behav_ns = t0.elapsed().as_nanos() as u64;
+    drop(sp);
+    let mut sp = obs::span_under(ctx, obs::n::CHARAC_PPA);
+    sp.set_arg(configs.len() as u64);
     let t1 = Instant::now();
     let ppa_rows = synth::ppa_batch_with(op, configs, ppa);
     let ppa_ns = t1.elapsed().as_nanos() as u64;
+    drop(sp);
+    obs::metrics().behav_shard_ns.record(behav_ns);
+    obs::metrics().ppa_shard_ns.record(ppa_ns);
     (behav_rows, ppa_rows, PhaseTiming { behav_ns, ppa_ns })
 }
 
@@ -135,13 +147,14 @@ pub fn characterize_timed(
     behav: BehavBackend,
     ppa: PpaBackend,
 ) -> Result<(Dataset, PhaseTiming)> {
+    let ctx = obs::current();
     let ranges = shard_ranges(configs.len(), FUSED_GRAIN);
     if ranges.len() <= 1 {
-        let (b, p, timing) = fused_slice(op, configs, inputs, behav, ppa);
+        let (b, p, timing) = fused_slice(op, configs, inputs, behav, ppa, ctx);
         return Ok((Dataset::new(op, configs.to_vec(), b, p)?, timing));
     }
     let parts = crate::util::par::parallel_map_dynamic(&ranges, 1, |_, r| {
-        fused_slice(op, &configs[r.clone()], inputs, behav, ppa)
+        fused_slice(op, &configs[r.clone()], inputs, behav, ppa, ctx)
     });
     let mut behav_rows = Vec::with_capacity(configs.len());
     let mut ppa_rows = Vec::with_capacity(configs.len());
@@ -272,12 +285,13 @@ pub fn characterize_sharded_timed(
     behav: BehavBackend,
     ppa: PpaBackend,
 ) -> Result<(Dataset, PhaseTiming)> {
+    let ctx = obs::current();
     let ranges = shard_ranges(configs.len(), shard_size);
     if ranges.len() <= 1 {
         return characterize_timed(op, configs, inputs, behav, ppa);
     }
     let shards = crate::util::par::parallel_map_dynamic(&ranges, 1, |_, r| {
-        fused_slice(op, &configs[r.clone()], inputs, behav, ppa)
+        fused_slice(op, &configs[r.clone()], inputs, behav, ppa, ctx)
     });
     let mut behav_rows = Vec::with_capacity(configs.len());
     let mut ppa_rows = Vec::with_capacity(configs.len());

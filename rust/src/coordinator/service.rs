@@ -127,6 +127,8 @@ fn batcher_loop(
         let all: Vec<AxoConfig> =
             pending.iter().flat_map(|r| r.configs.iter().copied()).collect();
         let fill = all.len();
+        let mut span = crate::obs::span(crate::obs::n::ESTIMATOR_BATCH);
+        span.set_arg(fill as u64);
         let started = Instant::now();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             backend.predict(&all)
@@ -142,7 +144,11 @@ fn batcher_loop(
                 )))
             }
         });
-        metrics.record_batch(fill, started.elapsed(), result.is_ok());
+        let elapsed = started.elapsed();
+        drop(span);
+        metrics.record_batch(fill, elapsed, result.is_ok());
+        crate::obs::metrics().batch_fill.record(fill as u64);
+        crate::obs::metrics().batch_ns.record(elapsed.as_nanos() as u64);
 
         match result {
             Ok(objs) => {

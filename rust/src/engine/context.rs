@@ -336,6 +336,7 @@ impl EngineContext {
         spec: SampleSpec,
         inputs: &InputSet,
     ) -> Result<Dataset> {
+        let mut span = crate::obs::span(crate::obs::n::ENGINE_CHARACTERIZE);
         let behav = self.behav_backend();
         let ppa = self.ppa_backend();
         let (ds, timing) = match spec {
@@ -361,6 +362,7 @@ impl EngineContext {
                 )?
             }
         };
+        span.set_arg(ds.len() as u64);
         self.record_timing(timing);
         Ok(ds)
     }

@@ -200,7 +200,11 @@ impl DsePrepared {
             Some(&constraints),
             &self.h_objectives,
         )?;
-        let conss_objs = self.service.predict(pool.configs.clone())?;
+        let conss_objs = {
+            let mut span = crate::obs::span(crate::obs::n::ESTIMATOR_PREDICT);
+            span.set_arg(pool.configs.len() as u64);
+            self.service.predict(pool.configs.clone())?
+        };
         let hv_conss = hypervolume2d(&conss_objs, reference);
 
         // GA (AppAxO-style, random init) and ConSS+GA (augmented), both

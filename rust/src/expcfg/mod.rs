@@ -66,6 +66,7 @@ pub struct ExperimentConfig {
     pub store: StoreConfig,
     pub serve: ServeConfig,
     pub http: HttpConfig,
+    pub obs: ObsConfig,
     pub scaling_factors: Vec<f64>,
 }
 
@@ -208,6 +209,12 @@ impl ExperimentConfig {
                 "serve.jobs_dir" => {
                     cfg.serve.jobs_dir = Some(PathBuf::from(get_str(key, value)?))
                 }
+                "serve.log_max_bytes" => {
+                    cfg.serve.log_max_bytes = value
+                        .as_i64()
+                        .and_then(|v| u64::try_from(v).ok())
+                        .ok_or_else(|| bad(key, "a non-negative integer"))?
+                }
                 "http.addr" => cfg.http.addr = get_str(key, value)?,
                 "http.threads" => {
                     cfg.http.threads =
@@ -225,6 +232,14 @@ impl ExperimentConfig {
                 }
                 "http.max_body_bytes" => {
                     cfg.http.max_body_bytes =
+                        value.as_usize().ok_or_else(|| bad(key, "an integer"))?
+                }
+                "obs.trace" => {
+                    cfg.obs.trace =
+                        value.as_bool().ok_or_else(|| bad(key, "a boolean"))?
+                }
+                "obs.trace_buffer" => {
+                    cfg.obs.trace_buffer =
                         value.as_usize().ok_or_else(|| bad(key, "an integer"))?
                 }
                 other => {
@@ -275,6 +290,12 @@ impl ExperimentConfig {
         if self.http.max_body_bytes == 0 {
             return Err(Error::Config("http.max_body_bytes must be > 0".into()));
         }
+        if self.serve.log_max_bytes == 0 {
+            return Err(Error::Config("serve.log_max_bytes must be > 0".into()));
+        }
+        if self.obs.trace_buffer == 0 {
+            return Err(Error::Config("obs.trace_buffer must be > 0".into()));
+        }
         Ok(())
     }
 }
@@ -296,6 +317,7 @@ impl Default for ExperimentConfig {
             store: StoreConfig::default(),
             serve: ServeConfig::default(),
             http: HttpConfig::default(),
+            obs: ObsConfig::default(),
             scaling_factors: default_factors(),
         }
     }
@@ -329,6 +351,25 @@ impl Default for HttpConfig {
     }
 }
 
+/// Observability knobs (`[obs]`): span tracing gate and ring size. The
+/// `REPRO_TRACE` environment variable outranks `trace` either way;
+/// latency histograms and drop counters are always on (their cost is a
+/// few relaxed atomics per event).
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Record spans into the in-process ring (default off — the disabled
+    /// path is one relaxed atomic load per would-be span).
+    pub trace: bool,
+    /// Span ring capacity; oldest spans are overwritten past this.
+    pub trace_buffer: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { trace: false, trace_buffer: crate::obs::DEFAULT_TRACE_BUFFER }
+    }
+}
+
 /// Serve-mode job-server knobs (`repro serve-dse` / `repro submit`).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -338,11 +379,18 @@ pub struct ServeConfig {
     pub poll_ms: u64,
     /// Spool directory; `None` = `artifacts_dir/jobs`.
     pub jobs_dir: Option<PathBuf>,
+    /// Rotate `server.log.jsonl` to `.1` past this many bytes.
+    pub log_max_bytes: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 2, poll_ms: 200, jobs_dir: None }
+        ServeConfig {
+            workers: 2,
+            poll_ms: 200,
+            jobs_dir: None,
+            log_max_bytes: crate::serve::eventlog::DEFAULT_LOG_MAX_BYTES,
+        }
     }
 }
 
@@ -561,6 +609,11 @@ max_bytes = 1000000
 workers = 4
 poll_ms = 50
 jobs_dir = "/tmp/jobs"
+log_max_bytes = 4096
+
+[obs]
+trace = true
+trace_buffer = 1024
 
 [http]
 addr = "0.0.0.0:8080"
@@ -587,6 +640,9 @@ max_body_bytes = 4096
         assert_eq!(c.serve.workers, 4);
         assert_eq!(c.serve.poll().as_millis(), 50);
         assert_eq!(c.serve.dir_under(Path::new("a")), PathBuf::from("/tmp/jobs"));
+        assert_eq!(c.serve.log_max_bytes, 4096);
+        assert!(c.obs.trace);
+        assert_eq!(c.obs.trace_buffer, 1024);
         assert_eq!(c.http.addr, "0.0.0.0:8080");
         assert_eq!(c.http.threads, 8);
         assert_eq!(c.http.high_water, 32);
@@ -621,10 +677,28 @@ max_body_bytes = 4096
     }
 
     #[test]
+    fn obs_defaults_are_off_and_validated() {
+        let c = ExperimentConfig::default();
+        assert!(!c.obs.trace, "tracing must be opt-in");
+        assert_eq!(c.obs.trace_buffer, crate::obs::DEFAULT_TRACE_BUFFER);
+        let c = ExperimentConfig {
+            obs: ObsConfig { trace_buffer: 0, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+        let c = ExperimentConfig {
+            serve: ServeConfig { log_max_bytes: 0, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
     fn serve_defaults_and_validation() {
         let c = ExperimentConfig::default();
         assert_eq!(c.serve.workers, 2);
         assert_eq!(c.serve.poll_ms, 200);
+        assert_eq!(c.serve.log_max_bytes, 8 * 1024 * 1024);
         assert_eq!(
             c.serve.dir_under(Path::new("artifacts")),
             PathBuf::from("artifacts").join("jobs")

@@ -69,6 +69,8 @@
 //!   loads `artifacts/*.hlo.txt` (`pjrt` feature).
 //! * [`report`] — regenerates every paper figure/table (Figs 1–18, Tab II).
 //! * [`expcfg`] — TOML experiment configuration system.
+//! * [`obs`] — unified observability: spans (Chrome-trace exportable),
+//!   log-bucketed latency histograms, Prometheus text exposition.
 
 pub mod baselines;
 pub mod charac;
@@ -81,6 +83,7 @@ pub mod error;
 pub mod expcfg;
 pub mod matching;
 pub mod ml;
+pub mod obs;
 pub mod operator;
 pub mod report;
 pub mod runtime;

@@ -51,11 +51,17 @@ COMMANDS:
                          default watches pending/ forever.
                          [--workers N] [--max-jobs N]
   serve-http           HTTP front-end over the job spool: POST /jobs,
-                         GET /jobs/<id>[/result], /healthz, /metrics.
+                         GET /jobs/<id>[/result|/timeline], /healthz,
+                         /metrics (JSON, or Prometheus text via
+                         ?format=prometheus), /trace (Chrome trace JSON).
                          Identical specs dedupe onto one content-addressed
                          job; a full queue answers 429 + Retry-After.
                          [--addr HOST:PORT] [--http-threads N]
                          [--workers N (0 = front-end only)] [--high-water N]
+  trace export         Export the span ring of a running serve-http as
+                         Chrome trace-event JSON (Perfetto-loadable).
+                         Spans record when REPRO_TRACE=1 (or [obs] trace).
+                         [--addr HOST:PORT] [--output PATH (trace.json)]
   serve                Batched estimator-service demo
                          [--clients N] [--requests-per-client N]
   store <action>       Persistent dataset store maintenance:
@@ -134,6 +140,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "submit" => cmd_submit(&cfg, &parsed),
         "serve-dse" => cmd_serve_dse(&cfg, &parsed),
         "serve-http" => cmd_serve_http(&cfg, &parsed),
+        "trace" => cmd_trace(&cfg, &parsed),
         "figures" => {
             let harness = Harness::new(cfg);
             for s in harness.run(&parsed.positionals)? {
@@ -174,6 +181,9 @@ fn load_config(parsed: &ParsedArgs) -> Result<ExperimentConfig> {
         cfg.store.enabled.get_or_insert(true);
     }
     cfg.validate()?;
+    // Arm (or size) the tracing layer before any engine work runs:
+    // REPRO_TRACE in the environment overrides `[obs] trace`.
+    repro::obs::apply(&cfg.obs);
     Ok(cfg)
 }
 
@@ -338,6 +348,7 @@ fn cmd_serve_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
         max_jobs: parsed.opt_parse("max-jobs")?,
         drain: parsed.flag("drain"),
         poll: cfg.serve.poll(),
+        log_max_bytes: cfg.serve.log_max_bytes,
     };
     if opts.workers == 0 {
         return Err(Error::Config("--workers must be > 0".into()));
@@ -420,6 +431,7 @@ fn cmd_serve_http(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
         retry_after_secs: cfg.http.retry_after_secs,
         max_body_bytes: cfg.http.max_body_bytes,
         poll: cfg.serve.poll(),
+        log_max_bytes: cfg.serve.log_max_bytes,
     };
     if opts.threads == 0 {
         return Err(Error::Config("--http-threads must be > 0".into()));
@@ -438,6 +450,37 @@ fn cmd_serve_http(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     );
     println!("event log: {}", queue.dir().join(LOG_FILE).display());
     server.run()
+}
+
+/// `trace export`: fetch `GET /trace` from a running `serve-http` and
+/// write the Chrome trace-event JSON (load it in Perfetto or
+/// `chrome://tracing`). Spans only record while tracing is enabled on
+/// the *server* (`REPRO_TRACE=1` or `[obs] trace = true`).
+fn cmd_trace(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
+    match parsed.positional(0, "trace action (export)")? {
+        "export" => {
+            let addr = parsed.opt("addr").unwrap_or(&cfg.http.addr);
+            let response = repro::serve::http_call(addr, "GET", "/trace", None)?;
+            if response.status != 200 {
+                return Err(Error::Config(format!(
+                    "GET /trace on {addr} answered {}",
+                    response.status
+                )));
+            }
+            let spans = response
+                .json()?
+                .get("traceEvents")
+                .and_then(|e| e.as_arr().map(|v| v.len()))
+                .unwrap_or(0);
+            let out = PathBuf::from(parsed.opt("output").unwrap_or("trace.json"));
+            std::fs::write(&out, &response.body)?;
+            println!("wrote {spans} span(s) from {addr} to {}", out.display());
+            Ok(())
+        }
+        other => {
+            Err(Error::Config(format!("unknown trace action `{other}` (try export)")))
+        }
+    }
 }
 
 fn parse_distance(s: &str) -> Result<DistanceKind> {

@@ -1,0 +1,250 @@
+//! Log-bucketed atomic latency histogram.
+//!
+//! Fixed power-of-two bucket edges make every readout deterministic: two
+//! histograms that saw the same multiset of values report bit-identical
+//! percentiles, and snapshots merge by plain bucket addition (the property
+//! `loadgen` and `/metrics` both lean on). Recording is three relaxed
+//! `fetch_add`s — safe from any thread, never locked, never allocating —
+//! so the hot paths (per HTTP request, per characterization shard, per
+//! estimator batch) can record unconditionally.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count. Bucket 0 holds the value 0; bucket `i >= 1` holds values
+/// in `[2^(i-1), 2^i)`; the last bucket additionally absorbs everything
+/// larger (2^46 ns ≈ 19.5 hours — nothing we time gets there).
+pub const BUCKETS: usize = 48;
+
+/// Inclusive upper edge of bucket `i` (the value every percentile readout
+/// reports for ranks landing in that bucket).
+pub fn upper_edge(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        (1u64 << i.min(63)) - 1
+    }
+}
+
+fn bucket_index(value: u64) -> usize {
+    ((64 - value.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// Mergeable log2-bucketed histogram over `u64` values (nanoseconds for
+/// the latency instances, raw counts for batch fill).
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation (relaxed atomics; never blocks).
+    pub fn record(&self, value: u64) {
+        self.counts[bucket_index(value)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy of the buckets.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (c, a) in counts.iter_mut().zip(&self.counts) {
+            *c = a.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            counts,
+            sum: self.sum.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// A point-in-time copy of a [`Histogram`]'s buckets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub counts: [u64; BUCKETS],
+    pub sum: u64,
+    pub count: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { counts: [0; BUCKETS], sum: 0, count: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Bucket-wise sum — merging N per-source snapshots reports exactly
+    /// what one histogram fed all sources would have.
+    pub fn merged(&self, other: &HistSnapshot) -> HistSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (c, (a, b)) in counts.iter_mut().zip(self.counts.iter().zip(&other.counts)) {
+            *c = a + b;
+        }
+        HistSnapshot {
+            counts,
+            sum: self.sum + other.sum,
+            count: self.count + other.count,
+        }
+    }
+
+    /// Deterministic percentile: the inclusive upper edge of the bucket
+    /// the rank `ceil(count * p / 100)` lands in (0 when empty). Fixed
+    /// edges mean the readout depends only on the observed multiset,
+    /// never on arrival order or merge grouping.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count as f64 * p / 100.0).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return upper_edge(i);
+            }
+        }
+        upper_edge(BUCKETS - 1)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile summary in milliseconds (values recorded as nanoseconds)
+    /// — the `/metrics` JSON `latency` shape.
+    pub fn to_json_ms(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("p50_ms", Json::Num(self.percentile(50.0) as f64 / 1e6)),
+            ("p90_ms", Json::Num(self.percentile(90.0) as f64 / 1e6)),
+            ("p99_ms", Json::Num(self.percentile(99.0) as f64 / 1e6)),
+            ("mean_ms", Json::Num(self.mean() / 1e6)),
+        ])
+    }
+
+    /// Quantile summary in the recorded unit (for raw-count histograms
+    /// like estimator batch fill).
+    pub fn to_json_raw(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("p50", Json::Num(self.percentile(50.0) as f64)),
+            ("p90", Json::Num(self.percentile(90.0) as f64)),
+            ("p99", Json::Num(self.percentile(99.0) as f64)),
+            ("mean", Json::Num(self.mean())),
+        ])
+    }
+
+    /// The full bucket layout as JSON (`BENCH_http.json` stamps this so
+    /// the bench artifact carries the whole distribution, not two
+    /// points): parallel `upper_ns` / `counts` arrays, empty tail
+    /// buckets trimmed.
+    pub fn to_json_buckets(&self) -> Json {
+        let last = self.counts.iter().rposition(|&c| c != 0).map_or(0, |i| i + 1);
+        let edges: Vec<f64> = (0..last).map(|i| upper_edge(i) as f64).collect();
+        let counts: Vec<f64> = self.counts[..last].iter().map(|&c| c as f64).collect();
+        Json::obj(vec![
+            ("upper_ns", Json::arr_f64(&edges)),
+            ("counts", Json::arr_f64(&counts)),
+            ("sum_ns", Json::Num(self.sum as f64)),
+            ("count", Json::Num(self.count as f64)),
+        ])
+    }
+}
+
+/// Percentile of an already-sorted sample vector by the floor-index rule
+/// the bench harness has always used (`sorted[floor(n*p/100)]`, clamped).
+/// Shared so `util::bench` and ad-hoc callers agree on one definition.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * p / 100.0) as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_partition_the_line() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        // Every bucket's values are <= its upper edge, > the previous one's.
+        for i in 1..BUCKETS - 1 {
+            assert_eq!(bucket_index(upper_edge(i)), i);
+            assert_eq!(bucket_index(upper_edge(i) + 1), i + 1);
+        }
+    }
+
+    #[test]
+    fn percentiles_are_deterministic_and_merge_invariant() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let all = Histogram::new();
+        for v in [3u64, 17, 90, 1500, 1501, 80_000, 1_000_000] {
+            a.record(v);
+            all.record(v);
+        }
+        for v in [5u64, 40, 4096, 70_000] {
+            b.record(v);
+            all.record(v);
+        }
+        let merged = a.snapshot().merged(&b.snapshot());
+        let whole = all.snapshot();
+        assert_eq!(merged, whole);
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(merged.percentile(p), whole.percentile(p), "p{p}");
+        }
+        // p50 of 11 values: rank 6 -> 1500 -> bucket upper edge 2047.
+        assert_eq!(whole.percentile(50.0), 2047);
+        assert_eq!(whole.count, 11);
+        assert_eq!(whole.sum, 1_157_252);
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.percentile(50.0), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.to_json_ms().get("count").and_then(Json::as_u64), Some(0));
+        let b = s.to_json_buckets();
+        assert_eq!(b.get("counts").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn percentile_sorted_matches_legacy_bench_rule() {
+        let s: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&s, 50.0), 50.0);
+        assert_eq!(percentile_sorted(&s, 99.0), 99.0);
+        let odd: Vec<f64> = (0..7).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&odd, 50.0), odd[7 / 2]);
+        assert_eq!(percentile_sorted(&odd, 99.0), odd[(7 * 99 / 100).min(6)]);
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
+    }
+}

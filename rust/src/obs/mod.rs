@@ -1,0 +1,383 @@
+//! Unified observability: spans, latency histograms, Prometheus text.
+//!
+//! Three pillars, all std-only and shared by every layer:
+//!
+//! * [`trace`] — a hand-rolled tracer: process-unique span/trace ids with
+//!   parent links and monotonic timestamps, recorded into a lock-free
+//!   bounded [`SpanRing`], exported as Chrome trace-event JSON
+//!   (`repro trace export`, `GET /trace` — Perfetto-loadable).
+//! * [`hist`] — mergeable log-bucketed atomic [`Histogram`]s with fixed
+//!   bucket edges, so percentile readouts are deterministic and
+//!   `loadgen`, `/metrics`, and the Prometheus exposition all agree.
+//! * [`prom`] — `GET /metrics?format=prometheus` text rendering.
+//!
+//! Tracing is **zero-cost when disabled**: [`span`] checks one relaxed
+//! atomic load and returns an inert guard. The gate resolves as
+//! `REPRO_TRACE` env > `[obs] trace` TOML > off (see [`apply`]).
+//! Histogram recording is unconditional — three relaxed `fetch_add`s on
+//! coarse-grained paths (per request, per shard, per batch).
+//!
+//! Span parentage crosses threads by value: capture [`Span::ctx`] (or
+//! [`current`]) on the submitting thread, open children with
+//! [`span_under`] on the worker.
+
+pub mod hist;
+pub mod prom;
+pub mod trace;
+
+pub use hist::{percentile_sorted, HistSnapshot, Histogram, BUCKETS};
+pub use trace::{chrome_trace, SpanEvent, SpanRing, Tracer};
+
+use crate::expcfg::ObsConfig;
+use crate::util::json::Json;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Interned span names: spans carry a `u16` index instead of a string so
+/// ring slots stay fixed-width atomics. The category shown in trace
+/// viewers is the prefix before the `.`.
+pub mod n {
+    pub const HTTP_REQUEST: u16 = 0;
+    pub const HTTP_HANDLE: u16 = 1;
+    pub const JOB_SUBMIT: u16 = 2;
+    pub const JOB_CLAIM: u16 = 3;
+    pub const JOB_EXECUTE: u16 = 4;
+    pub const JOB_COMPLETE: u16 = 5;
+    pub const ENGINE_CHARACTERIZE: u16 = 6;
+    pub const CHARAC_BEHAV: u16 = 7;
+    pub const CHARAC_PPA: u16 = 8;
+    pub const ESTIMATOR_PREDICT: u16 = 9;
+    pub const ESTIMATOR_BATCH: u16 = 10;
+    pub const NAMES: &[&str] = &[
+        "http.request",
+        "http.handle",
+        "job.submit",
+        "job.claim",
+        "job.execute",
+        "job.complete",
+        "engine.characterize",
+        "charac.behav",
+        "charac.ppa",
+        "estimator.predict",
+        "estimator.batch",
+    ];
+}
+
+/// The interned name's string form (`"unknown"` past the table).
+pub fn name_str(id: u16) -> &'static str {
+    n::NAMES.get(id as usize).copied().unwrap_or("unknown")
+}
+
+/// Ring capacity when no `[obs] trace_buffer` was configured before the
+/// first span.
+pub const DEFAULT_TRACE_BUFFER: usize = 16_384;
+
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static TRACER: OnceLock<Tracer> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static CURRENT: Cell<(u64, u64)> = const { Cell::new((0, 0)) };
+    static TID: Cell<u16> = const { Cell::new(0) };
+}
+
+/// The tracing gate — one relaxed atomic load, the entire cost of every
+/// instrumentation point while tracing is off.
+#[inline]
+pub fn trace_enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// The process-global tracer (sized by the first of [`apply`] or first
+/// use).
+pub fn tracer() -> &'static Tracer {
+    TRACER.get_or_init(|| Tracer::new(DEFAULT_TRACE_BUFFER))
+}
+
+/// Nanoseconds since the process-wide monotonic epoch (first call).
+pub fn monotonic_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+fn thread_tid() -> u16 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            return v;
+        }
+        let fresh = (NEXT_TID.fetch_add(1, Ordering::Relaxed) & 0xffff).max(1) as u16;
+        t.set(fresh);
+        fresh
+    })
+}
+
+/// Resolve the tracing gate — `REPRO_TRACE` env (`0`/`false`/`off`/empty
+/// disable, anything else enables) over `[obs] trace` — and size the
+/// span ring from `[obs] trace_buffer`. Called from config load; the
+/// ring is sized by whichever call initializes it first.
+pub fn apply(cfg: &ObsConfig) {
+    TRACER.get_or_init(|| Tracer::new(cfg.trace_buffer));
+    TRACE_ON.store(env_trace().unwrap_or(cfg.trace), Ordering::Relaxed);
+}
+
+/// Turn tracing on unconditionally (`loadgen --trace-out`, tests).
+pub fn force_enable() {
+    tracer();
+    TRACE_ON.store(true, Ordering::Relaxed);
+}
+
+fn env_trace() -> Option<bool> {
+    let v = std::env::var("REPRO_TRACE").ok()?;
+    let s = v.trim();
+    let off = s.is_empty()
+        || s == "0"
+        || s.eq_ignore_ascii_case("false")
+        || s.eq_ignore_ascii_case("off");
+    Some(!off)
+}
+
+/// Chrome trace-event JSON of everything currently in the ring.
+pub fn export_chrome() -> Json {
+    chrome_trace(&tracer().ring().snapshot())
+}
+
+/// A (trace, span) pair that parents cross-thread children — `Copy`, so
+/// it moves into worker closures by value.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpanCtx {
+    trace: u64,
+    span: u64,
+}
+
+/// The calling thread's innermost open span (zeroes when none).
+pub fn current() -> SpanCtx {
+    let (trace, span) = CURRENT.with(Cell::get);
+    SpanCtx { trace, span }
+}
+
+/// RAII span guard: opened by [`span`]/[`span_under`], records one
+/// completed [`SpanEvent`] on drop. Inert (and free beyond the gate
+/// check) while tracing is disabled.
+pub struct Span {
+    inner: Option<SpanInner>,
+}
+
+struct SpanInner {
+    id: u64,
+    parent: u64,
+    trace: u64,
+    name: u16,
+    arg: u32,
+    start_ns: u64,
+    prev: (u64, u64),
+}
+
+/// Open a span parented under the calling thread's current span (a new
+/// root trace when there is none).
+pub fn span(name: u16) -> Span {
+    if !trace_enabled() {
+        return Span { inner: None };
+    }
+    open_span(CURRENT.with(Cell::get), name)
+}
+
+/// Open a span under an explicit parent context — the cross-thread
+/// handoff (capture [`current`]/[`Span::ctx`] on the submitting side).
+pub fn span_under(parent: SpanCtx, name: u16) -> Span {
+    if !trace_enabled() {
+        return Span { inner: None };
+    }
+    open_span((parent.trace, parent.span), name)
+}
+
+fn open_span(parent: (u64, u64), name: u16) -> Span {
+    let t = tracer();
+    let id = t.next_id();
+    let trace = if parent.0 != 0 { parent.0 } else { t.next_id() };
+    let prev = CURRENT.with(|c| c.replace((trace, id)));
+    Span {
+        inner: Some(SpanInner {
+            id,
+            parent: parent.1,
+            trace,
+            name,
+            arg: 0,
+            start_ns: monotonic_ns(),
+            prev,
+        }),
+    }
+}
+
+impl Span {
+    /// Attach one numeric payload (batch fill, shard size, HTTP status).
+    pub fn set_arg(&mut self, v: u64) {
+        if let Some(inner) = &mut self.inner {
+            inner.arg = v.min(u32::MAX as u64) as u32;
+        }
+    }
+
+    /// This span's handoff context for [`span_under`] on worker threads.
+    pub fn ctx(&self) -> SpanCtx {
+        match &self.inner {
+            Some(i) => SpanCtx { trace: i.trace, span: i.id },
+            None => SpanCtx::default(),
+        }
+    }
+
+    /// Close without recording — for speculative spans whose operation
+    /// turned out to be a no-op (an empty claim poll, say), which would
+    /// otherwise flood the ring.
+    pub fn cancel(mut self) {
+        if let Some(i) = self.inner.take() {
+            CURRENT.with(|c| c.set(i.prev));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(i) = self.inner.take() else { return };
+        CURRENT.with(|c| c.set(i.prev));
+        let end = monotonic_ns();
+        tracer().ring().record(&SpanEvent {
+            id: i.id,
+            parent: i.parent,
+            trace: i.trace,
+            name: i.name,
+            tid: thread_tid(),
+            arg: i.arg,
+            start_ns: i.start_ns,
+            dur_ns: end.saturating_sub(i.start_ns),
+        });
+    }
+}
+
+/// Process-global histograms recorded from free functions deep in the
+/// pipeline (characterization shards, the estimator batcher), where no
+/// per-server instance is in scope.
+pub struct GlobalMetrics {
+    /// Per-shard BEHAV phase time, nanoseconds.
+    pub behav_shard_ns: Histogram,
+    /// Per-shard PPA phase time, nanoseconds.
+    pub ppa_shard_ns: Histogram,
+    /// Estimator batch fill — configurations per backend call.
+    pub batch_fill: Histogram,
+    /// Estimator backend call latency, nanoseconds.
+    pub batch_ns: Histogram,
+}
+
+static METRICS: OnceLock<GlobalMetrics> = OnceLock::new();
+
+pub fn metrics() -> &'static GlobalMetrics {
+    METRICS.get_or_init(|| GlobalMetrics {
+        behav_shard_ns: Histogram::new(),
+        ppa_shard_ns: Histogram::new(),
+        batch_fill: Histogram::new(),
+        batch_ns: Histogram::new(),
+    })
+}
+
+/// Route labels of the per-route HTTP latency histograms — a fixed set,
+/// so the Prometheus families are stable across scrapes.
+pub const HTTP_ROUTES: &[&str] = &[
+    "jobs_submit",
+    "job_status",
+    "job_result",
+    "job_timeline",
+    "healthz",
+    "metrics",
+    "trace",
+    "other",
+];
+
+/// Per-server-instance histograms: HTTP request latency by route plus the
+/// job lifecycle split (queue wait vs execute). Owned by the HTTP
+/// front-end and shared with its embedded runner, so tests with several
+/// servers in one process read isolated numbers.
+pub struct ServeObs {
+    routes: Vec<(&'static str, Histogram)>,
+    /// Submit → claim, nanoseconds.
+    pub queue_wait_ns: Histogram,
+    /// Claim → done, nanoseconds.
+    pub execute_ns: Histogram,
+}
+
+impl ServeObs {
+    pub fn new() -> ServeObs {
+        ServeObs {
+            routes: HTTP_ROUTES.iter().map(|r| (*r, Histogram::new())).collect(),
+            queue_wait_ns: Histogram::new(),
+            execute_ns: Histogram::new(),
+        }
+    }
+
+    /// Record one request's latency under its route label (unknown
+    /// labels land in `other`).
+    pub fn record_route(&self, route: &str, ns: u64) {
+        let hit = self
+            .routes
+            .iter()
+            .find(|(r, _)| *r == route)
+            .or_else(|| self.routes.iter().find(|(r, _)| *r == "other"));
+        if let Some((_, h)) = hit {
+            h.record(ns);
+        }
+    }
+
+    pub fn route_snapshots(&self) -> Vec<(&'static str, HistSnapshot)> {
+        self.routes.iter().map(|(r, h)| (*r, h.snapshot())).collect()
+    }
+}
+
+impl Default for ServeObs {
+    fn default() -> Self {
+        ServeObs::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_table_is_dense_and_bounded() {
+        assert_eq!(n::NAMES.len(), n::ESTIMATOR_BATCH as usize + 1);
+        assert_eq!(name_str(n::HTTP_REQUEST), "http.request");
+        assert_eq!(name_str(u16::MAX), "unknown");
+    }
+
+    #[test]
+    fn serve_obs_buckets_unknown_routes_as_other() {
+        let obs = ServeObs::new();
+        obs.record_route("healthz", 100);
+        obs.record_route("no-such-route", 200);
+        let snaps = obs.route_snapshots();
+        let count = |label: &str| {
+            snaps.iter().find(|(r, _)| *r == label).map(|(_, s)| s.count).unwrap()
+        };
+        assert_eq!(count("healthz"), 1);
+        assert_eq!(count("other"), 1);
+        assert_eq!(count("metrics"), 0);
+    }
+
+    #[test]
+    fn monotonic_clock_advances() {
+        let a = monotonic_ns();
+        let b = monotonic_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn span_ctx_of_inert_span_is_zero() {
+        // Regardless of the global gate, an inert guard hands out the
+        // zero context and set_arg is a no-op.
+        let mut s = Span { inner: None };
+        s.set_arg(9);
+        let ctx = s.ctx();
+        assert_eq!(ctx.trace, 0);
+        assert_eq!(ctx.span, 0);
+    }
+}

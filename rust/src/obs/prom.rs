@@ -1,0 +1,128 @@
+//! Prometheus text exposition (format version 0.0.4).
+//!
+//! A tiny append-only renderer — the JSON/TOML idiom applied to the
+//! exposition format: emit exactly the lines standard scrapers need
+//! (`# TYPE` once per metric family, cumulative `le` buckets ending in
+//! `+Inf`, `_sum`/`_count`) and nothing else. Output is deterministic
+//! for deterministic inputs, which is what lets the integration suite
+//! assert exact counter and bucket lines.
+
+use super::hist::{upper_edge, HistSnapshot, BUCKETS};
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+/// The scrape response content type.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// Accumulates one exposition document.
+pub struct PromText {
+    out: String,
+    typed: BTreeSet<String>,
+}
+
+fn fmt_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+impl PromText {
+    pub fn new() -> PromText {
+        PromText { out: String::new(), typed: BTreeSet::new() }
+    }
+
+    fn type_line(&mut self, name: &str, kind: &str) {
+        if self.typed.insert(name.to_string()) {
+            writeln!(self.out, "# TYPE {name} {kind}").unwrap();
+        }
+    }
+
+    pub fn counter(&mut self, name: &str, labels: &[(&str, &str)], value: u64) {
+        self.type_line(name, "counter");
+        writeln!(self.out, "{name}{} {value}", fmt_labels(labels)).unwrap();
+    }
+
+    pub fn gauge(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.type_line(name, "gauge");
+        writeln!(self.out, "{name}{} {value}", fmt_labels(labels)).unwrap();
+    }
+
+    /// Emit one histogram family member: cumulative buckets (`le` in the
+    /// recorded unit scaled by `scale` — `1e-9` turns nanoseconds into
+    /// seconds), then `_sum` and `_count`.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        snap: &HistSnapshot,
+        scale: f64,
+    ) {
+        self.type_line(name, "histogram");
+        let base: String = labels.iter().map(|(k, v)| format!("{k}=\"{v}\",")).collect();
+        let mut cum = 0u64;
+        for (i, c) in snap.counts.iter().enumerate().take(BUCKETS - 1) {
+            cum += c;
+            let le = upper_edge(i) as f64 * scale;
+            writeln!(self.out, "{name}_bucket{{{base}le=\"{le}\"}} {cum}").unwrap();
+        }
+        cum += snap.counts[BUCKETS - 1];
+        writeln!(self.out, "{name}_bucket{{{base}le=\"+Inf\"}} {cum}").unwrap();
+        let labels = fmt_labels(labels);
+        writeln!(self.out, "{name}_sum{labels} {}", snap.sum as f64 * scale).unwrap();
+        writeln!(self.out, "{name}_count{labels} {}", snap.count).unwrap();
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+impl Default for PromText {
+    fn default() -> Self {
+        PromText::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Histogram;
+
+    #[test]
+    fn counters_and_gauges_render_with_one_type_line() {
+        let mut p = PromText::new();
+        p.counter("jobs_total", &[("state", "done")], 3);
+        p.counter("jobs_total", &[("state", "failed")], 0);
+        p.gauge("uptime_seconds", &[], 1.5);
+        let text = p.finish();
+        assert_eq!(text.matches("# TYPE jobs_total counter").count(), 1);
+        assert!(text.contains("jobs_total{state=\"done\"} 3\n"));
+        assert!(text.contains("jobs_total{state=\"failed\"} 0\n"));
+        assert!(text.contains("# TYPE uptime_seconds gauge\nuptime_seconds 1.5\n"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_inf() {
+        let h = Histogram::new();
+        for v in [1u64, 3, 3, 1_000_000] {
+            h.record(v);
+        }
+        let mut p = PromText::new();
+        p.histogram("req_seconds", &[("route", "healthz")], &h.snapshot(), 1e-9);
+        let text = p.finish();
+        let buckets: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("req_seconds_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(buckets.len(), BUCKETS);
+        assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "monotone: {buckets:?}");
+        assert_eq!(*buckets.last().unwrap(), 4);
+        assert!(text.contains("req_seconds_bucket{route=\"healthz\",le=\"+Inf\"} 4\n"));
+        assert!(text.contains("req_seconds_count{route=\"healthz\"} 4\n"));
+        assert!(text.contains("# TYPE req_seconds histogram\n"));
+    }
+}

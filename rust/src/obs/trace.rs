@@ -1,0 +1,268 @@
+//! Span recording: a lock-free bounded ring of completed spans plus the
+//! Chrome trace-event export.
+//!
+//! Writers are wait-free: a slot index comes from one `fetch_add` on the
+//! head cursor, and the slot's fields are all atomics stamped between two
+//! version words (a per-slot seqlock — no `unsafe`, no locks). Readers
+//! accept a slot only when both version words agree, so a snapshot taken
+//! mid-overwrite drops the torn slot instead of reporting garbage. The
+//! ring is deliberately lossy under overflow: tracing must never make the
+//! traced system wait, so old spans are overwritten and the count of
+//! overwrites is reported instead.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One completed span, as recorded into the ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Process-unique span id (never 0 for a recorded span).
+    pub id: u64,
+    /// Parent span id within the same trace; 0 for roots.
+    pub parent: u64,
+    /// Trace id shared by every span of one request/job.
+    pub trace: u64,
+    /// Interned span name — index into [`crate::obs::n::NAMES`].
+    pub name: u16,
+    /// Small per-process thread id (display only).
+    pub tid: u16,
+    /// One optional numeric payload (batch fill, shard size, status...).
+    pub arg: u32,
+    /// Start, nanoseconds since the process monotonic epoch.
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+}
+
+/// `name | tid << 16 | arg << 32` — one atomic carries the three small
+/// fields so a slot stays at eight words.
+fn pack_meta(name: u16, tid: u16, arg: u32) -> u64 {
+    (name as u64) | ((tid as u64) << 16) | ((arg as u64) << 32)
+}
+
+struct Slot {
+    v0: AtomicU64,
+    id: AtomicU64,
+    parent: AtomicU64,
+    trace: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+    meta: AtomicU64,
+    v1: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            v0: AtomicU64::new(0),
+            id: AtomicU64::new(0),
+            parent: AtomicU64::new(0),
+            trace: AtomicU64::new(0),
+            start_ns: AtomicU64::new(0),
+            dur_ns: AtomicU64::new(0),
+            meta: AtomicU64::new(0),
+            v1: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Lock-free bounded ring of [`SpanEvent`]s (overwrites oldest).
+pub struct SpanRing {
+    slots: Vec<Slot>,
+    head: AtomicU64,
+}
+
+impl SpanRing {
+    pub fn new(capacity: usize) -> SpanRing {
+        let cap = capacity.max(1);
+        SpanRing { slots: (0..cap).map(|_| Slot::new()).collect(), head: AtomicU64::new(0) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total spans ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Spans lost to overwriting (recorded minus capacity, floored at 0).
+    pub fn dropped(&self) -> u64 {
+        self.recorded().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Record one completed span (wait-free; overwrites the oldest slot
+    /// when full).
+    pub fn record(&self, ev: &SpanEvent) {
+        let pos = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(pos % self.slots.len() as u64) as usize];
+        let ver = pos + 1; // never 0, distinct per write to this slot
+        slot.v0.store(ver, Ordering::Release);
+        slot.id.store(ev.id, Ordering::Relaxed);
+        slot.parent.store(ev.parent, Ordering::Relaxed);
+        slot.trace.store(ev.trace, Ordering::Relaxed);
+        slot.start_ns.store(ev.start_ns, Ordering::Relaxed);
+        slot.dur_ns.store(ev.dur_ns, Ordering::Relaxed);
+        slot.meta.store(pack_meta(ev.name, ev.tid, ev.arg), Ordering::Relaxed);
+        slot.v1.store(ver, Ordering::Release);
+    }
+
+    /// Best-effort copy of the current contents, oldest first (by start
+    /// time). Slots caught mid-overwrite are skipped.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let v1 = slot.v1.load(Ordering::Acquire);
+            if v1 == 0 {
+                continue; // never written
+            }
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let ev = SpanEvent {
+                id: slot.id.load(Ordering::Relaxed),
+                parent: slot.parent.load(Ordering::Relaxed),
+                trace: slot.trace.load(Ordering::Relaxed),
+                name: (meta & 0xffff) as u16,
+                tid: ((meta >> 16) & 0xffff) as u16,
+                arg: (meta >> 32) as u32,
+                start_ns: slot.start_ns.load(Ordering::Relaxed),
+                dur_ns: slot.dur_ns.load(Ordering::Relaxed),
+            };
+            if slot.v0.load(Ordering::Acquire) == v1 {
+                out.push(ev);
+            }
+        }
+        out.sort_by_key(|e| (e.start_ns, e.id));
+        out
+    }
+}
+
+/// Span id allocator + the ring they land in. One process-global instance
+/// lives behind [`crate::obs::tracer`]; tests build their own.
+pub struct Tracer {
+    ring: SpanRing,
+    next_id: AtomicU64,
+}
+
+impl Tracer {
+    pub fn new(capacity: usize) -> Tracer {
+        Tracer { ring: SpanRing::new(capacity), next_id: AtomicU64::new(1) }
+    }
+
+    /// Allocate a process-unique id (spans and traces share the space).
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn ring(&self) -> &SpanRing {
+        &self.ring
+    }
+}
+
+/// Render completed spans as Chrome trace-event JSON (the `ph: "X"`
+/// complete-event form) — loadable in Perfetto / `chrome://tracing`.
+/// Ids are hex strings in `args` so 64-bit values survive the f64 JSON
+/// number model.
+pub fn chrome_trace(events: &[SpanEvent]) -> Json {
+    let items = events
+        .iter()
+        .map(|e| {
+            let name = super::name_str(e.name);
+            let cat = name.split('.').next().unwrap_or(name);
+            Json::obj(vec![
+                ("ph", Json::Str("X".into())),
+                ("name", Json::Str(name.into())),
+                ("cat", Json::Str(cat.into())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(e.tid as f64)),
+                ("ts", Json::Num(e.start_ns as f64 / 1000.0)),
+                ("dur", Json::Num(e.dur_ns as f64 / 1000.0)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("span", Json::Str(format!("{:016x}", e.id))),
+                        ("parent", Json::Str(format!("{:016x}", e.parent))),
+                        ("trace", Json::Str(format!("{:016x}", e.trace))),
+                        ("arg", Json::Num(e.arg as f64)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(items)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64, start: u64) -> SpanEvent {
+        SpanEvent {
+            id,
+            parent: 0,
+            trace: id,
+            name: 0,
+            tid: 1,
+            arg: 7,
+            start_ns: start,
+            dur_ns: 5,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_the_newest_events_on_wraparound() {
+        let ring = SpanRing::new(8);
+        for i in 1..=20u64 {
+            ring.record(&ev(i, i * 10));
+        }
+        assert_eq!(ring.recorded(), 20);
+        assert_eq!(ring.dropped(), 12);
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 8);
+        let ids: Vec<u64> = snap.iter().map(|e| e.id).collect();
+        assert_eq!(ids, (13..=20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn meta_packing_round_trips() {
+        let ring = SpanRing::new(2);
+        let e = SpanEvent {
+            id: 9,
+            parent: 3,
+            trace: 9,
+            name: 300,
+            tid: 65_535,
+            arg: 4_000_000_000,
+            start_ns: 123,
+            dur_ns: 456,
+        };
+        ring.record(&e);
+        assert_eq!(ring.snapshot(), vec![e]);
+    }
+
+    #[test]
+    fn tracer_ids_are_unique_and_nonzero() {
+        let t = Tracer::new(4);
+        let a = t.next_id();
+        let b = t.next_id();
+        assert!(a != 0 && b != 0 && a != b);
+    }
+
+    #[test]
+    fn chrome_trace_is_well_formed_json() {
+        let events = [ev(1, 100), ev(2, 200)];
+        let text = chrome_trace(&events).to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let items = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(items.len(), 2);
+        for item in items {
+            assert_eq!(item.get("ph").and_then(Json::as_str), Some("X"));
+            assert!(item.get("ts").and_then(Json::as_f64).is_some());
+            assert!(item.get("dur").and_then(Json::as_f64).is_some());
+            assert!(item.get("name").and_then(Json::as_str).is_some());
+        }
+    }
+}

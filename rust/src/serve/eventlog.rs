@@ -1,0 +1,161 @@
+//! `server.log.jsonl` without silent loss: a shared append-only event log
+//! that survives lock poisoning, counts write failures instead of
+//! swallowing them, and rotates by size so `--watch` servers can't grow
+//! the log unbounded.
+//!
+//! The old `log_event` helpers took a `Mutex<File>` and dropped the line
+//! on *either* failure mode with no signal. Here a poisoned lock is
+//! recovered (`PoisonError::into_inner` — appending a log line cannot
+//! observe broken invariants), a failed write bumps an atomic surfaced as
+//! `log_dropped` in `/metrics`, and when the current file would exceed
+//! `max_bytes` it is renamed to `<name>.1` (one rotation generation —
+//! the previous `.1` is replaced) and a fresh file is started.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Default `[serve] log_max_bytes`: 8 MiB per generation.
+pub const DEFAULT_LOG_MAX_BYTES: u64 = 8 * 1024 * 1024;
+
+struct Inner {
+    file: File,
+    bytes: u64,
+}
+
+/// Shared, size-rotated, drop-counting JSONL event log.
+pub struct EventLog {
+    path: PathBuf,
+    max_bytes: u64,
+    inner: Mutex<Inner>,
+    dropped: AtomicU64,
+    rotations: AtomicU64,
+}
+
+impl EventLog {
+    /// Open (or continue) the log at `path`, rotating once the current
+    /// file exceeds `max_bytes`.
+    pub fn open(path: PathBuf, max_bytes: u64) -> std::io::Result<EventLog> {
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        let bytes = file.metadata().map(|m| m.len()).unwrap_or(0);
+        Ok(EventLog {
+            path,
+            max_bytes: max_bytes.max(1),
+            inner: Mutex::new(Inner { file, bytes }),
+            dropped: AtomicU64::new(0),
+            rotations: AtomicU64::new(0),
+        })
+    }
+
+    /// Append one line (the trailing newline is added). Never panics and
+    /// never poisons: failures count into [`EventLog::dropped`].
+    pub fn append(&self, line: &str) {
+        let mut inner = match self.inner.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let len = line.len() as u64 + 1;
+        if inner.bytes > 0 && inner.bytes + len > self.max_bytes {
+            // A failed rotation is not fatal: keep appending to the old
+            // file rather than dropping the line.
+            if self.rotate(&mut inner).is_ok() {
+                self.rotations.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        match writeln!(inner.file, "{line}") {
+            Ok(()) => inner.bytes += len,
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn rotate(&self, inner: &mut Inner) -> std::io::Result<()> {
+        let _ = inner.file.flush();
+        let mut rotated = self.path.clone().into_os_string();
+        rotated.push(".1");
+        std::fs::rename(&self.path, PathBuf::from(rotated))?;
+        inner.file = OpenOptions::new().create(true).append(true).open(&self.path)?;
+        inner.bytes = 0;
+        Ok(())
+    }
+
+    /// Lines lost to write errors since open.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Completed size-based rotations since open.
+    pub fn rotations(&self) -> u64 {
+        self.rotations.load(Ordering::Relaxed)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn appends_accumulate_and_survive_reopen() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("events.jsonl");
+        let log = EventLog::open(path.clone(), DEFAULT_LOG_MAX_BYTES).unwrap();
+        log.append(r#"{"event":"a"}"#);
+        log.append(r#"{"event":"b"}"#);
+        drop(log);
+        let log = EventLog::open(path.clone(), DEFAULT_LOG_MAX_BYTES).unwrap();
+        log.append(r#"{"event":"c"}"#);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert_eq!(log.dropped(), 0);
+    }
+
+    #[test]
+    fn rotation_caps_the_live_file_and_keeps_one_generation() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("events.jsonl");
+        // 40-byte budget: every line is 14 bytes, so the live file holds
+        // at most two lines before the next append rotates it out.
+        let log = EventLog::open(path.clone(), 40).unwrap();
+        for i in 0..7 {
+            log.append(&format!(r#"{{"event":"{i}"}}"#));
+        }
+        assert!(log.rotations() >= 2, "rotations: {}", log.rotations());
+        assert_eq!(log.dropped(), 0);
+        let live = std::fs::read_to_string(&path).unwrap();
+        assert!(live.len() as u64 <= 40, "live file over budget: {live:?}");
+        assert!(live.contains(r#"{"event":"6"}"#), "newest line in live file");
+        let old = std::fs::read_to_string(dir.path().join("events.jsonl.1")).unwrap();
+        assert!(!old.is_empty());
+        for line in live.lines().chain(old.lines()) {
+            crate::util::json::Json::parse(line).unwrap();
+        }
+    }
+
+    #[test]
+    fn write_errors_are_counted_not_swallowed() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("events.jsonl");
+        std::fs::write(&path, "").unwrap();
+        // A read-only handle makes every write fail deterministically.
+        let file = File::open(&path).unwrap();
+        let log = EventLog {
+            path: path.clone(),
+            max_bytes: u64::MAX,
+            inner: Mutex::new(Inner { file, bytes: 0 }),
+            dropped: AtomicU64::new(0),
+            rotations: AtomicU64::new(0),
+        };
+        log.append(r#"{"event":"lost"}"#);
+        log.append(r#"{"event":"lost"}"#);
+        assert_eq!(log.dropped(), 2);
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "");
+    }
+}

@@ -18,8 +18,10 @@
 //! | `POST /jobs`           | spec JSON → dedup → spool; `201`/`200`/`400`/`429` |
 //! | `GET /jobs/<id>`       | lifecycle state, `404` when unknown             |
 //! | `GET /jobs/<id>/result`| `done/` bytes verbatim; `202` in flight, `500` failed |
+//! | `GET /jobs/<id>/timeline` | lifecycle stamps + queue-wait/execute durations |
 //! | `GET /healthz`         | liveness probe                                  |
-//! | `GET /metrics`         | queue depths + HTTP counters + engine metrics   |
+//! | `GET /metrics`         | queue depths, counters, latency histograms — JSON, or Prometheus text via `?format=prometheus` / `Accept: text/plain` |
+//! | `GET /trace`           | the span ring as Chrome trace-event JSON (Perfetto-loadable) |
 //!
 //! Two properties make the front-end safe under real traffic:
 //!
@@ -40,16 +42,18 @@
 //! `repro serve-dse` processes (the queue is multi-process-safe).
 
 use super::dedup::{admit, canonical_hash, hash_id, Admission};
-use super::queue::{JobQueue, JobState};
+use super::eventlog::{EventLog, DEFAULT_LOG_MAX_BYTES};
+use super::queue::{stamp_gap_ns, JobQueue, JobState};
 use super::runner::{gc_event_fields, JobRunner, ServeOptions, StoreGc, LOG_FILE};
 use super::spec::JobSpec;
 use crate::engine::EngineContext;
 use crate::error::{Error, Result};
+use crate::obs::{self, prom::PromText, ServeObs};
 use crate::util::json::Json;
 use std::io::{Read as _, Write as _};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Largest accepted request head (request line + headers).
@@ -82,6 +86,8 @@ pub struct HttpOptions {
     pub max_body_bytes: usize,
     /// Exec-loop idle poll interval.
     pub poll: Duration,
+    /// Rotate `server.log.jsonl` to `.1` past this many bytes.
+    pub log_max_bytes: u64,
 }
 
 impl Default for HttpOptions {
@@ -94,6 +100,7 @@ impl Default for HttpOptions {
             retry_after_secs: http.retry_after_secs,
             max_body_bytes: http.max_body_bytes,
             poll: Duration::from_millis(200),
+            log_max_bytes: DEFAULT_LOG_MAX_BYTES,
         }
     }
 }
@@ -142,7 +149,8 @@ pub struct HttpServer {
     stop: AtomicBool,
     active_acceptors: AtomicUsize,
     stats: HttpStats,
-    log: Mutex<std::fs::File>,
+    log: Arc<EventLog>,
+    obs: Arc<ServeObs>,
 }
 
 impl HttpServer {
@@ -158,10 +166,10 @@ impl HttpServer {
             Error::Coordinator(format!("cannot bind http listener on {addr}: {e}"))
         })?;
         let local_addr = listener.local_addr()?;
-        let log = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(queue.dir().join(LOG_FILE))?;
+        let log = Arc::new(EventLog::open(
+            queue.dir().join(LOG_FILE),
+            opts.log_max_bytes,
+        )?);
         Ok(HttpServer {
             ctx,
             queue,
@@ -172,7 +180,8 @@ impl HttpServer {
             stop: AtomicBool::new(false),
             active_acceptors: AtomicUsize::new(0),
             stats: HttpStats::default(),
-            log: Mutex::new(log),
+            log,
+            obs: Arc::new(ServeObs::new()),
         })
     }
 
@@ -275,12 +284,28 @@ impl HttpServer {
                 }
                 ReadOutcome::Request(request) => {
                     self.stats.requests.fetch_add(1, Ordering::Relaxed);
-                    let mut response = self.route(&request);
+                    // The request span opens only once a request has been
+                    // read — keep-alive idle waits are not request work.
+                    let mut span = obs::span(obs::n::HTTP_REQUEST);
+                    let started = Instant::now();
+                    let mut response = {
+                        let _handle = obs::span(obs::n::HTTP_HANDLE);
+                        self.route(&request)
+                    };
                     if response.status == 400 {
                         self.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
                     }
                     response.close =
                         request.close || response.status >= 400 || self.stopping();
+                    span.set_arg(response.status as u64);
+                    drop(span);
+                    // Recorded before the response is written so a client
+                    // that reads its answer then scrapes `/metrics` sees
+                    // this request already counted.
+                    self.obs.record_route(
+                        route_label(&request),
+                        started.elapsed().as_nanos() as u64,
+                    );
                     let close = response.close;
                     if response.write_to(stream).is_err() || close {
                         break;
@@ -300,15 +325,18 @@ impl HttpServer {
             max_jobs: Some(self.opts.workers.max(1)),
             drain: true,
             poll: self.opts.poll,
+            log_max_bytes: self.opts.log_max_bytes,
         };
         let gc = StoreGc::for_ctx(&self.ctx);
-        let runner = match JobRunner::new(&self.ctx, &self.queue, opts) {
-            Ok(r) => r,
-            Err(e) => {
-                eprintln!("warning: exec loop failed to start: {e}");
-                return;
-            }
-        };
+        // Share the event log and histogram set: requests and the jobs
+        // they spawn land in one `/metrics` view and one rotated log.
+        let runner = JobRunner::with_observer(
+            &self.ctx,
+            &self.queue,
+            opts,
+            Arc::clone(&self.log),
+            Arc::clone(&self.obs),
+        );
         while !self.stopping() {
             let busy = match self.queue.counts() {
                 Ok(c) if c.pending > 0 => match runner.run() {
@@ -335,16 +363,19 @@ impl HttpServer {
     /// outcome is a response.
     fn route(&self, request: &Request) -> Response {
         let path = request.path.split('?').next().unwrap_or("");
+        let query = request.path.split_once('?').map_or("", |(_, q)| q);
         let segments: Vec<&str> =
             path.trim_matches('/').split('/').filter(|s| !s.is_empty()).collect();
         match (request.method.as_str(), segments.as_slice()) {
             ("POST", ["jobs"]) => self.handle_submit(&request.body),
             ("GET", ["jobs", id]) => self.handle_status(id),
             ("GET", ["jobs", id, "result"]) => self.handle_result(id),
+            ("GET", ["jobs", id, "timeline"]) => self.handle_timeline(id),
             ("GET", ["healthz"]) => {
                 Response::json(200, Json::obj(vec![("status", Json::Str("ok".into()))]))
             }
-            ("GET", ["metrics"]) => self.handle_metrics(),
+            ("GET", ["metrics"]) => self.handle_metrics(query, &request.accept),
+            ("GET", ["trace"]) => Response::json(200, obs::export_chrome()),
             ("GET" | "POST", _) => Response::error(404, "no such route"),
             _ => Response::error(405, "method not allowed (GET and POST only)"),
         }
@@ -355,6 +386,7 @@ impl HttpServer {
     /// high-water mark on purpose — a duplicate of an in-flight job costs
     /// no queue space, so it is answered even under full load.
     fn handle_submit(&self, body: &[u8]) -> Response {
+        let _span = obs::span(obs::n::JOB_SUBMIT);
         let spec = match parse_spec(body) {
             Ok(spec) => spec,
             Err(message) => return Response::error(400, &message),
@@ -482,9 +514,45 @@ impl HttpServer {
         }
     }
 
-    /// `GET /metrics`: queue depths, front-end counters, and the engine's
-    /// merged estimator/cache/pool statistics — one JSON document.
-    fn handle_metrics(&self) -> Response {
+    /// `GET /jobs/<id>/timeline`: the job's lifecycle stamps plus the
+    /// derived queue-wait and execute durations. Available at every
+    /// lifecycle stage; dedup-shared submissions report the *original*
+    /// submit stamp (identical specs are one job).
+    fn handle_timeline(&self, id: &str) -> Response {
+        let Some(state) = self.queue.state_of(id) else {
+            return Response::error(404, "unknown job id");
+        };
+        let stamps = match self.queue.timeline(id) {
+            Ok(s) => s,
+            Err(e) => return Response::error(500, &e.to_string()),
+        };
+        let events: Vec<Json> = stamps.iter().map(|s| s.to_json()).collect();
+        let mut pairs = vec![
+            ("id", Json::Str(id.to_string())),
+            ("state", Json::Str(state.as_str().into())),
+            ("events", Json::Arr(events)),
+        ];
+        if let Some(ns) = stamp_gap_ns(&stamps, "submit", "claim") {
+            pairs.push(("queue_wait_ms", Json::Num(ns as f64 / 1e6)));
+        }
+        let execute = stamp_gap_ns(&stamps, "start", "done")
+            .or_else(|| stamp_gap_ns(&stamps, "start", "fail"));
+        if let Some(ns) = execute {
+            pairs.push(("execute_ms", Json::Num(ns as f64 / 1e6)));
+        }
+        Response::json(200, Json::obj(pairs))
+    }
+
+    /// `GET /metrics`: queue depths, front-end counters, latency
+    /// histograms, and the engine's merged estimator/cache/pool
+    /// statistics. JSON by default; the Prometheus text exposition via
+    /// `?format=prometheus` or an `Accept` header naming `text/plain`.
+    fn handle_metrics(&self, query: &str, accept: &str) -> Response {
+        let prometheus = query.split('&').any(|kv| kv == "format=prometheus")
+            || (!query.contains("format=") && accept.contains("text/plain"));
+        if prometheus {
+            return self.metrics_prometheus();
+        }
         let counts = match self.queue.counts() {
             Ok(c) => c,
             Err(e) => return Response::error(500, &e.to_string()),
@@ -500,6 +568,30 @@ impl HttpServer {
         }
         let cache = self.ctx.cache_stats();
         let pool = self.ctx.pool_stats();
+        let route_lat: Vec<(&str, Json)> = self
+            .obs
+            .route_snapshots()
+            .into_iter()
+            .map(|(r, s)| (r, s.to_json_ms()))
+            .collect();
+        let g = obs::metrics();
+        let latency = Json::obj(vec![
+            ("http", Json::obj(route_lat)),
+            ("queue_wait", self.obs.queue_wait_ns.snapshot().to_json_ms()),
+            ("execute", self.obs.execute_ns.snapshot().to_json_ms()),
+            ("behav_shard", g.behav_shard_ns.snapshot().to_json_ms()),
+            ("ppa_shard", g.ppa_shard_ns.snapshot().to_json_ms()),
+            ("estimator_batch", g.batch_ns.snapshot().to_json_ms()),
+            ("estimator_batch_fill", g.batch_fill.snapshot().to_json_raw()),
+        ]);
+        let ring = obs::tracer().ring();
+        let observability = Json::obj(vec![
+            ("log_dropped", Json::Num(self.log.dropped() as f64)),
+            ("log_rotations", Json::Num(self.log.rotations() as f64)),
+            ("trace_enabled", Json::Bool(obs::trace_enabled())),
+            ("spans_recorded", Json::Num(ring.recorded() as f64)),
+            ("spans_dropped", Json::Num(ring.dropped() as f64)),
+        ]);
         Response::json(
             200,
             Json::obj(vec![
@@ -545,12 +637,59 @@ impl HttpServer {
                         ("services", Json::Num(pool.services as f64)),
                     ]),
                 ),
+                ("latency", latency),
+                ("obs", observability),
             ]),
         )
     }
 
+    /// The Prometheus text rendering of `/metrics` (exposition format
+    /// v0.0.4): the same counters and histograms the JSON document
+    /// carries, as fixed metric families standard scrapers ingest.
+    /// Deterministic for deterministic traffic — the integration suite
+    /// asserts exact counter and bucket lines.
+    fn metrics_prometheus(&self) -> Response {
+        let counts = match self.queue.counts() {
+            Ok(c) => c,
+            Err(e) => return Response::error(500, &e.to_string()),
+        };
+        let mut p = PromText::new();
+        for (route, snap) in self.obs.route_snapshots() {
+            p.histogram("http_request_seconds", &[("route", route)], &snap, 1e-9);
+        }
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        p.counter("http_requests_total", &[], load(&self.stats.requests));
+        p.counter("http_jobs_created_total", &[], load(&self.stats.created));
+        p.counter("http_jobs_shared_total", &[], load(&self.stats.shared));
+        p.counter("http_rejected_total", &[], load(&self.stats.rejected));
+        p.counter("http_bad_requests_total", &[], load(&self.stats.bad_requests));
+        p.gauge("queue_jobs", &[("state", "pending")], counts.pending as f64);
+        p.gauge("queue_jobs", &[("state", "running")], counts.running as f64);
+        p.gauge("queue_jobs", &[("state", "done")], counts.done as f64);
+        p.gauge("queue_jobs", &[("state", "failed")], counts.failed as f64);
+        let queue_wait = self.obs.queue_wait_ns.snapshot();
+        p.histogram("job_queue_wait_seconds", &[], &queue_wait, 1e-9);
+        let execute = self.obs.execute_ns.snapshot();
+        p.histogram("job_execute_seconds", &[], &execute, 1e-9);
+        let g = obs::metrics();
+        let behav = g.behav_shard_ns.snapshot();
+        p.histogram("charac_behav_shard_seconds", &[], &behav, 1e-9);
+        let ppa = g.ppa_shard_ns.snapshot();
+        p.histogram("charac_ppa_shard_seconds", &[], &ppa, 1e-9);
+        p.histogram("estimator_batch_fill", &[], &g.batch_fill.snapshot(), 1.0);
+        p.histogram("estimator_batch_seconds", &[], &g.batch_ns.snapshot(), 1e-9);
+        p.counter("log_dropped_total", &[], self.log.dropped());
+        p.counter("log_rotations_total", &[], self.log.rotations());
+        let ring = obs::tracer().ring();
+        p.gauge("trace_spans_recorded", &[], ring.recorded() as f64);
+        p.gauge("trace_spans_dropped", &[], ring.dropped() as f64);
+        p.gauge("uptime_seconds", &[], self.started.elapsed().as_secs_f64());
+        Response::text(200, obs::prom::CONTENT_TYPE, p.finish().into_bytes())
+    }
+
     /// Append one event line to `server.log.jsonl` (best-effort, like the
-    /// runner's — observability must never fail a request).
+    /// runner's — observability must never fail a request; failures are
+    /// counted and surfaced as `log_dropped` in `/metrics`).
     fn log_event(&self, event: &str, fields: &[(&str, Json)]) {
         let ts = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
@@ -562,9 +701,7 @@ impl HttpServer {
             pairs.push((*k, v.clone()));
         }
         let line = Json::obj(pairs).to_string();
-        if let Ok(mut f) = self.log.lock() {
-            let _ = writeln!(f, "{line}");
-        }
+        self.log.append(&line);
     }
 }
 
@@ -595,8 +732,30 @@ struct Request {
     method: String,
     path: String,
     body: Vec<u8>,
+    /// The `Accept` header value, empty when absent (`/metrics` content
+    /// negotiation).
+    accept: String,
     /// The client asked for `Connection: close` — answer, then hang up.
     close: bool,
+}
+
+/// The fixed label a request's latency is recorded under — one of
+/// [`obs::HTTP_ROUTES`], so the Prometheus families are stable however
+/// clients misspell paths.
+fn route_label(request: &Request) -> &'static str {
+    let path = request.path.split('?').next().unwrap_or("");
+    let segments: Vec<&str> =
+        path.trim_matches('/').split('/').filter(|s| !s.is_empty()).collect();
+    match (request.method.as_str(), segments.as_slice()) {
+        ("POST", ["jobs"]) => "jobs_submit",
+        ("GET", ["jobs", _]) => "job_status",
+        ("GET", ["jobs", _, "result"]) => "job_result",
+        ("GET", ["jobs", _, "timeline"]) => "job_timeline",
+        ("GET", ["healthz"]) => "healthz",
+        ("GET", ["metrics"]) => "metrics",
+        ("GET", ["trace"]) => "trace",
+        _ => "other",
+    }
 }
 
 /// What reading one request off a keep-alive connection produced.
@@ -654,10 +813,11 @@ fn read_request(stream: &mut &TcpStream, max_body_bytes: usize) -> ReadOutcome {
         return bad("only HTTP/1.x is supported");
     }
 
-    // Headers: only Content-Length, Connection, and Transfer-Encoding
-    // matter.
+    // Headers: only Content-Length, Connection, Accept, and
+    // Transfer-Encoding matter.
     let mut content_length: Option<usize> = None;
     let mut close = false;
+    let mut accept = String::new();
     for line in lines {
         let Some((name, value)) = line.split_once(':') else {
             return bad("malformed header line");
@@ -674,6 +834,9 @@ fn read_request(stream: &mut &TcpStream, max_body_bytes: usize) -> ReadOutcome {
         }
         if name.eq_ignore_ascii_case("connection") {
             close = value.to_ascii_lowercase().contains("close");
+        }
+        if name.eq_ignore_ascii_case("accept") {
+            accept = value.to_ascii_lowercase();
         }
     }
 
@@ -695,7 +858,7 @@ fn read_request(stream: &mut &TcpStream, max_body_bytes: usize) -> ReadOutcome {
         }
     }
     body.truncate(body_len);
-    ReadOutcome::Request(Request { method, path, body, close })
+    ReadOutcome::Request(Request { method, path, body, accept, close })
 }
 
 /// The head/body boundary (`\r\n\r\n`) position, if fully buffered.
@@ -711,6 +874,9 @@ pub struct Response {
     pub status: u16,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// `content-type` value — the API is JSON everywhere except the
+    /// Prometheus text exposition.
+    content_type: &'static str,
     close: bool,
 }
 
@@ -722,7 +888,13 @@ impl Response {
 
     /// Pre-serialized JSON bytes (the verbatim result pass-through).
     fn raw_json(status: u16, body: Vec<u8>) -> Response {
-        Response { status, headers: Vec::new(), body, close: false }
+        Response::text(status, "application/json", body)
+    }
+
+    /// A response with an explicit content type (the Prometheus text
+    /// exposition).
+    fn text(status: u16, content_type: &'static str, body: Vec<u8>) -> Response {
+        Response { status, headers: Vec::new(), body, content_type, close: false }
     }
 
     /// The uniform error shape: `{"error": message}`.
@@ -749,10 +921,11 @@ impl Response {
     fn write_to(&self, mut stream: &TcpStream) -> std::io::Result<()> {
         let connection = if self.close { "close" } else { "keep-alive" };
         let mut head = format!(
-            "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\n\
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\n\
              content-length: {}\r\nconnection: {connection}\r\n",
             self.status,
             self.reason(),
+            self.content_type,
             self.body.len()
         );
         for (name, value) in &self.headers {
@@ -1125,6 +1298,71 @@ mod tests {
         assert_eq!(
             m.get("http").and_then(|h| h.get("rejected")).and_then(Json::as_u64),
             Some(1)
+        );
+
+        server.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn observability_routes_without_engine_work() {
+        let (_dir, server, handle) = frontend(HttpOptions::default());
+        let addr = server.local_addr().to_string();
+        for _ in 0..3 {
+            let r = http_call(&addr, "GET", "/healthz", None).unwrap();
+            assert_eq!(r.status, 200);
+        }
+
+        // Prometheus exposition, selected by query parameter.
+        let prom =
+            http_call(&addr, "GET", "/metrics?format=prometheus", None).unwrap();
+        assert_eq!(prom.status, 200);
+        assert!(prom.header("content-type").unwrap().starts_with("text/plain"));
+        assert!(prom.body.contains("# TYPE http_request_seconds histogram"));
+        assert!(prom.body.contains("http_request_seconds_count{route=\"healthz\"} 3"));
+        assert!(prom.body.contains("log_dropped_total 0"));
+        assert!(prom.body.contains("queue_jobs{state=\"pending\"} 0"));
+
+        // The JSON document carries the same story, additively.
+        let m = http_call(&addr, "GET", "/metrics", None).unwrap().json().unwrap();
+        let lat = m.get("latency").and_then(|l| l.get("http")).unwrap();
+        assert_eq!(
+            lat.get("healthz").and_then(|h| h.get("count")).and_then(Json::as_u64),
+            Some(3)
+        );
+        assert_eq!(
+            m.get("obs").and_then(|o| o.get("log_dropped")).and_then(Json::as_u64),
+            Some(0)
+        );
+
+        // Chrome-trace export is well-formed JSON whatever the gate.
+        let trace = http_call(&addr, "GET", "/trace", None).unwrap();
+        assert_eq!(trace.status, 200);
+        let t = trace.json().unwrap();
+        assert!(t.get("traceEvents").unwrap().as_arr().is_some());
+
+        // Timeline of a pending (workers = 0) job: just the submit stamp.
+        let spec = r#"{"factors":[0.5]}"#;
+        let created = http_call(&addr, "POST", "/jobs", Some(spec)).unwrap();
+        assert_eq!(created.status, 201, "{}", created.body);
+        let id = created
+            .json()
+            .unwrap()
+            .get("id")
+            .and_then(Json::as_str)
+            .unwrap()
+            .to_string();
+        let tl = http_call(&addr, "GET", &format!("/jobs/{id}/timeline"), None)
+            .unwrap();
+        assert_eq!(tl.status, 200, "{}", tl.body);
+        let t = tl.json().unwrap();
+        let events = t.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("event").and_then(Json::as_str), Some("submit"));
+        assert!(t.get("queue_wait_ms").is_none(), "not claimed yet");
+        assert_eq!(
+            http_call(&addr, "GET", "/jobs/nope/timeline", None).unwrap().status,
+            404
         );
 
         server.shutdown();

@@ -34,6 +34,11 @@
 //!   `POST /jobs`, `GET /jobs/<id>[/result]`, `/healthz`, `/metrics` —
 //!   with high-water-mark backpressure (`429` + `Retry-After`) and an
 //!   optional embedded exec loop.
+//! * [`eventlog`] — the rotating, drop-counting `server.log.jsonl`
+//!   writer shared by the runner and the HTTP front-end: write failures
+//!   are counted (surfaced as `log_dropped` in `/metrics`) instead of
+//!   silently discarded, and the file rotates to `.1` past
+//!   `[serve] log_max_bytes`.
 //! * [`dedup`] — content-addressed job identity: specs hash to
 //!   `h<fnv1a64>` ids (client ids stripped), so identical concurrent
 //!   requests collapse into one spooled job with many waiters and the
@@ -46,15 +51,18 @@
 //! record any direct spool reader sees.
 
 pub mod dedup;
+pub mod eventlog;
 pub mod http;
 pub mod queue;
 pub mod runner;
 pub mod spec;
 
 pub use dedup::{canonical_hash, hash_id, Admission};
+pub use eventlog::{EventLog, DEFAULT_LOG_MAX_BYTES};
 pub use http::{http_call, HttpClient, HttpOptions, HttpResponse, HttpServer};
 pub use queue::{
-    ClaimedJob, JobQueue, JobState, QueueCounts, RequeueReport, Submission, MAX_REVIVALS,
+    stamp_gap_ns, ClaimedJob, JobQueue, JobState, QueueCounts, RequeueReport,
+    Submission, TimelineStamp, MAX_REVIVALS,
 };
 pub use runner::{JobRunner, ServeOptions, ServeSummary, LOG_FILE};
 pub use spec::{FactorResult, JobResult, JobSpec};

@@ -12,8 +12,15 @@
 //!   done/<id>.json             JobResult per completed job
 //!   failed/<id>.json           quarantined spec of a failed job
 //!   failed/<id>.error.json     {"id", "error"} recorded next to it
+//!   timeline/<id>.jsonl        per-job lifecycle stamps (see below)
 //!   server.log.jsonl           append-only lifecycle event stream
 //! ```
+//!
+//! Every lifecycle transition also appends a best-effort stamp to the
+//! job's `timeline/<id>.jsonl` sidecar — `{"event", "unix_ms",
+//! "mono_ns", "pid"}` — which `GET /jobs/<id>/timeline` reads back to
+//! compute queue-wait and execute durations. Dedup-shared jobs keep the
+//! original submit stamp: duplicates never re-stamp.
 //!
 //! Claiming is an atomic `rename(pending/x, running/x)`: the filesystem is
 //! the arbiter, so any number of workers — across threads *and* processes
@@ -103,6 +110,52 @@ pub struct QueueCounts {
     pub failed: usize,
 }
 
+/// One line of a job's `timeline/<id>.jsonl` sidecar: which lifecycle
+/// event happened, when on the wall clock (for display and cross-process
+/// math), when on this process's monotonic clock (for exact same-process
+/// durations), and which process stamped it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimelineStamp {
+    pub event: String,
+    pub unix_ms: u64,
+    pub mono_ns: u64,
+    pub pid: u64,
+}
+
+impl TimelineStamp {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("event", Json::Str(self.event.clone())),
+            ("unix_ms", Json::Num(self.unix_ms as f64)),
+            ("mono_ns", Json::Num(self.mono_ns as f64)),
+            ("pid", Json::Num(self.pid as f64)),
+        ])
+    }
+
+    fn parse(v: &Json) -> Option<TimelineStamp> {
+        Some(TimelineStamp {
+            event: v.get("event")?.as_str()?.to_string(),
+            unix_ms: v.get("unix_ms")?.as_u64()?,
+            mono_ns: v.get("mono_ns")?.as_u64()?,
+            pid: v.get("pid")?.as_u64()?,
+        })
+    }
+}
+
+/// Nanoseconds between the first `from` stamp and the first `to` stamp of
+/// a timeline: the exact monotonic difference when one process stamped
+/// both, the wall-clock difference (millisecond resolution) when the
+/// stamps came from different processes.
+pub fn stamp_gap_ns(stamps: &[TimelineStamp], from: &str, to: &str) -> Option<u64> {
+    let a = stamps.iter().find(|s| s.event == from)?;
+    let b = stamps.iter().find(|s| s.event == to)?;
+    if a.pid == b.pid {
+        Some(b.mono_ns.saturating_sub(a.mono_ns))
+    } else {
+        Some(b.unix_ms.saturating_sub(a.unix_ms) * 1_000_000)
+    }
+}
+
 /// File-spool queue rooted at one directory (see module docs).
 pub struct JobQueue {
     dir: PathBuf,
@@ -114,6 +167,7 @@ impl JobQueue {
         for sub in QUEUE_SUBDIRS {
             std::fs::create_dir_all(dir.join(sub))?;
         }
+        std::fs::create_dir_all(dir.join("timeline"))?;
         Ok(JobQueue { dir })
     }
 
@@ -180,7 +234,12 @@ impl JobQueue {
         let linked = std::fs::hard_link(&tmp, &dest);
         let _ = std::fs::remove_file(&tmp);
         match linked {
-            Ok(()) => Ok(Submission::Submitted(dest)),
+            Ok(()) => {
+                // Only the winning submitter stamps: dedup-shared jobs
+                // keep the original submit time.
+                self.stamp_timeline(&spec.id, "submit");
+                Ok(Submission::Submitted(dest))
+            }
             Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
                 // Lost the link race: the winner's spec may already be
                 // claimed, so report wherever it landed.
@@ -249,6 +308,7 @@ impl JobQueue {
                         self.pid_path(&id),
                         std::process::id().to_string(),
                     );
+                    self.stamp_timeline(&id, "claim");
                     return Ok(Some(ClaimedJob { id, path: to }));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
@@ -319,6 +379,7 @@ impl JobQueue {
         let _ = std::fs::remove_file(self.spec_path("running", id));
         let _ = std::fs::remove_file(self.pid_path(id));
         let _ = std::fs::remove_file(self.revivals_path(id));
+        self.stamp_timeline(id, "done");
         Ok(dest)
     }
 
@@ -339,6 +400,7 @@ impl JobQueue {
         let tmp = self.sub("failed").join(format!(".{id}.error.tmp"));
         std::fs::write(&tmp, record.to_string())?;
         std::fs::rename(&tmp, &dest)?;
+        self.stamp_timeline(id, "fail");
         Ok(dest)
     }
 
@@ -381,6 +443,45 @@ impl JobQueue {
             done: self.ids_in("done")?.len(),
             failed: self.ids_in("failed")?.len(),
         })
+    }
+
+    fn timeline_path(&self, id: &str) -> PathBuf {
+        self.sub("timeline").join(format!("{id}.jsonl"))
+    }
+
+    /// Best-effort append of one lifecycle stamp to the job's timeline
+    /// sidecar. Never fails the transition it annotates: a job must not
+    /// die because its timeline could not be written.
+    pub fn stamp_timeline(&self, id: &str, event: &str) {
+        use std::io::Write as _;
+        let unix_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let stamp = TimelineStamp {
+            event: event.to_string(),
+            unix_ms,
+            mono_ns: crate::obs::monotonic_ns(),
+            pid: std::process::id() as u64,
+        };
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.timeline_path(id))
+        {
+            let _ = writeln!(f, "{}", stamp.to_json());
+        }
+    }
+
+    /// The recorded lifecycle stamps of `id`, in file (= stamp) order.
+    /// Garbled lines are skipped, a missing sidecar is an error.
+    pub fn timeline(&self, id: &str) -> Result<Vec<TimelineStamp>> {
+        let text = std::fs::read_to_string(self.timeline_path(id))?;
+        Ok(text
+            .lines()
+            .filter_map(|l| Json::parse(l).ok())
+            .filter_map(|v| TimelineStamp::parse(&v))
+            .collect())
     }
 }
 
@@ -632,6 +733,39 @@ mod tests {
         assert!(!q.revivals_path("loopy").exists(), "ledger cleaned up");
         // A quarantined id stays quarantined across further sweeps.
         assert!(q.requeue_stale().unwrap().is_empty());
+    }
+
+    #[test]
+    fn timeline_records_the_lifecycle_and_keeps_the_original_submit() {
+        let (_dir, q) = queue();
+        let spec = JobSpec::new("t", vec![0.5]);
+        q.submit(&spec).unwrap();
+        // A dedup duplicate must not re-stamp "submit".
+        assert_eq!(
+            q.try_submit(&spec).unwrap(),
+            Submission::Duplicate(JobState::Pending)
+        );
+        let job = q.claim().unwrap().unwrap();
+        let result = JobResult {
+            id: job.id.clone(),
+            operator: crate::operator::Operator::ADD8,
+            factors: Vec::new(),
+            wall_ms: 1,
+        };
+        q.complete(&job.id, &result).unwrap();
+        let stamps = q.timeline("t").unwrap();
+        let events: Vec<&str> = stamps.iter().map(|s| s.event.as_str()).collect();
+        assert_eq!(events, vec!["submit", "claim", "done"]);
+        assert!(stamps.windows(2).all(|w| w[0].mono_ns <= w[1].mono_ns));
+        assert!(stamps.iter().all(|s| s.pid == std::process::id() as u64));
+        assert!(q.timeline("nope").is_err(), "missing sidecar is an error");
+
+        q.submit(&JobSpec::new("sad", vec![0.5])).unwrap();
+        let sad = q.claim().unwrap().unwrap();
+        q.fail(&sad.id, "synthetic").unwrap();
+        let events: Vec<String> =
+            q.timeline("sad").unwrap().into_iter().map(|s| s.event).collect();
+        assert_eq!(events, vec!["submit", "claim", "fail"]);
     }
 
     #[test]

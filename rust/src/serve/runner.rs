@@ -22,13 +22,14 @@
 //! appended to `server.log.jsonl` in the queue directory — one JSON object
 //! per line, the observable record CI uploads.
 
-use super::queue::{ClaimedJob, JobQueue};
+use super::eventlog::{EventLog, DEFAULT_LOG_MAX_BYTES};
+use super::queue::{stamp_gap_ns, ClaimedJob, JobQueue};
 use super::spec::{JobResult, JobSpec};
 use crate::engine::{DsePrepared, EngineContext, KeyedOnce};
 use crate::error::Result;
+use crate::obs::{self, ServeObs};
 use crate::operator::Operator;
 use crate::util::json::Json;
-use std::io::Write as _;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
@@ -98,6 +99,8 @@ pub struct ServeOptions {
     pub drain: bool,
     /// Watch-mode poll interval.
     pub poll: Duration,
+    /// Rotate `server.log.jsonl` to `.1` past this many bytes.
+    pub log_max_bytes: u64,
 }
 
 impl Default for ServeOptions {
@@ -107,6 +110,7 @@ impl Default for ServeOptions {
             max_jobs: None,
             drain: true,
             poll: Duration::from_millis(200),
+            log_max_bytes: DEFAULT_LOG_MAX_BYTES,
         }
     }
 }
@@ -136,7 +140,8 @@ pub struct JobRunner<'a> {
     queue: &'a JobQueue,
     opts: ServeOptions,
     prepared: KeyedOnce<Operator, DsePrepared>,
-    log: Mutex<std::fs::File>,
+    log: Arc<EventLog>,
+    obs: Arc<ServeObs>,
     gc: StoreGc,
     claimed: AtomicUsize,
     done: AtomicUsize,
@@ -149,21 +154,43 @@ impl<'a> JobRunner<'a> {
         queue: &'a JobQueue,
         opts: ServeOptions,
     ) -> Result<JobRunner<'a>> {
-        let log = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(queue.dir().join(LOG_FILE))?;
-        Ok(JobRunner {
+        let log =
+            Arc::new(EventLog::open(queue.dir().join(LOG_FILE), opts.log_max_bytes)?);
+        Ok(Self::with_observer(ctx, queue, opts, log, Arc::new(ServeObs::new())))
+    }
+
+    /// Build on a shared event log and histogram set — the HTTP front-end
+    /// hands its own in so requests and the jobs they spawn land in one
+    /// `/metrics` view (and one rotated log).
+    pub fn with_observer(
+        ctx: &'a EngineContext,
+        queue: &'a JobQueue,
+        opts: ServeOptions,
+        log: Arc<EventLog>,
+        obs: Arc<ServeObs>,
+    ) -> JobRunner<'a> {
+        JobRunner {
             ctx,
             queue,
             opts,
             prepared: KeyedOnce::new(),
-            log: Mutex::new(log),
+            log,
+            obs,
             gc: StoreGc::for_ctx(ctx),
             claimed: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
             failed: AtomicUsize::new(0),
-        })
+        }
+    }
+
+    /// The shared event log (drop/rotation counters feed `/metrics`).
+    pub fn event_log(&self) -> &Arc<EventLog> {
+        &self.log
+    }
+
+    /// The shared latency histograms this runner records into.
+    pub fn observer(&self) -> &Arc<ServeObs> {
+        &self.obs
     }
 
     /// Run the worker pool until the stop condition (`drain` exhaustion or
@@ -221,9 +248,14 @@ impl<'a> JobRunner<'a> {
             if !self.try_reserve_slot() {
                 return; // max_jobs budget spent
             }
+            let claim_span = obs::span(obs::n::JOB_CLAIM);
             match self.queue.claim() {
-                Ok(Some(job)) => self.process(worker, job),
+                Ok(Some(job)) => {
+                    drop(claim_span);
+                    self.process(worker, job)
+                }
                 Ok(None) => {
+                    claim_span.cancel(); // an empty poll is not a span
                     self.release_slot();
                     if self.opts.drain {
                         return;
@@ -238,6 +270,7 @@ impl<'a> JobRunner<'a> {
                 Err(e) => {
                     // A queue I/O fault is not attributable to any one
                     // job; record it and retire the worker.
+                    claim_span.cancel();
                     self.release_slot();
                     self.log_event(
                         "claim-error",
@@ -260,22 +293,41 @@ impl<'a> JobRunner<'a> {
                 ("worker", Json::Num(worker as f64)),
             ],
         );
-        match self.execute(&job) {
-            Ok(result) => match self.queue.complete(&job.id, &result) {
-                Ok(_) => {
-                    self.done.fetch_add(1, Ordering::SeqCst);
-                    self.log_event(
-                        "done",
-                        &[
-                            ("id", Json::Str(job.id.clone())),
-                            ("worker", Json::Num(worker as f64)),
-                            ("wall_ms", Json::Num(result.wall_ms as f64)),
-                            ("operator", Json::Str(result.operator.name())),
-                        ],
-                    );
+        self.queue.stamp_timeline(&job.id, "start");
+        if let Ok(stamps) = self.queue.timeline(&job.id) {
+            if let Some(ns) = stamp_gap_ns(&stamps, "submit", "claim") {
+                self.obs.queue_wait_ns.record(ns);
+            }
+        }
+        let exec_span = obs::span(obs::n::JOB_EXECUTE);
+        let started = Instant::now();
+        let outcome = self.execute(&job);
+        drop(exec_span);
+        self.obs.execute_ns.record(started.elapsed().as_nanos() as u64);
+        match outcome {
+            Ok(result) => {
+                let completed = {
+                    let _span = obs::span(obs::n::JOB_COMPLETE);
+                    self.queue.complete(&job.id, &result)
+                };
+                match completed {
+                    Ok(_) => {
+                        self.done.fetch_add(1, Ordering::SeqCst);
+                        self.log_event(
+                            "done",
+                            &[
+                                ("id", Json::Str(job.id.clone())),
+                                ("worker", Json::Num(worker as f64)),
+                                ("wall_ms", Json::Num(result.wall_ms as f64)),
+                                ("operator", Json::Str(result.operator.name())),
+                            ],
+                        );
+                    }
+                    Err(e) => {
+                        self.record_failure(worker, &job.id, &e.to_string())
+                    }
                 }
-                Err(e) => self.record_failure(worker, &job.id, &e.to_string()),
-            },
+            }
             Err(e) => self.record_failure(worker, &job.id, &e.to_string()),
         }
     }
@@ -340,9 +392,7 @@ impl<'a> JobRunner<'a> {
             pairs.push((*k, v.clone()));
         }
         let line = Json::obj(pairs).to_string();
-        if let Ok(mut f) = self.log.lock() {
-            let _ = writeln!(f, "{line}");
-        }
+        self.log.append(&line);
     }
 }
 
@@ -488,6 +538,7 @@ mod tests {
             max_jobs: Some(2),
             workers: 2,
             poll: Duration::from_millis(10),
+            ..Default::default()
         };
         let runner = JobRunner::new(&ctx, &queue, opts).unwrap();
         let summary = runner.run().unwrap();

@@ -95,8 +95,8 @@ impl Bench {
             name: name.to_string(),
             iters: n,
             mean_ns: mean,
-            median_ns: samples_ns[n / 2],
-            p99_ns: samples_ns[(n * 99 / 100).min(n - 1)],
+            median_ns: crate::obs::percentile_sorted(&samples_ns, 50.0),
+            p99_ns: crate::obs::percentile_sorted(&samples_ns, 99.0),
             min_ns: samples_ns[0],
         };
         println!(

@@ -283,3 +283,87 @@ fn backpressure_rejects_without_touching_the_queue() {
 
     h.stop();
 }
+
+#[test]
+fn prometheus_exposition_counts_a_known_workload_exactly() {
+    let h = Harness::start(HttpOptions { workers: 0, ..Default::default() });
+    for _ in 0..3 {
+        assert_eq!(http_call(&h.addr, "GET", "/healthz", None).unwrap().status, 200);
+    }
+    // Route latencies are recorded before the response bytes go out, so a
+    // client that saw its three responses scrapes exactly three.
+    let scrape =
+        http_call(&h.addr, "GET", "/metrics?format=prometheus", None).unwrap();
+    assert_eq!(scrape.status, 200);
+    let ct = scrape.header("content-type").unwrap_or("");
+    assert!(ct.starts_with("text/plain"), "content type `{ct}`");
+    for needle in [
+        "# TYPE http_request_seconds histogram",
+        r#"http_request_seconds_count{route="healthz"} 3"#,
+        r#"http_request_seconds_bucket{route="healthz",le="+Inf"} 3"#,
+        r#"http_request_seconds_count{route="jobs_submit"} 0"#,
+        r#"queue_jobs{state="pending"} 0"#,
+        "log_dropped_total 0",
+        "# TYPE job_execute_seconds histogram",
+        "# TYPE uptime_seconds gauge",
+    ] {
+        assert!(scrape.body.contains(needle), "missing `{needle}`:\n{}", scrape.body);
+    }
+    // The default stays JSON (existing dashboards), with the new latency
+    // and observability sections alongside the old keys.
+    let json = http_call(&h.addr, "GET", "/metrics", None).unwrap().json().unwrap();
+    let healthz = json
+        .get("latency")
+        .and_then(|l| l.get("http"))
+        .and_then(|routes| routes.get("healthz"));
+    assert_eq!(healthz.and_then(|s| s.get("count")).and_then(Json::as_u64), Some(3));
+    assert_eq!(
+        json.get("obs").and_then(|o| o.get("log_dropped")).and_then(Json::as_u64),
+        Some(0)
+    );
+    h.stop();
+}
+
+#[test]
+fn timeline_records_the_full_lifecycle_of_an_executed_job() {
+    let h = Harness::start(HttpOptions { workers: 2, ..Default::default() });
+    let spec = r#"{"factors":[0.3],"operator":"add8","ga_seed":11}"#;
+    let created = http_call(&h.addr, "POST", "/jobs", Some(spec)).unwrap();
+    assert_eq!(created.status, 201, "{}", created.body);
+    let id = created
+        .json()
+        .unwrap()
+        .get("id")
+        .and_then(Json::as_str)
+        .unwrap()
+        .to_string();
+    h.wait_done(&id);
+
+    let tl = http_call(&h.addr, "GET", &format!("/jobs/{id}/timeline"), None).unwrap();
+    assert_eq!(tl.status, 200, "{}", tl.body);
+    let doc = tl.json().unwrap();
+    assert_eq!(doc.get("id").and_then(Json::as_str), Some(id.as_str()));
+    assert_eq!(doc.get("state").and_then(Json::as_str), Some("done"));
+    let events: Vec<&str> = doc
+        .get("events")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|e| e.get("event").and_then(Json::as_str).unwrap())
+        .collect();
+    assert_eq!(events, ["submit", "claim", "start", "done"]);
+    assert!(doc.get("queue_wait_ms").and_then(Json::as_f64).is_some());
+    assert!(doc.get("execute_ms").and_then(Json::as_f64).is_some_and(|v| v >= 0.0));
+
+    // The executed job shows up in the Prometheus job-lifecycle families.
+    let scrape =
+        http_call(&h.addr, "GET", "/metrics?format=prometheus", None).unwrap();
+    assert!(scrape.body.contains("job_execute_seconds_count 1"), "{}", scrape.body);
+    assert!(scrape.body.contains("job_queue_wait_seconds_count 1"), "{}", scrape.body);
+
+    // Unknown ids 404 without a timeline file materializing.
+    let missing = http_call(&h.addr, "GET", "/jobs/nope/timeline", None).unwrap();
+    assert_eq!(missing.status, 404);
+    h.stop();
+}

@@ -1,0 +1,149 @@
+//! Integration tests over the `repro::obs` surface: sharded histograms
+//! merge to one truth, the span ring survives wraparound (alone and under
+//! concurrent writers), span parentage holds across a thread handoff, and
+//! the Chrome trace export is well-formed.
+//!
+//! Tests that need the tracer call [`repro::obs::force_enable`] — the
+//! gate is process-global and never turned back off here, so every test
+//! filters the shared ring by a unique `arg` payload instead of assuming
+//! it is empty.
+
+use repro::obs::{self, HistSnapshot, Histogram, SpanEvent, SpanRing};
+use repro::util::json::Json;
+
+#[test]
+fn histogram_thread_shards_merge_to_one_truth() {
+    // Four threads record disjoint slices into private histograms and one
+    // shared histogram; bucket-merging the shards must reproduce the
+    // shared readout exactly — the property `/metrics` leans on.
+    let shared = Histogram::new();
+    let shards: Vec<HistSnapshot> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                let shared = &shared;
+                s.spawn(move || {
+                    let mine = Histogram::new();
+                    for i in 0..256u64 {
+                        let v = (t * 1000 + i * 37) % 5000;
+                        mine.record(v);
+                        shared.record(v);
+                    }
+                    mine.snapshot()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let merged = shards.iter().fold(HistSnapshot::default(), |a, s| a.merged(s));
+    let whole = shared.snapshot();
+    assert_eq!(merged, whole);
+    for p in [1.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+        assert_eq!(merged.percentile(p), whole.percentile(p), "p{p}");
+    }
+    assert_eq!(whole.count, 1024);
+    assert!(whole.percentile(100.0) >= whole.percentile(50.0));
+}
+
+fn ev(id: u64, trace: u64, tid: u16, start_ns: u64) -> SpanEvent {
+    SpanEvent { id, parent: 0, trace, name: 0, tid, arg: 0, start_ns, dur_ns: 10 }
+}
+
+#[test]
+fn span_ring_overwrites_oldest_and_counts_drops() {
+    let ring = SpanRing::new(16);
+    for i in 1..=40u64 {
+        ring.record(&ev(i, i, 1, i * 100));
+    }
+    assert_eq!(ring.recorded(), 40);
+    assert_eq!(ring.dropped(), 24);
+    let ids: Vec<u64> = ring.snapshot().iter().map(|e| e.id).collect();
+    assert_eq!(ids, (25..=40).collect::<Vec<u64>>());
+}
+
+#[test]
+fn span_ring_concurrent_writers_never_lose_the_count() {
+    // The head cursor is exact even when the slots churn; snapshots under
+    // contention may skip torn slots but never exceed capacity and stay
+    // sorted by (start_ns, id).
+    let ring = SpanRing::new(64);
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let ring = &ring;
+            s.spawn(move || {
+                for i in 0..1000u64 {
+                    ring.record(&ev(t * 10_000 + i + 1, t + 1, t as u16 + 1, i));
+                }
+            });
+        }
+    });
+    assert_eq!(ring.recorded(), 4_000);
+    assert_eq!(ring.dropped(), 4_000 - 64);
+    let snap = ring.snapshot();
+    assert!(snap.len() <= 64);
+    for e in &snap {
+        assert!(e.id != 0);
+    }
+    for w in snap.windows(2) {
+        assert!((w[0].start_ns, w[0].id) <= (w[1].start_ns, w[1].id));
+    }
+}
+
+#[test]
+fn span_parentage_survives_thread_handoff() {
+    obs::force_enable();
+    let mut root = obs::span(obs::n::JOB_SUBMIT);
+    root.set_arg(414_141);
+    let ctx = root.ctx();
+    std::thread::scope(|s| {
+        for i in 0..3u64 {
+            s.spawn(move || {
+                let mut child = obs::span_under(ctx, obs::n::JOB_EXECUTE);
+                child.set_arg(424_242 + i);
+            });
+        }
+    });
+    drop(root);
+    let events = obs::tracer().ring().snapshot();
+    let root_ev = events
+        .iter()
+        .find(|e| e.name == obs::n::JOB_SUBMIT && e.arg == 414_141)
+        .expect("root span recorded");
+    assert_eq!(root_ev.parent, 0);
+    let children: Vec<&SpanEvent> =
+        events.iter().filter(|e| (424_242..424_245).contains(&e.arg)).collect();
+    assert_eq!(children.len(), 3);
+    for c in children {
+        assert_eq!(c.parent, root_ev.id);
+        assert_eq!(c.trace, root_ev.trace);
+        assert_eq!(c.name, obs::n::JOB_EXECUTE);
+        assert!(c.tid != root_ev.tid, "child ran on its own thread");
+        assert!(c.start_ns >= root_ev.start_ns);
+    }
+}
+
+#[test]
+fn chrome_export_is_well_formed_trace_event_json() {
+    obs::force_enable();
+    {
+        let mut s = obs::span(obs::n::ENGINE_CHARACTERIZE);
+        s.set_arg(777_001);
+    }
+    let text = obs::export_chrome().to_string();
+    let parsed = Json::parse(&text).expect("chrome trace parses");
+    assert_eq!(parsed.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    let items = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    let arg_of =
+        |e: &Json| e.get("args").and_then(|a| a.get("arg")).and_then(Json::as_u64);
+    let ours = items
+        .iter()
+        .find(|e| arg_of(e) == Some(777_001))
+        .expect("our span exported");
+    assert_eq!(ours.get("ph").and_then(Json::as_str), Some("X"));
+    let name = ours.get("name").and_then(Json::as_str);
+    assert_eq!(name, Some("engine.characterize"));
+    assert_eq!(ours.get("cat").and_then(Json::as_str), Some("engine"));
+    assert!(ours.get("ts").and_then(Json::as_f64).is_some());
+    assert!(ours.get("dur").and_then(Json::as_f64).is_some());
+    let span_id = ours.get("args").and_then(|a| a.get("span")).and_then(Json::as_str);
+    assert!(span_id.is_some_and(|s| s.len() == 16), "span id is 16 hex chars");
+}
