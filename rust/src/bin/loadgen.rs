@@ -21,9 +21,16 @@
 //! Chrome trace-event JSON — with the default in-process target that
 //! captures the server's request spans (Perfetto-loadable).
 //!
+//! `--retries N` drives every request through the retry policy
+//! ([`RetryPolicy`]: capped exponential backoff, deterministic
+//! per-connection jitter, `Retry-After` honored on `429`/`503`) and
+//! stamps the observed retry counts — `0` (the default) keeps the
+//! historical no-retry path for cross-PR comparability.
+//!
 //! ```text
 //! loadgen [--addr HOST:PORT] [--connections N] [--requests N]
-//!         [--dup-ratio F] [--keep-alive] [--out PATH] [--trace-out PATH]
+//!         [--dup-ratio F] [--keep-alive] [--retries N] [--out PATH]
+//!         [--trace-out PATH]
 //! ```
 
 use repro::cli::ParsedArgs;
@@ -31,7 +38,10 @@ use repro::engine::EngineContext;
 use repro::error::{Error, Result};
 use repro::expcfg::{ConssConfig, ExperimentConfig, GaConfig, SurrogateConfig};
 use repro::obs::{HistSnapshot, Histogram};
-use repro::serve::{http_call, HttpClient, HttpOptions, HttpServer, JobQueue};
+use repro::serve::{
+    http_call, http_call_retry, HttpClient, HttpOptions, HttpServer, JobQueue,
+    RetryPolicy, RetryingClient,
+};
 use repro::surrogate::EstimatorBackend;
 use repro::util::bench::smoke_mode;
 use repro::util::json::Json;
@@ -52,8 +62,8 @@ fn main() {
         println!(
             "loadgen — closed-loop HTTP load for `repro serve-http`\n\n\
              USAGE: loadgen [--addr HOST:PORT] [--connections N] [--requests N]\n\
-             \x20                [--dup-ratio F] [--keep-alive] [--out PATH]\n\
-             \x20                [--trace-out PATH]\n\n\
+             \x20                [--dup-ratio F] [--keep-alive] [--retries N]\n\
+             \x20                [--out PATH] [--trace-out PATH]\n\n\
              Without --addr an in-process front-end is spawned on 127.0.0.1:0\n\
              (hermetic; no engine work). --keep-alive adds a second pass on\n\
              persistent connections and stamps the latency delta. --trace-out\n\
@@ -81,6 +91,7 @@ fn run(args: Vec<String>) -> Result<()> {
     parsed
         .ensure_known(&[
             "addr", "connections", "requests", "dup-ratio", "out", "trace-out",
+            "retries",
         ])
         .map_err(|e| Error::Config(e.to_string()))?;
     let keep_alive = parsed.flag("keep-alive");
@@ -100,6 +111,10 @@ fn run(args: Vec<String>) -> Result<()> {
     if !(0.0..=1.0).contains(&dup_ratio) {
         return Err(Error::Config("--dup-ratio must be within [0, 1]".into()));
     }
+    let retries: u32 = parsed
+        .opt_parse("retries")
+        .map_err(|e| Error::Config(e.to_string()))?
+        .unwrap_or(0);
     let out = parsed
         .opt("out")
         .map(PathBuf::from)
@@ -128,13 +143,13 @@ fn run(args: Vec<String>) -> Result<()> {
 
     let close = PassStats::aggregate(
         "close",
-        &drive(&addr, connections, requests, dup_ratio, false),
+        &drive(&addr, connections, requests, dup_ratio, false, retries),
     )?;
     close.print();
     let reused = if keep_alive {
         let stats = PassStats::aggregate(
             "keep-alive",
-            &drive(&addr, connections, requests, dup_ratio, true),
+            &drive(&addr, connections, requests, dup_ratio, true, retries),
         )?;
         stats.print();
         Some(stats)
@@ -174,6 +189,13 @@ fn run(args: Vec<String>) -> Result<()> {
                 ("hit_rate", Json::Num(close.hit_rate)),
             ]),
         ),
+        (
+            "retry",
+            Json::obj(vec![
+                ("budget_per_request", Json::Num(retries as f64)),
+                ("performed", Json::Num(close.retries as f64)),
+            ]),
+        ),
     ];
     if let Some(ka) = &reused {
         pairs.push((
@@ -191,6 +213,7 @@ fn run(args: Vec<String>) -> Result<()> {
                 // close − keep-alive: positive = connection reuse saved.
                 ("p50_delta_ms", Json::Num(close.p50_ms - ka.p50_ms)),
                 ("p99_delta_ms", Json::Num(close.p99_ms - ka.p99_ms)),
+                ("retries_performed", Json::Num(ka.retries as f64)),
             ]),
         ));
     }
@@ -214,12 +237,13 @@ struct PassStats {
     rps: f64,
     p50_ms: f64,
     p99_ms: f64,
+    retries: u64,
     snap: HistSnapshot,
 }
 
 impl PassStats {
     fn aggregate(label: &'static str, pass: &Pass) -> Result<PassStats> {
-        let (samples, elapsed) = pass;
+        let (samples, elapsed, retries) = pass;
         let total = samples.len();
         let created = samples.iter().filter(|s| s.status == 201).count();
         let shared = samples.iter().filter(|s| s.status == 200).count();
@@ -252,6 +276,7 @@ impl PassStats {
             rps: if secs > 0.0 { total as f64 / secs } else { 0.0 },
             p50_ms: snap.percentile(50.0) as f64 / 1e6,
             p99_ms: snap.percentile(99.0) as f64 / 1e6,
+            retries: *retries,
             snap,
         })
     }
@@ -259,7 +284,8 @@ impl PassStats {
     fn print(&self) {
         println!(
             "{}: {} request(s) in {:.0} ms — {:.0} req/s; p50 {:.2} ms, \
-             p99 {:.2} ms; {} created / {} shared (hit rate {:.2})",
+             p99 {:.2} ms; {} created / {} shared (hit rate {:.2}); \
+             {} retry(ies)",
             self.label,
             self.total,
             self.duration_ms,
@@ -268,12 +294,13 @@ impl PassStats {
             self.p99_ms,
             self.created,
             self.shared,
-            self.hit_rate
+            self.hit_rate,
+            self.retries
         );
     }
 }
 
-type Pass = (Vec<Sample>, std::time::Duration);
+type Pass = (Vec<Sample>, std::time::Duration, u64);
 
 /// One full pass: every connection drives its requests concurrently, in
 /// close (connect-per-request) or keep-alive (persistent socket) mode.
@@ -283,20 +310,29 @@ fn drive(
     requests: usize,
     dup_ratio: f64,
     keep_alive: bool,
+    retries: u32,
 ) -> Pass {
     let started = Instant::now();
     let collected = Mutex::new(Vec::with_capacity(connections * requests));
+    let retries_performed = AtomicU64::new(0);
     std::thread::scope(|s| {
         for conn in 0..connections {
             let collected = &collected;
+            let retries_performed = &retries_performed;
             s.spawn(move || {
-                let mine =
-                    drive_connection(addr, conn, requests, dup_ratio, keep_alive);
+                let (mine, performed) = drive_connection(
+                    addr, conn, requests, dup_ratio, keep_alive, retries,
+                );
+                retries_performed.fetch_add(performed, Ordering::Relaxed);
                 collected.lock().unwrap().extend(mine);
             });
         }
     });
-    (collected.into_inner().unwrap(), started.elapsed())
+    (
+        collected.into_inner().unwrap(),
+        started.elapsed(),
+        retries_performed.load(Ordering::Relaxed),
+    )
 }
 
 /// One closed-loop connection: `requests` sequential submits, duplicating
@@ -311,9 +347,28 @@ fn drive_connection(
     requests: usize,
     dup_ratio: f64,
     keep_alive: bool,
-) -> Vec<Sample> {
+    retries: u32,
+) -> (Vec<Sample>, u64) {
     let mut rng = Rng::seed_from_u64(0x10ad_6e4e + conn as u64);
-    let mut client = if keep_alive { HttpClient::connect(addr).ok() } else { None };
+    let policy = RetryPolicy {
+        max_retries: retries,
+        seed: 0x10ad_6e4e + conn as u64,
+        ..Default::default()
+    };
+    // `--retries 0` keeps the historical no-retry paths byte-for-byte
+    // (cross-PR bench comparability); a budget switches to the retrying
+    // client / one-shot-with-retries call.
+    let mut retry_client = if keep_alive && retries > 0 {
+        Some(RetryingClient::new(addr, policy.clone()))
+    } else {
+        None
+    };
+    let mut plain_client = if keep_alive && retries == 0 {
+        HttpClient::connect(addr).ok()
+    } else {
+        None
+    };
+    let mut one_shot_retries: u64 = 0;
     let mut issued: Vec<String> = Vec::new();
     let mut samples = Vec::with_capacity(requests);
     for _ in 0..requests {
@@ -329,24 +384,38 @@ fn drive_connection(
             body
         };
         let t0 = Instant::now();
-        let status = if keep_alive {
-            match client.as_mut().and_then(|c| c.call("POST", "/jobs", Some(&body)).ok())
+        let status = if let Some(rc) = retry_client.as_mut() {
+            rc.call("POST", "/jobs", Some(&body)).map_or(0, |r| r.status)
+        } else if keep_alive {
+            match plain_client
+                .as_mut()
+                .and_then(|c| c.call("POST", "/jobs", Some(&body)).ok())
             {
                 Some(r) => r.status,
                 None => {
-                    client = HttpClient::connect(addr).ok();
-                    client
+                    plain_client = HttpClient::connect(addr).ok();
+                    plain_client
                         .as_mut()
                         .and_then(|c| c.call("POST", "/jobs", Some(&body)).ok())
                         .map_or(0, |r| r.status)
                 }
+            }
+        } else if retries > 0 {
+            match http_call_retry(addr, "POST", "/jobs", Some(&body), &policy) {
+                Ok((r, n)) => {
+                    one_shot_retries += n as u64;
+                    r.status
+                }
+                Err(_) => 0,
             }
         } else {
             http_call(addr, "POST", "/jobs", Some(&body)).map_or(0, |r| r.status)
         };
         samples.push(Sample { status, latency_ns: t0.elapsed().as_nanos() as u64 });
     }
-    samples
+    let performed =
+        one_shot_retries + retry_client.map_or(0, |c| c.retries());
+    (samples, performed)
 }
 
 /// The hermetic in-process target: a front-end-only server (workers 0 —

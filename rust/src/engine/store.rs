@@ -199,6 +199,7 @@ impl ManifestLock {
                              (holder no longer running)",
                             path.display()
                         );
+                        crate::fault::point("store.lock.takeover")?;
                         let _ = std::fs::remove_file(&path);
                         continue;
                     }
@@ -209,6 +210,7 @@ impl ManifestLock {
                             path.display(),
                             LOCK_WAIT_MAX
                         );
+                        crate::fault::point("store.lock.takeover")?;
                         let _ = std::fs::remove_file(&path);
                         continue;
                     }
@@ -376,7 +378,12 @@ impl DatasetStore {
         let text = ds.to_json().to_string();
         let hash = fnv1a64(text.as_bytes());
         let tmp = self.dir.join(format!(".{slug}.tmp"));
-        std::fs::write(&tmp, &text)?;
+        // Durable write (fsync) before the rename publishes the payload:
+        // atomic against readers either way, but only durable against
+        // power loss with the fsync. A `partial` failpoint here models
+        // exactly that torn no-fsync write.
+        crate::fault::write_file_durable("store.payload.write", &tmp, text.as_bytes())?;
+        crate::fault::point("store.payload.rename")?;
         std::fs::rename(&tmp, self.entry_path(&slug))?;
         let mut entries: BTreeMap<String, Json> = self
             .read_manifest()?
@@ -403,7 +410,11 @@ impl DatasetStore {
             ("entries", Json::Obj(entries)),
         ]);
         let mtmp = self.dir.join(".manifest.tmp");
-        std::fs::write(&mtmp, manifest.to_string())?;
+        crate::fault::write_file_durable(
+            "store.manifest.write",
+            &mtmp,
+            manifest.to_string().as_bytes(),
+        )?;
         std::fs::rename(&mtmp, self.manifest_path())?;
         Ok(())
     }

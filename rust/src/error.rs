@@ -117,6 +117,15 @@ impl From<xla::Error> for Error {
     }
 }
 
+impl Error {
+    /// Whether this is a full-disk (`ENOSPC`) I/O failure — the one fault
+    /// class the serve loops downgrade to load-shedding (`503` + pause)
+    /// instead of crashing or retiring workers.
+    pub fn is_disk_full(&self) -> bool {
+        matches!(self, Error::Io(e) if e.raw_os_error() == Some(28))
+    }
+}
+
 pub type Result<T> = std::result::Result<T, Error>;
 
 #[cfg(test)]
@@ -139,5 +148,13 @@ mod tests {
         assert!(io.source().is_some());
         assert!(io.to_string().contains("disk"));
         assert!(Error::Config("c".into()).source().is_none());
+    }
+
+    #[test]
+    fn disk_full_is_detected_through_the_io_wrapper() {
+        let full = Error::from(std::io::Error::from_raw_os_error(28));
+        assert!(full.is_disk_full());
+        assert!(!Error::from(std::io::Error::other("x")).is_disk_full());
+        assert!(!Error::Config("c".into()).is_disk_full());
     }
 }

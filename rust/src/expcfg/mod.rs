@@ -67,6 +67,7 @@ pub struct ExperimentConfig {
     pub serve: ServeConfig,
     pub http: HttpConfig,
     pub obs: ObsConfig,
+    pub fault: FaultConfig,
     pub scaling_factors: Vec<f64>,
 }
 
@@ -242,6 +243,7 @@ impl ExperimentConfig {
                     cfg.obs.trace_buffer =
                         value.as_usize().ok_or_else(|| bad(key, "an integer"))?
                 }
+                "fault.spec" => cfg.fault.spec = get_str(key, value)?,
                 other => {
                     return Err(Error::Config(format!("unknown config key `{other}`")))
                 }
@@ -296,6 +298,7 @@ impl ExperimentConfig {
         if self.obs.trace_buffer == 0 {
             return Err(Error::Config("obs.trace_buffer must be > 0".into()));
         }
+        crate::fault::validate_spec(&self.fault.spec)?;
         Ok(())
     }
 }
@@ -318,9 +321,20 @@ impl Default for ExperimentConfig {
             serve: ServeConfig::default(),
             http: HttpConfig::default(),
             obs: ObsConfig::default(),
+            fault: FaultConfig::default(),
             scaling_factors: default_factors(),
         }
     }
+}
+
+/// Failpoint knobs (`[fault]`): the armed-site spec, same grammar as the
+/// `REPRO_FAULTS` environment variable (which outranks it). Empty = all
+/// sites disarmed — the production default; every injection site then
+/// costs one relaxed atomic load.
+#[derive(Debug, Clone, Default)]
+pub struct FaultConfig {
+    /// `site=action[:count],...` — see [`crate::fault`] for the grammar.
+    pub spec: String,
 }
 
 /// HTTP front-end knobs (`repro serve-http`).
@@ -621,6 +635,9 @@ threads = 8
 high_water = 32
 retry_after_secs = 2
 max_body_bytes = 4096
+
+[fault]
+spec = "queue.complete.rename=abort:1"
 "#,
         )
         .unwrap();
@@ -648,6 +665,19 @@ max_body_bytes = 4096
         assert_eq!(c.http.high_water, 32);
         assert_eq!(c.http.retry_after_secs, 2);
         assert_eq!(c.http.max_body_bytes, 4096);
+        assert_eq!(c.fault.spec, "queue.complete.rename=abort:1");
+    }
+
+    #[test]
+    fn fault_spec_is_validated() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.fault.spec, "", "failpoints must default to disarmed");
+        c.validate().unwrap();
+        let c = ExperimentConfig {
+            fault: FaultConfig { spec: "site=explode".into() },
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,409 @@
+//! Deterministic failpoint subsystem for crash-consistency testing.
+//!
+//! Every durability-critical write path in the crate passes through a
+//! *named injection site* (`queue.complete.rename`, `store.payload.write`,
+//! …). In production the sites are inert: the entire cost is one relaxed
+//! atomic load ([`faults_enabled`], same pattern as the `REPRO_TRACE`
+//! gate). A torture harness arms sites via the `REPRO_FAULTS` environment
+//! variable (or `[fault] spec` in the experiment TOML) to deterministically
+//! reproduce any crash interleaving:
+//!
+//! ```text
+//! REPRO_FAULTS=site=action[:count],site=action,...
+//! ```
+//!
+//! Actions:
+//!
+//! * `err` — the operation fails with an injected [`std::io::Error`].
+//! * `enospc` — the operation fails with `ENOSPC` (disk full), so the
+//!   load-shedding path can be exercised without filling a disk.
+//! * `partial` — a *torn write*: half the bytes land, fsync is skipped,
+//!   and the call reports success — the power-loss model.
+//! * `abort` — the process dies on the spot (`std::process::abort`),
+//!   simulating a `kill -9` at exactly this site.
+//! * `delay:ms` — sleep before proceeding (widens race windows).
+//!
+//! An optional `:count` suffix (for `delay`: `delay:ms:count`) limits how
+//! many times the site fires; afterwards it passes through normally but
+//! keeps counting hits. Hit counters for all armed sites are exported via
+//! [`hits`] and surface in `/metrics` as `fault_hits_total{site=...}`.
+//!
+//! The entry points mirror the write shapes they guard:
+//!
+//! * [`point`] — a marker between two operations (after a rename, before
+//!   cleanup); fails/aborts/delays but never writes.
+//! * [`write_file`] — guarded `std::fs::write`.
+//! * [`write_file_durable`] — guarded write **plus `sync_all`** — the
+//!   fsync-before-rename half of a crash-safe temp+rename pair.
+//! * [`write_quota`] — for streaming writers that need to know how many
+//!   bytes to emit (the event log): returns the allowed byte count.
+
+use crate::error::{Error, Result};
+use crate::expcfg::FaultConfig;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Environment variable holding the failpoint spec (outranks the TOML).
+pub const ENV_SPEC: &str = "REPRO_FAULTS";
+
+static FAULTS_ON: AtomicBool = AtomicBool::new(false);
+static SITES: Mutex<BTreeMap<String, SiteState>> = Mutex::new(BTreeMap::new());
+
+/// The failpoint gate — one relaxed atomic load, the entire cost of every
+/// injection site while no fault is armed.
+#[inline]
+pub fn faults_enabled() -> bool {
+    FAULTS_ON.load(Ordering::Relaxed)
+}
+
+/// What an armed site does when hit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Fail with an injected I/O error.
+    Err,
+    /// Fail with `ENOSPC` (raw OS error 28).
+    Enospc,
+    /// Torn write: truncate the payload, skip fsync, report success.
+    Partial,
+    /// Kill the process at this site (`std::process::abort`).
+    Abort,
+    /// Sleep this many milliseconds, then proceed normally.
+    Delay(u64),
+}
+
+#[derive(Debug)]
+struct SiteState {
+    action: Action,
+    /// `None` = unlimited; `Some(0)` = exhausted (site passes through but
+    /// keeps counting hits so the metrics stay visible).
+    remaining: Option<u64>,
+    hits: u64,
+}
+
+/// Parse a spec string into `(site, action, count)` triples.
+fn parse_spec(spec: &str) -> Result<Vec<(String, Action, Option<u64>)>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (site, rest) = entry.split_once('=').ok_or_else(|| {
+            Error::Config(format!("fault spec `{entry}`: expected site=action[:count]"))
+        })?;
+        let site = site.trim();
+        if site.is_empty() {
+            return Err(Error::Config(format!("fault spec `{entry}`: empty site name")));
+        }
+        let parts: Vec<&str> = rest.split(':').collect();
+        let count_at = |idx: usize| -> Result<Option<u64>> {
+            match parts.get(idx) {
+                None => Ok(None),
+                Some(s) => s.parse::<u64>().map(Some).map_err(|_| {
+                    Error::Config(format!("fault spec `{entry}`: bad count `{s}`"))
+                }),
+            }
+        };
+        let (action, count) = match parts[0] {
+            "err" => (Action::Err, count_at(1)?),
+            "enospc" => (Action::Enospc, count_at(1)?),
+            "partial" => (Action::Partial, count_at(1)?),
+            "abort" => (Action::Abort, count_at(1)?),
+            "delay" => {
+                let ms = parts
+                    .get(1)
+                    .and_then(|s| s.parse::<u64>().ok())
+                    .ok_or_else(|| {
+                        Error::Config(format!("fault spec `{entry}`: delay needs `delay:ms`"))
+                    })?;
+                (Action::Delay(ms), count_at(2)?)
+            }
+            other => {
+                return Err(Error::Config(format!(
+                    "fault spec `{entry}`: unknown action `{other}` \
+                     (err|enospc|partial|abort|delay:ms)"
+                )))
+            }
+        };
+        if parts.len() > if matches!(action, Action::Delay(_)) { 3 } else { 2 } {
+            return Err(Error::Config(format!("fault spec `{entry}`: trailing garbage")));
+        }
+        out.push((site.to_string(), action, count));
+    }
+    Ok(out)
+}
+
+/// Check a spec string for grammar errors without arming anything
+/// (config validation).
+pub fn validate_spec(spec: &str) -> Result<()> {
+    parse_spec(spec).map(|_| ())
+}
+
+/// Arm the sites named in `spec`, replacing whatever was armed before.
+/// An empty spec disarms everything.
+pub fn arm_from_spec(spec: &str) -> Result<()> {
+    let parsed = parse_spec(spec)?;
+    let mut sites = SITES.lock().unwrap();
+    sites.clear();
+    for (site, action, count) in parsed {
+        sites.insert(site, SiteState { action, remaining: count, hits: 0 });
+    }
+    FAULTS_ON.store(!sites.is_empty(), Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disarm every site and clear hit counters.
+pub fn disarm_all() {
+    SITES.lock().unwrap().clear();
+    FAULTS_ON.store(false, Ordering::Relaxed);
+}
+
+/// Resolve the failpoint configuration: `REPRO_FAULTS` env (if set, even
+/// to the empty string) over `[fault] spec`. Called from config load.
+pub fn apply(cfg: &FaultConfig) -> Result<()> {
+    match std::env::var(ENV_SPEC) {
+        Ok(env_spec) => arm_from_spec(&env_spec),
+        Err(_) => arm_from_spec(&cfg.spec),
+    }
+}
+
+/// Arm from `REPRO_FAULTS` alone (torture workers, `loadgen` — processes
+/// that never load an experiment TOML). No-op when the variable is unset.
+pub fn apply_env() -> Result<()> {
+    if let Ok(spec) = std::env::var(ENV_SPEC) {
+        arm_from_spec(&spec)?;
+    }
+    Ok(())
+}
+
+/// Hit counters for every armed site (site name → times hit), in
+/// deterministic (sorted) order. Sites stay listed after their count is
+/// exhausted so scrapes see the final tallies.
+pub fn hits() -> Vec<(String, u64)> {
+    SITES
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(site, st)| (site.clone(), st.hits))
+        .collect()
+}
+
+/// Consume one firing of `site`: bump the hit counter and return the
+/// action to perform, or `None` when the site is unarmed/exhausted.
+fn fire(site: &str) -> Option<Action> {
+    let mut sites = SITES.lock().unwrap();
+    let st = sites.get_mut(site)?;
+    st.hits += 1;
+    match &mut st.remaining {
+        Some(0) => return None,
+        Some(n) => *n -= 1,
+        None => {}
+    }
+    Some(st.action.clone())
+}
+
+fn injected_err(site: &str) -> io::Error {
+    io::Error::other(format!("fault injected at {site}"))
+}
+
+fn enospc_err() -> io::Error {
+    io::Error::from_raw_os_error(28)
+}
+
+fn do_abort(site: &str) -> ! {
+    eprintln!("fault: aborting process at site {site}");
+    std::process::abort()
+}
+
+/// A pure marker site (between a rename and its cleanup, before a lock
+/// takeover). `partial` is meaningless here and passes through.
+#[inline]
+pub fn point(site: &str) -> io::Result<()> {
+    if !faults_enabled() {
+        return Ok(());
+    }
+    match fire(site) {
+        None | Some(Action::Partial) => Ok(()),
+        Some(Action::Err) => Err(injected_err(site)),
+        Some(Action::Enospc) => Err(enospc_err()),
+        Some(Action::Abort) => do_abort(site),
+        Some(Action::Delay(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+    }
+}
+
+/// How many of `len` bytes a streaming writer may emit through `site`.
+/// Normal operation returns `len`; `partial` halves it (the torn-tail
+/// model for append-only logs).
+#[inline]
+pub fn write_quota(site: &str, len: usize) -> io::Result<usize> {
+    if !faults_enabled() {
+        return Ok(len);
+    }
+    match fire(site) {
+        None => Ok(len),
+        Some(Action::Partial) => Ok(len / 2),
+        Some(Action::Err) => Err(injected_err(site)),
+        Some(Action::Enospc) => Err(enospc_err()),
+        Some(Action::Abort) => do_abort(site),
+        Some(Action::Delay(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(len)
+        }
+    }
+}
+
+/// Guarded `std::fs::write`. A `partial` firing writes the front half of
+/// `bytes` and reports success — the caller believes the write landed.
+pub fn write_file(site: &str, path: &Path, bytes: &[u8]) -> io::Result<()> {
+    if !faults_enabled() {
+        return std::fs::write(path, bytes);
+    }
+    let quota = write_quota(site, bytes.len())?;
+    std::fs::write(path, &bytes[..quota])
+}
+
+/// Guarded durable write: write all of `bytes`, then `sync_all`, so the
+/// subsequent rename publishes a record that survives power loss. A
+/// `partial` firing writes a truncated payload, **skips the fsync**, and
+/// reports success — exactly the torn state a real power cut leaves.
+pub fn write_file_durable(site: &str, path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let quota = if faults_enabled() { write_quota(site, bytes.len())? } else { bytes.len() };
+    let mut f = File::create(path)?;
+    f.write_all(&bytes[..quota])?;
+    if quota == bytes.len() {
+        f.sync_all()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; serialize tests that arm it.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disarmed_sites_are_transparent() {
+        let _g = guard();
+        disarm_all();
+        assert!(!faults_enabled());
+        assert!(point("any.site").is_ok());
+        assert_eq!(write_quota("any.site", 100).unwrap(), 100);
+    }
+
+    #[test]
+    fn spec_parsing_accepts_the_grammar() {
+        let parsed = parse_spec("a.b=err,c=partial:2, d=delay:50:1 ,e=abort,f=enospc").unwrap();
+        assert_eq!(parsed.len(), 5);
+        assert_eq!(parsed[0], ("a.b".into(), Action::Err, None));
+        assert_eq!(parsed[1], ("c".into(), Action::Partial, Some(2)));
+        assert_eq!(parsed[2], ("d".into(), Action::Delay(50), Some(1)));
+        assert_eq!(parsed[3], ("e".into(), Action::Abort, None));
+        assert_eq!(parsed[4], ("f".into(), Action::Enospc, None));
+        assert_eq!(parse_spec("").unwrap().len(), 0);
+        assert_eq!(parse_spec(" , ").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn spec_parsing_rejects_garbage() {
+        assert!(parse_spec("noequals").is_err());
+        assert!(parse_spec("a=explode").is_err());
+        assert!(parse_spec("a=err:x").is_err());
+        assert!(parse_spec("a=delay").is_err());
+        assert!(parse_spec("a=delay:10:2:3").is_err());
+        assert!(parse_spec("=err").is_err());
+    }
+
+    #[test]
+    fn err_fires_counted_then_passes_through_but_keeps_counting() {
+        let _g = guard();
+        arm_from_spec("t.err=err:2").unwrap();
+        assert!(point("t.err").is_err());
+        assert!(point("t.err").is_err());
+        assert!(point("t.err").is_ok());
+        assert!(point("other.site").is_ok());
+        assert_eq!(hits(), vec![("t.err".to_string(), 3)]);
+        disarm_all();
+        assert_eq!(hits(), vec![]);
+    }
+
+    #[test]
+    fn enospc_action_has_raw_os_error_28() {
+        let _g = guard();
+        arm_from_spec("t.full=enospc").unwrap();
+        let e = point("t.full").unwrap_err();
+        assert_eq!(e.raw_os_error(), Some(28));
+        disarm_all();
+    }
+
+    #[test]
+    fn partial_write_truncates_and_reports_success() {
+        let _g = guard();
+        let dir = std::env::temp_dir().join(format!("fault-partial-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.json");
+        arm_from_spec("t.torn=partial:1").unwrap();
+        write_file("t.torn", &path, b"0123456789").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"01234");
+        // Count exhausted: the next write is whole.
+        write_file("t.torn", &path, b"0123456789").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"0123456789");
+        disarm_all();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn durable_write_skips_fsync_only_when_torn() {
+        let _g = guard();
+        let dir = std::env::temp_dir().join(format!("fault-durable-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rec.json");
+        disarm_all();
+        write_file_durable("t.none", &path, b"full record").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"full record");
+        arm_from_spec("t.dur=partial").unwrap();
+        write_file_durable("t.dur", &path, b"full record").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"full ");
+        disarm_all();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn env_outranks_toml_spec() {
+        let _g = guard();
+        // No env set in the test runner: the TOML spec applies.
+        std::env::remove_var(ENV_SPEC);
+        let cfg = FaultConfig { spec: "t.toml=err".into() };
+        apply(&cfg).unwrap();
+        assert!(faults_enabled());
+        assert!(point("t.toml").is_err());
+        std::env::set_var(ENV_SPEC, "t.env=err");
+        apply(&cfg).unwrap();
+        assert!(point("t.toml").is_ok());
+        assert!(point("t.env").is_err());
+        // Env set to empty disarms even with a TOML spec present.
+        std::env::set_var(ENV_SPEC, "");
+        apply(&cfg).unwrap();
+        assert!(!faults_enabled());
+        std::env::remove_var(ENV_SPEC);
+        disarm_all();
+    }
+
+    #[test]
+    fn delay_action_sleeps_then_succeeds() {
+        let _g = guard();
+        arm_from_spec("t.slow=delay:10:1").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(point("t.slow").is_ok());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(10));
+        disarm_all();
+    }
+}

@@ -71,6 +71,9 @@
 //! * [`expcfg`] — TOML experiment configuration system.
 //! * [`obs`] — unified observability: spans (Chrome-trace exportable),
 //!   log-bucketed latency histograms, Prometheus text exposition.
+//! * [`fault`] — deterministic failpoints (`REPRO_FAULTS`) threaded
+//!   through every durability-critical write path; zero-cost when
+//!   disarmed, drives the crash-torture suite.
 
 pub mod baselines;
 pub mod charac;
@@ -81,6 +84,7 @@ pub mod dse;
 pub mod engine;
 pub mod error;
 pub mod expcfg;
+pub mod fault;
 pub mod matching;
 pub mod ml;
 pub mod obs;

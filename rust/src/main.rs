@@ -17,8 +17,8 @@ use repro::matching::{DistanceKind, Matcher};
 use repro::operator::{AxoConfig, Operator};
 use repro::report::Harness;
 use repro::serve::{
-    HttpOptions, HttpServer, JobQueue, JobRunner, JobSpec, RequeueReport, ServeOptions,
-    LOG_FILE, MAX_REVIVALS,
+    http_call_retry, HttpOptions, HttpServer, JobQueue, JobRunner, JobSpec,
+    RequeueReport, RetryPolicy, ServeOptions, LOG_FILE, MAX_REVIVALS,
 };
 use repro::surrogate::{EstimatorBackend, Surrogate, TableSurrogate};
 use repro::util::rng::Rng;
@@ -46,16 +46,23 @@ COMMANDS:
                          spec from flags: --id NAME --factors F1,F2,...
                          [--operator OP] [--seed-selection all|pareto-only|
                          constraint-filtered] [--ga-seed N]
+                         With --addr HOST:PORT, POSTs the specs to a running
+                         serve-http instead (capped-backoff retries on 429/
+                         503 and transport errors; --retries N, default 5).
   serve-dse            Job server: run queued DSE jobs against one resident
                          engine. --drain runs the queue to empty and exits;
-                         default watches pending/ forever.
+                         default watches pending/ forever. SIGTERM/SIGINT
+                         drain gracefully: workers stop claiming, finish
+                         their in-flight job, and exit 0.
                          [--workers N] [--max-jobs N]
   serve-http           HTTP front-end over the job spool: POST /jobs,
                          GET /jobs/<id>[/result|/timeline], /healthz,
                          /metrics (JSON, or Prometheus text via
                          ?format=prometheus), /trace (Chrome trace JSON).
                          Identical specs dedupe onto one content-addressed
-                         job; a full queue answers 429 + Retry-After.
+                         job; a full queue answers 429 + Retry-After; a full
+                         disk sheds with 503 instead of crashing. SIGTERM/
+                         SIGINT drain gracefully (/healthz -> \"draining\").
                          [--addr HOST:PORT] [--http-threads N]
                          [--workers N (0 = front-end only)] [--high-water N]
   trace export         Export the span ring of a running serve-http as
@@ -110,6 +117,7 @@ const GLOBAL_OPTS: &[&str] = &[
     "addr",
     "http-threads",
     "high-water",
+    "retries",
 ];
 
 fn main() {
@@ -184,6 +192,9 @@ fn load_config(parsed: &ParsedArgs) -> Result<ExperimentConfig> {
     // Arm (or size) the tracing layer before any engine work runs:
     // REPRO_TRACE in the environment overrides `[obs] trace`.
     repro::obs::apply(&cfg.obs);
+    // Same precedence for failpoints: REPRO_FAULTS overrides `[fault]
+    // spec` (set-but-empty disarms). Disarmed is a single relaxed load.
+    repro::fault::apply(&cfg.fault)?;
     Ok(cfg)
 }
 
@@ -275,6 +286,8 @@ fn cmd_store(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
 
 /// Enqueue job specs for `serve-dse`: positional `spec.json` files, or an
 /// inline spec built from `--id`/`--factors`/... flags when none given.
+/// With `--addr`, the specs are POSTed to a running `serve-http` (with
+/// retries) instead of spooled locally.
 fn cmd_submit(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     let queue = JobQueue::open(cfg.serve.dir_under(&cfg.artifacts_dir))?;
     let mut specs: Vec<JobSpec> = Vec::new();
@@ -315,6 +328,9 @@ fn cmd_submit(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
             specs.push(spec);
         }
     }
+    if let Some(addr) = parsed.opt("addr") {
+        return submit_over_http(addr, &specs, parsed);
+    }
     for spec in &specs {
         let dest = queue.submit(spec)?;
         println!(
@@ -336,6 +352,56 @@ fn cmd_submit(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     Ok(())
 }
 
+/// `submit --addr`: POST each spec to a running `serve-http`, retrying
+/// `429`/`503` (honoring `Retry-After`) and transport failures under a
+/// capped-backoff [`RetryPolicy`]. Ids are server-assigned
+/// (content-addressed), so any local `--id` is display-only.
+fn submit_over_http(addr: &str, specs: &[JobSpec], parsed: &ParsedArgs) -> Result<()> {
+    use repro::util::json::Json;
+    let mut policy = RetryPolicy::default();
+    if let Some(n) = parsed.opt_parse::<u32>("retries")? {
+        policy.max_retries = n;
+    }
+    let mut total_retries: u32 = 0;
+    for spec in specs {
+        let mut wire = spec.clone();
+        wire.id = String::new(); // the server content-addresses identity
+        let body = wire.to_json().to_string();
+        let (response, retries) =
+            http_call_retry(addr, "POST", "/jobs", Some(&body), &policy)?;
+        total_retries += retries;
+        match response.status {
+            201 | 200 => {
+                let id = response
+                    .json()
+                    .ok()
+                    .and_then(|j| j.get("id").and_then(Json::as_str).map(String::from))
+                    .unwrap_or_else(|| "?".into());
+                println!(
+                    "submitted job `{}` -> {id} on {addr} ({}{})",
+                    spec.id,
+                    if response.status == 201 { "created" } else { "deduped" },
+                    if retries > 0 {
+                        format!(", {retries} retry(ies)")
+                    } else {
+                        String::new()
+                    }
+                );
+            }
+            status => {
+                return Err(Error::Config(format!(
+                    "submit to {addr} answered {status} after {retries} retry(ies): {}",
+                    response.body
+                )));
+            }
+        }
+    }
+    if total_retries > 0 {
+        println!("{total_retries} retry(ies) across {} spec(s)", specs.len());
+    }
+    Ok(())
+}
+
 /// The job server: drain (or watch) the spool against one resident engine.
 fn cmd_serve_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     if parsed.flag("drain") && parsed.flag("watch") {
@@ -353,6 +419,8 @@ fn cmd_serve_dse(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
     if opts.workers == 0 {
         return Err(Error::Config("--workers must be > 0".into()));
     }
+    // SIGTERM/SIGINT drain: stop claiming, finish in-flight, exit 0.
+    repro::serve::signal::install();
     let engine = EngineContext::new(cfg.clone());
     let runner = JobRunner::new(&engine, &queue, opts.clone())?;
     println!(
@@ -417,6 +485,12 @@ fn print_requeue_report(report: &RequeueReport) {
              — see failed/"
         );
     }
+    for id in &report.cleaned {
+        println!("cleaned finished job `{id}` stranded in running/ by a crash");
+    }
+    for name in &report.swept_temps {
+        println!("swept orphaned submit temp `{name}` (submitter is gone)");
+    }
 }
 
 /// The HTTP front-end: bind, sweep orphaned claims, serve until killed.
@@ -437,6 +511,9 @@ fn cmd_serve_http(cfg: &ExperimentConfig, parsed: &ParsedArgs) -> Result<()> {
         return Err(Error::Config("--http-threads must be > 0".into()));
     }
     let addr = parsed.opt("addr").unwrap_or(&cfg.http.addr);
+    // SIGTERM/SIGINT drain: the server's watcher thread turns the flag
+    // into an orderly shutdown (exec loop drains, acceptors retire).
+    repro::serve::signal::install();
     let engine = std::sync::Arc::new(EngineContext::new(cfg.clone()));
     let server = HttpServer::bind(engine, queue.clone(), addr, opts.clone())?;
     println!(

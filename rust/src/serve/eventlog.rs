@@ -64,7 +64,14 @@ impl EventLog {
                 self.rotations.fetch_add(1, Ordering::Relaxed);
             }
         }
-        match writeln!(inner.file, "{line}") {
+        // `log.append` failpoint: `err` exercises the drop counter,
+        // `partial` leaves a torn final line for the tolerant readers.
+        let full = format!("{line}\n");
+        let wrote = match crate::fault::write_quota("log.append", full.len()) {
+            Ok(quota) => inner.file.write_all(&full.as_bytes()[..quota]),
+            Err(e) => Err(e),
+        };
+        match wrote {
             Ok(()) => inner.bytes += len,
             Err(_) => {
                 self.dropped.fetch_add(1, Ordering::Relaxed);

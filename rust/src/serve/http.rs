@@ -35,6 +35,16 @@
 //!   checked first, so duplicates of in-flight jobs still answer `200`
 //!   under full load — a hit costs no queue space.
 //!
+//! And two that make it safe under failure:
+//!
+//! * **Graceful drain**: SIGTERM/SIGINT (see [`signal`](super::signal))
+//!   stops the exec loop claiming new jobs, finishes in-flight work,
+//!   retires the acceptors, and exits 0 — `/healthz` answers
+//!   `"draining"` so load balancers route elsewhere first.
+//! * **ENOSPC load-shedding**: a full spool disk answers `POST /jobs`
+//!   with `503` + `Retry-After` and pauses the exec loop instead of
+//!   crashing it; the flag clears on the first write that succeeds.
+//!
 //! With `workers > 0` the server also embeds an exec loop: a resident
 //! [`JobRunner`] drains the spool in bounded bursts between shutdown
 //! checks, sharing the engine's caches with every burst. `workers = 0`
@@ -113,6 +123,8 @@ struct HttpStats {
     shared: AtomicU64,
     rejected: AtomicU64,
     bad_requests: AtomicU64,
+    /// Submissions refused with `503` because the spool disk was full.
+    shed: AtomicU64,
 }
 
 impl HttpStats {
@@ -132,6 +144,7 @@ impl HttpStats {
                 "bad_requests",
                 Json::Num(self.bad_requests.load(Ordering::Relaxed) as f64),
             ),
+            ("shed", Json::Num(self.shed.load(Ordering::Relaxed) as f64)),
         ])
     }
 }
@@ -147,6 +160,9 @@ pub struct HttpServer {
     local_addr: SocketAddr,
     started: Instant,
     stop: AtomicBool,
+    /// The spool disk hit `ENOSPC`: shed new submissions with `503` and
+    /// pause the exec loop; cleared by the next successful spool write.
+    storage_full: AtomicBool,
     active_acceptors: AtomicUsize,
     stats: HttpStats,
     log: Arc<EventLog>,
@@ -178,6 +194,7 @@ impl HttpServer {
             local_addr,
             started: Instant::now(),
             stop: AtomicBool::new(false),
+            storage_full: AtomicBool::new(false),
             active_acceptors: AtomicUsize::new(0),
             stats: HttpStats::default(),
             log,
@@ -213,6 +230,21 @@ impl HttpServer {
             if self.opts.workers > 0 {
                 s.spawn(|| self.exec_loop());
             }
+            // Drain watcher: turns SIGTERM/SIGINT into an orderly
+            // shutdown — the exec loop stops claiming (its workers check
+            // the drain flag before every claim), in-flight jobs finish,
+            // and the acceptors are woken to retire. Exits on its own
+            // when `shutdown` is called directly.
+            s.spawn(|| {
+                while !self.stopping() {
+                    if super::signal::draining() {
+                        self.log_event("http-drain", &[]);
+                        self.shutdown();
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            });
         });
         self.log_event("http-stop", &[]);
         Ok(())
@@ -337,10 +369,24 @@ impl HttpServer {
             Arc::clone(&self.log),
             Arc::clone(&self.obs),
         );
-        while !self.stopping() {
+        while !self.stopping() && !super::signal::draining() {
             let busy = match self.queue.counts() {
                 Ok(c) if c.pending > 0 => match runner.run() {
-                    Ok(summary) => summary.done + summary.failed > 0,
+                    Ok(summary) => {
+                        self.storage_full.store(false, Ordering::Relaxed);
+                        summary.done + summary.failed > 0
+                    }
+                    // A full disk is a load condition, not a crash: flag
+                    // it (submissions answer 503) and pause until the
+                    // next burst finds space again.
+                    Err(e) if e.is_disk_full() => {
+                        self.storage_full.store(true, Ordering::Relaxed);
+                        self.log_event(
+                            "exec-pause",
+                            &[("reason", Json::Str("disk-full".into()))],
+                        );
+                        false
+                    }
                     Err(e) => {
                         eprintln!("warning: exec burst failed: {e}");
                         false
@@ -372,7 +418,12 @@ impl HttpServer {
             ("GET", ["jobs", id, "result"]) => self.handle_result(id),
             ("GET", ["jobs", id, "timeline"]) => self.handle_timeline(id),
             ("GET", ["healthz"]) => {
-                Response::json(200, Json::obj(vec![("status", Json::Str("ok".into()))]))
+                let status =
+                    if super::signal::draining() { "draining" } else { "ok" };
+                Response::json(
+                    200,
+                    Json::obj(vec![("status", Json::Str(status.into()))]),
+                )
             }
             ("GET", ["metrics"]) => self.handle_metrics(query, &request.accept),
             ("GET", ["trace"]) => Response::json(200, obs::export_chrome()),
@@ -425,6 +476,7 @@ impl HttpServer {
         }
         match admit(&self.queue, &spec) {
             Ok(Admission::Created { id }) => {
+                self.storage_full.store(false, Ordering::Relaxed);
                 self.stats.created.fetch_add(1, Ordering::Relaxed);
                 self.log_event("http-created", &[("id", Json::Str(id.clone()))]);
                 Response::json(
@@ -438,8 +490,36 @@ impl HttpServer {
             }
             // Lost the spool race to an identical concurrent request.
             Ok(Admission::Shared { id, state }) => self.respond_shared(&id, state),
+            // A full disk while spooling is load, not client error.
+            Err(e) if e.is_disk_full() => self.shed_storage_full(),
             Err(e) => Response::error(400, &e.to_string()),
         }
+    }
+
+    /// The `ENOSPC` answer: `503` + `Retry-After`, the flag raised so the
+    /// exec loop pauses too. The next submission that spools successfully
+    /// clears it.
+    fn shed_storage_full(&self) -> Response {
+        self.storage_full.store(true, Ordering::Relaxed);
+        self.stats.shed.fetch_add(1, Ordering::Relaxed);
+        self.log_event("http-shed", &[("reason", Json::Str("disk-full".into()))]);
+        let mut response = Response::json(
+            503,
+            Json::obj(vec![
+                (
+                    "error",
+                    Json::Str("spool disk full; shedding new work".into()),
+                ),
+                (
+                    "retry_after_secs",
+                    Json::Num(self.opts.retry_after_secs as f64),
+                ),
+            ]),
+        );
+        response
+            .headers
+            .push(("Retry-After".into(), self.opts.retry_after_secs.to_string()));
+        response
     }
 
     /// The dedup-hit response: `200 OK`, the shared content-addressed id,
@@ -584,6 +664,13 @@ impl HttpServer {
             ("estimator_batch", g.batch_ns.snapshot().to_json_ms()),
             ("estimator_batch_fill", g.batch_fill.snapshot().to_json_raw()),
         ]);
+        let fault_hits = crate::fault::hits();
+        let fault = Json::obj(
+            fault_hits
+                .iter()
+                .map(|(site, n)| (site.as_str(), Json::Num(*n as f64)))
+                .collect(),
+        );
         let ring = obs::tracer().ring();
         let observability = Json::obj(vec![
             ("log_dropped", Json::Num(self.log.dropped() as f64)),
@@ -639,6 +726,9 @@ impl HttpServer {
                 ),
                 ("latency", latency),
                 ("obs", observability),
+                // Armed failpoint hit counters — empty when faults are
+                // disarmed (the production state).
+                ("fault", fault),
             ]),
         )
     }
@@ -663,6 +753,7 @@ impl HttpServer {
         p.counter("http_jobs_shared_total", &[], load(&self.stats.shared));
         p.counter("http_rejected_total", &[], load(&self.stats.rejected));
         p.counter("http_bad_requests_total", &[], load(&self.stats.bad_requests));
+        p.counter("http_shed_total", &[], load(&self.stats.shed));
         p.gauge("queue_jobs", &[("state", "pending")], counts.pending as f64);
         p.gauge("queue_jobs", &[("state", "running")], counts.running as f64);
         p.gauge("queue_jobs", &[("state", "done")], counts.done as f64);
@@ -680,6 +771,9 @@ impl HttpServer {
         p.histogram("estimator_batch_seconds", &[], &g.batch_ns.snapshot(), 1e-9);
         p.counter("log_dropped_total", &[], self.log.dropped());
         p.counter("log_rotations_total", &[], self.log.rotations());
+        for (site, n) in crate::fault::hits() {
+            p.counter("fault_hits_total", &[("site", &site)], n);
+        }
         let ring = obs::tracer().ring();
         p.gauge("trace_spans_recorded", &[], ring.recorded() as f64);
         p.gauge("trace_spans_dropped", &[], ring.dropped() as f64);
@@ -914,6 +1008,7 @@ impl Response {
             404 => "Not Found",
             405 => "Method Not Allowed",
             429 => "Too Many Requests",
+            503 => "Service Unavailable",
             _ => "Internal Server Error",
         }
     }
@@ -932,8 +1027,12 @@ impl Response {
             head.push_str(&format!("{name}: {value}\r\n"));
         }
         head.push_str("\r\n");
+        // `http.response.write` failpoint: `err` drops the response on
+        // the floor, `partial` tears it mid-body — either way the client
+        // sees a broken exchange it must treat as retryable.
+        let quota = crate::fault::write_quota("http.response.write", self.body.len())?;
         stream.write_all(head.as_bytes())?;
-        stream.write_all(&self.body)?;
+        stream.write_all(&self.body[..quota])?;
         stream.flush()
     }
 }
@@ -1091,6 +1190,186 @@ impl HttpClient {
             .map_err(|e| fail("decode", &e))?;
         self.buf.drain(..body_start + length);
         Ok(HttpResponse { status, headers, body })
+    }
+}
+
+/// Client retry policy: capped exponential backoff with *deterministic*
+/// jitter (no RNG — the spread is keyed by `seed` and the attempt
+/// number, so a run is reproducible and a fleet of seeded clients still
+/// fans out). `429`/`503` responses are retried honoring `Retry-After`
+/// when the server sends one; transport failures (connect, read, torn
+/// response) are retried after our own backoff. Every request gets a
+/// hard `deadline` across all of its attempts.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Retries per request beyond the first attempt.
+    pub max_retries: u32,
+    /// First backoff step; doubles per attempt.
+    pub base: Duration,
+    /// Backoff ceiling.
+    pub cap: Duration,
+    /// Per-request wall-clock budget across all attempts.
+    pub deadline: Duration,
+    /// Jitter key — give each client its own.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 5,
+            base: Duration::from_millis(50),
+            cap: Duration::from_secs(2),
+            deadline: Duration::from_secs(30),
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The wait before retry `attempt` (1-based): `base * 2^(attempt-1)`
+    /// capped at `cap`, then full-jittered into `[capped/2, capped]` by
+    /// an FNV hash of `(seed, attempt)`.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(20);
+        let capped = self
+            .base
+            .saturating_mul(1u32 << shift)
+            .min(self.cap)
+            .max(Duration::from_millis(1));
+        let mut key = [0u8; 12];
+        key[..8].copy_from_slice(&self.seed.to_le_bytes());
+        key[8..].copy_from_slice(&attempt.to_le_bytes());
+        let half = capped.as_millis() as u64 / 2;
+        let jitter = if half == 0 {
+            0
+        } else {
+            crate::engine::store::fnv1a64(&key) % (half + 1)
+        };
+        capped / 2 + Duration::from_millis(jitter)
+    }
+}
+
+/// A server-directed pacing hint, when the response carries one.
+fn retry_after(response: &HttpResponse) -> Option<Duration> {
+    response
+        .header("retry-after")
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_secs)
+}
+
+/// [`http_call`] with retries under `policy`. Returns the final response
+/// and how many retries it took; gives up with the last outcome once
+/// retries or the deadline run out.
+pub fn http_call_retry(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    policy: &RetryPolicy,
+) -> Result<(HttpResponse, u32)> {
+    let started = Instant::now();
+    let mut retries: u32 = 0;
+    loop {
+        let outcome = http_call(addr, method, path, body);
+        let wait = match &outcome {
+            Ok(r) if r.status == 429 || r.status == 503 => {
+                retry_after(r).unwrap_or_else(|| policy.backoff(retries + 1))
+            }
+            Ok(_) => return outcome.map(|r| (r, retries)),
+            Err(_) => policy.backoff(retries + 1),
+        };
+        if retries >= policy.max_retries
+            || started.elapsed() + wait > policy.deadline
+        {
+            return outcome.map(|r| (r, retries));
+        }
+        std::thread::sleep(wait);
+        retries += 1;
+    }
+}
+
+/// [`HttpClient`] with a [`RetryPolicy`]: reconnects lazily, rebuilds the
+/// connection after transport errors (and after responses the server
+/// closed behind), and retries `429`/`503` honoring `Retry-After`. The
+/// cumulative retry count is surfaced for benchmark reports
+/// (`loadgen --retries` → `BENCH_http.json`).
+pub struct RetryingClient {
+    addr: String,
+    policy: RetryPolicy,
+    client: Option<HttpClient>,
+    retries: u64,
+}
+
+impl RetryingClient {
+    pub fn new(addr: &str, policy: RetryPolicy) -> RetryingClient {
+        RetryingClient {
+            addr: addr.to_string(),
+            policy,
+            client: None,
+            retries: 0,
+        }
+    }
+
+    /// Total retries performed across every call so far.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// One request with retries; the final outcome after the policy is
+    /// exhausted is returned as-is (a `429` after max retries is an
+    /// `Ok(429)`, not an error — the caller sees what the server said).
+    pub fn call(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<HttpResponse> {
+        let started = Instant::now();
+        let mut attempt: u32 = 0;
+        loop {
+            let outcome = self.try_call(method, path, body);
+            let wait = match &outcome {
+                Ok(r) if r.status == 429 || r.status == 503 => {
+                    retry_after(r)
+                        .unwrap_or_else(|| self.policy.backoff(attempt + 1))
+                }
+                Ok(_) => return outcome,
+                Err(_) => self.policy.backoff(attempt + 1),
+            };
+            if attempt >= self.policy.max_retries
+                || started.elapsed() + wait > self.policy.deadline
+            {
+                return outcome;
+            }
+            std::thread::sleep(wait);
+            attempt += 1;
+            self.retries += 1;
+        }
+    }
+
+    /// One attempt on the persistent connection, reconnecting first if
+    /// needed and dropping the connection when it can no longer be
+    /// trusted (transport error, or the server said `Connection: close`).
+    fn try_call(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<HttpResponse> {
+        if self.client.is_none() {
+            self.client = Some(HttpClient::connect(&self.addr)?);
+        }
+        let client = self.client.as_mut().expect("just connected");
+        let result = client.call(method, path, body);
+        match &result {
+            Err(_) => self.client = None,
+            Ok(r) if r.header("connection") == Some("close") => {
+                self.client = None;
+            }
+            Ok(_) => {}
+        }
+        result
     }
 }
 
@@ -1367,6 +1646,66 @@ mod tests {
 
         server.shutdown();
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn retry_backoff_is_deterministic_capped_and_growing() {
+        let policy = RetryPolicy {
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(80),
+            ..Default::default()
+        };
+        for attempt in 1..10 {
+            let wait = policy.backoff(attempt);
+            assert_eq!(wait, policy.backoff(attempt), "deterministic");
+            assert!(wait <= policy.cap, "attempt {attempt}: {wait:?} over cap");
+            assert!(wait >= Duration::from_millis(5), "attempt {attempt}");
+        }
+        // Exponential growth until the cap dominates.
+        assert!(policy.backoff(1) < policy.backoff(4));
+        // Different seeds fan out to different schedules.
+        let other = RetryPolicy { seed: 99, ..policy.clone() };
+        assert!((1..10).any(|n| other.backoff(n) != policy.backoff(n)));
+    }
+
+    #[test]
+    fn retrying_client_honors_retry_after_and_counts_retries() {
+        // high_water 0: every fresh submission answers 429 + Retry-After.
+        let (_dir, server, handle) = frontend(HttpOptions {
+            high_water: 0,
+            retry_after_secs: 0,
+            ..Default::default()
+        });
+        let addr = server.local_addr().to_string();
+        let policy = RetryPolicy {
+            max_retries: 3,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(2),
+            deadline: Duration::from_secs(5),
+            seed: 7,
+        };
+        let mut client = RetryingClient::new(&addr, policy);
+        let r = client
+            .call("POST", "/jobs", Some(r#"{"factors":[0.5]}"#))
+            .unwrap();
+        assert_eq!(r.status, 429, "{}", r.body);
+        assert_eq!(client.retries(), 3, "policy exhausted, last answer kept");
+        server.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn one_shot_retry_surfaces_the_final_transport_error() {
+        // Port 1 is never listening here: every attempt fails to connect.
+        let policy = RetryPolicy {
+            max_retries: 2,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(2),
+            deadline: Duration::from_millis(500),
+            seed: 1,
+        };
+        let err = http_call_retry("127.0.0.1:1", "GET", "/healthz", None, &policy);
+        assert!(err.is_err());
     }
 
     #[test]

@@ -39,6 +39,9 @@
 //!   are counted (surfaced as `log_dropped` in `/metrics`) instead of
 //!   silently discarded, and the file rotates to `.1` past
 //!   `[serve] log_max_bytes`.
+//! * [`signal`] — graceful drain on SIGTERM/SIGINT: one flag the worker
+//!   and exec loops poll so a kill stops *claiming* but finishes in-flight
+//!   jobs and exits 0 with the spool consistent.
 //! * [`dedup`] — content-addressed job identity: specs hash to
 //!   `h<fnv1a64>` ids (client ids stripped), so identical concurrent
 //!   requests collapse into one spooled job with many waiters and the
@@ -55,11 +58,15 @@ pub mod eventlog;
 pub mod http;
 pub mod queue;
 pub mod runner;
+pub mod signal;
 pub mod spec;
 
 pub use dedup::{canonical_hash, hash_id, Admission};
 pub use eventlog::{EventLog, DEFAULT_LOG_MAX_BYTES};
-pub use http::{http_call, HttpClient, HttpOptions, HttpResponse, HttpServer};
+pub use http::{
+    http_call, http_call_retry, HttpClient, HttpOptions, HttpResponse,
+    HttpServer, RetryPolicy, RetryingClient,
+};
 pub use queue::{
     stamp_gap_ns, ClaimedJob, JobQueue, JobState, QueueCounts, RequeueReport,
     Submission, TimelineStamp, MAX_REVIVALS,

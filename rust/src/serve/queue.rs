@@ -49,19 +49,58 @@ pub const QUEUE_SUBDIRS: [&str; 4] = ["pending", "running", "done", "failed"];
 /// quarantines it to `failed/` with a recorded error.
 pub const MAX_REVIVALS: u32 = 3;
 
+/// How long a sidecar-less `running/` entry must sit untouched before
+/// [`JobQueue::requeue_stale`] treats it as abandoned. A claimer killed
+/// between the claim rename and the PID-sidecar write leaves no liveness
+/// evidence at all; age is the only signal left, and anything younger
+/// than this may simply be a claim in progress.
+pub const ORPHAN_GRACE: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// The resolved orphan grace: `REPRO_ORPHAN_GRACE_MS` (torture tests
+/// shrink the window to milliseconds) over [`ORPHAN_GRACE`].
+fn orphan_grace() -> std::time::Duration {
+    std::env::var("REPRO_ORPHAN_GRACE_MS")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .map(std::time::Duration::from_millis)
+        .unwrap_or(ORPHAN_GRACE)
+}
+
 /// What one [`JobQueue::requeue_stale`] sweep did: ids revived into
-/// `pending/`, and ids that burned their [`MAX_REVIVALS`] budget and were
-/// quarantined to `failed/` instead.
+/// `pending/`, ids that burned their [`MAX_REVIVALS`] budget and were
+/// quarantined to `failed/` instead, finished ids whose `running/`
+/// leftovers were cleaned up, and orphaned submit temp files removed.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct RequeueReport {
     pub requeued: Vec<String>,
     pub quarantined: Vec<String>,
+    /// Ids found in both `done/` and `running/` — a crash hit between
+    /// `complete`'s publish rename and its cleanup. The result already
+    /// exists, so the sweep finishes the cleanup instead of reviving
+    /// (which would execute the job twice).
+    pub cleaned: Vec<String>,
+    /// `pending/` submit temps whose writing process is provably dead
+    /// (file names; the PID embedded in the name no longer runs).
+    pub swept_temps: Vec<String>,
 }
 
 impl RequeueReport {
     pub fn is_empty(&self) -> bool {
-        self.requeued.is_empty() && self.quarantined.is_empty()
+        self.requeued.is_empty()
+            && self.quarantined.is_empty()
+            && self.cleaned.is_empty()
+            && self.swept_temps.is_empty()
     }
+}
+
+/// Parse the submitter PID out of a `.{id}.{pid}-{seq}.tmp` submit-temp
+/// file name; `None` for anything that is not a submit temp.
+fn submit_temp_pid(name: &str) -> Option<u32> {
+    let rest = name.strip_prefix('.')?.strip_suffix(".tmp")?;
+    let (_, tail) = rest.rsplit_once('.')?;
+    let (pid, seq) = tail.split_once('-')?;
+    seq.parse::<u64>().ok()?;
+    pid.parse::<u32>().ok()
 }
 
 /// A claimed job: its queue id and the spec's `running/` path.
@@ -230,7 +269,18 @@ impl JobQueue {
         let tmp = self
             .sub("pending")
             .join(format!(".{}.{}-{seq}.tmp", spec.id, std::process::id()));
-        std::fs::write(&tmp, spec.to_json().to_string())?;
+        // Durable write (fsync) before the link publishes the spec: the
+        // rename/link is atomic against concurrent readers, but only the
+        // fsync makes it atomic against power loss.
+        crate::fault::write_file_durable(
+            "queue.submit.write",
+            &tmp,
+            spec.to_json().to_string().as_bytes(),
+        )?;
+        if let Err(e) = crate::fault::point("queue.submit.link") {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.into());
+        }
         let linked = std::fs::hard_link(&tmp, &dest);
         let _ = std::fs::remove_file(&tmp);
         match linked {
@@ -296,18 +346,24 @@ impl JobQueue {
     /// concurrently-claimed file is skipped, not an error. The winner
     /// records its PID in a sidecar so [`JobQueue::requeue_stale`] can
     /// prove a claim orphaned after a crash. The sidecar is written
-    /// *after* the rename — a crash in between leaks a sidecar-less claim,
-    /// which the sweep conservatively leaves alone.
+    /// *after* the rename — a crash in between leaks a sidecar-less
+    /// claim, which the sweep ages out after [`ORPHAN_GRACE`].
     pub fn claim(&self) -> Result<Option<ClaimedJob>> {
         for id in self.ids_in("pending")? {
             let from = self.spec_path("pending", &id);
             let to = self.spec_path("running", &id);
+            crate::fault::point("queue.claim.rename")?;
             match std::fs::rename(&from, &to) {
                 Ok(()) => {
-                    let _ = std::fs::write(
-                        self.pid_path(&id),
-                        std::process::id().to_string(),
-                    );
+                    // A death between the rename and the sidecar write
+                    // leaves a sidecar-less claim; requeue_stale ages it
+                    // out after the orphan grace.
+                    if crate::fault::point("queue.claim.pid").is_ok() {
+                        let _ = std::fs::write(
+                            self.pid_path(&id),
+                            std::process::id().to_string(),
+                        );
+                    }
                     self.stamp_timeline(&id, "claim");
                     return Ok(Some(ClaimedJob { id, path: to }));
                 }
@@ -321,8 +377,12 @@ impl JobQueue {
     /// Sweep `running/` for claims whose recorded holder PID provably no
     /// longer runs (the dataset store's stale-lock probe applied to job
     /// claims) and move those specs back into `pending/` for re-execution.
-    /// Missing or garbled sidecars are *not* provably stale and are left
-    /// alone. Each revival is tallied in a per-id ledger; once an id has
+    /// Garbled sidecars are *not* provably stale and are left alone;
+    /// *missing* sidecars (claimer died mid-claim) are reaped once the
+    /// entry has aged past [`ORPHAN_GRACE`]. The sweep also finishes the
+    /// cleanup of jobs stranded in both `done/` and `running/` and
+    /// removes provably-orphaned submit temps from `pending/`.
+    /// Each revival is tallied in a per-id ledger; once an id has
     /// burned [`MAX_REVIVALS`] revivals, the sweep quarantines it to
     /// `failed/` with a recorded crash-loop error instead of cycling it
     /// forever. Meant for server start, before any worker claims — jobs
@@ -330,12 +390,32 @@ impl JobQueue {
     /// result the dead claimer would have recorded.
     pub fn requeue_stale(&self) -> Result<RequeueReport> {
         let mut report = RequeueReport::default();
+        self.sweep_orphan_temps(&mut report)?;
         for id in self.ids_in("running")? {
+            // A crash between complete()'s publish rename and its cleanup
+            // leaves the id in done/ AND running/. The result already
+            // exists — reviving would execute the job twice — so finish
+            // the interrupted cleanup instead.
+            if self.spec_path("done", &id).exists() {
+                let _ = std::fs::remove_file(self.spec_path("running", &id));
+                let _ = std::fs::remove_file(self.pid_path(&id));
+                let _ = std::fs::remove_file(self.revivals_path(&id));
+                report.cleaned.push(id);
+                continue;
+            }
             let pid_path = self.pid_path(&id);
-            let dead = std::fs::read_to_string(&pid_path)
-                .ok()
-                .and_then(|text| text.trim().parse::<u32>().ok())
-                .is_some_and(crate::engine::store::pid_is_dead);
+            let dead = match std::fs::read_to_string(&pid_path) {
+                Ok(text) => text
+                    .trim()
+                    .parse::<u32>()
+                    .ok()
+                    .is_some_and(crate::engine::store::pid_is_dead),
+                // No sidecar at all: a claimer died between the claim
+                // rename and the sidecar write. Nothing proves the holder
+                // is dead, so fall back to age — only entries untouched
+                // for the whole orphan grace are treated as abandoned.
+                Err(_) => self.older_than_orphan_grace(&self.spec_path("running", &id)),
+            };
             if !dead {
                 continue;
             }
@@ -355,6 +435,9 @@ impl JobQueue {
             let to = self.spec_path("pending", &id);
             match std::fs::rename(&from, &to) {
                 Ok(()) => {
+                    // A death here revives the job without tallying it —
+                    // the window the torture suite pins with this site.
+                    let _ = crate::fault::point("queue.revive.ledger");
                     let ledger = self.revivals_path(&id);
                     let _ = std::fs::write(ledger, (revivals + 1).to_string());
                     let _ = std::fs::remove_file(&pid_path);
@@ -368,13 +451,52 @@ impl JobQueue {
         Ok(report)
     }
 
+    /// Whether `path` has sat untouched for longer than the orphan grace
+    /// (unreadable metadata = no: never reap without evidence).
+    fn older_than_orphan_grace(&self, path: &Path) -> bool {
+        std::fs::metadata(path)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.elapsed().ok())
+            .is_some_and(|age| age >= orphan_grace())
+    }
+
+    /// Remove `pending/` submit temps whose writing process is provably
+    /// dead. Temp names embed the submitter PID (`.{id}.{pid}-{seq}.tmp`),
+    /// so once that PID no longer runs the temp can never be linked into
+    /// place — it is debris from a submitter killed between its durable
+    /// write and the publishing hard link, and would otherwise live
+    /// forever.
+    fn sweep_orphan_temps(&self, report: &mut RequeueReport) -> Result<()> {
+        for entry in std::fs::read_dir(self.sub("pending"))? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let Some(pid) = submit_temp_pid(&name) else { continue };
+            if crate::engine::store::pid_is_dead(pid)
+                && std::fs::remove_file(entry.path()).is_ok()
+            {
+                report.swept_temps.push(name);
+            }
+        }
+        report.swept_temps.sort();
+        Ok(())
+    }
+
     /// Record a completed job: result written to `done/<id>.json` (temp +
     /// rename), the consumed spec removed from `running/`.
     pub fn complete(&self, id: &str, result: &JobResult) -> Result<PathBuf> {
         let dest = self.spec_path("done", id);
         let tmp = self.sub("done").join(format!(".{id}.tmp"));
-        std::fs::write(&tmp, result.to_json().to_string())?;
+        crate::fault::write_file_durable(
+            "queue.complete.write",
+            &tmp,
+            result.to_json().to_string().as_bytes(),
+        )?;
+        crate::fault::point("queue.complete.rename")?;
         std::fs::rename(&tmp, &dest)?;
+        // A death here strands the id in done/ AND running/;
+        // requeue_stale finishes this cleanup instead of reviving.
+        let _ = crate::fault::point("queue.complete.cleanup");
         // The consumed spec; a missing file (crash replay) is fine.
         let _ = std::fs::remove_file(self.spec_path("running", id));
         let _ = std::fs::remove_file(self.pid_path(id));
@@ -398,7 +520,7 @@ impl JobQueue {
         ]);
         let dest = self.sub("failed").join(format!("{id}.error.json"));
         let tmp = self.sub("failed").join(format!(".{id}.error.tmp"));
-        std::fs::write(&tmp, record.to_string())?;
+        crate::fault::write_file_durable("queue.fail.write", &tmp, record.to_string().as_bytes())?;
         std::fs::rename(&tmp, &dest)?;
         self.stamp_timeline(id, "fail");
         Ok(dest)
@@ -469,19 +591,34 @@ impl JobQueue {
             .append(true)
             .open(self.timeline_path(id))
         {
-            let _ = writeln!(f, "{}", stamp.to_json());
+            let line = format!("{}\n", stamp.to_json());
+            if let Ok(quota) = crate::fault::write_quota("queue.timeline.append", line.len())
+            {
+                let _ = f.write_all(&line.as_bytes()[..quota]);
+            }
         }
     }
 
     /// The recorded lifecycle stamps of `id`, in file (= stamp) order.
-    /// Garbled lines are skipped, a missing sidecar is an error.
+    /// Torn or garbled lines (a stamper killed mid-append) are skipped
+    /// with a warning, a missing sidecar is an error.
     pub fn timeline(&self, id: &str) -> Result<Vec<TimelineStamp>> {
         let text = std::fs::read_to_string(self.timeline_path(id))?;
-        Ok(text
-            .lines()
-            .filter_map(|l| Json::parse(l).ok())
-            .filter_map(|v| TimelineStamp::parse(&v))
-            .collect())
+        let mut out = Vec::new();
+        let mut skipped = 0usize;
+        for line in text.lines() {
+            match Json::parse(line).ok().as_ref().and_then(TimelineStamp::parse) {
+                Some(stamp) => out.push(stamp),
+                None => skipped += 1,
+            }
+        }
+        if skipped > 0 {
+            eprintln!(
+                "warning: timeline {}: skipped {skipped} torn/garbled line(s)",
+                self.timeline_path(id).display()
+            );
+        }
+        Ok(out)
     }
 }
 
@@ -766,6 +903,74 @@ mod tests {
         let events: Vec<String> =
             q.timeline("sad").unwrap().into_iter().map(|s| s.event).collect();
         assert_eq!(events, vec!["submit", "claim", "fail"]);
+    }
+
+    #[test]
+    fn submit_temp_pid_parses_only_submit_temps() {
+        assert_eq!(submit_temp_pid(".job1.4321-7.tmp"), Some(4321));
+        assert_eq!(submit_temp_pid(".dotted.id.99-0.tmp"), Some(99));
+        assert_eq!(submit_temp_pid(".job1.tmp"), None, "complete()-style temp");
+        assert_eq!(submit_temp_pid(".job1.error.tmp"), None, "fail()-style temp");
+        assert_eq!(submit_temp_pid("job1.json"), None);
+        assert_eq!(submit_temp_pid(".job1.x-1.tmp"), None, "non-numeric pid");
+        assert_eq!(submit_temp_pid(".job1.1-x.tmp"), None, "non-numeric seq");
+    }
+
+    #[test]
+    fn requeue_sweeps_orphan_temps_of_dead_submitters_only() {
+        let (_dir, q) = queue();
+        // Debris from a submitter killed between write and link: the PID
+        // embedded in the name can never exist.
+        let dead_temp = format!(".ghost.{}-0.tmp", u32::MAX);
+        std::fs::write(q.sub("pending").join(&dead_temp), "{}").unwrap();
+        // An in-flight temp of a live submitter (our own PID) must stay.
+        let live_temp = format!(".inflight.{}-1.tmp", std::process::id());
+        std::fs::write(q.sub("pending").join(&live_temp), "{}").unwrap();
+        // Unrelated dot-files are not submit temps and are never touched.
+        std::fs::write(q.sub("pending").join(".keepme"), "x").unwrap();
+
+        let report = q.requeue_stale().unwrap();
+        if cfg!(target_os = "linux") {
+            assert_eq!(report.swept_temps, vec![dead_temp.clone()]);
+            assert!(!q.sub("pending").join(&dead_temp).exists());
+        } else {
+            assert!(report.swept_temps.is_empty(), "no liveness probe off-linux");
+        }
+        assert!(q.sub("pending").join(&live_temp).exists());
+        assert!(q.sub("pending").join(".keepme").exists());
+        assert!(report.requeued.is_empty() && report.quarantined.is_empty());
+    }
+
+    #[test]
+    fn finished_job_stranded_in_running_is_cleaned_not_revived() {
+        let (_dir, q) = queue();
+        q.submit(&JobSpec::new("twice", vec![0.5])).unwrap();
+        let job = q.claim().unwrap().unwrap();
+        let spec_bytes = std::fs::read(&job.path).unwrap();
+        let result = JobResult {
+            id: job.id.clone(),
+            operator: crate::operator::Operator::ADD8,
+            factors: Vec::new(),
+            wall_ms: 1,
+        };
+        q.complete(&job.id, &result).unwrap();
+        // Recreate the state a crash between complete()'s rename and its
+        // cleanup leaves behind: the id in done/ AND running/, sidecars
+        // intact, the holder dead.
+        std::fs::write(q.spec_path("running", "twice"), &spec_bytes).unwrap();
+        std::fs::write(q.pid_path("twice"), u32::MAX.to_string()).unwrap();
+        std::fs::write(q.revivals_path("twice"), "1").unwrap();
+
+        let report = q.requeue_stale().unwrap();
+        assert_eq!(report.cleaned, vec!["twice"]);
+        assert!(report.requeued.is_empty(), "a finished job must never requeue");
+        assert_eq!(q.state_of("twice"), Some(JobState::Done));
+        assert!(!q.spec_path("running", "twice").exists());
+        assert!(!q.pid_path("twice").exists());
+        assert!(!q.revivals_path("twice").exists());
+        assert_eq!(q.result("twice").unwrap(), result, "result untouched");
+        // The cleanup is idempotent: a second sweep finds nothing.
+        assert!(q.requeue_stale().unwrap().is_empty());
     }
 
     #[test]

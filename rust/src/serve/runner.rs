@@ -245,6 +245,12 @@ impl<'a> JobRunner<'a> {
 
     fn worker_loop(&self, worker: usize) {
         loop {
+            // Graceful drain: stop claiming, let the in-flight jobs (on
+            // the other workers) finish, exit with the spool consistent.
+            if super::signal::draining() {
+                self.log_event("drain", &[("worker", Json::Num(worker as f64))]);
+                return;
+            }
             if !self.try_reserve_slot() {
                 return; // max_jobs budget spent
             }
@@ -269,7 +275,9 @@ impl<'a> JobRunner<'a> {
                 }
                 Err(e) => {
                     // A queue I/O fault is not attributable to any one
-                    // job; record it and retire the worker.
+                    // job; record it and retire the worker — except a
+                    // full disk in watch mode, which is a load condition
+                    // to ride out, not a crash: pause and re-poll.
                     claim_span.cancel();
                     self.release_slot();
                     self.log_event(
@@ -279,6 +287,12 @@ impl<'a> JobRunner<'a> {
                             ("error", Json::Str(e.to_string())),
                         ],
                     );
+                    if !self.opts.drain && e.is_disk_full() {
+                        std::thread::sleep(
+                            self.opts.poll.max(Duration::from_millis(500)),
+                        );
+                        continue;
+                    }
                     return;
                 }
             }

@@ -1,0 +1,75 @@
+//! Graceful drain on SIGTERM/SIGINT.
+//!
+//! One process-wide flag, set from an async-signal-safe handler (a single
+//! relaxed atomic store — the only thing a signal handler may safely do
+//! here). The serve loops poll [`draining`]:
+//!
+//! * `repro serve-dse --watch` workers stop claiming new jobs, finish
+//!   their in-flight job, and return — the process exits 0 with the spool
+//!   consistent (no orphaned claims to sweep on the next start).
+//! * `repro serve-http` additionally reports `{"status":"draining"}` on
+//!   `/healthz` so load balancers stop routing new work, then shuts the
+//!   acceptors down once the embedded exec loop has drained.
+//!
+//! No `signal-hook`/`libc` crate: the handler is registered through the
+//! C library's `signal` symbol, which std already links. Off-linux,
+//! [`install`] is a no-op and Ctrl-C keeps its default kill behavior.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Whether a drain has been requested (signal received or
+/// [`request_drain`] called).
+#[inline]
+pub fn draining() -> bool {
+    DRAIN.load(Ordering::Relaxed)
+}
+
+/// Request a drain programmatically (tests, embedders).
+pub fn request_drain() {
+    DRAIN.store(true, Ordering::Relaxed);
+}
+
+#[cfg(target_os = "linux")]
+extern "C" fn on_signal(_signum: i32) {
+    // Async-signal-safe: one relaxed atomic store, nothing else.
+    DRAIN.store(true, Ordering::Relaxed);
+}
+
+/// Install the SIGTERM/SIGINT drain handler. Safe to call more than once.
+#[cfg(target_os = "linux")]
+pub fn install() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        let _ = signal(SIGINT, on_signal);
+        let _ = signal(SIGTERM, on_signal);
+    }
+}
+
+/// Off-linux no-op: the raw `signal` ABI contract is only asserted for
+/// the platform CI exercises; elsewhere Ctrl-C keeps its default
+/// terminate behavior.
+#[cfg(not(target_os = "linux"))]
+pub fn install() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn installs_without_crashing_and_starts_undrained() {
+        // Flag-setting semantics are exercised end-to-end by the torture
+        // suite (real SIGTERM to a serve subprocess); in-process we only
+        // assert installation is safe and the flag starts clear — other
+        // suites in this binary poll `draining()` from their serve loops,
+        // so no lib test may ever set it.
+        install();
+        install();
+        assert!(!draining());
+    }
+}

@@ -1,0 +1,560 @@
+//! Crash-torture suite: prove the spool and the dataset store converge to
+//! a consistent state when processes are killed at armed failpoints.
+//!
+//! Structure: each scenario re-execs *this* test binary as a worker
+//! subprocess (`--exact worker_*`), pointing it at a shared spool via
+//! `TORTURE_DIR` and arming a crash site via `REPRO_FAULTS=<site>=abort`.
+//! The worker dies with SIGABRT at exactly the armed site; the parent
+//! then runs the documented recovery (a clean worker performing
+//! `requeue_stale` + drain) and asserts the invariants the fault model
+//! promises:
+//!
+//! * every submitted job ends in **exactly one** terminal state
+//!   (`done/` or `failed/`), never lost, never duplicated;
+//! * recorded results are bit-identical to an undisturbed reference run
+//!   (jobs are deterministic, so re-execution after a crash replays the
+//!   same answer);
+//! * `pending/` and `running/` are empty after recovery — no stranded
+//!   specs, no sidecar debris;
+//! * the dataset store heals torn and half-published entries, and a lock
+//!   left by a dead holder is taken over.
+//!
+//! The worker `#[test]`s are no-ops without `TORTURE_DIR`, so a plain
+//! `cargo test` run of this binary passes them trivially. Everything is
+//! linux-only: the recovery sweep's PID liveness probe, SIGABRT exit
+//! decoding, and `kill -TERM` all need it.
+
+#![cfg(target_os = "linux")]
+
+use repro::charac::{BehavMetrics, Dataset};
+use repro::engine::{
+    key_slug, CharacSubstrate, DatasetKey, DatasetStore, EngineContext, SampleSpec,
+    VerifyStatus,
+};
+use repro::expcfg::{ConssConfig, ExperimentConfig, GaConfig, SurrogateConfig};
+use repro::operator::{AxoConfig, Operator};
+use repro::serve::{
+    http_call, HttpOptions, HttpServer, JobQueue, JobResult, JobRunner, JobSpec,
+    ServeOptions, LOG_FILE, MAX_REVIVALS,
+};
+use repro::surrogate::EstimatorBackend;
+use repro::synth::PpaMetrics;
+use repro::util::json::Json;
+use repro::util::tempdir::TempDir;
+use std::os::unix::process::ExitStatusExt as _;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// The failpoint registry and the `TORTURE_DIR`/`REPRO_FAULTS` env are
+/// process-global; every test in this file serializes on this lock.
+static TORTURE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    TORTURE_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Fast deterministic serve configuration (the `serve_jobs` add8 idiom,
+/// trimmed further — torture rounds re-execute jobs several times).
+fn torture_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        operator: "add8".into(),
+        surrogate: SurrogateConfig { backend: EstimatorBackend::Table, gbt_stages: None },
+        conss: ConssConfig { forest_trees: Some(4), noise_bits: 2, ..Default::default() },
+        ga: GaConfig { pop_size: 8, generations: 2, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Worker-side gate: `None` in a plain test run; in a torture subprocess,
+/// arms `REPRO_FAULTS` and hands back the spool root.
+fn worker_dir() -> Option<PathBuf> {
+    let dir = std::env::var_os("TORTURE_DIR")?;
+    repro::fault::apply_env().expect("REPRO_FAULTS spec must parse");
+    Some(PathBuf::from(dir))
+}
+
+/// Re-exec this test binary to run exactly one worker test against `dir`
+/// with `faults` armed. `REPRO_ORPHAN_GRACE_MS=0` lets recovery workers
+/// reap sidecar-less claims immediately instead of waiting out the
+/// production grace window.
+fn worker_command(test: &str, dir: &Path, faults: &str) -> Command {
+    let mut cmd = Command::new(std::env::current_exe().unwrap());
+    cmd.arg(test)
+        .arg("--exact")
+        .arg("--test-threads=1")
+        .arg("--nocapture")
+        .env("TORTURE_DIR", dir)
+        .env("REPRO_FAULTS", faults)
+        .env("REPRO_ORPHAN_GRACE_MS", "0");
+    cmd
+}
+
+fn run_worker(test: &str, dir: &Path, faults: &str) -> std::process::Output {
+    worker_command(test, dir, faults).output().expect("spawn torture worker")
+}
+
+/// The worker died of SIGABRT — i.e. the armed `abort` site fired, rather
+/// than the test failing for some unrelated reason.
+fn assert_aborted(out: &std::process::Output, ctx: &str) {
+    assert_eq!(
+        out.status.signal(),
+        Some(6),
+        "{ctx}: expected SIGABRT, got {:?}\nstdout:\n{}\nstderr:\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+}
+
+/// The worker ran its single test to completion.
+fn assert_clean(out: &std::process::Output, ctx: &str) {
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success() && stdout.contains("1 passed"),
+        "{ctx}: expected a clean 1-test pass, got {:?}\nstdout:\n{stdout}\nstderr:\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Worker bodies (no-ops without TORTURE_DIR; see module docs).
+// ---------------------------------------------------------------------------
+
+/// Server-start semantics: recover the spool, then drain it to empty.
+#[test]
+fn worker_sweep_and_drain() {
+    let Some(dir) = worker_dir() else { return };
+    let queue = JobQueue::open(dir.join("jobs")).unwrap();
+    queue.requeue_stale().unwrap();
+    let ctx = EngineContext::new(torture_cfg());
+    let runner = JobRunner::new(
+        &ctx,
+        &queue,
+        ServeOptions { workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    runner.run().unwrap();
+}
+
+/// A lone submitter (killed between its durable temp write and the
+/// publishing hard link when `queue.submit.link=abort` is armed).
+#[test]
+fn worker_submit_one() {
+    let Some(dir) = worker_dir() else { return };
+    let queue = JobQueue::open(dir.join("jobs")).unwrap();
+    queue.submit(&JobSpec::new("s0", vec![0.5])).unwrap();
+}
+
+/// A lone dataset-store writer (killed between payload write and rename
+/// when `store.payload.rename=abort` is armed).
+#[test]
+fn worker_store_save() {
+    let Some(dir) = worker_dir() else { return };
+    let store = DatasetStore::open(dir.join("datasets"));
+    store.save(&store_key(), &tiny_dataset(), 0xfeed).unwrap();
+}
+
+/// Watch-mode server: recover, then poll `pending/` until a drain signal
+/// (SIGTERM from the parent) retires the workers.
+#[test]
+fn worker_watch_until_drained() {
+    let Some(dir) = worker_dir() else { return };
+    repro::serve::signal::install();
+    let queue = JobQueue::open(dir.join("jobs")).unwrap();
+    queue.requeue_stale().unwrap();
+    let ctx = EngineContext::new(torture_cfg());
+    let runner = JobRunner::new(
+        &ctx,
+        &queue,
+        ServeOptions {
+            workers: 2,
+            drain: false,
+            poll: Duration::from_millis(25),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    runner.run().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Queue crash consistency.
+// ---------------------------------------------------------------------------
+
+/// Every job ends in exactly one terminal state with the expected bytes,
+/// and the spool carries no debris.
+fn assert_converged(queue: &JobQueue, want: &[(&str, &JobResult)], ctx: &str) {
+    let ids: Vec<String> = want.iter().map(|(id, _)| id.to_string()).collect();
+    assert_eq!(queue.done_ids().unwrap(), ids, "{ctx}: every job done exactly once");
+    assert_eq!(queue.failed_ids().unwrap(), Vec::<String>::new(), "{ctx}");
+    let counts = queue.counts().unwrap();
+    assert_eq!((counts.pending, counts.running), (0, 0), "{ctx}: spool drained");
+    // running/ is *literally* empty: no PID sidecars, no revival ledgers.
+    let leftovers: Vec<_> = std::fs::read_dir(queue.dir().join("running"))
+        .unwrap()
+        .map(|e| e.unwrap().file_name())
+        .collect();
+    assert!(leftovers.is_empty(), "{ctx}: running/ debris: {leftovers:?}");
+    for &(id, reference) in want {
+        let got = queue.result(id).unwrap();
+        assert_eq!(got.operator, reference.operator, "{ctx}: {id}");
+        // wall_ms is the one legitimately nondeterministic field; the
+        // science payload must be bit-identical to the reference run.
+        assert_eq!(got.factors, reference.factors, "{ctx}: {id} result drifted");
+    }
+}
+
+#[test]
+fn abort_at_each_queue_site_converges_with_bit_identical_results() {
+    let _g = lock();
+    // Reference: the same two jobs through an undisturbed in-process drain.
+    let ref_dir = TempDir::new().unwrap();
+    let ref_queue = JobQueue::open(ref_dir.path().join("jobs")).unwrap();
+    ref_queue.submit(&JobSpec::new("t0", vec![0.5])).unwrap();
+    ref_queue.submit(&JobSpec::new("t1", vec![0.8])).unwrap();
+    let ctx = EngineContext::new(torture_cfg());
+    JobRunner::new(&ctx, &ref_queue, ServeOptions { workers: 1, ..Default::default() })
+        .unwrap()
+        .run()
+        .unwrap();
+    let want_t0 = ref_queue.result("t0").unwrap();
+    let want_t1 = ref_queue.result("t1").unwrap();
+
+    for site in [
+        "queue.claim.rename",   // dies before any state moves
+        "queue.claim.pid",      // claim renamed, PID sidecar never written
+        "queue.complete.write", // executed, result temp never written
+        "queue.complete.rename", // result temp durable, never published
+        "queue.complete.cleanup", // published, stranded in done/ AND running/
+    ] {
+        let dir = TempDir::new().unwrap();
+        let queue = JobQueue::open(dir.path().join("jobs")).unwrap();
+        queue.submit(&JobSpec::new("t0", vec![0.5])).unwrap();
+        queue.submit(&JobSpec::new("t1", vec![0.8])).unwrap();
+
+        let killed =
+            run_worker("worker_sweep_and_drain", dir.path(), &format!("{site}=abort"));
+        assert_aborted(&killed, site);
+
+        let recovered = run_worker("worker_sweep_and_drain", dir.path(), "");
+        assert_clean(&recovered, site);
+        assert_converged(&queue, &[("t0", &want_t0), ("t1", &want_t1)], site);
+    }
+}
+
+#[test]
+fn abort_during_revival_still_converges_without_losing_the_job() {
+    let _g = lock();
+    let dir = TempDir::new().unwrap();
+    let queue = JobQueue::open(dir.path().join("jobs")).unwrap();
+    queue.submit(&JobSpec::new("r0", vec![0.6])).unwrap();
+
+    // Kill 1: claimer dies mid-claim (no PID sidecar left behind).
+    let killed = run_worker("worker_sweep_and_drain", dir.path(), "queue.claim.pid=abort");
+    assert_aborted(&killed, "claimer");
+
+    // Kill 2: the *sweeper* dies between the revival rename and the
+    // ledger write — the job is back in pending/ but the revival was
+    // never tallied (the documented untallied-revival window).
+    let killed =
+        run_worker("worker_sweep_and_drain", dir.path(), "queue.revive.ledger=abort");
+    assert_aborted(&killed, "sweeper");
+    assert_eq!(queue.counts().unwrap().pending, 1, "revived before the abort");
+    assert_eq!(queue.revivals_of("r0"), 0, "ledger write never happened");
+
+    let recovered = run_worker("worker_sweep_and_drain", dir.path(), "");
+    assert_clean(&recovered, "recovery");
+    assert_eq!(queue.done_ids().unwrap(), vec!["r0"]);
+    let counts = queue.counts().unwrap();
+    assert_eq!((counts.pending, counts.running, counts.failed), (0, 0, 0));
+}
+
+#[test]
+fn crash_looping_job_is_quarantined_after_real_kills() {
+    let _g = lock();
+    let dir = TempDir::new().unwrap();
+    let queue = JobQueue::open(dir.path().join("jobs")).unwrap();
+    queue.submit(&JobSpec::new("loopy", vec![0.7])).unwrap();
+
+    // The job "kills its claimer" every time: each round's worker sweeps
+    // (reviving the orphan), claims, executes, and dies at the result
+    // write. Rounds 1..=MAX_REVIVALS each burn one revival.
+    for round in 0..=MAX_REVIVALS {
+        let killed =
+            run_worker("worker_sweep_and_drain", dir.path(), "queue.complete.write=abort");
+        assert_aborted(&killed, &format!("round {round}"));
+        assert_eq!(queue.revivals_of("loopy"), round, "ledger after round {round}");
+    }
+
+    // Budget burned: the recovery sweep quarantines instead of reviving.
+    let recovered = run_worker("worker_sweep_and_drain", dir.path(), "");
+    assert_clean(&recovered, "quarantine sweep");
+    assert_eq!(queue.failed_ids().unwrap(), vec!["loopy"]);
+    assert!(queue.done_ids().unwrap().is_empty());
+    let err = queue.error("loopy").unwrap();
+    assert!(err.contains("crash loop"), "recorded error: {err}");
+    let counts = queue.counts().unwrap();
+    assert_eq!((counts.pending, counts.running), (0, 0));
+    let leftovers: Vec<_> = std::fs::read_dir(queue.dir().join("running"))
+        .unwrap()
+        .map(|e| e.unwrap().file_name())
+        .collect();
+    assert!(leftovers.is_empty(), "sidecars cleaned with the quarantine: {leftovers:?}");
+}
+
+#[test]
+fn submitter_killed_before_link_leaves_only_a_sweepable_temp() {
+    let _g = lock();
+    let dir = TempDir::new().unwrap();
+    let queue = JobQueue::open(dir.path().join("jobs")).unwrap();
+
+    let killed = run_worker("worker_submit_one", dir.path(), "queue.submit.link=abort");
+    assert_aborted(&killed, "submitter");
+
+    // The orphaned temp is there, but no spec was published.
+    let pending: Vec<String> = std::fs::read_dir(queue.dir().join("pending"))
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    assert_eq!(pending.len(), 1, "exactly the temp: {pending:?}");
+    assert!(pending[0].starts_with(".s0.") && pending[0].ends_with(".tmp"));
+    assert_eq!(queue.counts().unwrap().pending, 0, "temp is not a job");
+
+    // The sweep proves the embedded submitter PID dead and reclaims it.
+    let report = queue.requeue_stale().unwrap();
+    assert_eq!(report.swept_temps, pending);
+    let leftovers: Vec<_> = std::fs::read_dir(queue.dir().join("pending"))
+        .unwrap()
+        .map(|e| e.unwrap().file_name())
+        .collect();
+    assert!(leftovers.is_empty(), "pending/ clean after the sweep: {leftovers:?}");
+
+    // The id was never published, so a fresh submission just works.
+    queue.submit(&JobSpec::new("s0", vec![0.5])).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Dataset-store crash consistency.
+// ---------------------------------------------------------------------------
+
+fn tiny_dataset() -> Dataset {
+    let cfgs = vec![AxoConfig::accurate(4), AxoConfig::new(0b0111, 4).unwrap()];
+    let behav = vec![
+        BehavMetrics::ZERO,
+        BehavMetrics {
+            avg_abs_err: 1.0,
+            avg_abs_rel_err: 0.1,
+            max_abs_err: 8.0,
+            err_prob: 0.5,
+        },
+    ];
+    let ppa = vec![
+        PpaMetrics { luts: 4.0, cpd_ns: 0.75, power_mw: 0.8, pdp: 0.6, pdplut: 2.4 },
+        PpaMetrics { luts: 3.0, cpd_ns: 0.7, power_mw: 0.7, pdp: 0.49, pdplut: 1.47 },
+    ];
+    Dataset::new(Operator::ADD4, cfgs, behav, ppa).unwrap()
+}
+
+fn store_key() -> DatasetKey {
+    DatasetKey {
+        op: Operator::ADD4,
+        substrate: CharacSubstrate::Native,
+        spec: SampleSpec::Seeded { seed: 7, n: 2 },
+    }
+}
+
+#[test]
+fn store_save_killed_at_rename_is_recoverable_and_stale_lock_taken_over() {
+    let _g = lock();
+    let dir = TempDir::new().unwrap();
+
+    let killed = run_worker("worker_store_save", dir.path(), "store.payload.rename=abort");
+    assert_aborted(&killed, "store writer");
+
+    // The manifest was never written, so the store is observably empty —
+    // but the dead writer left its payload temp AND its manifest.lock.
+    let store = DatasetStore::open(dir.path().join("datasets"));
+    assert!(store.verify().unwrap().is_empty(), "no entry was published");
+    assert!(store.load(&store_key(), 0xfeed).unwrap().is_none());
+    let lock_path = dir.path().join("datasets").join("manifest.lock");
+    assert!(lock_path.exists(), "dead holder's lock file survives the crash");
+
+    // A healing save takes the stale lock over (the holder PID provably
+    // no longer runs) and publishes payload + manifest normally.
+    let ds = tiny_dataset();
+    store.save(&store_key(), &ds, 0xfeed).unwrap();
+    assert!(!lock_path.exists(), "lock released after the save");
+    assert_eq!(
+        store.verify().unwrap(),
+        vec![(key_slug(&store_key()), VerifyStatus::Ok)]
+    );
+    let loaded = store.load(&store_key(), 0xfeed).unwrap().expect("healed entry loads");
+    assert_eq!(loaded.operator, Operator::ADD4);
+    assert_eq!(loaded.len(), ds.len());
+}
+
+#[test]
+fn torn_store_payload_is_a_miss_and_resave_heals() {
+    let _g = lock();
+    let dir = TempDir::new().unwrap();
+    let store = DatasetStore::open(dir.path().join("datasets"));
+    let ds = tiny_dataset();
+
+    // Power-loss model: the payload write is torn (half the bytes, no
+    // fsync) but *reports success*, and the manifest records the hash of
+    // the full payload.
+    repro::fault::arm_from_spec("store.payload.write=partial:1").unwrap();
+    store.save(&store_key(), &ds, 0xfeed).unwrap();
+    repro::fault::disarm_all();
+
+    // The integrity check catches it: a miss (re-characterize), not an
+    // error — and verify names the mismatch.
+    assert!(store.load(&store_key(), 0xfeed).unwrap().is_none());
+    assert_eq!(
+        store.verify().unwrap(),
+        vec![(key_slug(&store_key()), VerifyStatus::HashMismatch)]
+    );
+
+    // Re-saving overwrites the torn payload and heals the entry.
+    store.save(&store_key(), &ds, 0xfeed).unwrap();
+    assert_eq!(
+        store.verify().unwrap(),
+        vec![(key_slug(&store_key()), VerifyStatus::Ok)]
+    );
+    let loaded = store.load(&store_key(), 0xfeed).unwrap().expect("healed entry loads");
+    assert_eq!(loaded.len(), ds.len());
+}
+
+// ---------------------------------------------------------------------------
+// HTTP load-shedding and graceful drain.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn full_spool_disk_sheds_submissions_with_503_until_a_write_lands() {
+    let _g = lock();
+    let dir = TempDir::new().unwrap();
+    let queue = Arc::new(JobQueue::open(dir.path().join("jobs")).unwrap());
+    let ctx = Arc::new(EngineContext::new(torture_cfg()));
+    // Front-end only (workers: 0): no engine work, just the admit path.
+    let server = Arc::new(
+        HttpServer::bind(
+            ctx,
+            Arc::clone(&queue),
+            "127.0.0.1:0",
+            HttpOptions { threads: 1, workers: 0, retry_after_secs: 7, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let addr = server.local_addr().to_string();
+    let handle = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || server.run().unwrap())
+    };
+
+    let spec = r#"{"factors":[0.5],"operator":"add8"}"#;
+    // One ENOSPC on the spool write: the submission is shed, not crashed.
+    repro::fault::arm_from_spec("queue.submit.write=enospc:1").unwrap();
+    let shed = http_call(&addr, "POST", "/jobs", Some(spec)).unwrap();
+    assert_eq!(shed.status, 503, "{}", shed.body);
+    assert_eq!(shed.header("retry-after"), Some("7"));
+    assert_eq!(
+        shed.json().unwrap().get("retry_after_secs").and_then(Json::as_u64),
+        Some(7)
+    );
+    assert_eq!(queue.counts().unwrap().pending, 0, "nothing spooled");
+
+    // The client retries, the disk has space again: admitted normally.
+    let created = http_call(&addr, "POST", "/jobs", Some(spec)).unwrap();
+    assert_eq!(created.status, 201, "{}", created.body);
+    assert_eq!(queue.counts().unwrap().pending, 1);
+
+    // The shed and the armed site's hit tally are both visible in
+    // metrics (two hits: one fired ENOSPC, one passed through exhausted).
+    let m = http_call(&addr, "GET", "/metrics", None).unwrap().json().unwrap();
+    assert_eq!(
+        m.get("http").and_then(|x| x.get("shed")).and_then(Json::as_u64),
+        Some(1)
+    );
+    assert_eq!(
+        m.get("fault")
+            .and_then(|f| f.get("queue.submit.write"))
+            .and_then(Json::as_u64),
+        Some(2)
+    );
+    let prom = http_call(&addr, "GET", "/metrics?format=prometheus", None).unwrap();
+    assert!(prom.body.contains("http_shed_total 1"), "{}", prom.body);
+    assert!(
+        prom.body.contains("fault_hits_total{site=\"queue.submit.write\"} 2"),
+        "{}",
+        prom.body
+    );
+    repro::fault::disarm_all();
+
+    server.shutdown();
+    handle.join().unwrap();
+}
+
+#[test]
+fn sigterm_drains_a_watch_mode_worker_cleanly() {
+    let _g = lock();
+    let dir = TempDir::new().unwrap();
+    let queue = JobQueue::open(dir.path().join("jobs")).unwrap();
+    queue.submit(&JobSpec::new("d0", vec![0.5])).unwrap();
+    queue.submit(&JobSpec::new("d1", vec![0.8])).unwrap();
+
+    let mut child = worker_command("worker_watch_until_drained", dir.path(), "")
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn watch worker");
+
+    // Let it finish both jobs (it keeps polling — watch mode never exits
+    // on its own), then ask it to drain.
+    let deadline = Instant::now() + Duration::from_secs(180);
+    while queue.done_ids().unwrap().len() < 2 {
+        assert!(
+            child.try_wait().unwrap().is_none(),
+            "watch worker exited before the drain signal"
+        );
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            panic!("watch worker never finished the jobs");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let term = Command::new("kill")
+        .arg("-TERM")
+        .arg(child.id().to_string())
+        .status()
+        .expect("send SIGTERM");
+    assert!(term.success());
+
+    let status = loop {
+        if let Some(status) = child.try_wait().unwrap() {
+            break status;
+        }
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            panic!("watch worker ignored SIGTERM");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    assert!(status.success(), "drain exits 0, got {status:?}");
+
+    // The spool is consistent and the drain was recorded.
+    let counts = queue.counts().unwrap();
+    assert_eq!(
+        (counts.pending, counts.running, counts.done, counts.failed),
+        (0, 0, 2, 0)
+    );
+    let log = std::fs::read_to_string(queue.dir().join(LOG_FILE)).unwrap();
+    let drained = log
+        .lines()
+        .filter_map(|l| Json::parse(l).ok())
+        .filter(|e| e.get("event").and_then(Json::as_str) == Some("drain"))
+        .count();
+    assert_eq!(drained, 2, "each watch worker logged its drain exit");
+}
